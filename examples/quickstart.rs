@@ -1,0 +1,71 @@
+//! Quickstart: the end-to-end driver proving all three layers compose.
+//!
+//! Loads the AOT-compiled (JAX + Pallas) DP-SGD train/eval graphs from
+//! `artifacts/`, generates a synthetic GTSRB-like dataset, and trains a
+//! mini CNN with the full DPQuant scheduler (Algorithm 1 loss-impact
+//! analysis + Algorithm 2 probabilistic layer selection) under a fixed
+//! privacy budget, logging the loss curve and ε per epoch.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use dpquant::config::TrainConfig;
+use dpquant::coordinator::{train, TrainerOptions};
+use dpquant::data;
+use dpquant::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = TrainConfig {
+        model: "miniconvnet".into(),
+        dataset: "gtsrb".into(),
+        quantizer: "luq4".into(),
+        scheduler: "dpquant".into(),
+        epochs: 10,
+        dataset_size: 2048,
+        val_size: 512,
+        batch_size: 64,
+        noise_multiplier: 1.0,
+        clip_norm: 1.0,
+        lr: 0.5,
+        quant_fraction: 0.75,
+        target_epsilon: Some(8.0),
+        ..TrainConfig::default()
+    };
+
+    println!("== DPQuant quickstart ==");
+    println!(
+        "model={} dataset={} quantizer={} scheduler={} quant_fraction={}",
+        cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler, cfg.quant_fraction
+    );
+
+    let rt = Runtime::open("artifacts")?;
+    let graph = rt.load(&cfg.graph_tag())?;
+
+    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
+        .map_err(anyhow::Error::msg)?;
+    let (train_ds, val_ds) = full.split(cfg.val_size);
+
+    let opts = TrainerOptions {
+        collect_step_stats: false,
+        verbose: true,
+    };
+    let res = train(&graph, &cfg, &train_ds, &val_ds, &opts)?;
+
+    println!("\nloss curve:");
+    for e in &res.record.epochs {
+        let bar = "#".repeat((e.train_loss * 12.0).min(60.0) as usize);
+        println!("  epoch {:>2}  {:.4} {}", e.epoch, e.train_loss, bar);
+    }
+    println!(
+        "\nfinal: val_acc={:.4} (best {:.4})  eps={:.3} of target {:?}  analysis-eps={:.3}",
+        res.record.final_accuracy,
+        res.record.best_accuracy,
+        res.record.final_epsilon,
+        cfg.target_epsilon,
+        res.record.analysis_epsilon,
+    );
+    let path = res.record.save("results")?;
+    println!("run record: {path}");
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT export: lower every (model, dataset, quantizer) training/eval graph
+to HLO **text** and write `artifacts/manifest.json` + initial weights.
+
+HLO text — NOT `lowered.compile()` or proto `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run: `cd python && python -m compile.aot --out ../artifacts`
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import GraphSpec
+
+jax.config.update("jax_platform_name", "cpu")
+
+# The artifact matrix: the paper's (model, dataset) combinations mapped to
+# our stand-ins (DESIGN.md §2), with extra quantizers where the appendix
+# evaluates them (A.9: fp8 + uniform4 on ResNet18-class models).
+DEFAULT_MATRIX = [
+    # (model, dataset, quantizer, physical_batch)
+    ("miniconvnet", "gtsrb", "luq4", 64),
+    ("miniconvnet", "emnist", "luq4", 64),
+    ("miniconvnet", "cifar", "luq4", 64),
+    ("miniresnet", "gtsrb", "luq4", 64),
+    ("miniresnet", "cifar", "luq4", 64),
+    ("miniresnet", "cifar", "uniform4", 64),
+    ("miniresnet", "cifar", "fp8", 64),
+    ("minidensenet", "gtsrb", "luq4", 64),
+    ("minidensenet", "cifar", "luq4", 64),
+    ("tinytransformer", "snli", "luq4", 64),
+]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: GraphSpec, out_dir: str, manifest: dict, verbose=True):
+    tag = f"{spec.model_name}_{spec.dataset}_{spec.quantizer}"
+    train_name = f"train_{tag}"
+    eval_name = f"eval_{spec.model_name}_{spec.dataset}"
+    weights_file = f"weights_{spec.model_name}_{spec.dataset}.bin"
+
+    t0 = time.time()
+    train_lowered = jax.jit(spec.train_fn()).lower(*spec.train_arg_specs())
+    train_text = to_hlo_text(train_lowered)
+    with open(os.path.join(out_dir, f"{train_name}.hlo.txt"), "w") as f:
+        f.write(train_text)
+    if verbose:
+        print(f"  {train_name}: {len(train_text)} chars ({time.time()-t0:.1f}s)")
+
+    # Eval + weights are shared across quantizers of the same
+    # (model, dataset); emit once.
+    emitted = manifest.setdefault("_emitted_evals", set())
+    if eval_name not in emitted:
+        t0 = time.time()
+        eval_lowered = jax.jit(spec.eval_fn()).lower(*spec.eval_arg_specs())
+        eval_text = to_hlo_text(eval_lowered)
+        with open(os.path.join(out_dir, f"{eval_name}.hlo.txt"), "w") as f:
+            f.write(eval_text)
+        flat = spec.initial_weights_flat()
+        flat.astype("<f4").tofile(os.path.join(out_dir, weights_file))
+        emitted.add(eval_name)
+        if verbose:
+            print(
+                f"  {eval_name}: {len(eval_text)} chars, "
+                f"{flat.size} init params ({time.time()-t0:.1f}s)"
+            )
+
+    manifest["graphs"][tag] = spec.manifest_entry(train_name, eval_name, weights_file)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated model_dataset_quantizer tags to build (default all)",
+    )
+    ap.add_argument("--batch", type=int, default=None, help="override physical batch")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"graphs": {}}
+    if args.only and os.path.exists(manifest_path):
+        # Incremental rebuild: keep other graphs' entries.
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    only = set(args.only.split(",")) if args.only else None
+
+    for model, dataset, quantizer, batch in DEFAULT_MATRIX:
+        tag = f"{model}_{dataset}_{quantizer}"
+        if only and tag not in only:
+            continue
+        if args.batch:
+            batch = args.batch
+        print(f"lowering {tag} (batch={batch}) ...")
+        spec = GraphSpec(model, dataset, quantizer, batch)
+        lower_spec(spec, args.out, manifest)
+
+    manifest.pop("_emitted_evals", None)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} with {len(manifest['graphs'])} graphs")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

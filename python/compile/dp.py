@@ -1,0 +1,126 @@
+"""DP-SGD training-step graph: per-sample gradients, global-norm
+clipping (through the L1 Pallas clip kernel), masked aggregation.
+
+The graph implements everything inside the paper's Def. 2 *except* noise
+addition and the weight update — those happen in Rust in fp32 (§A.17:
+noise must be added to full-precision gradients by the coordinator, the
+single audited RNG site). Outputs are the per-tensor sums of clipped
+per-example gradients plus (masked) loss sum and correct count.
+
+Poisson subsampling produces variable-size batches; the graph has a fixed
+physical batch `B` and takes an `example_mask` input that zeroes padding
+rows, so one compiled executable serves every batch.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import clip as clip_kernel
+
+
+def make_loss_fn(model):
+    """Per-example loss: (params_list, x, y, quant_mask, seed) ->
+    (loss, correct). `correct` rides along as an aux output so the train
+    step needs exactly one forward per example (no second full-precision
+    forward — it would double compute and bake a constant quant mask into
+    the graph, which XLA 0.5.1's constant folder chokes on)."""
+
+    def loss_fn(param_values, param_names, x, y, quant_mask, seed):
+        params = list(zip(param_names, param_values))
+        logits = model.apply(params, x, quant_mask, seed)
+        loss = L.softmax_cross_entropy(logits, y, model.n_classes)
+        correct = (jnp.argmax(logits) == y).astype(jnp.float32)
+        return loss, correct
+
+    return loss_fn
+
+
+def make_train_step(model, clip_norm):
+    """Build the DP-SGD step.
+
+    Signature of the returned function (all jnp arrays):
+      (param_values..., x_batch, y_batch, example_mask, quant_mask, seed)
+        -> (clipped_grad_sums..., loss_sum, correct_sum,
+            rawnorm_sum, rawnorm_max)
+
+    The last two outputs are the sum and max over the (masked) batch of
+    the *pre-clip* per-sample gradient L2 norms — the quantity Figures
+    1b/1c and Table 2 of the paper study (DP noise inflates raw
+    gradients in subsequent iterations).
+
+    - `x_batch`: (B, *example_shape); `y_batch`: (B,) int32.
+    - `example_mask`: (B,) f32 in {0,1}; padding rows contribute nothing.
+    - `quant_mask`: (n_quant_layers,) f32 in {0,1}.
+    - `seed`: f32 scalar driving stochastic rounding.
+    """
+    param_names = [n for n, _ in model.init(jax.random.PRNGKey(0))]
+    loss_fn = make_loss_fn(model)
+
+    def step(param_values, x_batch, y_batch, example_mask, quant_mask, seed):
+        def per_example(x, y):
+            (loss, correct), grads = jax.value_and_grad(
+                lambda pv: loss_fn(pv, param_names, x, y, quant_mask, seed),
+                has_aux=True,
+            )(param_values)
+            return loss, grads, correct
+
+        losses, grads, corrects = jax.vmap(per_example)(x_batch, y_batch)
+
+        # Flatten per-sample grads to (B, P) and clip rows to norm C via
+        # the L1 Pallas kernel.
+        b = x_batch.shape[0]
+        flats = [g.reshape(b, -1) for g in grads]
+        sizes = [f.shape[1] for f in flats]
+        flat = jnp.concatenate(flats, axis=1)
+        raw_norms = jnp.sqrt(jnp.sum(flat * flat, axis=1)) * example_mask
+        clipped = clip_kernel.clip_rows(flat, clip_norm)
+
+        # Zero padding rows, then sum over the batch.
+        summed = jnp.sum(clipped * example_mask[:, None], axis=0)
+
+        # Split back into per-tensor grad sums.
+        outs = []
+        off = 0
+        for g, size in zip(grads, sizes):
+            outs.append(summed[off : off + size].reshape(g.shape[1:]))
+            off += size
+
+        loss_sum = jnp.sum(losses * example_mask)
+        correct_sum = jnp.sum(corrects * example_mask)
+        return tuple(outs) + (
+            loss_sum,
+            correct_sum,
+            jnp.sum(raw_norms),
+            jnp.max(raw_norms),
+        )
+
+    return step
+
+
+def make_eval_step(model):
+    """Evaluation over a (masked) batch.
+
+    (param_values..., x_batch, y_batch, example_mask, quant_mask, seed)
+      -> (loss_sum, correct_sum)
+
+    `quant_mask`/`seed` are runtime inputs (all-zeros for the standard
+    full-precision eval) rather than baked constants: XLA 0.5.1's
+    constant folder recurses into the pallas grid loops when the PRNG
+    seed is a literal and aborts with a foreign exception. Keeping them
+    as parameters also enables quantized-eval experiments for free.
+    """
+    param_names = [n for n, _ in model.init(jax.random.PRNGKey(0))]
+
+    def step(param_values, x_batch, y_batch, example_mask, zero_mask, seed):
+        def per_example(x, y):
+            params = list(zip(param_names, param_values))
+            logits = model.apply(params, x, zero_mask, seed)
+            loss = L.softmax_cross_entropy(logits, y, model.n_classes)
+            correct = (jnp.argmax(logits) == y).astype(jnp.float32)
+            return loss, correct
+
+        losses, corrects = jax.vmap(per_example)(x_batch, y_batch)
+        return jnp.sum(losses * example_mask), jnp.sum(corrects * example_mask)
+
+    return step

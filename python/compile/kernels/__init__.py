@@ -1,0 +1,24 @@
+"""L1: Pallas quantizer kernels (interpret=True) + pure-jnp oracles.
+
+Public surface:
+  luq.luq4        — LUQ-FP4 quantize-dequantize (paper's primary format)
+  uniform4.uniform4 — uniform INT4 with stochastic rounding (§A.9.2)
+  fp8.fp8         — FP8-E5M2 round-to-nearest-even (§A.9.1)
+  clip.clip_rows  — per-sample L2 clipping
+  qmatmul.qmatmul — tiled matmul with LUQ-quantized operands
+  ref             — the correctness oracles for all of the above
+"""
+
+from . import clip, common, fp8, luq, qmatmul, ref, uniform4  # noqa: F401
+
+QUANTIZERS = {
+    "luq4": luq.luq4,
+    "uniform4": uniform4.uniform4,
+    "fp8": fp8.fp8,
+}
+
+REFS = {
+    "luq4": ref.luq4_ref,
+    "uniform4": ref.uniform4_ref,
+    "fp8": lambda x, u: ref.fp8_ref(x),
+}

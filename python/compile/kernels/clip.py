@@ -1,0 +1,46 @@
+"""Per-sample gradient clipping Pallas kernel.
+
+DP-SGD clips each example's gradient to L2 norm at most C before
+aggregation (paper Def. 2). This kernel performs the row-wise rescale
+`g_i <- g_i * min(1, C / ||g_i||_2)` over a (batch, dim) matrix of
+flattened per-sample gradients.
+
+Schedule: the row dimension is tiled (`ROWS` rows per grid step); the
+feature dimension stays whole inside a block — per-sample gradient rows
+for our models fit comfortably in VMEM, so the reduction needs no
+second pass. Must match `ref.clip_rows_ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+
+
+def _clip_kernel(g_ref, c_ref, o_ref):
+    g = g_ref[...]
+    c = c_ref[0]
+    norms = jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True))
+    scale = jnp.minimum(1.0, c / jnp.maximum(norms, 1e-12))
+    o_ref[...] = g * scale
+
+
+def clip_rows(g, clip_norm, rows=ROWS, interpret=True):
+    """Clip each row of `g` (batch, dim) to L2 norm at most `clip_norm`."""
+    g = jnp.asarray(g, jnp.float32)
+    b, d = g.shape
+    padded_b = ((b + rows - 1) // rows) * rows
+    gp = jnp.pad(g, ((0, padded_b - b), (0, 0)))
+    out = pl.pallas_call(
+        _clip_kernel,
+        grid=(padded_b // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_b, d), jnp.float32),
+        interpret=interpret,
+    )(gp, jnp.reshape(jnp.asarray(clip_norm, jnp.float32), (1,)))
+    return out[:b]

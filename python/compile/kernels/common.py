@@ -1,0 +1,73 @@
+"""Shared plumbing for the L1 Pallas kernels.
+
+Every element-wise quantizer kernel follows the same schedule: the tensor
+is flattened, padded to a multiple of the block size, and streamed through
+VMEM-sized 1-D blocks (`BlockSpec((BLOCK,), ...)`), one grid step per
+block. Per-tensor statistics (max|x|) are computed in L2 and passed in as
+a (1,)-shaped operand broadcast to every block — this mirrors how a
+two-pass TPU kernel would stage the reduction, and keeps the kernel pure.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers identical semantics to plain HLO (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default element-wise block: 8 KiB of f32 per operand — small enough to
+# double-buffer in VMEM (~16 MiB) with wide margins at realistic sizes,
+# large enough that grid overhead is negligible.
+BLOCK = 2048
+
+
+def pad_flat(x, block=BLOCK):
+    """Flatten `x` and zero-pad to a multiple of `block`.
+
+    Returns (padded_1d, original_size).
+    """
+    flat = jnp.ravel(x)
+    n = flat.shape[0]
+    padded = ((n + block - 1) // block) * block
+    return jnp.pad(flat, (0, padded - n)), n
+
+
+def unpad(flat, n, shape):
+    """Undo `pad_flat`."""
+    return jnp.reshape(flat[:n], shape)
+
+
+def elementwise_call(kernel, x, extras, block=BLOCK, interpret=True):
+    """Run an element-wise Pallas `kernel` over `x` with per-block streams.
+
+    `extras` is a list of (array, is_scalar) operands; scalar operands are
+    shaped (1,) and broadcast to every block, array operands must have
+    x's shape and are streamed with the same BlockSpec.
+    """
+    xf, n = pad_flat(x, block)
+    nblocks = xf.shape[0] // block
+
+    stream_spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    ops = [xf]
+    specs = [stream_spec]
+    for arr, is_scalar in extras:
+        if is_scalar:
+            ops.append(jnp.reshape(arr, (1,)).astype(jnp.float32))
+            specs.append(scalar_spec)
+        else:
+            af, _ = pad_flat(arr, block)
+            ops.append(af)
+            specs.append(stream_spec)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=specs,
+        out_specs=stream_spec,
+        out_shape=jax.ShapeDtypeStruct(xf.shape, jnp.float32),
+        interpret=interpret,
+    )(*ops)
+    return unpad(out, n, x.shape)

@@ -1,0 +1,34 @@
+"""FP8-E5M2 Pallas kernel (paper §A.9.1): round-to-nearest-even to
+5-exponent/2-mantissa floats via bit manipulation, saturating at 57344.
+Deterministic — no random operand. Must match `ref.fp8_ref` exactly."""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+from .common import BLOCK, elementwise_call
+from .ref import FP8_MAX, FP8_MIN_NORMAL
+
+
+def _fp8_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    clamped = jnp.clip(x, -FP8_MAX, FP8_MAX)
+    bits = lax.bitcast_convert_type(clamped, jnp.uint32)
+    drop = jnp.uint32(21)
+    one = jnp.uint32(1)
+    lsb = (bits >> drop) & one
+    round_add = (one << (drop - one)) - one + lsb
+    rounded = (bits + round_add) & ~((one << drop) - one)
+    y = lax.bitcast_convert_type(rounded, jnp.float32)
+    y = jnp.clip(y, -FP8_MAX, FP8_MAX)
+    sub_step = FP8_MIN_NORMAL / 4.0
+    y_sub = jnp.round(y / sub_step) * sub_step
+    y = jnp.where(jnp.abs(y) < FP8_MIN_NORMAL, y_sub, y)
+    o_ref[...] = jnp.where(x == 0.0, 0.0, y)
+
+
+def fp8(x, u=None, block=BLOCK, interpret=True):
+    """FP8-E5M2 quantize-dequantize. `u` accepted (ignored) for a uniform
+    quantizer interface."""
+    del u
+    x = jnp.asarray(x, jnp.float32)
+    return elementwise_call(_fp8_kernel, x, [], block=block, interpret=interpret)

@@ -1,0 +1,57 @@
+"""LUQ-FP4 Pallas kernel: logarithmic unbiased quantization to
+1-sign + 3-exponent-bit floats (Chmiel et al. 2024), the paper's primary
+format.
+
+Grid semantics (must match `ref.luq4_ref` exactly):
+  alpha = max|x| / 2^7
+  |x| <  alpha : -> sign(x)*alpha w.p. |x|/alpha, else 0   (stochastic prune)
+  |x| >= alpha : stochastic rounding between adjacent octaves
+                 lo = alpha*2^k, hi = alpha*2^(k+1), P(up) = (|x|-lo)/(hi-lo)
+
+The per-tensor max is computed in L2 (one jnp.max) and broadcast to every
+block as a (1,) operand; the kernel body is pure element-wise VPU work.
+Random draws `u` ~ U[0,1) are an explicit operand so the kernel is
+deterministic and exactly testable against the oracle.
+"""
+
+import jax.numpy as jnp
+
+from .common import BLOCK, elementwise_call
+from .ref import EXP_LEVELS
+
+
+def _luq4_kernel(x_ref, u_ref, maxabs_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    max_abs = maxabs_ref[0]
+    alpha = max_abs / (2.0 ** (EXP_LEVELS - 1))
+
+    sign = jnp.sign(x)
+    mag = jnp.abs(x)
+
+    # Stochastic underflow pruning (unbiased): E[q] = mag.
+    under = jnp.where(u * alpha < mag, sign * alpha, 0.0)
+
+    # Log-domain stochastic rounding between octaves.
+    safe_mag = jnp.maximum(mag, 1e-30)
+    safe_alpha = jnp.maximum(alpha, 1e-30)
+    k = jnp.floor(jnp.log2(safe_mag / safe_alpha))
+    k = jnp.clip(k, 0.0, float(EXP_LEVELS - 1))
+    lo = safe_alpha * jnp.exp2(k)
+    hi = safe_alpha * jnp.exp2(k + 1.0)
+    top = safe_alpha * (2.0 ** (EXP_LEVELS - 1))
+    p_up = (mag - lo) / (hi - lo)
+    rounded = jnp.minimum(jnp.where(u < p_up, hi, lo), top)
+    above = sign * rounded
+
+    out = jnp.where(mag < alpha, under, above)
+    o_ref[...] = jnp.where((mag == 0.0) | (max_abs == 0.0), 0.0, out)
+
+
+def luq4(x, u, block=BLOCK, interpret=True):
+    """LUQ-FP4 quantize-dequantize `x` with uniform draws `u` (same shape)."""
+    x = jnp.asarray(x, jnp.float32)
+    max_abs = jnp.max(jnp.abs(x)).reshape(1)
+    return elementwise_call(
+        _luq4_kernel, x, [(u, False), (max_abs, True)], block=block, interpret=interpret
+    )

@@ -1,0 +1,108 @@
+"""Quantized matmul Pallas kernel — the MXU-targeted compute hot-spot.
+
+The paper's GPU simulation wraps conv/matmul operands with
+quantize-dequantize (Fig. 7). On a TPU-shaped machine the analogous
+design is a tiled matmul whose operand tiles are LUQ-quantized on the
+VMEM load path, with fp32 accumulation on the MXU:
+
+  grid = (M/bm, N/bn, K/bk)
+  x tile (bm, bk) indexed (i, k);  w tile (bk, bn) indexed (k, j)
+  o tile (bm, bn) indexed (i, j); accumulated over the k grid axis.
+
+`enabled` is a runtime scalar so the same compiled kernel serves both the
+quantized and full-precision paths (DPQuant flips layers epoch-by-epoch).
+Per-tensor alphas (max|x|/2^7) are computed in L2 and broadcast; this is
+what a production two-pass kernel would do, and it keeps tiles pure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EXP_LEVELS
+
+
+def _luq_tile(x, u, max_abs):
+    """LUQ-FP4 quantize-dequantize one tile (same math as luq.py)."""
+    alpha = max_abs / (2.0 ** (EXP_LEVELS - 1))
+    sign = jnp.sign(x)
+    mag = jnp.abs(x)
+    under = jnp.where(u * alpha < mag, sign * alpha, 0.0)
+    safe_mag = jnp.maximum(mag, 1e-30)
+    safe_alpha = jnp.maximum(alpha, 1e-30)
+    k = jnp.clip(jnp.floor(jnp.log2(safe_mag / safe_alpha)), 0.0, float(EXP_LEVELS - 1))
+    lo = safe_alpha * jnp.exp2(k)
+    hi = safe_alpha * jnp.exp2(k + 1.0)
+    top = safe_alpha * (2.0 ** (EXP_LEVELS - 1))
+    p_up = (mag - lo) / (hi - lo)
+    above = sign * jnp.minimum(jnp.where(u < p_up, hi, lo), top)
+    out = jnp.where(mag < alpha, under, above)
+    return jnp.where((mag == 0.0) | (max_abs == 0.0), 0.0, out)
+
+
+def _qmatmul_kernel(x_ref, w_ref, ux_ref, uw_ref, ax_ref, aw_ref, en_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    en = en_ref[0]
+    x = x_ref[...]
+    w = w_ref[...]
+    xq = en * _luq_tile(x, ux_ref[...], ax_ref[0]) + (1.0 - en) * x
+    wq = en * _luq_tile(w, uw_ref[...], aw_ref[0]) + (1.0 - en) * w
+    # fp32 accumulate — the MXU's native accumulation width for bf16/fp8
+    # operands; tiles stay in VMEM across the k loop.
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm = ((m + bm - 1) // bm) * bm
+    pn = ((n + bn - 1) // bn) * bn
+    return jnp.pad(x, ((0, pm - m), (0, pn - n)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def qmatmul(x, w, u_x, u_w, enabled, bm=32, bn=32, bk=32, interpret=True):
+    """`(x @ w)` with LUQ-FP4-quantized operands when `enabled > 0.5`.
+
+    x: (M, K); w: (K, N); u_x/u_w: uniform draws, same shapes;
+    enabled: scalar f32 in {0, 1}.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"shape mismatch {x.shape} @ {w.shape}"
+
+    ax = jnp.max(jnp.abs(x)).reshape(1)
+    aw = jnp.max(jnp.abs(w)).reshape(1)
+    en = jnp.reshape(jnp.asarray(enabled, jnp.float32), (1,))
+
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w, bk, bn)
+    uxp = _pad2(jnp.asarray(u_x, jnp.float32), bm, bk)
+    uwp = _pad2(jnp.asarray(u_w, jnp.float32), bk, bn)
+    gm, gk = xp.shape[0] // bm, xp.shape[1] // bk
+    gn = wp.shape[1] // bn
+
+    scalar = pl.BlockSpec((1,), lambda i, j, k: (0,))
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            scalar,
+            scalar,
+            scalar,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, uxp, uwp, ax, aw, en)
+    return out[:m, :n]

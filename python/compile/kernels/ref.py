@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These implement the quantizer semantics with plain jax.numpy only — no
+pallas — and are the correctness contract: each kernel in this package
+must match its oracle bit-for-bit given the same uniform random draws
+(stochastic rounding consumes explicit random inputs, so the comparison
+is exact, not statistical).
+
+Formats (paper §6 "Low Precision Format", §A.9):
+  * LUQ-FP4  — 1 sign + 3 exponent bits: grid {0} ∪ {±alpha·2^k, k=0..7},
+    alpha = max|x| / 2^7; stochastic underflow pruning below alpha and
+    stochastic log-domain rounding above (Chmiel et al. 2024).
+  * uniform4 — 16 evenly spaced levels over [-max, max] with stochastic
+    rounding (§A.9.2).
+  * fp8 (E5M2) — round-to-nearest-even to 5-exponent/2-mantissa floats,
+    saturating at 57344 (§A.9.1). Deterministic.
+"""
+
+import jax.numpy as jnp
+
+EXP_LEVELS = 8  # 3 exponent bits
+FP8_MAX = 57344.0
+FP8_MIN_NORMAL = 2.0 ** -14
+
+
+def luq_alpha(max_abs):
+    """Underflow threshold alpha for a tensor with given max magnitude."""
+    return max_abs / (2.0 ** (EXP_LEVELS - 1))
+
+
+def luq4_ref(x, u):
+    """LUQ-FP4 quantize-dequantize. `u` ~ U[0,1), same shape as `x`."""
+    x = jnp.asarray(x, jnp.float32)
+    max_abs = jnp.max(jnp.abs(x))
+    alpha = luq_alpha(max_abs)
+    sign = jnp.sign(x)
+    mag = jnp.abs(x)
+
+    # Stochastic underflow: |x| < alpha -> sign*alpha w.p. mag/alpha else 0.
+    under = jnp.where(u * alpha < mag, sign * alpha, 0.0)
+
+    # Log-domain stochastic rounding for alpha <= |x| <= max.
+    safe_mag = jnp.maximum(mag, 1e-30)
+    safe_alpha = jnp.maximum(alpha, 1e-30)
+    k = jnp.floor(jnp.log2(safe_mag / safe_alpha))
+    k = jnp.clip(k, 0.0, float(EXP_LEVELS - 1))
+    lo = safe_alpha * jnp.exp2(k)
+    hi = safe_alpha * jnp.exp2(k + 1.0)
+    top = safe_alpha * (2.0 ** (EXP_LEVELS - 1))
+    p_up = (mag - lo) / (hi - lo)
+    rounded = jnp.where(u < p_up, hi, lo)
+    rounded = jnp.minimum(rounded, top)  # max element maps to itself
+    above = sign * rounded
+
+    out = jnp.where(mag < alpha, under, above)
+    return jnp.where((mag == 0.0) | (max_abs == 0.0), 0.0, out).astype(jnp.float32)
+
+
+def uniform4_ref(x, u):
+    """Symmetric uniform INT4 (16 levels) with stochastic rounding."""
+    x = jnp.asarray(x, jnp.float32)
+    max_abs = jnp.max(jnp.abs(x))
+    step = 2.0 * max_abs / 15.0
+    safe = jnp.where(step == 0.0, 1.0, step)
+    t = x / safe
+    lo = jnp.floor(t)
+    frac = t - lo
+    rounded = jnp.where(u < frac, lo + 1.0, lo)
+    return jnp.where(step == 0.0, 0.0, rounded * safe).astype(jnp.float32)
+
+
+def fp8_ref(x):
+    """FP8-E5M2 quantize-dequantize, round-to-nearest-even, saturating."""
+    x = jnp.asarray(x, jnp.float32)
+    clamped = jnp.clip(x, -FP8_MAX, FP8_MAX)
+    bits = clamped.view(jnp.uint32)
+    drop = jnp.uint32(23 - 2)
+    one = jnp.uint32(1)
+    lsb = (bits >> drop) & one
+    round_add = (one << (drop - one)) - one + lsb
+    rounded = (bits + round_add) & ~((one << drop) - one)
+    y = rounded.view(jnp.float32)
+    y = jnp.clip(y, -FP8_MAX, FP8_MAX)
+    # Subnormal band: snap to grid of step 2^-16.
+    sub_step = FP8_MIN_NORMAL / 4.0
+    y_sub = jnp.round(y / sub_step) * sub_step
+    y = jnp.where(jnp.abs(y) < FP8_MIN_NORMAL, y_sub, y)
+    return jnp.where(x == 0.0, 0.0, y).astype(jnp.float32)
+
+
+def clip_rows_ref(g, clip_norm):
+    """Per-row (per-sample) L2 clipping: scale row i by min(1, C/||g_i||)."""
+    g = jnp.asarray(g, jnp.float32)
+    norms = jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+    return g * scale
+
+
+def qmatmul_ref(x, w, u_x, u_w, enabled):
+    """Quantized matmul oracle: LUQ-quantize both operands iff enabled."""
+    xq = jnp.where(enabled > 0.5, luq4_ref(x, u_x), x)
+    wq = jnp.where(enabled > 0.5, luq4_ref(w, u_w), w)
+    return xq @ wq

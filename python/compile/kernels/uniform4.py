@@ -1,0 +1,29 @@
+"""Uniform INT4 Pallas kernel (paper §A.9.2): 16 evenly spaced levels
+over [-max|x|, max|x|] with stochastic rounding. Must match
+`ref.uniform4_ref` exactly given the same draws."""
+
+import jax.numpy as jnp
+
+from .common import BLOCK, elementwise_call
+
+
+def _uniform4_kernel(x_ref, u_ref, maxabs_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    max_abs = maxabs_ref[0]
+    step = 2.0 * max_abs / 15.0
+    safe = jnp.where(step == 0.0, 1.0, step)
+    t = x / safe
+    lo = jnp.floor(t)
+    frac = t - lo
+    rounded = jnp.where(u < frac, lo + 1.0, lo)
+    o_ref[...] = jnp.where(step == 0.0, 0.0, rounded * safe)
+
+
+def uniform4(x, u, block=BLOCK, interpret=True):
+    """Uniform-INT4 quantize-dequantize `x` with uniform draws `u`."""
+    x = jnp.asarray(x, jnp.float32)
+    max_abs = jnp.max(jnp.abs(x)).reshape(1)
+    return elementwise_call(
+        _uniform4_kernel, x, [(u, False), (max_abs, True)], block=block, interpret=interpret
+    )

@@ -1,0 +1,158 @@
+"""Quantized layers with custom VJPs (the paper's simulation setup, §A.12
+/ Figure 7): the inputs of the forward op AND of both backward ops
+(dgrad, wgrad) are quantize-dequantized whenever the layer is enabled for
+quantization this epoch.
+
+Each quantizable op is built by `make_qop(op)` where `op(x, w)` is linear
+in both operands (dense matmul, conv). The custom VJP:
+
+  fwd : y  = op(Q(x), Q(w))
+  bwd : dx, dw = vjp(op at (Q(x), Q(w)))(Q(g))
+
+which quantizes exactly the operand sets the paper's Figure 7 shows
+(fwd: x, w; dgrad: g, w; wgrad: g, x).
+
+`enabled` is a traced f32 scalar (one slot of the runtime `quant_mask`
+input), so one compiled graph serves every quantization policy — the
+coordinator flips layers epoch by epoch without recompiling. `seed` is a
+traced f32 scalar; stochastic-rounding draws derive from (seed, layer_id,
+operand_tag) and are shared across the vmapped batch (equivalent to
+quantizing the batched tensor once, as real hardware would).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import QUANTIZERS
+
+# Block size for the element-wise quantizer kernels inside models: small
+# activations/weights are a single grid step.
+QBLOCK = 2048
+
+
+def _draws(seed, layer_id, tag, shape):
+    """Uniform draws for stochastic rounding, keyed by (seed, layer, tag)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.int32))
+    key = jax.random.fold_in(key, layer_id)
+    key = jax.random.fold_in(key, tag)
+    return jax.random.uniform(key, shape, jnp.float32)
+
+
+def make_gate_q(quantizer_name):
+    """Build `gate_q(x, enabled, seed, layer_id, tag)`: quantize-dequantize
+    `x` through the L1 Pallas kernel, blended with the fp path by
+    `enabled` ∈ {0,1}."""
+    qfn = QUANTIZERS[quantizer_name]
+
+    def gate_q(x, enabled, seed, layer_id, tag):
+        u = _draws(seed, layer_id, tag, x.shape)
+        qx = qfn(x, u, block=QBLOCK)
+        return enabled * qx + (1.0 - enabled) * x
+
+    return gate_q
+
+
+def make_qop(op, quantizer_name):
+    """Wrap a bilinear `op(x, w) -> y` with quantized fwd/dgrad/wgrad.
+
+    Returns `qop(x, w, enabled, seed, layer_id)`.
+    `layer_id` must be a static python int (used for PRNG folding).
+    """
+    gate_q = make_gate_q(quantizer_name)
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+    def qop(x, w, enabled, seed, layer_id):
+        qx = gate_q(x, enabled, seed, layer_id, 0)
+        qw = gate_q(w, enabled, seed, layer_id, 1)
+        return op(qx, qw)
+
+    def qop_fwd(x, w, enabled, seed, layer_id):
+        y = qop(x, w, enabled, seed, layer_id)
+        return y, (x, w, enabled, seed)
+
+    def qop_bwd(layer_id, res, g):
+        x, w, enabled, seed = res
+        # Backward operand quantization (dgrad: g, w — wgrad: g, x).
+        qg = gate_q(g, enabled, seed, layer_id, 2)
+        qx = gate_q(x, enabled, seed, layer_id, 3)
+        qw = gate_q(w, enabled, seed, layer_id, 4)
+        _, vjp = jax.vjp(op, qx, qw)
+        dx, dw = vjp(qg)
+        return dx, dw, jnp.zeros(()), jnp.zeros(())
+
+    qop.defvjp(qop_fwd, qop_bwd)
+    return qop
+
+
+# ---------------------------------------------------------------------------
+# Concrete bilinear ops (per-example: no batch dimension; the DP step
+# vmaps over examples).
+# ---------------------------------------------------------------------------
+
+
+def dense_op(x, w):
+    """x: (..., din) @ w: (din, dout)."""
+    return x @ w
+
+
+def conv3x3_op(x, w):
+    """x: (H, W, Cin), w: (3, 3, Cin, Cout) — SAME padding, stride 1."""
+    return lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+
+
+# ---------------------------------------------------------------------------
+# Non-quantized building blocks (cheap elementwise ops the paper leaves in
+# full precision — its "overhead ops", §A.13).
+# ---------------------------------------------------------------------------
+
+
+def group_norm(x, scale, bias, groups=4, eps=1e-5):
+    """GroupNorm over the channel axis of (H, W, C) — the BN replacement
+    standard in DP training (BatchNorm mixes examples and breaks
+    per-sample gradients)."""
+    h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:  # largest divisor of c not exceeding `groups`
+        g -= 1
+    xg = x.reshape(h, w, g, c // g)
+    mean = xg.mean(axis=(0, 1, 3), keepdims=True)
+    var = xg.var(axis=(0, 1, 3), keepdims=True)
+    xn = ((xg - mean) / jnp.sqrt(var + eps)).reshape(h, w, c)
+    return xn * scale + bias
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def avg_pool2(x):
+    """2x2 average pooling on (H, W, C)."""
+    h, w, c = x.shape
+    return x.reshape(h // 2, 2, w // 2, 2, c).mean(axis=(1, 3))
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(0, 1))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_cross_entropy(logits, label, n_classes):
+    """Scalar CE loss for one example."""
+    logz = jax.nn.logsumexp(logits)
+    onehot_logit = logits[label]
+    del n_classes
+    return logz - onehot_logit

@@ -1,0 +1,102 @@
+"""L2 graph builders: tie a model from `models.py` to the DP-SGD step in
+`dp.py` and describe everything the Rust runtime needs (shapes, names,
+parameter layout) for the artifact manifest."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dp, models
+
+
+class GraphSpec:
+    """A fully-specified (model, dataset, quantizer, batch) training graph
+    ready for AOT lowering."""
+
+    def __init__(self, model_name, dataset, quantizer, batch, clip_norm=1.0, seed=0):
+        self.model_name = model_name
+        self.dataset = dataset
+        self.quantizer = quantizer
+        self.batch = batch
+        self.clip_norm = clip_norm
+        self.model = models.build(model_name, dataset, quantizer)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.param_names = [n for n, _ in self.params]
+        self.param_shapes = [tuple(v.shape) for _, v in self.params]
+
+    # ----- example/batch specs -----------------------------------------------
+    def example_spec(self):
+        return self.model.input_spec()
+
+    def batch_specs(self):
+        ex = self.example_spec()
+        x = jax.ShapeDtypeStruct((self.batch,) + ex.shape, ex.dtype)
+        y = jax.ShapeDtypeStruct((self.batch,), jnp.int32)
+        mask = jax.ShapeDtypeStruct((self.batch,), jnp.float32)
+        return x, y, mask
+
+    def param_specs(self):
+        return [jax.ShapeDtypeStruct(v.shape, v.dtype) for _, v in self.params]
+
+    # ----- lowerable callables -------------------------------------------------
+    def train_fn(self):
+        step = dp.make_train_step(self.model, self.clip_norm)
+        nparams = len(self.params)
+
+        def fn(*args):
+            param_values = list(args[:nparams])
+            x, y, mask, qmask, seed = args[nparams : nparams + 5]
+            return step(param_values, x, y, mask, qmask, seed)
+
+        return fn
+
+    def train_arg_specs(self):
+        x, y, mask = self.batch_specs()
+        qmask = jax.ShapeDtypeStruct((self.model.n_quant_layers,), jnp.float32)
+        seed = jax.ShapeDtypeStruct((), jnp.float32)
+        return self.param_specs() + [x, y, mask, qmask, seed]
+
+    def eval_fn(self):
+        step = dp.make_eval_step(self.model)
+        nparams = len(self.params)
+
+        def fn(*args):
+            param_values = list(args[:nparams])
+            x, y, mask, qmask, seed = args[nparams : nparams + 5]
+            return step(param_values, x, y, mask, qmask, seed)
+
+        return fn
+
+    def eval_arg_specs(self):
+        x, y, mask = self.batch_specs()
+        qmask = jax.ShapeDtypeStruct((self.model.n_quant_layers,), jnp.float32)
+        seed = jax.ShapeDtypeStruct((), jnp.float32)
+        return self.param_specs() + [x, y, mask, qmask, seed]
+
+    # ----- initial weights + manifest ------------------------------------------
+    def initial_weights_flat(self):
+        """Concatenate initial parameter values (f32 little-endian order)."""
+        return np.concatenate([np.asarray(v, np.float32).ravel() for _, v in self.params])
+
+    def manifest_entry(self, train_name, eval_name, weights_file):
+        ex = self.example_spec()
+        dtype = ex.dtype.name if hasattr(ex.dtype, "name") else str(ex.dtype)
+        return {
+            "model": self.model_name,
+            "dataset": self.dataset,
+            "quantizer": self.quantizer,
+            "batch": self.batch,
+            "clip_norm": self.clip_norm,
+            "n_classes": self.model.n_classes,
+            "n_quant_layers": self.model.n_quant_layers,
+            "quant_layer_names": list(self.model.layer_names),
+            "example_shape": list(ex.shape),
+            "example_dtype": dtype,
+            "params": [
+                {"name": n, "shape": list(s)}
+                for n, s in zip(self.param_names, self.param_shapes)
+            ],
+            "train_hlo": f"{train_name}.hlo.txt",
+            "eval_hlo": f"{eval_name}.hlo.txt",
+            "weights": weights_file,
+        }

@@ -1,0 +1,315 @@
+"""Model zoo: scaled-down analogues of the paper's networks (see
+DESIGN.md §2 for the substitution rationale).
+
+  miniconvnet    — plain CNN, 8 quantizable layers   (≈ ResNet18 stand-in)
+  miniresnet     — residual CNN, 10 quantizable layers (ResNet18/50)
+  minidensenet   — densely connected CNN, 12 quantizable layers (DenseNet121)
+  tinytransformer— frozen embedding + 1 trainable block + head, 7
+                   quantizable layers (BERT/SNLI with 12/13 layers frozen)
+
+Every model exposes:
+  init(key)            -> params: list[(name, jnp.ndarray)]
+  apply(params, x, quant_mask, seed) -> logits   (per-example, no batch dim)
+  n_quant_layers       -> number of quant_mask slots
+  layer_names          -> names of the quantizable layers (mask order)
+  input_spec()         -> ShapeDtypeStruct of one example
+
+All image models share a 16x16x3 input; class count comes from the
+dataset. Parameters are a flat ordered list (not a dict) so the Rust
+runtime can address tensors positionally.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+IMG = (16, 16, 3)
+SEQ_LEN = 24
+VOCAB = 64
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+class _Base:
+    def __init__(self, n_classes, quantizer):
+        self.n_classes = n_classes
+        self.quantizer = quantizer
+        self.qdense = L.make_qop(L.dense_op, quantizer)
+        self.qconv = L.make_qop(L.conv3x3_op, quantizer)
+
+    def param_names(self):
+        return [n for n, _ in self.init(jax.random.PRNGKey(0))]
+
+
+class MiniConvNet(_Base):
+    """Plain CNN: 6 conv + 2 dense quantizable layers."""
+
+    CHANNELS = [(3, 8), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)]
+    n_quant_layers = 8
+    layer_names = [f"conv{i+1}" for i in range(6)] + ["fc1", "fc2"]
+
+    def input_spec(self):
+        return jax.ShapeDtypeStruct(IMG, jnp.float32)
+
+    def init(self, key):
+        params = []
+        for i, (cin, cout) in enumerate(self.CHANNELS):
+            key, k1 = jax.random.split(key)
+            params.append((f"conv{i+1}_w", _he(k1, (3, 3, cin, cout), 9 * cin)))
+            params.append((f"gn{i+1}_scale", jnp.ones((cout,), jnp.float32)))
+            params.append((f"gn{i+1}_bias", jnp.zeros((cout,), jnp.float32)))
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append(("fc1_w", _he(k1, (32, 64), 32)))
+        params.append(("fc1_b", jnp.zeros((64,), jnp.float32)))
+        params.append(("fc2_w", _he(k2, (64, self.n_classes), 64)))
+        params.append(("fc2_b", jnp.zeros((self.n_classes,), jnp.float32)))
+        return params
+
+    def apply(self, params, x, quant_mask, seed):
+        p = dict(params)
+        h = x
+        qi = 0
+        for i in range(6):
+            h = self.qconv(h, p[f"conv{i+1}_w"], quant_mask[qi], seed, qi)
+            h = L.group_norm(h, p[f"gn{i+1}_scale"], p[f"gn{i+1}_bias"])
+            h = L.relu(h)
+            qi += 1
+            if i in (1, 3):
+                h = L.avg_pool2(h)
+        h = L.global_avg_pool(h)
+        h = self.qdense(h, p["fc1_w"], quant_mask[qi], seed, qi) + p["fc1_b"]
+        h = L.relu(h)
+        qi += 1
+        h = self.qdense(h, p["fc2_w"], quant_mask[qi], seed, qi) + p["fc2_b"]
+        return h
+
+
+class MiniResNet(_Base):
+    """Residual CNN: stem + 4 basic blocks (2 convs each) + fc head.
+
+    10 quantizable layers. Skip connections use 1x1 projections where
+    channel counts change (projections stay fp — they are a small
+    fraction of compute, like the paper's overhead ops).
+    """
+
+    n_quant_layers = 10
+    layer_names = (
+        ["stem"]
+        + [f"block{b+1}_conv{c+1}" for b in range(4) for c in range(2)]
+        + ["fc"]
+    )
+    BLOCKS = [(8, 8), (8, 16), (16, 16), (16, 32)]
+
+    def input_spec(self):
+        return jax.ShapeDtypeStruct(IMG, jnp.float32)
+
+    def init(self, key):
+        params = []
+        key, k = jax.random.split(key)
+        params.append(("stem_w", _he(k, (3, 3, 3, 8), 27)))
+        params.append(("gn0_scale", jnp.ones((8,), jnp.float32)))
+        params.append(("gn0_bias", jnp.zeros((8,), jnp.float32)))
+        for b, (cin, cout) in enumerate(self.BLOCKS):
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            params.append((f"b{b+1}c1_w", _he(k1, (3, 3, cin, cout), 9 * cin)))
+            params.append((f"b{b+1}gn1_scale", jnp.ones((cout,), jnp.float32)))
+            params.append((f"b{b+1}gn1_bias", jnp.zeros((cout,), jnp.float32)))
+            params.append((f"b{b+1}c2_w", _he(k2, (3, 3, cout, cout), 9 * cout)))
+            params.append((f"b{b+1}gn2_scale", jnp.ones((cout,), jnp.float32)))
+            params.append((f"b{b+1}gn2_bias", jnp.zeros((cout,), jnp.float32)))
+            if cin != cout:
+                params.append((f"b{b+1}proj_w", _he(k3, (1, 1, cin, cout), cin)))
+        key, k = jax.random.split(key)
+        params.append(("fc_w", _he(k, (32, self.n_classes), 32)))
+        params.append(("fc_b", jnp.zeros((self.n_classes,), jnp.float32)))
+        return params
+
+    def apply(self, params, x, quant_mask, seed):
+        from jax import lax
+
+        p = dict(params)
+        qi = 0
+        h = self.qconv(x, p["stem_w"], quant_mask[qi], seed, qi)
+        h = L.relu(L.group_norm(h, p["gn0_scale"], p["gn0_bias"]))
+        qi += 1
+        for b, (cin, cout) in enumerate(self.BLOCKS):
+            skip = h
+            h = self.qconv(h, p[f"b{b+1}c1_w"], quant_mask[qi], seed, qi)
+            h = L.relu(L.group_norm(h, p[f"b{b+1}gn1_scale"], p[f"b{b+1}gn1_bias"]))
+            qi += 1
+            h = self.qconv(h, p[f"b{b+1}c2_w"], quant_mask[qi], seed, qi)
+            h = L.group_norm(h, p[f"b{b+1}gn2_scale"], p[f"b{b+1}gn2_bias"])
+            qi += 1
+            if cin != cout:
+                skip = lax.conv_general_dilated(
+                    skip[None],
+                    p[f"b{b+1}proj_w"],
+                    (1, 1),
+                    "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )[0]
+            h = L.relu(h + skip)
+            if b in (0, 2):
+                h = L.avg_pool2(h)
+        h = L.global_avg_pool(h)
+        return self.qdense(h, p["fc_w"], quant_mask[qi], seed, qi) + p["fc_b"]
+
+
+class MiniDenseNet(_Base):
+    """Densely connected CNN: 2 dense blocks of 5 layers (growth 6) with a
+    transition conv between them + fc head. 12 quantizable layers."""
+
+    n_quant_layers = 12
+    GROWTH = 6
+    layer_names = (
+        [f"d1_l{i+1}" for i in range(5)]
+        + ["trans"]
+        + [f"d2_l{i+1}" for i in range(5)]
+        + ["fc"]
+    )
+
+    def input_spec(self):
+        return jax.ShapeDtypeStruct(IMG, jnp.float32)
+
+    def init(self, key):
+        params = []
+        c = 3
+        for i in range(5):
+            key, k = jax.random.split(key)
+            params.append((f"d1l{i+1}_w", _he(k, (3, 3, c, self.GROWTH), 9 * c)))
+            params.append((f"d1gn{i+1}_scale", jnp.ones((self.GROWTH,), jnp.float32)))
+            params.append((f"d1gn{i+1}_bias", jnp.zeros((self.GROWTH,), jnp.float32)))
+            c += self.GROWTH
+        key, k = jax.random.split(key)
+        params.append(("trans_w", _he(k, (3, 3, c, 16), 9 * c)))
+        params.append(("transgn_scale", jnp.ones((16,), jnp.float32)))
+        params.append(("transgn_bias", jnp.zeros((16,), jnp.float32)))
+        c = 16
+        for i in range(5):
+            key, k = jax.random.split(key)
+            params.append((f"d2l{i+1}_w", _he(k, (3, 3, c, self.GROWTH), 9 * c)))
+            params.append((f"d2gn{i+1}_scale", jnp.ones((self.GROWTH,), jnp.float32)))
+            params.append((f"d2gn{i+1}_bias", jnp.zeros((self.GROWTH,), jnp.float32)))
+            c += self.GROWTH
+        key, k = jax.random.split(key)
+        params.append(("fc_w", _he(k, (c, self.n_classes), c)))
+        params.append(("fc_b", jnp.zeros((self.n_classes,), jnp.float32)))
+        return params
+
+    def apply(self, params, x, quant_mask, seed):
+        p = dict(params)
+        qi = 0
+        h = x
+        for i in range(5):
+            new = self.qconv(h, p[f"d1l{i+1}_w"], quant_mask[qi], seed, qi)
+            new = L.relu(L.group_norm(new, p[f"d1gn{i+1}_scale"], p[f"d1gn{i+1}_bias"]))
+            h = jnp.concatenate([h, new], axis=-1)
+            qi += 1
+        h = self.qconv(h, p["trans_w"], quant_mask[qi], seed, qi)
+        h = L.relu(L.group_norm(h, p["transgn_scale"], p["transgn_bias"]))
+        h = L.avg_pool2(h)
+        qi += 1
+        for i in range(5):
+            new = self.qconv(h, p[f"d2l{i+1}_w"], quant_mask[qi], seed, qi)
+            new = L.relu(L.group_norm(new, p[f"d2gn{i+1}_scale"], p[f"d2gn{i+1}_bias"]))
+            h = jnp.concatenate([h, new], axis=-1)
+            qi += 1
+        h = L.global_avg_pool(h)
+        return self.qdense(h, p["fc_w"], quant_mask[qi], seed, qi) + p["fc_b"]
+
+
+class TinyTransformer(_Base):
+    """BERT/SNLI stand-in: frozen token+position embedding, one trainable
+    transformer block, mean-pool classifier. 7 quantizable layers
+    (wq, wk, wv, wo, mlp_up, mlp_down, classifier).
+
+    Matches the paper's §A.4.2 setup where 12/13 BERT layers are frozen
+    and only the last block + head train (under DP-AdamW)."""
+
+    n_quant_layers = 7
+    layer_names = ["wq", "wk", "wv", "wo", "mlp_up", "mlp_down", "classifier"]
+    D = 32
+    HEADS = 2
+    MLP = 64
+
+    def input_spec(self):
+        return jax.ShapeDtypeStruct((SEQ_LEN,), jnp.int32)
+
+    def __init__(self, n_classes, quantizer):
+        super().__init__(n_classes, quantizer)
+        # Frozen embedding: deterministic constant baked into the graph
+        # (the "pretrained frozen layers").
+        ek = jax.random.PRNGKey(1234)
+        self.embed = jax.random.normal(ek, (VOCAB, self.D), jnp.float32) * 0.1
+        pk = jax.random.PRNGKey(5678)
+        self.pos = jax.random.normal(pk, (SEQ_LEN, self.D), jnp.float32) * 0.1
+
+    def init(self, key):
+        d, m = self.D, self.MLP
+        params = []
+        for name in ["wq", "wk", "wv", "wo"]:
+            key, k = jax.random.split(key)
+            params.append((f"{name}_w", _he(k, (d, d), d)))
+        params.append(("ln1_scale", jnp.ones((d,), jnp.float32)))
+        params.append(("ln1_bias", jnp.zeros((d,), jnp.float32)))
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append(("mlp_up_w", _he(k1, (d, m), d)))
+        params.append(("mlp_up_b", jnp.zeros((m,), jnp.float32)))
+        params.append(("mlp_down_w", _he(k2, (m, d), m)))
+        params.append(("mlp_down_b", jnp.zeros((d,), jnp.float32)))
+        params.append(("ln2_scale", jnp.ones((d,), jnp.float32)))
+        params.append(("ln2_bias", jnp.zeros((d,), jnp.float32)))
+        key, k = jax.random.split(key)
+        params.append(("cls_w", _he(k, (d, self.n_classes), d)))
+        params.append(("cls_b", jnp.zeros((self.n_classes,), jnp.float32)))
+        return params
+
+    def apply(self, params, tokens, quant_mask, seed):
+        p = dict(params)
+        d, nh = self.D, self.HEADS
+        hd = d // nh
+        h = self.embed[tokens] + self.pos  # (L, D), frozen
+
+        hn = L.layer_norm(h, p["ln1_scale"], p["ln1_bias"])
+        q = self.qdense(hn, p["wq_w"], quant_mask[0], seed, 0)
+        k = self.qdense(hn, p["wk_w"], quant_mask[1], seed, 1)
+        v = self.qdense(hn, p["wv_w"], quant_mask[2], seed, 2)
+        ln = h.shape[0]
+        q = q.reshape(ln, nh, hd).transpose(1, 0, 2)
+        k = k.reshape(ln, nh, hd).transpose(1, 0, 2)
+        v = v.reshape(ln, nh, hd).transpose(1, 0, 2)
+        att = jax.nn.softmax(q @ k.transpose(0, 2, 1) / jnp.sqrt(hd), axis=-1)
+        ctx = (att @ v).transpose(1, 0, 2).reshape(ln, d)
+        h = h + self.qdense(ctx, p["wo_w"], quant_mask[3], seed, 3)
+
+        hn = L.layer_norm(h, p["ln2_scale"], p["ln2_bias"])
+        up = L.relu(self.qdense(hn, p["mlp_up_w"], quant_mask[4], seed, 4) + p["mlp_up_b"])
+        down = self.qdense(up, p["mlp_down_w"], quant_mask[5], seed, 5) + p["mlp_down_b"]
+        h = h + down
+
+        pooled = h.mean(axis=0)
+        return self.qdense(pooled, p["cls_w"], quant_mask[6], seed, 6) + p["cls_b"]
+
+
+MODELS = {
+    "miniconvnet": MiniConvNet,
+    "miniresnet": MiniResNet,
+    "minidensenet": MiniDenseNet,
+    "tinytransformer": TinyTransformer,
+}
+
+# Class counts of the (synthetic stand-ins for the) paper's datasets.
+DATASET_CLASSES = {
+    "gtsrb": 43,
+    "emnist": 47,
+    "cifar": 10,
+    "snli": 3,
+}
+
+
+def build(model_name, dataset, quantizer="luq4"):
+    cls = MODELS[model_name]
+    return cls(DATASET_CLASSES[dataset], quantizer)

@@ -1,0 +1,6 @@
+"""Make `compile.*` importable whether pytest runs from repo root or
+from python/ (the final `pytest python/tests/` invocation runs at root)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

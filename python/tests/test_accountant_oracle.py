@@ -1,0 +1,104 @@
+"""Cross-language privacy-accountant oracle.
+
+The Rust RDP accountant (rust/src/privacy/rdp.rs) is validated against an
+independent implementation of the Rényi divergence of the Sampled
+Gaussian Mechanism computed here by direct numerical integration:
+
+  A(alpha) = E_{z~nu0}[ (nu(z)/nu0(z))^alpha ],
+  nu0 = N(0, sigma^2),  nu = (1-q) N(0, sigma^2) + q N(1, sigma^2),
+  rdp(alpha) = log(A) / (alpha - 1)
+
+(Mironov et al. 2019, Eq. 3-4 — this is the quantity the closed-form
+binomial/series expansions in Rust compute.) The Rust values are obtained
+by shelling out to `dpquant accountant --dump`.
+"""
+
+import math
+import os
+import shutil
+import subprocess
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+BIN = os.path.join(REPO, "target", "release", "dpquant")
+
+
+def rdp_numerical(q, sigma, alpha):
+    """Direct numerical integration of the SGM Rényi divergence.
+
+    Uses the max of the two directions like the Rust code's underlying
+    analysis (Opacus takes E_{nu0}[(nu/nu0)^alpha], which upper-bounds
+    both directions for the SGM).
+    """
+    # Integrate over a wide grid; for large alpha the integrand
+    # exp(-z^2/2s^2 + alpha*(2z-1)/2s^2) peaks near z = alpha, so the
+    # upper limit must scale with alpha.
+    z = np.linspace(-30 * sigma, alpha + 30 * sigma + 1.0, 400_001)
+    log_nu0 = -0.5 * ((z / sigma) ** 2) - math.log(sigma * math.sqrt(2 * math.pi))
+    log_n1 = -0.5 * (((z - 1.0) / sigma) ** 2) - math.log(sigma * math.sqrt(2 * math.pi))
+    # log nu = logsumexp(log(1-q)+log_nu0, log(q)+log_n1)
+    a = np.log1p(-q) + log_nu0 if q < 1.0 else np.full_like(log_nu0, -np.inf)
+    b = math.log(q) + log_n1
+    m = np.maximum(a, b)
+    log_nu = m + np.log(np.exp(a - m) + np.exp(b - m))
+    # E_{nu0}[(nu/nu0)^alpha] = ∫ nu0 * exp(alpha*(log_nu - log_nu0))
+    log_integrand = log_nu0 + alpha * (log_nu - log_nu0)
+    # Trapezoid in linear space via stable shift.
+    shift = log_integrand.max()
+    integral = np.trapezoid(np.exp(log_integrand - shift), z)
+    log_a = shift + math.log(integral)
+    return log_a / (alpha - 1.0)
+
+
+@pytest.fixture(scope="module")
+def rust_dump():
+    if not os.path.exists(BIN) and not shutil.which("dpquant"):
+        pytest.skip("dpquant binary not built (cargo build --release)")
+    exe = BIN if os.path.exists(BIN) else "dpquant"
+    out = subprocess.run(
+        [exe, "accountant", "--dump"], capture_output=True, text=True, check=True
+    )
+    rows = []
+    for line in out.stdout.strip().splitlines():
+        qv, sv, av, rv = line.split()
+        rows.append((float(qv), float(sv), float(av), float(rv)))
+    assert rows, "empty dump"
+    return rows
+
+
+def test_rust_rdp_matches_numerical_integration(rust_dump):
+    checked = 0
+    for q, sigma, alpha, rust_val in rust_dump:
+        want = rdp_numerical(q, sigma, alpha)
+        if want < 1e-12:
+            continue
+        rel = abs(rust_val - want) / max(abs(want), 1e-12)
+        assert rel < 5e-3, (
+            f"q={q} sigma={sigma} alpha={alpha}: rust={rust_val} oracle={want} rel={rel}"
+        )
+        checked += 1
+    assert checked >= 80, f"only {checked} comparisons ran"
+
+
+def test_full_batch_closed_form(rust_dump):
+    # q = 1 rows must equal alpha / (2 sigma^2) exactly.
+    for q, sigma, alpha, rust_val in rust_dump:
+        if q == 1.0:
+            want = alpha / (2 * sigma**2)
+            assert abs(rust_val - want) < 1e-9 * max(want, 1.0)
+
+
+def test_rdp_monotone_in_alpha(rust_dump):
+    from collections import defaultdict
+
+    series = defaultdict(list)
+    for q, sigma, alpha, rust_val in rust_dump:
+        series[(q, sigma)].append((alpha, rust_val))
+    for (q, sigma), pts in series.items():
+        pts.sort()
+        vals = [v for _, v in pts]
+        assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:])), (
+            f"rdp not monotone for q={q} sigma={sigma}: {vals}"
+        )

@@ -1,0 +1,136 @@
+"""DP-SGD step graph tests: clipping invariant, masking semantics,
+per-sample gradient correctness vs direct autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dp, models
+from compile.model import GraphSpec
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 4
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return GraphSpec("miniconvnet", "cifar", "luq4", B)
+
+
+@pytest.fixture(scope="module")
+def step(spec):
+    return jax.jit(spec.train_fn())
+
+
+def make_args(spec, seed=0, mask=None, qmask=None):
+    key = jax.random.PRNGKey(seed)
+    ex = spec.example_spec()
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (B,) + ex.shape, jnp.float32)
+    y = jax.random.randint(ky, (B,), 0, spec.model.n_classes)
+    m = jnp.ones((B,), jnp.float32) if mask is None else jnp.asarray(mask, jnp.float32)
+    q = (
+        jnp.zeros((spec.model.n_quant_layers,), jnp.float32)
+        if qmask is None
+        else jnp.asarray(qmask, jnp.float32)
+    )
+    vals = [v for _, v in spec.params]
+    return vals + [x, y, m, q, jnp.float32(seed)]
+
+
+def test_output_count_and_shapes(spec, step):
+    # grads... + loss_sum + correct_sum + rawnorm_sum + rawnorm_max
+    out = step(*make_args(spec))
+    assert len(out) == len(spec.params) + 4
+    for (name, v), g in zip(spec.params, out):
+        assert g.shape == v.shape, f"{name}: {g.shape} != {v.shape}"
+
+
+def test_grad_sum_norm_bounded_by_batch_times_clip(spec, step):
+    # Each per-sample grad is clipped to C=1; the sum of B rows has norm
+    # at most B*C.
+    out = step(*make_args(spec, seed=1))
+    grads = out[: len(spec.params)]
+    total_sq = sum(float(jnp.sum(g * g)) for g in grads)
+    assert np.sqrt(total_sq) <= B * spec.clip_norm + 1e-4
+
+
+def test_masked_examples_contribute_nothing(spec, step):
+    full = step(*make_args(spec, seed=2, mask=[1, 1, 0, 0]))
+    # Changing labels of the masked examples must not alter anything.
+    args = make_args(spec, seed=2, mask=[1, 1, 0, 0])
+    y = np.array(args[len(spec.params) + 1])
+    y[2:] = (y[2:] + 1) % spec.model.n_classes
+    args[len(spec.params) + 1] = jnp.asarray(y)
+    alt = step(*args)
+    for a, b in zip(full, alt):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_all_masked_gives_zero(spec, step):
+    out = step(*make_args(spec, seed=3, mask=[0, 0, 0, 0]))
+    n = len(spec.params)
+    for g in out[:n]:
+        np.testing.assert_array_equal(np.asarray(g), 0.0)
+    assert float(out[n]) == 0.0  # loss_sum
+    assert float(out[n + 1]) == 0.0  # correct_sum
+    assert float(out[n + 2]) == 0.0  # rawnorm_sum (masked out)
+
+
+def test_matches_manual_per_sample_clipping(spec):
+    # Reference computation with plain autodiff + numpy clipping.
+    args = make_args(spec, seed=4)
+    vals = args[: len(spec.params)]
+    x, y = args[len(spec.params)], args[len(spec.params) + 1]
+    names = spec.param_names
+    loss_fn = dp.make_loss_fn(spec.model)
+    qmask = args[len(spec.params) + 3]
+    seed = args[len(spec.params) + 4]
+
+    per_grads = []
+    for i in range(B):
+        g = jax.grad(lambda pv: loss_fn(pv, names, x[i], y[i], qmask, seed)[0])(vals)
+        per_grads.append(np.concatenate([np.asarray(t).ravel() for t in g]))
+    per_grads = np.stack(per_grads)
+    norms = np.linalg.norm(per_grads, axis=1, keepdims=True)
+    clipped = per_grads * np.minimum(1.0, spec.clip_norm / np.maximum(norms, 1e-12))
+    want = clipped.sum(axis=0)
+
+    out = jax.jit(spec.train_fn())(*args)
+    got = np.concatenate([np.asarray(g).ravel() for g in out[: len(spec.params)]])
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_eval_step_counts(spec):
+    ev = jax.jit(spec.eval_fn())
+    key = jax.random.PRNGKey(5)
+    ex = spec.example_spec()
+    x = jax.random.normal(key, (B,) + ex.shape, jnp.float32)
+    y = jax.random.randint(key, (B,), 0, spec.model.n_classes)
+    vals = [v for _, v in spec.params]
+    zq = jnp.zeros((spec.model.n_quant_layers,), jnp.float32)
+    zs = jnp.float32(0)
+    loss_sum, correct = ev(*(vals + [x, y, jnp.ones((B,), jnp.float32), zq, zs]))
+    assert float(loss_sum) > 0
+    assert 0 <= float(correct) <= B
+    # Half-masked: strictly fewer (or equal) counted examples.
+    loss2, correct2 = ev(*(vals + [x, y, jnp.asarray([1, 1, 0, 0], jnp.float32), zq, zs]))
+    assert float(loss2) <= float(loss_sum) + 1e-6
+    assert float(correct2) <= float(correct) + 1e-9
+
+
+def test_quantized_step_differs_but_close(spec, step):
+    fp_out = step(*make_args(spec, seed=6))
+    q = np.ones(spec.model.n_quant_layers, np.float32)
+    q_out = step(*make_args(spec, seed=6, qmask=q))
+    # raw-norm taps present and sane
+    n = len(spec.params)
+    assert float(fp_out[n + 2]) > 0.0
+    assert float(fp_out[n + 3]) <= float(fp_out[n + 2]) + 1e-6
+    fp_flat = np.concatenate([np.asarray(g).ravel() for g in fp_out[: len(spec.params)]])
+    q_flat = np.concatenate([np.asarray(g).ravel() for g in q_out[: len(spec.params)]])
+    assert not np.allclose(fp_flat, q_flat), "quantization must perturb grads"
+    # But the clipped-sum scale stays bounded (both obey the clip bound).
+    assert np.linalg.norm(q_flat) <= B * spec.clip_norm + 1e-4

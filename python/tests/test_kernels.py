@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Stochastic rounding consumes explicit uniform operands, so kernel-vs-ref
+comparisons are exact (same draws), not statistical. Statistical
+properties (unbiasedness, Prop-1 variance scaling) are tested separately
+with many seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import clip, fp8, luq, qmatmul, ref, uniform4
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0, offset=0.0):
+    k = jax.random.PRNGKey(seed)
+    return scale * jax.random.normal(k, shape, jnp.float32) + offset
+
+
+def uniforms(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed + 1000), shape, jnp.float32)
+
+
+SHAPES = [(17,), (256,), (2048,), (2049,), (8, 33), (4, 7, 11)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_luq4_matches_ref(shape):
+    x = rand(shape, 0)
+    u = uniforms(shape, 0)
+    got = luq.luq4(x, u)
+    want = ref.luq4_ref(x, u)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_uniform4_matches_ref(shape):
+    x = rand(shape, 1, scale=3.0)
+    u = uniforms(shape, 1)
+    got = uniform4.uniform4(x, u)
+    want = ref.uniform4_ref(x, u)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fp8_matches_ref(shape):
+    x = rand(shape, 2, scale=10.0)
+    got = fp8.fp8(x)
+    want = ref.fp8_ref(x)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([1e-6, 1e-2, 1.0, 37.5, 1e4]),
+)
+def test_luq4_hypothesis_shapes_scales(n, seed, scale):
+    x = rand((n,), seed, scale=scale)
+    u = uniforms((n,), seed)
+    got = luq.luq4(x, u)
+    want = ref.luq4_ref(x, u)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_uniform4_hypothesis(n, seed):
+    x = rand((n,), seed, scale=5.0)
+    u = uniforms((n,), seed)
+    np.testing.assert_allclose(
+        uniform4.uniform4(x, u), ref.uniform4_ref(x, u), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_luq4_outputs_on_grid():
+    x = rand((512,), 3)
+    u = uniforms((512,), 3)
+    q = np.asarray(luq.luq4(x, u))
+    alpha = float(ref.luq_alpha(jnp.max(jnp.abs(x))))
+    nz = q[q != 0.0]
+    k = np.log2(np.abs(nz) / alpha)
+    np.testing.assert_allclose(k, np.round(k), atol=1e-4)
+    assert k.min() >= -1e-4 and k.max() <= 7 + 1e-4
+
+
+def test_luq4_unbiased_statistically():
+    # E[q(x)] ≈ x over many draws (the property Prop. 1 needs).
+    x = rand((128,), 4)
+    acc = np.zeros(128, np.float64)
+    trials = 600
+    for t in range(trials):
+        u = uniforms((128,), 10_000 + t)
+        acc += np.asarray(luq.luq4(x, u), np.float64)
+    bias = np.abs(acc / trials - np.asarray(x, np.float64)).max()
+    assert bias < 0.05, f"bias={bias}"
+
+
+def test_luq4_scale_invariance_exact():
+    # q(λx) with the same draws = λ q(x): alpha scales with max|x|.
+    x = rand((300,), 5)
+    u = uniforms((300,), 5)
+    q1 = np.asarray(luq.luq4(x, u))
+    q4 = np.asarray(luq.luq4(4.0 * x, u))
+    np.testing.assert_allclose(q4, 4.0 * q1, rtol=1e-5, atol=1e-7)
+
+
+def test_luq4_zero_tensor():
+    z = jnp.zeros((64,))
+    u = uniforms((64,), 6)
+    np.testing.assert_array_equal(np.asarray(luq.luq4(z, u)), np.zeros(64))
+
+
+def test_fp8_idempotent():
+    x = rand((400,), 7, scale=3.0)
+    once = fp8.fp8(x)
+    twice = fp8.fp8(once)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_fp8_saturates():
+    x = jnp.array([1e8, -1e8, 6e4], jnp.float32)
+    q = np.asarray(fp8.fp8(x))
+    np.testing.assert_array_equal(q, [ref.FP8_MAX, -ref.FP8_MAX, ref.FP8_MAX])
+
+
+@pytest.mark.parametrize("b,d", [(1, 8), (7, 33), (16, 256), (9, 1000)])
+def test_clip_rows_matches_ref(b, d):
+    g = rand((b, d), 8, scale=2.0)
+    got = clip.clip_rows(g, 1.0)
+    want = ref.clip_rows_ref(g, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+def test_clip_rows_norm_invariant():
+    g = rand((32, 100), 9, scale=5.0)
+    clipped = np.asarray(clip.clip_rows(g, 0.7))
+    norms = np.linalg.norm(clipped, axis=1)
+    assert (norms <= 0.7 * (1 + 1e-5)).all()
+    # Rows already under the norm are untouched.
+    small = rand((4, 10), 10, scale=0.01)
+    np.testing.assert_allclose(
+        np.asarray(clip.clip_rows(small, 1.0)), np.asarray(small), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(8, 8, 8), (32, 32, 32), (33, 65, 17), (64, 128, 32), (1, 5, 3)]
+)
+def test_qmatmul_fp_path_exact(m, k, n):
+    # enabled=0 → plain matmul (up to fp32 reassociation in tiling).
+    x = rand((m, k), 11)
+    w = rand((k, n), 12)
+    ux = uniforms((m, k), 11)
+    uw = uniforms((k, n), 12)
+    got = qmatmul.qmatmul(x, w, ux, uw, 0.0)
+    want = x @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (16, 48, 24)])
+def test_qmatmul_quantized_matches_ref(m, k, n):
+    x = rand((m, k), 13)
+    w = rand((k, n), 14)
+    ux = uniforms((m, k), 13)
+    uw = uniforms((k, n), 14)
+    got = qmatmul.qmatmul(x, w, ux, uw, 1.0)
+    want = ref.qmatmul_ref(x, w, ux, uw, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_padding_does_not_leak():
+    # Non-multiple shapes: zero padding must not perturb the result.
+    x = rand((5, 9), 15)
+    w = rand((9, 7), 16)
+    ux = uniforms((5, 9), 15)
+    uw = uniforms((9, 7), 16)
+    got = qmatmul.qmatmul(x, w, ux, uw, 0.0, bm=4, bn=4, bk=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+
+
+def test_block_size_invariance():
+    # The same quantization result regardless of block partitioning.
+    x = rand((1000,), 17)
+    u = uniforms((1000,), 17)
+    a = luq.luq4(x, u, block=128)
+    b = luq.luq4(x, u, block=2048)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

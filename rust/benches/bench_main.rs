@@ -1,0 +1,208 @@
+//! `cargo bench` harness (criterion is not in the offline crate set, so
+//! this is a hand-rolled timing harness with criterion-like output).
+//!
+//! Benches, one per perf-relevant layer of the stack:
+//!   quantizers        — Rust mirrors of LUQ4/uniform4/FP8 (ns/elem)
+//!   gaussian          — DP noise generation (the mechanism hot path)
+//!   accountant        — RDP curve + ε conversion (per-step budget check)
+//!   sampler           — Algorithm 2 layer selection
+//!   dataset           — synthetic generator + Poisson batching
+//!   mock-train        — coordinator loop against the mock executor
+//!   pjrt-train-step   — the REAL compiled DP-SGD step (needs artifacts;
+//!                       skipped with a notice if absent)
+//!   pjrt-epoch        — one full epoch end-to-end (needs artifacts)
+//!
+//! Filter: `cargo bench -- <substring>`.
+
+use dpquant::config::TrainConfig;
+use dpquant::coordinator::{train, MockExecutor, StepExecutor, TrainerOptions};
+use dpquant::data::{self, Dataset};
+use dpquant::privacy::RdpAccountant;
+use dpquant::quant::by_name;
+use dpquant::util::gaussian::GaussianSampler;
+use dpquant::util::rng::Xoshiro256;
+use std::time::Instant;
+
+struct Bench {
+    filter: Option<String>,
+}
+
+impl Bench {
+    fn run<F: FnMut()>(&self, name: &str, iters: usize, mut f: F) {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        // Warmup.
+        f();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let total = t0.elapsed().as_secs_f64();
+        let per = total / iters as f64;
+        let unit = if per < 1e-6 {
+            format!("{:.1} ns", per * 1e9)
+        } else if per < 1e-3 {
+            format!("{:.2} us", per * 1e6)
+        } else {
+            format!("{:.2} ms", per * 1e3)
+        };
+        println!("{name:<42} {unit:>12}/iter   ({iters} iters, {total:.2}s total)");
+    }
+}
+
+fn toy_dataset(n: usize, feats: usize, classes: usize) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..n {
+        let c = rng.next_below(classes as u64) as i32;
+        for f in 0..feats {
+            xs.push(rng.next_f32() + if f == c as usize { 1.0 } else { 0.0 });
+        }
+        ys.push(c);
+    }
+    Dataset {
+        xs,
+        ys,
+        example_numel: feats,
+        n_classes: classes,
+    }
+}
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && a != "bench");
+    let b = Bench { filter };
+    println!("dpquant bench harness (criterion-style, offline)\n");
+
+    // --- L1 mirrors: quantizer throughput -------------------------------
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut g = GaussianSampler::seed_from_u64(3);
+    let base: Vec<f32> = (0..65_536).map(|_| g.standard() as f32).collect();
+    for name in ["luq4", "uniform4", "fp8"] {
+        let q = by_name(name).unwrap();
+        let mut buf = base.clone();
+        b.run(&format!("quantizer/{name}/64k-elems"), 50, || {
+            buf.copy_from_slice(&base);
+            q.quantize(&mut buf, &mut rng);
+        });
+    }
+
+    // --- DP mechanism: noise generation ---------------------------------
+    let mut noise_buf = vec![0f32; 25_000]; // ~ miniresnet param count
+    b.run("gaussian/fill-25k-params", 200, || {
+        g.fill_noise_f32(&mut noise_buf, 1.0);
+    });
+
+    // --- Privacy accountant ---------------------------------------------
+    b.run("accountant/60-epoch-curve+epsilon", 20, || {
+        let mut acc = RdpAccountant::new();
+        for e in 0..60u64 {
+            if e % 2 == 0 {
+                acc.step_analysis(1.0 / 26_640.0, 0.5);
+            }
+            acc.step_training(1024.0 / 26_640.0, 1.0, 26);
+        }
+        std::hint::black_box(acc.epsilon(1e-5));
+    });
+    let mut acc = RdpAccountant::new();
+    acc.step_training(0.02, 1.0, 500);
+    b.run("accountant/incremental-epsilon", 200, || {
+        acc.step_training(0.02, 1.0, 1);
+        std::hint::black_box(acc.epsilon(1e-5));
+    });
+
+    // --- Scheduler (Algorithm 2) ----------------------------------------
+    let scores: Vec<f64> = (0..12).map(|i| (i as f64 * 0.37).sin().abs()).collect();
+    let mut srng = Xoshiro256::seed_from_u64(5);
+    b.run("sampler/select-9-of-12", 10_000, || {
+        std::hint::black_box(dpquant::coordinator::sampler::select_targets(
+            &mut srng, &scores, 10.0, 9,
+        ));
+    });
+
+    // --- Data pipeline ----------------------------------------------------
+    b.run("dataset/generate-gtsrb-1k", 5, || {
+        std::hint::black_box(data::generate("gtsrb", 1000, 1).unwrap());
+    });
+    let ds = data::generate("gtsrb", 2048, 1).unwrap();
+    let mut drng = Xoshiro256::seed_from_u64(6);
+    b.run("dataset/poisson+batch-64-of-2048", 500, || {
+        let idx = data::poisson_sample(&mut drng, ds.len(), 64.0 / 2048.0);
+        std::hint::black_box(data::make_batches(&ds, &idx, 64));
+    });
+
+    // --- Coordinator against the mock (isolates L3 overhead) -------------
+    let exec = MockExecutor::new(16, 4, 8, 64);
+    let toy = toy_dataset(1024 + 256, 16, 4);
+    let (tr, va) = toy.split(256);
+    let cfg = TrainConfig {
+        epochs: 2,
+        batch_size: 64,
+        dataset_size: 1024,
+        scheduler: "dpquant".into(),
+        ..TrainConfig::default()
+    };
+    b.run("mock-train/2-epochs-dpquant", 10, || {
+        std::hint::black_box(train(&exec, &cfg, &tr, &va, &TrainerOptions::default()).unwrap());
+    });
+
+    // --- Real PJRT graphs (end-to-end, per paper table timings) ----------
+    match dpquant::runtime::Runtime::open("artifacts") {
+        Ok(rt) => {
+            let graph = rt.load("miniconvnet_gtsrb_luq4").expect("load graph");
+            let bsz = graph.batch();
+            let real = data::generate("gtsrb", bsz, 2).unwrap();
+            let batches = data::eval_batches(&real, bsz);
+            let batch = &batches[0];
+            let mask = vec![1f32; graph.info.n_quant_layers];
+            let w = graph.init_weights.clone();
+            let mut i = 0f32;
+            b.run("pjrt-train-step/miniconvnet-b64-quantized", 20, || {
+                i += 1.0;
+                std::hint::black_box(
+                    graph
+                        .train_step(&w, &batch.x, &batch.y, &batch.mask, &mask, i)
+                        .unwrap(),
+                );
+            });
+            let fp_mask = vec![0f32; graph.info.n_quant_layers];
+            b.run("pjrt-train-step/miniconvnet-b64-fp", 20, || {
+                i += 1.0;
+                std::hint::black_box(
+                    graph
+                        .train_step(&w, &batch.x, &batch.y, &batch.mask, &fp_mask, i)
+                        .unwrap(),
+                );
+            });
+            b.run("pjrt-eval-step/miniconvnet-b64", 20, || {
+                std::hint::black_box(
+                    graph.eval_step(&w, &batch.x, &batch.y, &batch.mask).unwrap(),
+                );
+            });
+
+            let full = data::generate("gtsrb", 512 + 128, 3).unwrap();
+            let (tr, va) = full.split(128);
+            let ecfg = TrainConfig {
+                epochs: 1,
+                batch_size: 64,
+                dataset_size: 512,
+                scheduler: "dpquant".into(),
+                ..TrainConfig::default()
+            };
+            b.run("pjrt-epoch/miniconvnet-512-examples", 3, || {
+                std::hint::black_box(
+                    train(&graph, &ecfg, &tr, &va, &TrainerOptions::default()).unwrap(),
+                );
+            });
+        }
+        Err(e) => {
+            println!("pjrt benches skipped (run `make artifacts` first): {e}");
+        }
+    }
+    println!("\nbench harness done");
+}

@@ -1,0 +1,154 @@
+//! Tiny argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `dpquant <command> [subcommand] [--key value]... [--flag]...`
+//! Values are parsed on demand with typed accessors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (command, subcommand, ...).
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.get(1).map(String::as_str)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} '{v}': {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} '{v}': {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} '{v}': {e}")),
+        }
+    }
+
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("--{name} '{v}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_options_flags() {
+        let a = parse("exp tab1 --epochs 30 --model miniresnet --verbose --lr=0.5");
+        assert_eq!(a.command(), Some("exp"));
+        assert_eq!(a.subcommand(), Some("tab1"));
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 30);
+        assert_eq!(a.str_or("model", ""), "miniresnet");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn option_followed_by_flag() {
+        let a = parse("train --fast --seed 7");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("x --bias -0.5");
+        assert_eq!(a.f64_or("bias", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = parse("x --epochs abc");
+        let err = a.usize_or("epochs", 0).unwrap_err();
+        assert!(err.contains("epochs"), "{err}");
+    }
+
+    #[test]
+    fn missing_defaults() {
+        let a = parse("train");
+        assert_eq!(a.f64_or("lr", 0.25).unwrap(), 0.25);
+        assert_eq!(a.f64_opt("target_epsilon").unwrap(), None);
+    }
+}

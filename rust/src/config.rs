@@ -1,0 +1,410 @@
+//! Experiment configuration: a TOML-subset parser plus the typed config
+//! the launcher consumes.
+//!
+//! The offline crate set has no `toml`/`serde`, so we parse the subset we
+//! emit in `configs/*.toml`: `[section]` headers, `key = value` with
+//! string / bool / int / float / homogeneous scalar arrays, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A scalar or array value from a config file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Numeric coercion: ints read as floats too.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key -> Value` (top-level keys live under `""`).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    pub entries: BTreeMap<(String, String), Value>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or(format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            entries.insert((section.clone(), key), val);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Which optimizer drives training (paper: DP-SGD main, DP-Adam §A.5,
+/// DP-AdamW for BERT/SNLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+    AdamW,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" | "dp-sgd" | "dpsgd" => Ok(Self::Sgd),
+            "adam" | "dp-adam" | "dpadam" => Ok(Self::Adam),
+            "adamw" | "dp-adamw" | "dpadamw" => Ok(Self::AdamW),
+            other => Err(format!("unknown optimizer '{other}'")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sgd => "sgd",
+            Self::Adam => "adam",
+            Self::AdamW => "adamw",
+        }
+    }
+}
+
+/// Fully-resolved training/scheduling configuration (paper Table 3 + 5).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model artifact family (miniresnet / miniconvnet / minidensenet /
+    /// tinytransformer).
+    pub model: String,
+    /// Dataset (gtsrb / emnist / cifar / snli — synthetic generators).
+    pub dataset: String,
+    /// Quantizer variant baked into the train artifact (luq4 / uniform4 /
+    /// fp8).
+    pub quantizer: String,
+    /// Epochs to train (paper n = 60; scaled default lower).
+    pub epochs: usize,
+    /// Logical (privacy) batch size — expected Poisson batch size.
+    pub batch_size: usize,
+    /// DP-SGD noise multiplier σ.
+    pub noise_multiplier: f64,
+    /// DP-SGD clipping norm C.
+    pub clip_norm: f64,
+    /// Learning rate η.
+    pub lr: f64,
+    pub optimizer: OptimizerKind,
+    /// Target privacy budget; training truncates when exceeded (None = run
+    /// all epochs).
+    pub target_epsilon: Option<f64>,
+    pub delta: f64,
+    /// Fraction of quantizable layers to quantize each epoch ("percent
+    /// quantized" in Table 1).
+    pub quant_fraction: f64,
+    /// Scheduler: "dpquant" (PLS+LLP), "pls" (sampling only),
+    /// "static_random" (fixed random subset), "static_first"/"static_last",
+    /// "none" (full precision), "all" (everything quantized).
+    pub scheduler: String,
+    /// Softmax temperature β (Algorithm 2; Table 9 sweeps this).
+    pub beta: f64,
+    /// Epochs between loss-impact analyses (n_interval, Table 3).
+    pub analysis_interval: usize,
+    /// Repetitions R inside Algorithm 1.
+    pub analysis_reps: usize,
+    /// n_sample (Table 3): expected number of examples in the analysis
+    /// probe subsample. The probe rate is `analysis_samples / |D|`, which
+    /// keeps the analysis SGM's privacy cost negligible (Fig. 3).
+    pub analysis_samples: usize,
+    /// σ_measure — noise for loss-difference privatization.
+    pub sigma_measure: f64,
+    /// C_measure — clip norm for loss-difference privatization.
+    pub clip_measure: f64,
+    /// EMA decay α in Algorithm 1 step 4.
+    pub ema_alpha: f64,
+    /// Disable EMA (Table 10 ablation).
+    pub ema_enabled: bool,
+    /// Dataset size (synthetic generator).
+    pub dataset_size: usize,
+    /// Validation set size.
+    pub val_size: usize,
+    /// RNG seed for the whole run.
+    pub seed: u64,
+    /// Physical batch cap (memory bound; Poisson batches are trimmed/padded
+    /// to at most this many examples per executable call).
+    pub physical_batch: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "miniconvnet".into(),
+            dataset: "gtsrb".into(),
+            quantizer: "luq4".into(),
+            epochs: 12,
+            batch_size: 64,
+            noise_multiplier: 1.0,
+            clip_norm: 1.0,
+            lr: 0.5,
+            optimizer: OptimizerKind::Sgd,
+            target_epsilon: None,
+            delta: 1e-5,
+            quant_fraction: 0.75,
+            scheduler: "dpquant".into(),
+            beta: 10.0,
+            analysis_interval: 2,
+            analysis_reps: 2,
+            analysis_samples: 8,
+            sigma_measure: 0.5,
+            clip_measure: 0.01,
+            ema_alpha: 0.3,
+            ema_enabled: true,
+            dataset_size: 4096,
+            val_size: 1024,
+            seed: 0,
+            physical_batch: 64,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Resolve from a parsed file (section `[train]`), falling back to
+    /// defaults for missing keys.
+    pub fn from_file(cf: &ConfigFile) -> Result<Self, String> {
+        let d = Self::default();
+        let sec = "train";
+        let optimizer = OptimizerKind::parse(&cf.str_or(sec, "optimizer", d.optimizer.name()))?;
+        Ok(Self {
+            model: cf.str_or(sec, "model", &d.model),
+            dataset: cf.str_or(sec, "dataset", &d.dataset),
+            quantizer: cf.str_or(sec, "quantizer", &d.quantizer),
+            epochs: cf.i64_or(sec, "epochs", d.epochs as i64) as usize,
+            batch_size: cf.i64_or(sec, "batch_size", d.batch_size as i64) as usize,
+            noise_multiplier: cf.f64_or(sec, "noise_multiplier", d.noise_multiplier),
+            clip_norm: cf.f64_or(sec, "clip_norm", d.clip_norm),
+            lr: cf.f64_or(sec, "lr", d.lr),
+            optimizer,
+            target_epsilon: cf.get(sec, "target_epsilon").and_then(Value::as_f64),
+            delta: cf.f64_or(sec, "delta", d.delta),
+            quant_fraction: cf.f64_or(sec, "quant_fraction", d.quant_fraction),
+            scheduler: cf.str_or(sec, "scheduler", &d.scheduler),
+            beta: cf.f64_or(sec, "beta", d.beta),
+            analysis_interval: cf.i64_or(sec, "analysis_interval", d.analysis_interval as i64)
+                as usize,
+            analysis_reps: cf.i64_or(sec, "analysis_reps", d.analysis_reps as i64) as usize,
+            analysis_samples: cf.i64_or(sec, "analysis_samples", d.analysis_samples as i64)
+                as usize,
+            sigma_measure: cf.f64_or(sec, "sigma_measure", d.sigma_measure),
+            clip_measure: cf.f64_or(sec, "clip_measure", d.clip_measure),
+            ema_alpha: cf.f64_or(sec, "ema_alpha", d.ema_alpha),
+            ema_enabled: cf.bool_or(sec, "ema_enabled", d.ema_enabled),
+            dataset_size: cf.i64_or(sec, "dataset_size", d.dataset_size as i64) as usize,
+            val_size: cf.i64_or(sec, "val_size", d.val_size as i64) as usize,
+            seed: cf.i64_or(sec, "seed", d.seed as i64) as u64,
+            physical_batch: cf.i64_or(sec, "physical_batch", d.physical_batch as i64) as usize,
+        })
+    }
+
+    /// Poisson sampling rate q = B/|D| used by the accountant.
+    pub fn sample_rate(&self) -> f64 {
+        self.batch_size as f64 / self.dataset_size as f64
+    }
+
+    /// Graph tag in the artifact manifest for this config.
+    pub fn graph_tag(&self) -> String {
+        format!("{}_{}_{}", self.model, self.dataset, self.quantizer)
+    }
+
+    /// Train artifact name for this config.
+    pub fn train_artifact(&self) -> String {
+        format!("train_{}", self.graph_tag())
+    }
+
+    /// Eval artifact name for this config.
+    pub fn eval_artifact(&self) -> String {
+        format!("eval_{}_{}", self.model, self.dataset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# DPQuant experiment config
+[train]
+model = "miniresnet"       # residual CNN
+dataset = "gtsrb"
+epochs = 30
+batch_size = 128
+noise_multiplier = 1.0
+clip_norm = 1.0
+lr = 0.5
+optimizer = "sgd"
+quant_fraction = 0.9
+scheduler = "dpquant"
+beta = 10.57
+analysis_interval = 2
+target_epsilon = 8.0
+ema_enabled = true
+alphas = [1.5, 2.0, 3.0]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cf = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(cf.str_or("train", "model", "x"), "miniresnet");
+        assert_eq!(cf.i64_or("train", "epochs", 0), 30);
+        assert_eq!(cf.f64_or("train", "beta", 0.0), 10.57);
+        assert_eq!(cf.bool_or("train", "ema_enabled", false), true);
+        let arr = cf.get("train", "alphas").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn train_config_resolution() {
+        let cf = ConfigFile::parse(SAMPLE).unwrap();
+        let tc = TrainConfig::from_file(&cf).unwrap();
+        assert_eq!(tc.model, "miniresnet");
+        assert_eq!(tc.target_epsilon, Some(8.0));
+        assert_eq!(tc.optimizer, OptimizerKind::Sgd);
+        assert!((tc.sample_rate() - 128.0 / 4096.0).abs() < 1e-12);
+        assert_eq!(tc.train_artifact(), "train_miniresnet_gtsrb_luq4");
+        assert_eq!(tc.graph_tag(), "miniresnet_gtsrb_luq4");
+        // Missing keys fall back to defaults.
+        assert_eq!(tc.analysis_reps, 2);
+        assert!((tc.sigma_measure - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let cf = ConfigFile::parse("k = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(cf.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = ConfigFile::parse("[oops\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = ConfigFile::parse("justkey\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn optimizer_aliases() {
+        assert_eq!(OptimizerKind::parse("DP-AdamW").unwrap(), OptimizerKind::AdamW);
+        assert_eq!(OptimizerKind::parse("dpsgd").unwrap(), OptimizerKind::Sgd);
+        assert!(OptimizerKind::parse("lion").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The DPQuant coordinator — the paper's system contribution, in Rust.
+//!
+//! * [`policy`]    — quantization policies and masks;
+//! * [`ema`]       — EMA of loss-impact scores (Alg. 1 step 4);
+//! * [`sampler`]   — Algorithm 2 (SELECTTARGETS);
+//! * [`analysis`]  — Algorithm 1 (COMPUTELOSSIMPACT, the DP estimator);
+//! * [`optimizer`] — DP-SGD/Adam/AdamW with fp32 noise (§A.17);
+//! * [`executor`]  — abstraction over the compiled PJRT step + mock;
+//! * [`trainer`]   — the epoch loop wiring it all together.
+
+pub mod analysis;
+pub mod ema;
+pub mod executor;
+pub mod optimizer;
+pub mod policy;
+pub mod sampler;
+pub mod trainer;
+
+pub use executor::{MockExecutor, StepExecutor};
+pub use policy::{budget_to_k, Policy};
+pub use trainer::{train, Scheduler, TrainResult, TrainerOptions};

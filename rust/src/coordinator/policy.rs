@@ -1,0 +1,110 @@
+//! Quantization policies: which layers run low-precision this epoch.
+//!
+//! Following §5.3 the scheduler reasons per-layer: the policy space P in
+//! Algorithm 1/2 is instantiated as the single-layer policies
+//! `p_i = {layer i}` (so `L[p_i]` is layer i's loss impact), and a
+//! concrete epoch policy is a union of k sampled layers, carried to the
+//! compiled graph as the `quant_mask` runtime input.
+
+/// A set of quantized layers out of `n_layers`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Policy {
+    pub n_layers: usize,
+    /// Sorted, distinct layer indices that run quantized.
+    pub layers: Vec<usize>,
+}
+
+impl Policy {
+    /// The empty (full-precision) policy — Algorithm 1's baseline p0.
+    pub fn baseline(n_layers: usize) -> Self {
+        Self {
+            n_layers,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Quantize everything.
+    pub fn all(n_layers: usize) -> Self {
+        Self {
+            n_layers,
+            layers: (0..n_layers).collect(),
+        }
+    }
+
+    /// A single-layer probe policy.
+    pub fn single(n_layers: usize, layer: usize) -> Self {
+        assert!(layer < n_layers);
+        Self {
+            n_layers,
+            layers: vec![layer],
+        }
+    }
+
+    /// From an arbitrary set of indices.
+    pub fn from_layers(n_layers: usize, mut layers: Vec<usize>) -> Self {
+        layers.sort_unstable();
+        layers.dedup();
+        assert!(layers.iter().all(|&l| l < n_layers));
+        Self { n_layers, layers }
+    }
+
+    /// Number of quantized layers.
+    pub fn k(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// The runtime `quant_mask` input for the compiled graph.
+    pub fn mask(&self) -> Vec<f32> {
+        let mut m = vec![0f32; self.n_layers];
+        for &l in &self.layers {
+            m[l] = 1.0;
+        }
+        m
+    }
+
+    pub fn contains(&self, layer: usize) -> bool {
+        self.layers.binary_search(&layer).is_ok()
+    }
+}
+
+/// How many layers a "percent quantized" budget means (paper Table 1 uses
+/// fractions of the quantizable layers, rounding to nearest).
+pub fn budget_to_k(n_layers: usize, fraction: f64) -> usize {
+    ((n_layers as f64 * fraction).round() as usize).clamp(0, n_layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks() {
+        let p = Policy::from_layers(5, vec![3, 1, 3]);
+        assert_eq!(p.layers, vec![1, 3]);
+        assert_eq!(p.mask(), vec![0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert!(p.contains(1) && !p.contains(0));
+        assert_eq!(p.k(), 2);
+    }
+
+    #[test]
+    fn baseline_and_all() {
+        assert_eq!(Policy::baseline(4).mask(), vec![0.0; 4]);
+        assert_eq!(Policy::all(3).mask(), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn budget_rounding() {
+        assert_eq!(budget_to_k(10, 0.5), 5);
+        assert_eq!(budget_to_k(10, 0.75), 8);
+        assert_eq!(budget_to_k(10, 0.9), 9);
+        assert_eq!(budget_to_k(8, 0.9), 7);
+        assert_eq!(budget_to_k(7, 1.0), 7);
+        assert_eq!(budget_to_k(7, 0.0), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range() {
+        Policy::from_layers(3, vec![5]);
+    }
+}

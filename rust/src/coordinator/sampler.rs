@@ -1,0 +1,164 @@
+//! Algorithm 2 (SELECTTARGETS): probabilistic layer sampling with
+//! loss-aware prioritization.
+//!
+//!   v  <- normalize(EMA scores)          (min-max to [0,1])
+//!   π  <- softmax(-β · v)                (low impact ⇒ high probability)
+//!   Q  <- Multinomial(π, m, without replacement)
+//!
+//! β (the temperature, §A.7) interpolates between uniform rotation
+//! (β→0, pure PLS) and greedy lowest-impact selection (β→∞).
+
+use crate::util::rng::Xoshiro256;
+
+/// Min-max normalize to [0, 1]; constant vectors map to all-zeros.
+pub fn normalize(v: &[f64]) -> Vec<f64> {
+    let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !(hi - lo).is_finite() || hi - lo < 1e-12 {
+        return vec![0.0; v.len()];
+    }
+    v.iter().map(|&x| (x - lo) / (hi - lo)).collect()
+}
+
+/// Stable softmax of `-beta * v`.
+pub fn softmax_neg(v: &[f64], beta: f64) -> Vec<f64> {
+    let scaled: Vec<f64> = v.iter().map(|&x| -beta * x).collect();
+    let m = scaled.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = scaled.iter().map(|&x| (x - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+/// Sample `m` distinct indices without replacement from the categorical
+/// distribution `probs` (sequential draws with renormalization — the
+/// semantics of `torch.multinomial(..., replacement=False)` the paper's
+/// implementation uses).
+pub fn multinomial_without_replacement(
+    rng: &mut Xoshiro256,
+    probs: &[f64],
+    m: usize,
+) -> Vec<usize> {
+    assert!(m <= probs.len());
+    let mut available: Vec<usize> = (0..probs.len()).collect();
+    let weights: Vec<f64> = probs.to_vec();
+    let mut picked = Vec::with_capacity(m);
+    for _ in 0..m {
+        let total: f64 = available.iter().map(|&i| weights[i]).sum();
+        let mut r = rng.next_f64() * total;
+        let mut chosen_pos = available.len() - 1;
+        for (pos, &i) in available.iter().enumerate() {
+            r -= weights[i];
+            if r <= 0.0 {
+                chosen_pos = pos;
+                break;
+            }
+        }
+        picked.push(available.swap_remove(chosen_pos));
+    }
+    picked.sort_unstable();
+    picked
+}
+
+/// SELECTTARGETS: pick `k` layers to quantize from per-layer EMA scores.
+pub fn select_targets(rng: &mut Xoshiro256, ema_scores: &[f64], beta: f64, k: usize) -> Vec<usize> {
+    let v = normalize(ema_scores);
+    let pi = softmax_neg(&v, beta);
+    multinomial_without_replacement(rng, &pi, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_bounds() {
+        let v = normalize(&[3.0, 1.0, 2.0]);
+        assert_eq!(v, vec![1.0, 0.0, 0.5]);
+        assert_eq!(normalize(&[2.0, 2.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_prefers_low_scores() {
+        let pi = softmax_neg(&[0.0, 1.0], 2.0);
+        assert!(pi[0] > pi[1]);
+        assert!((pi.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn beta_zero_is_uniform() {
+        let pi = softmax_neg(&[0.0, 0.3, 1.0], 0.0);
+        for &p in &pi {
+            assert!((p - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sampling_without_replacement_distinct_and_sized() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..200 {
+            let s = select_targets(&mut rng, &[0.1, 0.9, 0.5, 0.2, 0.7], 3.0, 3);
+            assert_eq!(s.len(), 3);
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), 3);
+        }
+    }
+
+    #[test]
+    fn high_beta_avoids_high_impact_layers() {
+        // Layer 0 has by far the highest loss impact; with large β it
+        // should almost never be quantized.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let scores = [10.0, 0.1, 0.2, 0.05, 0.15];
+        let mut hit0 = 0;
+        let trials = 500;
+        for _ in 0..trials {
+            let s = select_targets(&mut rng, &scores, 50.0, 3);
+            if s.contains(&0) {
+                hit0 += 1;
+            }
+        }
+        assert!(hit0 < trials / 20, "layer 0 picked {hit0}/{trials}");
+    }
+
+    #[test]
+    fn low_beta_rotates_roughly_uniformly() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let scores = [10.0, 0.1, 0.2, 0.05, 0.15];
+        let mut counts = [0usize; 5];
+        let trials = 2000;
+        for _ in 0..trials {
+            for l in select_targets(&mut rng, &scores, 0.0, 2) {
+                counts[l] += 1;
+            }
+        }
+        // Expected 2*2000/5 = 800 per layer.
+        for &c in &counts {
+            assert!((c as f64 - 800.0).abs() < 120.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn marginals_follow_softmax_for_k1() {
+        // k=1 sampling frequency must match π within sampling error.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let scores = [0.0, 0.5, 1.0];
+        let pi = softmax_neg(&normalize(&scores), 3.0);
+        let mut counts = [0usize; 3];
+        let trials = 30_000;
+        for _ in 0..trials {
+            counts[select_targets(&mut rng, &scores, 3.0, 1)[0]] += 1;
+        }
+        for i in 0..3 {
+            let freq = counts[i] as f64 / trials as f64;
+            assert!((freq - pi[i]).abs() < 0.01, "i={i} freq={freq} pi={}", pi[i]);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_selects_everything() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let s = select_targets(&mut rng, &[0.3, 0.1, 0.9], 7.0, 3);
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+}

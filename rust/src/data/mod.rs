@@ -1,0 +1,220 @@
+//! Synthetic dataset generators + the DP data pipeline.
+//!
+//! The paper trains on GTSRB / EMNIST / CIFAR-10 / SNLI. Those corpora
+//! are not available offline, so we generate procedural class-structured
+//! stand-ins (DESIGN.md §2): every class has a deterministic prototype
+//! and each example is a jittered, noisy rendering of its prototype —
+//! learnable by a small CNN but not linearly trivial. SNLI's stand-in
+//! encodes an actual premise/hypothesis relation over token halves.
+//!
+//! The pipeline half implements **Poisson subsampling** (each example
+//! enters a batch independently with probability q = B/|D|) — the
+//! sampling scheme DP-SGD's privacy accounting assumes, as provided by
+//! Opacus in the paper's implementation (§6 "Implementation").
+
+pub mod synth;
+
+use crate::util::rng::Xoshiro256;
+
+/// An in-memory dataset: row-major examples + labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n * example_numel` feature values (token ids stored as f32 for
+    /// the sequence datasets; the runtime converts).
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    pub example_numel: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+    pub fn example(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.example_numel..(i + 1) * self.example_numel]
+    }
+
+    /// Split into (train, val): the first `n - val` examples train.
+    pub fn split(mut self, val: usize) -> (Dataset, Dataset) {
+        assert!(val < self.len());
+        let train_n = self.len() - val;
+        let val_xs = self.xs.split_off(train_n * self.example_numel);
+        let val_ys = self.ys.split_off(train_n);
+        let val_ds = Dataset {
+            xs: val_xs,
+            ys: val_ys,
+            example_numel: self.example_numel,
+            n_classes: self.n_classes,
+        };
+        (self, val_ds)
+    }
+}
+
+/// Generate a dataset by name. `image_shape`/`seq_len` must match the
+/// compiled graph (16x16x3 images, 24-token sequences).
+pub fn generate(name: &str, n: usize, seed: u64) -> Result<Dataset, String> {
+    match name {
+        "gtsrb" => Ok(synth::images(n, 43, seed, synth::ImageStyle::Signs)),
+        "emnist" => Ok(synth::images(n, 47, seed, synth::ImageStyle::Glyphs)),
+        "cifar" => Ok(synth::images(n, 10, seed, synth::ImageStyle::Objects)),
+        "snli" => Ok(synth::sequence_pairs(n, seed)),
+        other => Err(format!("unknown dataset '{other}'")),
+    }
+}
+
+/// Poisson subsampling: each of `0..n` included independently w.p. `q`.
+pub fn poisson_sample(rng: &mut Xoshiro256, n: usize, q: f64) -> Vec<usize> {
+    (0..n).filter(|_| rng.bernoulli(q)).collect()
+}
+
+/// A fixed-size physical batch (padded with masked rows).
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Number of real (unmasked) examples.
+    pub real: usize,
+}
+
+/// Pack `indices` into physical batches of size `physical`, padding the
+/// last one. An empty `indices` yields no batches.
+pub fn make_batches(ds: &Dataset, indices: &[usize], physical: usize) -> Vec<Batch> {
+    indices
+        .chunks(physical)
+        .map(|chunk| {
+            let mut x = vec![0f32; physical * ds.example_numel];
+            let mut y = vec![0i32; physical];
+            let mut mask = vec![0f32; physical];
+            for (row, &idx) in chunk.iter().enumerate() {
+                x[row * ds.example_numel..(row + 1) * ds.example_numel]
+                    .copy_from_slice(ds.example(idx));
+                y[row] = ds.ys[idx];
+                mask[row] = 1.0;
+            }
+            Batch {
+                x,
+                y,
+                mask,
+                real: chunk.len(),
+            }
+        })
+        .collect()
+}
+
+/// Sequential (non-private) batches over the whole dataset — used for
+/// evaluation.
+pub fn eval_batches(ds: &Dataset, physical: usize) -> Vec<Batch> {
+    let all: Vec<usize> = (0..ds.len()).collect();
+    make_batches(ds, &all, physical)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_have_class_structure() {
+        for name in ["gtsrb", "emnist", "cifar", "snli"] {
+            let ds = generate(name, 200, 1).unwrap();
+            assert_eq!(ds.len(), 200);
+            assert!(ds.n_classes > 1);
+            // Labels in range, all classes hit eventually for small
+            // n_classes.
+            assert!(ds.ys.iter().all(|&y| (y as usize) < ds.n_classes));
+            // Features finite.
+            assert!(ds.xs.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate("cifar", 50, 7).unwrap();
+        let b = generate("cifar", 50, 7).unwrap();
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+        let c = generate("cifar", 50, 8).unwrap();
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn same_class_examples_more_similar() {
+        // Class structure: intra-class distance < inter-class distance on
+        // average (the property that makes the task learnable).
+        let ds = generate("gtsrb", 400, 3).unwrap();
+        let mut intra = (0.0, 0usize);
+        let mut inter = (0.0, 0usize);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d: f32 = ds
+                    .example(i)
+                    .iter()
+                    .zip(ds.example(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if ds.ys[i] == ds.ys[j] {
+                    intra.0 += d as f64;
+                    intra.1 += 1;
+                } else {
+                    inter.0 += d as f64;
+                    inter.1 += 1;
+                }
+            }
+        }
+        if intra.1 > 0 && inter.1 > 0 {
+            let intra_mean = intra.0 / intra.1 as f64;
+            let inter_mean = inter.0 / inter.1 as f64;
+            assert!(
+                intra_mean < inter_mean * 0.8,
+                "intra={intra_mean} inter={inter_mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_rate() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let n = 10_000;
+        let q = 0.05;
+        let mut total = 0usize;
+        let reps = 50;
+        for _ in 0..reps {
+            total += poisson_sample(&mut rng, n, q).len();
+        }
+        let mean = total as f64 / reps as f64;
+        assert!((mean - q * n as f64).abs() < 30.0, "mean batch {mean}");
+    }
+
+    #[test]
+    fn batches_pad_and_mask() {
+        let ds = generate("cifar", 20, 2).unwrap();
+        let batches = make_batches(&ds, &[0, 3, 5, 7, 9], 4);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].real, 4);
+        assert_eq!(batches[1].real, 1);
+        assert_eq!(batches[1].mask, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(batches[1].y[0], ds.ys[9]);
+        // Padding rows zero.
+        let en = ds.example_numel;
+        assert!(batches[1].x[en..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = generate("emnist", 100, 4).unwrap();
+        let (tr, va) = ds.split(30);
+        assert_eq!(tr.len(), 70);
+        assert_eq!(va.len(), 30);
+    }
+
+    #[test]
+    fn snli_tokens_in_vocab() {
+        let ds = generate("snli", 100, 6).unwrap();
+        assert!(ds.xs.iter().all(|&t| (0.0..64.0).contains(&t)));
+        assert_eq!(ds.example_numel, 24);
+        assert_eq!(ds.n_classes, 3);
+    }
+}

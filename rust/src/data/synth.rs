@@ -1,0 +1,240 @@
+//! Procedural synthetic data: class-conditional generators whose samples
+//! carry real class structure (prototype + jitter + noise), standing in
+//! for GTSRB / EMNIST / CIFAR-10 / SNLI (DESIGN.md §2).
+
+use super::Dataset;
+use crate::util::gaussian::GaussianSampler;
+use crate::util::rng::Xoshiro256;
+
+pub const H: usize = 16;
+pub const W: usize = 16;
+pub const C: usize = 3;
+pub const SEQ_LEN: usize = 24;
+pub const VOCAB: usize = 64;
+
+/// What kind of prototypes to draw — purely cosmetic variation between
+/// the image dataset stand-ins (different spatial statistics).
+#[derive(Clone, Copy, Debug)]
+pub enum ImageStyle {
+    /// Traffic-sign-like: strong geometric shape + border (GTSRB).
+    Signs,
+    /// Glyph-like: thin strokes, single channel replicated (EMNIST).
+    Glyphs,
+    /// Object-like: smooth colored blobs (CIFAR).
+    Objects,
+}
+
+fn class_prototype(class: usize, style: ImageStyle, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ (class as u64).wrapping_mul(0x9E37));
+    let mut img = vec![0f32; H * W * C];
+    match style {
+        ImageStyle::Signs => {
+            // A centered geometric figure: ring / triangle / bar chosen by
+            // class bits, with class-colored fill.
+            let shape = class % 3;
+            let col = [
+                0.3 + 0.7 * ((class / 3) % 3) as f32 / 2.0,
+                0.3 + 0.7 * ((class / 9) % 3) as f32 / 2.0,
+                0.3 + 0.7 * ((class / 27) % 3) as f32 / 2.0,
+            ];
+            let r0 = 3.0 + (class % 5) as f32 * 0.7;
+            for y in 0..H {
+                for x in 0..W {
+                    let dy = y as f32 - H as f32 / 2.0 + 0.5;
+                    let dx = x as f32 - W as f32 / 2.0 + 0.5;
+                    let r = (dx * dx + dy * dy).sqrt();
+                    let inside = match shape {
+                        0 => (r - r0).abs() < 1.6,                     // ring
+                        1 => dy > -r0 && dy < r0 * 0.8 && dx.abs() < (r0 - dy) * 0.6, // triangle
+                        _ => dx.abs() < 1.8 || dy.abs() < 1.8,         // cross
+                    };
+                    if inside {
+                        for c in 0..C {
+                            img[(y * W + x) * C + c] = col[c];
+                        }
+                    }
+                }
+            }
+        }
+        ImageStyle::Glyphs => {
+            // Random thin-stroke polyline, same in all channels.
+            let mut px = rng.next_below(W as u64) as f32;
+            let mut py = rng.next_below(H as u64) as f32;
+            for _ in 0..6 {
+                let nx = rng.next_below(W as u64) as f32;
+                let ny = rng.next_below(H as u64) as f32;
+                let steps = 24;
+                for s in 0..=steps {
+                    let t = s as f32 / steps as f32;
+                    let x = (px + (nx - px) * t).round() as isize;
+                    let y = (py + (ny - py) * t).round() as isize;
+                    if (0..W as isize).contains(&x) && (0..H as isize).contains(&y) {
+                        for c in 0..C {
+                            img[(y as usize * W + x as usize) * C + c] = 1.0;
+                        }
+                    }
+                }
+                px = nx;
+                py = ny;
+            }
+        }
+        ImageStyle::Objects => {
+            // Sum of 3 colored Gaussian blobs at class-determined spots.
+            for b in 0..3 {
+                let cx = rng.next_below(W as u64) as f32;
+                let cy = rng.next_below(H as u64) as f32;
+                let sigma = 2.0 + rng.next_f32() * 3.0;
+                let col = [rng.next_f32(), rng.next_f32(), rng.next_f32()];
+                for y in 0..H {
+                    for x in 0..W {
+                        let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+                        let v = (-d2 / (2.0 * sigma * sigma)).exp();
+                        for c in 0..C {
+                            img[(y * W + x) * C + c] += v * col[c];
+                        }
+                    }
+                }
+                let _ = b;
+            }
+        }
+    }
+    img
+}
+
+/// Render one jittered example of `proto`: random brightness, ±2 px
+/// translation, additive Gaussian noise.
+fn render(proto: &[f32], rng: &mut Xoshiro256, g: &mut GaussianSampler) -> Vec<f32> {
+    let bright = 0.7 + 0.6 * rng.next_f32();
+    let dx = rng.next_below(5) as isize - 2;
+    let dy = rng.next_below(5) as isize - 2;
+    let mut out = vec![0f32; H * W * C];
+    for y in 0..H {
+        for x in 0..W {
+            let sy = y as isize - dy;
+            let sx = x as isize - dx;
+            if (0..H as isize).contains(&sy) && (0..W as isize).contains(&sx) {
+                for c in 0..C {
+                    out[(y * W + x) * C + c] =
+                        proto[(sy as usize * W + sx as usize) * C + c] * bright;
+                }
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v += 0.08 * g.standard() as f32;
+    }
+    out
+}
+
+/// Generate `n` image examples over `n_classes` classes.
+pub fn images(n: usize, n_classes: usize, seed: u64, style: ImageStyle) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut g = GaussianSampler::new(rng.split(0xA0A0));
+    let protos: Vec<Vec<f32>> = (0..n_classes)
+        .map(|c| class_prototype(c, style, seed))
+        .collect();
+    let mut xs = Vec::with_capacity(n * H * W * C);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = rng.next_below(n_classes as u64) as usize;
+        xs.extend(render(&protos[class], &mut rng, &mut g));
+        ys.push(class as i32);
+    }
+    Dataset {
+        xs,
+        ys,
+        example_numel: H * W * C,
+        n_classes,
+    }
+}
+
+/// SNLI-like sequence pairs over a 64-token vocabulary: 12 premise +
+/// 12 hypothesis tokens, label ∈ {entailment, contradiction, neutral}.
+///
+/// * entailment    — hypothesis is a shuffled subset of the premise;
+/// * contradiction — hypothesis tokens are the premise's "antonyms"
+///                   (id + VOCAB/2 mod VOCAB);
+/// * neutral       — hypothesis is fresh random tokens.
+///
+/// The relation is only visible by *comparing* the two halves, which is
+/// what the attention block must learn.
+pub fn sequence_pairs(n: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let half = SEQ_LEN / 2;
+    let mut xs = Vec::with_capacity(n * SEQ_LEN);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Premise avoids the top half of the vocab so "antonyms" are
+        // distinguishable.
+        let premise: Vec<u32> = (0..half)
+            .map(|_| rng.next_below((VOCAB / 2) as u64) as u32)
+            .collect();
+        let label = rng.next_below(3) as usize;
+        let hypothesis: Vec<u32> = match label {
+            0 => {
+                // entailment: shuffled copy
+                let mut h = premise.clone();
+                rng.shuffle(&mut h);
+                h
+            }
+            1 => {
+                // contradiction: antonym mapping
+                premise.iter().map(|&t| t + (VOCAB / 2) as u32).collect()
+            }
+            _ => (0..half)
+                .map(|_| rng.next_below(VOCAB as u64) as u32)
+                .collect(),
+        };
+        xs.extend(premise.iter().map(|&t| t as f32));
+        xs.extend(hypothesis.iter().map(|&t| t as f32));
+        ys.push(label as i32);
+    }
+    Dataset {
+        xs,
+        ys,
+        example_numel: SEQ_LEN,
+        n_classes: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototypes_differ_between_classes() {
+        for style in [ImageStyle::Signs, ImageStyle::Glyphs, ImageStyle::Objects] {
+            let a = class_prototype(0, style, 1);
+            let b = class_prototype(1, style, 1);
+            assert_ne!(a, b);
+        }
+    }
+
+    #[test]
+    fn entailment_pairs_share_tokens() {
+        let ds = sequence_pairs(300, 9);
+        let half = SEQ_LEN / 2;
+        for i in 0..ds.len() {
+            if ds.ys[i] == 0 {
+                let ex = ds.example(i);
+                let mut p: Vec<i32> = ex[..half].iter().map(|&t| t as i32).collect();
+                let mut h: Vec<i32> = ex[half..].iter().map(|&t| t as i32).collect();
+                p.sort_unstable();
+                h.sort_unstable();
+                assert_eq!(p, h, "entailment must be a permutation");
+            }
+            if ds.ys[i] == 1 {
+                let ex = ds.example(i);
+                for j in 0..half {
+                    assert_eq!(ex[half + j] as i32, ex[j] as i32 + (VOCAB / 2) as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn images_bounded() {
+        let ds = images(50, 10, 3, ImageStyle::Objects);
+        assert!(ds.xs.iter().all(|&v| v > -2.0 && v < 4.0));
+    }
+}

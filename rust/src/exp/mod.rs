@@ -1,0 +1,165 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §6 for the index).
+//!
+//! Each experiment prints the paper's rows/series to stdout and writes a
+//! JSON artifact under `results/`. Absolute numbers come from the scaled
+//! substrate (synthetic data, mini models — DESIGN.md §2); the *shape*
+//! (who wins, by how much, where crossovers fall) is the reproduction
+//! target. ε columns and Fig 3/6 are exact math and reproduce directly.
+//!
+//! Common flags: `--scale f` multiplies dataset sizes/epochs (default 1,
+//! keeps every experiment minutes-scale on CPU), `--seeds n` baseline
+//! replicates, `--model/--dataset` to switch the substrate.
+
+pub mod figs;
+pub mod perf;
+pub mod tables;
+
+use crate::cli::Args;
+use crate::config::TrainConfig;
+use crate::coordinator::{train, StepExecutor, TrainResult, TrainerOptions};
+use crate::data::{self, Dataset};
+use crate::runtime::{LoadedGraph, Runtime};
+use anyhow::{anyhow, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("fig1a") => figs::fig1a(args),
+        Some("fig1b") => figs::fig1b(args),
+        Some("fig1c") => figs::fig1c(args),
+        Some("fig3") => figs::fig3(args),
+        Some("fig4") => figs::fig4(args),
+        Some("fig5") => figs::fig5(args),
+        Some("fig6") => perf::fig6(args),
+        Some("tab1") => tables::tab1(args),
+        Some("tab2") => tables::tab2(args),
+        Some("tab4") => tables::tab4(args),
+        Some("tab6") => tables::tab6(args),
+        Some("tab8") => tables::tab8(args),
+        Some("tab9") => tables::tab9(args),
+        Some("tab10") => tables::tab10(args),
+        Some("tab11") => tables::tab11(args),
+        Some("tab12") => tables::tab12(args),
+        Some("tab14") => perf::tab14(args),
+        Some("all") => {
+            // Everything, cheapest first.
+            for id in [
+                "fig3", "fig6", "fig1b", "fig1c", "tab2", "fig1a", "fig4", "fig5", "tab1",
+                "tab4", "tab6", "tab8", "tab9", "tab10", "tab11", "tab12", "tab14",
+            ] {
+                println!("\n================ exp {id} ================");
+                let mut sub = args.clone();
+                sub.positional = vec!["exp".into(), id.into()];
+                run(&sub)?;
+            }
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown experiment '{other}'")),
+        None => Err(anyhow!(
+            "usage: dpquant exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6|tab1|tab2|tab4|tab6|tab8|tab9|tab10|tab11|tab12|tab14|all>"
+        )),
+    }
+}
+
+/// Shared experiment context: one Runtime + one loaded graph + datasets,
+/// reused across the (many) runs of one experiment.
+pub struct ExpCtx {
+    pub graph: LoadedGraph,
+    pub train_ds: Dataset,
+    pub val_ds: Dataset,
+    pub base: TrainConfig,
+    pub seeds: u64,
+    pub scale: f64,
+}
+
+impl ExpCtx {
+    /// Open the default (or flag-selected) substrate with scaled sizes.
+    pub fn open(args: &Args, model: &str, dataset: &str, quantizer: &str) -> Result<Self> {
+        let scale = args.f64_or("scale", 1.0).map_err(|e| anyhow!(e))?;
+        let seeds = args.u64_or("seeds", 3).map_err(|e| anyhow!(e))?;
+        let model = args.str_or("model", model);
+        let dataset = args.str_or("dataset", dataset);
+        let quantizer = args.str_or("quantizer", quantizer);
+
+        let mut base = TrainConfig {
+            model: model.clone(),
+            dataset: dataset.clone(),
+            quantizer: quantizer.clone(),
+            dataset_size: ((1024.0 * scale) as usize).max(256),
+            val_size: 256,
+            batch_size: 64,
+            epochs: ((8.0 * scale) as usize).max(3),
+            noise_multiplier: 1.0,
+            lr: 0.5,
+            ..TrainConfig::default()
+        };
+        base.epochs = args.usize_or("epochs", base.epochs).map_err(|e| anyhow!(e))?;
+        base.dataset_size = args
+            .usize_or("dataset-size", base.dataset_size)
+            .map_err(|e| anyhow!(e))?;
+        base.noise_multiplier = args
+            .f64_or("noise-multiplier", base.noise_multiplier)
+            .map_err(|e| anyhow!(e))?;
+        base.lr = args.f64_or("lr", base.lr).map_err(|e| anyhow!(e))?;
+
+        let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
+        let tag = format!("{}_{}_{}", model, dataset, quantizer);
+        let graph = rt.load(&tag)?;
+        let full = data::generate(&dataset, base.dataset_size + base.val_size, 12345)
+            .map_err(|e| anyhow!(e))?;
+        let (train_ds, val_ds) = full.split(base.val_size);
+        Ok(Self {
+            graph,
+            train_ds,
+            val_ds,
+            base,
+            seeds,
+            scale,
+        })
+    }
+
+    /// One training run under a config derived from the base.
+    pub fn run_cfg(&self, cfg: &TrainConfig, stats: bool) -> Result<TrainResult> {
+        let opts = TrainerOptions {
+            collect_step_stats: stats,
+            verbose: false,
+        };
+        train(&self.graph, cfg, &self.train_ds, &self.val_ds, &opts)
+    }
+
+    /// Baseline sweep: `seeds` runs of `scheduler`, returning best
+    /// accuracies per seed and the last run's ε.
+    pub fn sweep(
+        &self,
+        scheduler: &str,
+        quant_fraction: f64,
+        extra: impl Fn(&mut TrainConfig),
+    ) -> Result<(Vec<f64>, f64)> {
+        let mut accs = Vec::new();
+        let mut eps = 0.0;
+        for seed in 0..self.seeds {
+            let mut cfg = self.base.clone();
+            cfg.scheduler = scheduler.into();
+            cfg.quant_fraction = quant_fraction;
+            cfg.seed = seed;
+            extra(&mut cfg);
+            let res = self.run_cfg(&cfg, false)?;
+            accs.push(res.record.best_accuracy);
+            eps = res.record.final_epsilon;
+        }
+        Ok((accs, eps))
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.graph.n_quant_layers()
+    }
+}
+
+/// Write an experiment's JSON blob under results/.
+pub fn save_json(name: &str, json: crate::util::json::Json) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.json");
+    std::fs::write(&path, json.to_string())?;
+    println!("[saved {path}]");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Table experiments (Tables 1, 2, 4, 6, 8, 9, 10, 11, 12).
+
+use super::{save_json, ExpCtx};
+use crate::cli::Args;
+use crate::config::OptimizerKind;
+use crate::metrics::{mean_std, Table};
+use crate::util::json::{self, Json};
+use anyhow::Result;
+
+/// Shared engine for the Table-1 family: baseline (static random, N
+/// seeds) vs DPQuant at each (ε, fraction) cell.
+fn budget_table(
+    ctx: &ExpCtx,
+    name: &str,
+    epsilons: &[f64],
+    fracs: &[f64],
+    extra: impl Fn(&mut crate::config::TrainConfig) + Copy,
+) -> Result<()> {
+    let mut table = Table::new(&[
+        "eps target",
+        "frac",
+        "baseline acc",
+        "baseline eps",
+        "ours acc",
+        "ours eps",
+    ]);
+    let mut rows = Vec::new();
+    for &eps in epsilons {
+        for &frac in fracs {
+            let (base_accs, base_eps) = ctx.sweep("static_random", frac, |c| {
+                c.target_epsilon = Some(eps);
+                extra(c);
+            })?;
+            let (bm, bs) = mean_std(&base_accs);
+            let mut cfg = ctx.base.clone();
+            cfg.scheduler = "dpquant".into();
+            cfg.quant_fraction = frac;
+            cfg.target_epsilon = Some(eps);
+            extra(&mut cfg);
+            let res = ctx.run_cfg(&cfg, false)?;
+            let (ours, ours_eps) = (res.record.best_accuracy, res.record.final_epsilon);
+            table.row(vec![
+                format!("{eps}"),
+                format!("{frac:.2}"),
+                format!("{:.4}±{:.4}", bm, bs),
+                format!("{base_eps:.2}"),
+                format!("{ours:.4}"),
+                format!("{ours_eps:.2}"),
+            ]);
+            rows.push(json::obj(vec![
+                ("eps_target", json::num(eps)),
+                ("fraction", json::num(frac)),
+                ("baseline_mean", json::num(bm)),
+                ("baseline_std", json::num(bs)),
+                ("baseline_eps", json::num(base_eps)),
+                ("ours", json::num(ours)),
+                ("ours_eps", json::num(ours_eps)),
+            ]));
+        }
+    }
+    table.print();
+    save_json(name, Json::Arr(rows))
+}
+
+/// Table 1: accuracy × {ε = 4, 8} × {50, 75, 90}% quantized.
+pub fn tab1(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
+    println!("Table 1 — model quality across privacy levels (DP-SGD)");
+    budget_table(&ctx, "tab1", &[4.0, 8.0], &[0.5, 0.75, 0.9], |_| {})?;
+    println!("expect: ours ≥ baseline mean (typically ≥ +1σ at 75/90%), ε within budget");
+    Ok(())
+}
+
+/// Table 2 (A.1): raw gradient-norm range vs batch size — negligible
+/// batch-size effect.
+pub fn tab2(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
+    let mut table = Table::new(&["batch", "norm-range mean", "norm-range std"]);
+    let mut rows = Vec::new();
+    for &b in &[16usize, 32, 64, 128] {
+        let mut cfg = ctx.base.clone();
+        cfg.scheduler = "none".into();
+        cfg.batch_size = b;
+        let res = ctx.run_cfg(&cfg, true)?;
+        // "Range" per step: max raw per-sample norm (the spread of raw
+        // gradient magnitudes the quantizer must cover).
+        let (m, s) = mean_std(&res.trace.raw_norm_max);
+        table.row(vec![b.to_string(), format!("{m:.4}"), format!("{s:.4}")]);
+        rows.push(json::obj(vec![
+            ("batch", json::num(b as f64)),
+            ("mean", json::num(m)),
+            ("std", json::num(s)),
+        ]));
+    }
+    println!("Table 2 — gradient norm range vs batch size (expect: flat)");
+    table.print();
+    save_json("tab2", Json::Arr(rows))
+}
+
+/// Table 4 (A.3): the extreme ε = 1 budget (σ and σ_measure raised).
+pub fn tab4(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
+    println!("Table 4 — strict budget ε = 1 (σ = 2.0, σ_measure = 1.0)");
+    budget_table(&ctx, "tab4", &[1.0], &[0.5, 0.75, 0.9], |c| {
+        c.noise_multiplier = 2.0;
+        c.sigma_measure = 1.0;
+    })?;
+    println!("expect: DPQuant still beats the static baseline at ε = 1");
+    Ok(())
+}
+
+/// Table 6 (A.5): DP-Adam (lr 0.01) instead of DP-SGD.
+pub fn tab6(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
+    println!("Table 6 — DP-Adam: DPQuant vs static random baseline");
+    budget_table(&ctx, "tab6", &[6.0], &[0.5, 0.75, 0.9], |c| {
+        c.optimizer = OptimizerKind::Adam;
+        c.lr = 0.01;
+    })?;
+    println!("expect: same ordering as DP-SGD; largest gains at 75/90%");
+    Ok(())
+}
+
+/// Table 8 (A.6): naive full quantization under DP — the headline
+/// degradation motivating the paper.
+pub fn tab8(args: &Args) -> Result<()> {
+    let mut table = Table::new(&["model/dataset", "fp baseline", "all-LUQ4", "delta"]);
+    let mut rows = Vec::new();
+    let combos = [
+        ("miniconvnet", "gtsrb"),
+        ("miniconvnet", "cifar"),
+        ("miniresnet", "gtsrb"),
+    ];
+    for (model, dataset) in combos {
+        let mut sub = args.clone();
+        sub.options.insert("model".into(), model.into());
+        sub.options.insert("dataset".into(), dataset.into());
+        let ctx = ExpCtx::open(&sub, model, dataset, "luq4")?;
+        let (fp, _) = ctx.sweep("none", 0.0, |_| {})?;
+        let (allq, _) = ctx.sweep("all", 1.0, |_| {})?;
+        let (fm, _) = mean_std(&fp);
+        let (am, _) = mean_std(&allq);
+        table.row(vec![
+            format!("{model}/{dataset}"),
+            format!("{fm:.4}"),
+            format!("{am:.4}"),
+            format!("{:+.4}", am - fm),
+        ]);
+        rows.push(json::obj(vec![
+            ("model", json::s(model)),
+            ("dataset", json::s(dataset)),
+            ("fp", json::num(fm)),
+            ("all_quant", json::num(am)),
+        ]));
+    }
+    println!("Table 8 — DP-SGD: fp32 vs fully-quantized LUQ-FP4");
+    table.print();
+    println!("expect: clear degradation under full quantization (paper: −4% to −41%)");
+    save_json("tab8", Json::Arr(rows))
+}
+
+/// Table 9 (A.7): temperature β sensitivity.
+pub fn tab9(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
+    let betas = [0.1, 1.0, 4.86, 10.57, 50.0];
+    let fracs = [0.5, 0.9];
+    let mut table = Table::new(&["frac", "beta", "acc"]);
+    let mut rows = Vec::new();
+    for &frac in &fracs {
+        for &beta in &betas {
+            let mut cfg = ctx.base.clone();
+            cfg.scheduler = "dpquant".into();
+            cfg.quant_fraction = frac;
+            cfg.beta = beta;
+            let acc = ctx.run_cfg(&cfg, false)?.record.best_accuracy;
+            table.row(vec![
+                format!("{frac:.2}"),
+                format!("{beta}"),
+                format!("{acc:.4}"),
+            ]);
+            rows.push(json::obj(vec![
+                ("fraction", json::num(frac)),
+                ("beta", json::num(beta)),
+                ("acc", json::num(acc)),
+            ]));
+        }
+    }
+    println!("Table 9 — β sensitivity (expect: moderate-to-high β beats β→0)");
+    table.print();
+    save_json("tab9", Json::Arr(rows))
+}
+
+/// Table 10 (A.8): EMA ablation.
+pub fn tab10(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "cifar", "luq4")?;
+    let mut table = Table::new(&["frac", "with EMA", "without EMA"]);
+    let mut rows = Vec::new();
+    for &frac in &[0.5, 0.75, 0.9] {
+        let mut cfg = ctx.base.clone();
+        cfg.scheduler = "dpquant".into();
+        cfg.quant_fraction = frac;
+        let with = ctx.run_cfg(&cfg, false)?.record.best_accuracy;
+        cfg.ema_enabled = false;
+        let without = ctx.run_cfg(&cfg, false)?.record.best_accuracy;
+        table.row(vec![
+            format!("{frac:.2}"),
+            format!("{with:.4}"),
+            format!("{without:.4}"),
+        ]);
+        rows.push(json::obj(vec![
+            ("fraction", json::num(frac)),
+            ("with_ema", json::num(with)),
+            ("without_ema", json::num(without)),
+        ]));
+    }
+    println!("Table 10 — EMA ablation (expect: EMA ≥ no-EMA across budgets)");
+    table.print();
+    save_json("tab10", Json::Arr(rows))
+}
+
+/// Table 11 (A.9.1): FP8 — no meaningful DP degradation, so scheduling
+/// matters little.
+pub fn tab11(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniresnet", "cifar", "fp8")?;
+    println!("Table 11 — FP8-E5M2 (expect: baseline ≈ ours; quantization is benign)");
+    budget_table(&ctx, "tab11", &[4.0], &[0.5, 0.75, 0.9], |_| {})
+}
+
+/// Table 12 (A.9.2): uniform INT4 stochastic rounding.
+pub fn tab12(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniresnet", "cifar", "uniform4")?;
+    println!("Table 12 — uniform 4-bit (expect: degradation like LUQ-FP4; ours ≥ baseline at high frac)");
+    budget_table(&ctx, "tab12", &[4.5], &[0.5, 0.75, 0.9], |_| {})
+}

@@ -1,0 +1,29 @@
+//! # DPQuant
+//!
+//! A from-scratch reproduction of *DPQuant: Efficient and
+//! Differentially-Private Model Training via Dynamic Quantization
+//! Scheduling* as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas quantizer kernels (`python/compile/kernels/`),
+//!   AOT-lowered into the training graph;
+//! * **L2** — JAX DP-training step graphs (`python/compile/`), exported
+//!   once as HLO text into `artifacts/`;
+//! * **L3** — this crate: the DPQuant coordinator (dynamic quantization
+//!   scheduling, Algorithms 1–2), the DP mechanism (fp32 Gaussian noise),
+//!   optimizers, the RDP privacy accountant, data pipeline, experiment
+//!   harness and CLI. Python never runs on the training path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod perfmodel;
+pub mod privacy;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,261 @@
+//! `dpquant` — launcher CLI for the DPQuant reproduction.
+//!
+//! Subcommands:
+//!   train            — run one training job (scheduler, model, dataset
+//!                      and DP parameters from flags or --config file)
+//!   eval-only        — load a graph and evaluate its initial weights
+//!   list             — list compiled graphs in the artifact manifest
+//!   accountant       — privacy-accountant utilities (`--dump` emits RDP
+//!                      values for the Python numerical-integration
+//!                      oracle; otherwise composes a training schedule)
+//!   exp <id>         — regenerate a paper table/figure (fig1a..tab14)
+//!   bench-step       — time the compiled train step (perf harness)
+//!
+//! Examples:
+//!   dpquant train --model miniconvnet --dataset gtsrb --scheduler dpquant \
+//!       --quant-fraction 0.9 --epochs 12 --target-epsilon 8
+//!   dpquant exp fig3
+//!   dpquant exp tab1 --scale 0.25
+
+use anyhow::{anyhow, Result};
+use dpquant::cli::Args;
+use dpquant::config::{ConfigFile, OptimizerKind, TrainConfig};
+use dpquant::coordinator::{train, TrainerOptions};
+use dpquant::data;
+use dpquant::exp;
+use dpquant::privacy::{default_alphas, rdp_sgm_step, rdp_to_epsilon, RdpAccountant};
+use dpquant::runtime::Runtime;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command() {
+        Some("train") => cmd_train(args),
+        Some("eval-only") => cmd_eval_only(args),
+        Some("list") => cmd_list(args),
+        Some("accountant") => cmd_accountant(args),
+        Some("exp") => exp::run(args),
+        Some("bench-step") => cmd_bench_step(args),
+        Some(other) => Err(anyhow!("unknown command '{other}' (see README)")),
+        None => {
+            println!("usage: dpquant <train|eval-only|list|accountant|exp|bench-step> [flags]");
+            Ok(())
+        }
+    }
+}
+
+/// Build a TrainConfig from `--config file` + flag overrides.
+fn config_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let cf = ConfigFile::load(path).map_err(|e| anyhow!(e))?;
+            TrainConfig::from_file(&cf).map_err(|e| anyhow!(e))?
+        }
+        None => TrainConfig::default(),
+    };
+    if let Some(v) = args.get("model") {
+        cfg.model = v.to_string();
+    }
+    if let Some(v) = args.get("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = args.get("quantizer") {
+        cfg.quantizer = v.to_string();
+    }
+    if let Some(v) = args.get("scheduler") {
+        cfg.scheduler = v.to_string();
+    }
+    if let Some(v) = args.get("optimizer") {
+        cfg.optimizer = OptimizerKind::parse(v).map_err(|e| anyhow!(e))?;
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs).map_err(|e| anyhow!(e))?;
+    cfg.batch_size = args
+        .usize_or("batch-size", cfg.batch_size)
+        .map_err(|e| anyhow!(e))?;
+    cfg.noise_multiplier = args
+        .f64_or("noise-multiplier", cfg.noise_multiplier)
+        .map_err(|e| anyhow!(e))?;
+    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm).map_err(|e| anyhow!(e))?;
+    cfg.lr = args.f64_or("lr", cfg.lr).map_err(|e| anyhow!(e))?;
+    cfg.quant_fraction = args
+        .f64_or("quant-fraction", cfg.quant_fraction)
+        .map_err(|e| anyhow!(e))?;
+    cfg.beta = args.f64_or("beta", cfg.beta).map_err(|e| anyhow!(e))?;
+    cfg.analysis_interval = args
+        .usize_or("analysis-interval", cfg.analysis_interval)
+        .map_err(|e| anyhow!(e))?;
+    cfg.sigma_measure = args
+        .f64_or("sigma-measure", cfg.sigma_measure)
+        .map_err(|e| anyhow!(e))?;
+    cfg.analysis_samples = args
+        .usize_or("analysis-samples", cfg.analysis_samples)
+        .map_err(|e| anyhow!(e))?;
+    cfg.dataset_size = args
+        .usize_or("dataset-size", cfg.dataset_size)
+        .map_err(|e| anyhow!(e))?;
+    cfg.val_size = args.usize_or("val-size", cfg.val_size).map_err(|e| anyhow!(e))?;
+    cfg.seed = args.u64_or("seed", cfg.seed).map_err(|e| anyhow!(e))?;
+    if let Some(eps) = args.f64_opt("target-epsilon").map_err(|e| anyhow!(e))? {
+        cfg.target_epsilon = Some(eps);
+    }
+    if args.has_flag("no-ema") {
+        cfg.ema_enabled = false;
+    }
+    Ok(cfg)
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
+    let graph = rt.load(&tag)?;
+
+    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
+        .map_err(|e| anyhow!(e))?;
+    let (train_ds, val_ds) = full.split(cfg.val_size);
+
+    let opts = TrainerOptions {
+        collect_step_stats: args.has_flag("stats"),
+        verbose: !args.has_flag("quiet"),
+    };
+    let res = train(&graph, &cfg, &train_ds, &val_ds, &opts)?;
+    println!(
+        "final: val_acc={:.4} eps={:.3} (analysis eps alone: {:.3}) epochs={}",
+        res.record.final_accuracy,
+        res.record.final_epsilon,
+        res.record.analysis_epsilon,
+        res.record.epochs.len()
+    );
+    let path = res.record.save(&args.str_or("results", "results"))?;
+    println!("saved {path}");
+    Ok(())
+}
+
+fn cmd_eval_only(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
+    let graph = rt.load(&tag)?;
+    let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed).map_err(|e| anyhow!(e))?;
+    let (loss, acc) = dpquant::coordinator::trainer::evaluate(&graph, &graph.init_weights, &ds)?;
+    println!("init weights: loss={loss:.4} acc={acc:.4}");
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let mut t = dpquant::metrics::Table::new(&[
+        "tag", "model", "dataset", "quantizer", "batch", "layers", "params",
+    ]);
+    for (tag, g) in &rt.manifest.graphs {
+        t.row(vec![
+            tag.clone(),
+            g.model.clone(),
+            g.dataset.clone(),
+            g.quantizer.clone(),
+            g.batch.to_string(),
+            g.n_quant_layers.to_string(),
+            g.total_params().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_accountant(args: &Args) -> Result<()> {
+    if args.has_flag("dump") {
+        // Machine-readable RDP values for the Python oracle test:
+        // lines of "q sigma alpha rdp".
+        let qs = [0.001, 0.01, 0.05, 0.2, 1.0];
+        let sigmas = [0.5, 1.0, 2.0, 5.0];
+        let alphas = [1.5, 2.0, 3.0, 4.5, 8.0, 16.0, 32.0];
+        for &q in &qs {
+            for &sigma in &sigmas {
+                for &alpha in &alphas {
+                    println!("{q} {sigma} {alpha} {:.12e}", rdp_sgm_step(q, sigma, alpha));
+                }
+            }
+        }
+        return Ok(());
+    }
+    // Compose a schedule: ε for (q, σ, steps) + optional analysis steps.
+    let q = args.f64_or("q", 0.02).map_err(|e| anyhow!(e))?;
+    let sigma = args.f64_or("sigma", 1.0).map_err(|e| anyhow!(e))?;
+    let steps = args.u64_or("steps", 1000).map_err(|e| anyhow!(e))?;
+    let delta = args.f64_or("delta", 1e-5).map_err(|e| anyhow!(e))?;
+    let analysis_steps = args.u64_or("analysis-steps", 0).map_err(|e| anyhow!(e))?;
+    let sigma_measure = args.f64_or("sigma-measure", 0.5).map_err(|e| anyhow!(e))?;
+
+    let mut acc = RdpAccountant::new();
+    acc.step_training(q, sigma, steps);
+    for _ in 0..analysis_steps {
+        acc.step_analysis(q, sigma_measure);
+    }
+    let (eps, alpha) = acc.epsilon(delta);
+    println!("epsilon = {eps:.4} at alpha = {alpha} (delta = {delta})");
+    if analysis_steps > 0 {
+        println!(
+            "analysis fraction of budget = {:.4}",
+            acc.analysis_fraction(delta)
+        );
+    }
+    // Also show the training-only conversion for reference.
+    let alphas = default_alphas();
+    let curve: Vec<f64> = alphas
+        .iter()
+        .map(|&a| steps as f64 * rdp_sgm_step(q, sigma, a))
+        .collect();
+    let (eps_train, _) = rdp_to_epsilon(&alphas, &curve, delta);
+    println!("training-only epsilon = {eps_train:.4}");
+    Ok(())
+}
+
+fn cmd_bench_step(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
+    let graph = rt.load(&tag)?;
+    let b = graph.batch();
+    let ds = data::generate(&cfg.dataset, b, cfg.seed).map_err(|e| anyhow!(e))?;
+    let batches = data::eval_batches(&ds, b);
+    let batch = &batches[0];
+    let mask = vec![1f32; graph.info.n_quant_layers];
+    let reps = args.usize_or("reps", 20).map_err(|e| anyhow!(e))?;
+
+    // Warmup.
+    graph.train_step(&graph.init_weights, &batch.x, &batch.y, &batch.mask, &mask, 0.0)?;
+    let t0 = std::time::Instant::now();
+    for i in 0..reps {
+        graph.train_step(
+            &graph.init_weights,
+            &batch.x,
+            &batch.y,
+            &batch.mask,
+            &mask,
+            i as f32,
+        )?;
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "{tag}: train_step {:.2} ms/batch ({b} examples, {:.1} ex/s)",
+        per * 1e3,
+        b as f64 / per
+    );
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Run metrics: per-epoch records, summaries, CSV/JSON emission.
+//!
+//! Every trainer run produces a [`RunRecord`]; the experiment harness
+//! aggregates them into the tables/figures of the paper and writes both
+//! human-readable tables (stdout) and machine-readable JSON under
+//! `results/`.
+
+use crate::util::json::{self, Json};
+use std::io::Write as _;
+
+/// One epoch's worth of telemetry.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_accuracy: f64,
+    /// ε consumed so far (training + analysis).
+    pub epsilon: f64,
+    /// Layers quantized this epoch (indices into the model's layer list).
+    pub quantized_layers: Vec<usize>,
+    /// Wall-clock seconds for the epoch (train only).
+    pub train_seconds: f64,
+    /// Wall-clock seconds spent in analysis before this epoch (0 if none).
+    pub analysis_seconds: f64,
+}
+
+/// A whole training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub name: String,
+    pub config_summary: String,
+    pub epochs: Vec<EpochRecord>,
+    /// Final ε at the end of the run.
+    pub final_epsilon: f64,
+    /// ε attributable to analysis alone.
+    pub analysis_epsilon: f64,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+}
+
+impl RunRecord {
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.best_accuracy = self.best_accuracy.max(rec.val_accuracy);
+        self.final_accuracy = rec.val_accuracy;
+        self.final_epsilon = rec.epsilon;
+        self.epochs.push(rec);
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("config", json::s(&self.config_summary)),
+            ("final_epsilon", json::num(self.final_epsilon)),
+            ("analysis_epsilon", json::num(self.analysis_epsilon)),
+            ("final_accuracy", json::num(self.final_accuracy)),
+            ("best_accuracy", json::num(self.best_accuracy)),
+            (
+                "epochs",
+                Json::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            json::obj(vec![
+                                ("epoch", json::num(e.epoch as f64)),
+                                ("train_loss", json::num(e.train_loss)),
+                                ("val_loss", json::num(e.val_loss)),
+                                ("val_accuracy", json::num(e.val_accuracy)),
+                                ("epsilon", json::num(e.epsilon)),
+                                (
+                                    "quantized_layers",
+                                    Json::Arr(
+                                        e.quantized_layers
+                                            .iter()
+                                            .map(|&i| json::num(i as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("train_seconds", json::num(e.train_seconds)),
+                                ("analysis_seconds", json::num(e.analysis_seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write JSON to `results/<name>.json` (creates the directory).
+    pub fn save(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.json", self.name.replace(['/', ' '], "_"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_json().to_string().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|&x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Simple fixed-width table printer for experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_record_tracks_best() {
+        let mut r = RunRecord {
+            name: "t".into(),
+            ..Default::default()
+        };
+        for (i, acc) in [(0, 0.4), (1, 0.7), (2, 0.6)] {
+            r.push(EpochRecord {
+                epoch: i,
+                train_loss: 1.0,
+                val_loss: 1.0,
+                val_accuracy: acc,
+                epsilon: i as f64,
+                quantized_layers: vec![i],
+                train_seconds: 0.1,
+                analysis_seconds: 0.0,
+            });
+        }
+        assert_eq!(r.best_accuracy, 0.7);
+        assert_eq!(r.final_accuracy, 0.6);
+        assert_eq!(r.final_epsilon, 2.0);
+        // JSON round-trips through the parser.
+        let parsed = crate::util::json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(
+            parsed.get("best_accuracy").unwrap().as_f64().unwrap(),
+            0.7
+        );
+        assert_eq!(
+            parsed.get("epochs").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((s - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "acc"]);
+        t.row(vec!["resnet".into(), "81.2".into()]);
+        t.row(vec!["m".into(), "7".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Differential-privacy accounting for DPQuant.
+//!
+//! Both DP-SGD training and the loss-impact analysis (Algorithm 1) are
+//! Sampled Gaussian Mechanisms (paper Prop. 2); [`rdp`] implements the
+//! per-step Rényi-DP analysis and [`accountant`] composes the two
+//! mechanisms over a shared α-grid, exactly as the paper does through
+//! Opacus (§5.4, §A.14).
+
+pub mod accountant;
+pub mod rdp;
+
+pub use accountant::{Mechanism, RdpAccountant, StepRecord};
+pub use rdp::{default_alphas, rdp_sgm, rdp_sgm_step, rdp_to_epsilon};

@@ -1,0 +1,121 @@
+//! FP8-E5M2 quantize-dequantize (paper §A.9.1).
+//!
+//! E5M2 shares the f16 exponent range (bias 15) with a 2-bit mantissa.
+//! We implement round-to-nearest-even by operating on the f32 bit
+//! pattern: keep the top 2 mantissa bits, round the remaining 21 bits.
+//! Deterministic (the paper's FP8 results need no stochastic rounding —
+//! at 8 bits DP training shows no degradation, Table 11).
+
+use super::Quantizer;
+use crate::util::rng::Xoshiro256;
+
+/// Largest finite E5M2 value: 2¹⁵ × 1.75 = 57344.
+pub const MAX_E5M2: f32 = 57344.0;
+/// Smallest positive normal E5M2 value: 2⁻¹⁴.
+pub const MIN_NORMAL_E5M2: f32 = 6.103515625e-5;
+
+/// FP8-E5M2 quantizer (round-to-nearest-even, saturating).
+pub struct Fp8E5M2;
+
+impl Fp8E5M2 {
+    /// Quantize-dequantize one f32 value to the E5M2 grid.
+    pub fn quantize_one(x: f32) -> f32 {
+        if x == 0.0 || x.is_nan() {
+            return x;
+        }
+        let clamped = x.clamp(-MAX_E5M2, MAX_E5M2);
+        // Flush sub-minimal values toward the subnormal grid: E5M2
+        // subnormals are k·2⁻¹⁶ for k=1..3; emulate by scaling.
+        let bits = clamped.to_bits();
+        // Round mantissa to 2 bits: add half-ulp-at-2-bits with
+        // round-to-nearest-even tie handling on the 21 dropped bits.
+        const DROP: u32 = 23 - 2;
+        let lsb = (bits >> DROP) & 1;
+        let rounded = bits
+            .wrapping_add((1u32 << (DROP - 1)) - 1 + lsb)
+            & !((1u32 << DROP) - 1);
+        let y = f32::from_bits(rounded);
+        // Saturate if rounding overflowed past the max exponent.
+        if y.abs() > MAX_E5M2 {
+            return MAX_E5M2.copysign(y);
+        }
+        // Handle the subnormal band (|x| < 2^-14): snap to the E5M2
+        // subnormal grid of step 2^-16 (round-to-nearest).
+        if y.abs() < MIN_NORMAL_E5M2 {
+            let step = MIN_NORMAL_E5M2 / 4.0;
+            return (y / step).round() * step;
+        }
+        y
+    }
+}
+
+impl Quantizer for Fp8E5M2 {
+    fn name(&self) -> &'static str {
+        "fp8"
+    }
+    fn bits(&self) -> u32 {
+        8
+    }
+    fn quantize(&self, xs: &mut [f32], _rng: &mut Xoshiro256) {
+        for x in xs.iter_mut() {
+            *x = Self::quantize_one(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_preserved() {
+        // Powers of two and 2-bit mantissas are exactly representable.
+        for &x in &[1.0f32, 2.0, 0.5, 1.25, 1.5, 1.75, -3.0, 96.0, 57344.0] {
+            assert_eq!(Fp8E5M2::quantize_one(x), x, "{x} should be exact");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // 1.1 lies between 1.0 and 1.25 → rounds to 1.0 (nearer).
+        assert_eq!(Fp8E5M2::quantize_one(1.1), 1.0);
+        // 1.2 is nearer 1.25.
+        assert_eq!(Fp8E5M2::quantize_one(1.2), 1.25);
+        // Ties round to even mantissa: 1.125 → 1.0 (mantissa 00 is even).
+        assert_eq!(Fp8E5M2::quantize_one(1.125), 1.0);
+        // 1.375 ties between 1.25 (01) and 1.5 (10) → even is 1.5.
+        assert_eq!(Fp8E5M2::quantize_one(1.375), 1.5);
+    }
+
+    #[test]
+    fn saturates_at_max() {
+        assert_eq!(Fp8E5M2::quantize_one(1e6), MAX_E5M2);
+        assert_eq!(Fp8E5M2::quantize_one(-1e6), -MAX_E5M2);
+        assert_eq!(Fp8E5M2::quantize_one(60000.0), MAX_E5M2);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // Normal range: relative error ≤ 2^-3 = 12.5%.
+        for i in 0..1000 {
+            let x = (i as f32 * 0.013 + 0.001) * if i % 2 == 0 { 1.0 } else { -1.0 };
+            let q = Fp8E5M2::quantize_one(x);
+            let rel = (x - q).abs() / x.abs();
+            assert!(rel <= 0.125 + 1e-6, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn zero_and_signs() {
+        assert_eq!(Fp8E5M2::quantize_one(0.0), 0.0);
+        assert_eq!(Fp8E5M2::quantize_one(-1.2), -1.25);
+    }
+
+    #[test]
+    fn subnormal_band_snaps() {
+        let tiny = 3e-5f32; // below MIN_NORMAL
+        let q = Fp8E5M2::quantize_one(tiny);
+        let step = MIN_NORMAL_E5M2 / 4.0;
+        assert!((q / step - (q / step).round()).abs() < 1e-3);
+    }
+}

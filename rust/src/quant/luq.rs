@@ -1,0 +1,157 @@
+//! LUQ-FP4: logarithmic unbiased quantization to a 4-bit format
+//! (1 sign + 3 exponent bits), after Chmiel et al. 2024 — the paper's
+//! primary low-precision format (§6, "Low Precision Format").
+//!
+//! Given a tensor with max magnitude `M`, the representable grid is
+//! `{0} ∪ {± α·2^k : k = 0..7}` with `α = M / 2^7`, i.e. eight
+//! octaves below the max. Two stochastic steps keep the quantizer
+//! unbiased:
+//!
+//! 1. **Stochastic underflow pruning**: `|x| < α` becomes `sign(x)·α`
+//!    with probability `|x|/α`, else 0.
+//! 2. **Stochastic logarithmic rounding**: `|x| ∈ [α·2^k, α·2^{k+1}]`
+//!    rounds up with probability `(|x| − lo)/(hi − lo)` (linear-domain
+//!    unbiased stochastic rounding between adjacent grid points).
+//!
+//! Scale invariance holds because `α` is derived from `‖x‖∞`.
+
+use super::Quantizer;
+use crate::util::rng::Xoshiro256;
+
+/// Number of exponent levels: 3 exponent bits → 8 octaves.
+pub const EXP_LEVELS: i32 = 8;
+
+/// LUQ-FP4 quantizer.
+pub struct LuqFp4;
+
+impl LuqFp4 {
+    /// The underflow threshold α for a tensor with max magnitude `max_abs`.
+    #[inline]
+    pub fn alpha(max_abs: f32) -> f32 {
+        max_abs / (1u32 << (EXP_LEVELS - 1)) as f32
+    }
+
+    /// Quantize one value given the tensor threshold `alpha`.
+    #[inline]
+    pub fn quantize_one(x: f32, alpha: f32, u: f32) -> f32 {
+        if x == 0.0 || alpha == 0.0 {
+            return 0.0;
+        }
+        let sign = if x < 0.0 { -1.0 } else { 1.0 };
+        let mag = x.abs();
+        if mag < alpha {
+            // Stochastic underflow: unbiased prune-or-promote.
+            return if u < mag / alpha { sign * alpha } else { 0.0 };
+        }
+        // log2(mag/alpha) ∈ [0, 7]; stochastic round between octaves.
+        let k = (mag / alpha).log2().floor().min((EXP_LEVELS - 1) as f32);
+        let lo = alpha * (2f32).powi(k as i32);
+        let hi = alpha * (2f32).powi(k as i32 + 1);
+        if mag >= hi {
+            // mag == max (top of grid) or fp edge case.
+            return sign * hi.min(alpha * (2f32).powi(EXP_LEVELS - 1));
+        }
+        let p_up = (mag - lo) / (hi - lo);
+        if u < p_up {
+            sign * hi
+        } else {
+            sign * lo
+        }
+    }
+}
+
+impl Quantizer for LuqFp4 {
+    fn name(&self) -> &'static str {
+        "luq4"
+    }
+    fn bits(&self) -> u32 {
+        4
+    }
+    fn quantize(&self, xs: &mut [f32], rng: &mut Xoshiro256) {
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if max_abs == 0.0 {
+            return;
+        }
+        let alpha = Self::alpha(max_abs);
+        for x in xs.iter_mut() {
+            let u = rng.next_f32();
+            *x = Self::quantize_one(*x, alpha, u);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{empirical_bias, empirical_variance};
+
+    #[test]
+    fn outputs_on_grid() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut xs: Vec<f32> = (0..512)
+            .map(|i| ((i as f32 * 0.37).sin() * 3.0) as f32)
+            .collect();
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let alpha = LuqFp4::alpha(max_abs);
+        LuqFp4.quantize(&mut xs, &mut rng);
+        for &v in &xs {
+            if v == 0.0 {
+                continue;
+            }
+            let k = (v.abs() / alpha).log2();
+            assert!(
+                (k - k.round()).abs() < 1e-5 && (0.0..=7.0).contains(&k.round()),
+                "value {v} not on grid (k={k})"
+            );
+        }
+    }
+
+    #[test]
+    fn per_value_unbiased() {
+        // E[q(x)] = x for a single value in the underflow region and in a
+        // rounding interval.
+        let alpha = 0.5f32;
+        let trials = 200_000;
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for &x in &[0.2f32, 0.3, 0.6, 1.3, -0.9, -0.05] {
+            let mut sum = 0f64;
+            for _ in 0..trials {
+                sum += LuqFp4::quantize_one(x, alpha, rng.next_f32()) as f64;
+            }
+            let mean = sum / trials as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.01,
+                "x={x}: E[q]={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_and_max_fixed_points() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        assert_eq!(LuqFp4::quantize_one(0.0, 0.5, rng.next_f32()), 0.0);
+        // The max element must map to itself (it sits on the top grid
+        // point by construction of alpha).
+        let mut xs = vec![2.0f32, -0.3, 0.7];
+        LuqFp4.quantize(&mut xs, &mut rng);
+        assert_eq!(xs[0], 2.0);
+    }
+
+    #[test]
+    fn variance_below_gridstep_squared() {
+        // Var per coordinate is at most (hi-lo)²/4 ≤ (max/2)²/4.
+        let x: Vec<f32> = (0..128).map(|i| ((i * 31 % 97) as f32 / 97.0) * 2.0 - 1.0).collect();
+        let var = empirical_variance(&LuqFp4, &x, 2000, 3);
+        assert!(var > 0.0 && var < 0.25, "var={var}");
+        let bias = empirical_bias(&LuqFp4, &x, 4000, 5);
+        assert!(bias < 0.05, "bias={bias}");
+    }
+
+    #[test]
+    fn all_zero_tensor_noop() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut xs = vec![0f32; 16];
+        LuqFp4.quantize(&mut xs, &mut rng);
+        assert!(xs.iter().all(|&v| v == 0.0));
+    }
+}

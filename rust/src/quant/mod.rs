@@ -1,0 +1,134 @@
+//! Rust mirrors of the quantizers (L1 owns the in-graph Pallas versions;
+//! these mirrors power property tests, the Figure-1 variance micro-studies
+//! and the perf model, and document the exact numerics).
+//!
+//! All training-path quantizers are **unbiased** (`E[q(x)] = x`) and
+//! **scale-invariant** (`q(λx) = λ q(x)` in distribution), the two
+//! properties Proposition 1 needs for `Var(q(x)) = Θ(‖x‖∞²)`.
+
+pub mod luq;
+pub mod uniform4;
+pub mod fp8;
+
+use crate::util::rng::Xoshiro256;
+
+/// A tensor quantizer: quantize-dequantize a slice in place.
+pub trait Quantizer {
+    /// Short identifier (matches artifact naming: luq4 / uniform4 / fp8).
+    fn name(&self) -> &'static str;
+    /// Nominal bit width (speedup modeling).
+    fn bits(&self) -> u32;
+    /// Quantize-dequantize `xs` in place. `rng` drives stochastic rounding
+    /// (deterministic quantizers ignore it).
+    fn quantize(&self, xs: &mut [f32], rng: &mut Xoshiro256);
+}
+
+/// Look up a quantizer by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Quantizer>> {
+    match name {
+        "luq4" => Some(Box::new(luq::LuqFp4)),
+        "uniform4" => Some(Box::new(uniform4::Uniform4)),
+        "fp8" => Some(Box::new(fp8::Fp8E5M2)),
+        _ => None,
+    }
+}
+
+/// Empirical quantization variance of `q` on `x`: mean over coordinates of
+/// Var over `trials` of `q(x)_i`. Used by the Prop-1 tests and Fig-1-style
+/// studies.
+pub fn empirical_variance(q: &dyn Quantizer, x: &[f32], trials: usize, seed: u64) -> f64 {
+    let n = x.len();
+    let mut mean = vec![0f64; n];
+    let mut m2 = vec![0f64; n];
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut buf = vec![0f32; n];
+    for t in 0..trials {
+        buf.copy_from_slice(x);
+        q.quantize(&mut buf, &mut rng);
+        for i in 0..n {
+            let v = buf[i] as f64;
+            let d = v - mean[i];
+            mean[i] += d / (t + 1) as f64;
+            m2[i] += d * (v - mean[i]);
+        }
+    }
+    m2.iter().map(|&s| s / (trials - 1) as f64).sum::<f64>() / n as f64
+}
+
+/// Empirical bias `‖E[q(x)] − x‖∞` (should vanish for unbiased quantizers).
+pub fn empirical_bias(q: &dyn Quantizer, x: &[f32], trials: usize, seed: u64) -> f64 {
+    let n = x.len();
+    let mut acc = vec![0f64; n];
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut buf = vec![0f32; n];
+    for _ in 0..trials {
+        buf.copy_from_slice(x);
+        q.quantize(&mut buf, &mut rng);
+        for i in 0..n {
+            acc[i] += buf[i] as f64;
+        }
+    }
+    acc.iter()
+        .zip(x)
+        .map(|(&a, &v)| (a / trials as f64 - v as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauss_vec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut g = crate::util::gaussian::GaussianSampler::seed_from_u64(seed);
+        (0..n).map(|_| scale * g.standard() as f32).collect()
+    }
+
+    #[test]
+    fn stochastic_quantizers_unbiased() {
+        let x = gauss_vec(256, 1.0, 3);
+        for name in ["luq4", "uniform4"] {
+            let q = by_name(name).unwrap();
+            let bias = empirical_bias(q.as_ref(), &x, 4000, 11);
+            // Max |x| ~ 3; per-coordinate SE of the mean with var ~ grid²
+            // is well under 0.05 at 4000 trials.
+            assert!(bias < 0.08, "{name} bias = {bias}");
+        }
+    }
+
+    #[test]
+    fn prop1_variance_scales_with_inf_norm_squared() {
+        // Proposition 1: Var(q(x)) = Θ(‖x‖∞²). Scaling x by λ must scale
+        // the empirical variance by ~λ².
+        for name in ["luq4", "uniform4"] {
+            let q = by_name(name).unwrap();
+            let x1 = gauss_vec(128, 1.0, 5);
+            let x4: Vec<f32> = x1.iter().map(|&v| 4.0 * v).collect();
+            let v1 = empirical_variance(q.as_ref(), &x1, 3000, 7);
+            let v4 = empirical_variance(q.as_ref(), &x4, 3000, 7);
+            let ratio = v4 / v1;
+            assert!(
+                (ratio - 16.0).abs() < 3.0,
+                "{name}: Var ratio {ratio}, want ~16"
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_low_error() {
+        // FP8-E5M2 relative error ≤ 2^-3 per element (2 mantissa bits).
+        let q = by_name("fp8").unwrap();
+        let x = gauss_vec(512, 2.0, 9);
+        let mut y = x.clone();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        q.quantize(&mut y, &mut rng);
+        for (a, b) in x.iter().zip(&y) {
+            let rel = (a - b).abs() / a.abs().max(1e-6);
+            assert!(rel <= 0.13, "x={a} q={b} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn by_name_unknown() {
+        assert!(by_name("int2").is_none());
+    }
+}

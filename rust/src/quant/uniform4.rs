@@ -1,0 +1,110 @@
+//! Uniform 4-bit quantizer with stochastic rounding (paper §A.9.2):
+//! the value range `[-max, max]` is discretized into 2⁴ = 16 evenly
+//! spaced levels; values round stochastically to an adjacent level so
+//! the quantizer is unbiased.
+
+use super::Quantizer;
+use crate::util::rng::Xoshiro256;
+
+/// Number of levels for 4 bits.
+pub const LEVELS: u32 = 16;
+
+/// Symmetric uniform INT4 quantizer with stochastic rounding.
+pub struct Uniform4;
+
+impl Uniform4 {
+    /// Grid step for a tensor with max magnitude `max_abs`.
+    #[inline]
+    pub fn step(max_abs: f32) -> f32 {
+        2.0 * max_abs / (LEVELS - 1) as f32
+    }
+
+    /// Quantize one value with grid step `step`, stochastic draw `u`.
+    #[inline]
+    pub fn quantize_one(x: f32, step: f32, u: f32) -> f32 {
+        if step == 0.0 {
+            return 0.0;
+        }
+        let t = x / step;
+        let lo = t.floor();
+        let frac = t - lo;
+        let rounded = if u < frac { lo + 1.0 } else { lo };
+        rounded * step
+    }
+}
+
+impl Quantizer for Uniform4 {
+    fn name(&self) -> &'static str {
+        "uniform4"
+    }
+    fn bits(&self) -> u32 {
+        4
+    }
+    fn quantize(&self, xs: &mut [f32], rng: &mut Xoshiro256) {
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if max_abs == 0.0 {
+            return;
+        }
+        let step = Self::step(max_abs);
+        for x in xs.iter_mut() {
+            *x = Self::quantize_one(*x, step, rng.next_f32());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_are_multiples_of_step() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let mut xs: Vec<f32> = (0..256).map(|i| ((i as f32).sin()) * 5.0).collect();
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let step = Uniform4::step(max_abs);
+        Uniform4.quantize(&mut xs, &mut rng);
+        for &v in &xs {
+            let k = v / step;
+            assert!((k - k.round()).abs() < 1e-4, "{v} not on grid");
+        }
+    }
+
+    #[test]
+    fn single_value_unbiased() {
+        let step = 0.4f32;
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for &x in &[0.13f32, -0.31, 0.55, 1.9] {
+            let trials = 200_000;
+            let mut sum = 0f64;
+            for _ in 0..trials {
+                sum += Uniform4::quantize_one(x, step, rng.next_f32()) as f64;
+            }
+            let mean = sum / trials as f64;
+            assert!((mean - x as f64).abs() < 0.005, "x={x} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_step() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos() * 2.0).collect();
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let step = Uniform4::step(max_abs);
+        let mut q = xs.clone();
+        Uniform4.quantize(&mut q, &mut rng);
+        for (a, b) in xs.iter().zip(&q) {
+            assert!((a - b).abs() <= step * 1.0001, "|{a}-{b}| > step {step}");
+        }
+    }
+
+    #[test]
+    fn grid_values_fixed_points() {
+        // Exact grid values quantize to themselves regardless of u.
+        let step = 0.25f32;
+        for k in -7..=7 {
+            let x = k as f32 * step;
+            assert_eq!(Uniform4::quantize_one(x, step, 0.0), x);
+            assert_eq!(Uniform4::quantize_one(x, step, 0.999), x);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (shapes, parameter layout, file names).
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// One parameter tensor's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    /// Weight tensors (quantizable compute operands) end in `_w`; scales,
+    /// biases and norm parameters are "overhead" tensors.
+    pub fn is_weight(&self) -> bool {
+        self.name.ends_with("_w")
+    }
+}
+
+/// Everything the runtime needs to drive one (model, dataset, quantizer)
+/// graph pair.
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub model: String,
+    pub dataset: String,
+    pub quantizer: String,
+    pub batch: usize,
+    pub clip_norm: f64,
+    pub n_classes: usize,
+    pub n_quant_layers: usize,
+    pub quant_layer_names: Vec<String>,
+    pub example_shape: Vec<usize>,
+    pub example_dtype: String,
+    pub params: Vec<ParamInfo>,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub weights: String,
+}
+
+impl GraphInfo {
+    /// Elements per example.
+    pub fn example_numel(&self) -> usize {
+        self.example_shape.iter().product()
+    }
+    /// Total scalar parameter count.
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(ParamInfo::numel).sum()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub graphs: BTreeMap<String, GraphInfo>,
+}
+
+fn get_str(o: &Json, key: &str) -> Result<String, String> {
+    o.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or(format!("missing string '{key}'"))
+}
+
+fn get_usize(o: &Json, key: &str) -> Result<usize, String> {
+    o.get(key)
+        .and_then(Json::as_usize)
+        .ok_or(format!("missing number '{key}'"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let root = json::parse(text)?;
+        let graphs_json = root
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing 'graphs'")?;
+        let mut graphs = BTreeMap::new();
+        for (tag, g) in graphs_json {
+            let params = g
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or("graph missing 'params'")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamInfo {
+                        name: get_str(p, "name")?,
+                        shape: p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or("param missing shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                            .collect::<Result<_, String>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            let quant_layer_names = g
+                .get("quant_layer_names")
+                .and_then(Json::as_arr)
+                .ok_or("missing quant_layer_names")?
+                .iter()
+                .map(|v| v.as_str().map(str::to_string).ok_or("bad layer name".to_string()))
+                .collect::<Result<Vec<_>, String>>()?;
+            let example_shape = g
+                .get("example_shape")
+                .and_then(Json::as_arr)
+                .ok_or("missing example_shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                .collect::<Result<Vec<_>, String>>()?;
+            graphs.insert(
+                tag.clone(),
+                GraphInfo {
+                    model: get_str(g, "model")?,
+                    dataset: get_str(g, "dataset")?,
+                    quantizer: get_str(g, "quantizer")?,
+                    batch: get_usize(g, "batch")?,
+                    clip_norm: g
+                        .get("clip_norm")
+                        .and_then(Json::as_f64)
+                        .ok_or("missing clip_norm")?,
+                    n_classes: get_usize(g, "n_classes")?,
+                    n_quant_layers: get_usize(g, "n_quant_layers")?,
+                    quant_layer_names,
+                    example_shape,
+                    example_dtype: get_str(g, "example_dtype")?,
+                    params,
+                    train_hlo: get_str(g, "train_hlo")?,
+                    eval_hlo: get_str(g, "eval_hlo")?,
+                    weights: get_str(g, "weights")?,
+                },
+            );
+        }
+        Ok(Self { graphs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "graphs": {
+        "m_d_q": {
+          "model": "m", "dataset": "d", "quantizer": "q",
+          "batch": 8, "clip_norm": 1.0, "n_classes": 10,
+          "n_quant_layers": 2,
+          "quant_layer_names": ["conv1", "fc"],
+          "example_shape": [4, 4, 3], "example_dtype": "float32",
+          "params": [
+            {"name": "conv1_w", "shape": [3, 3, 3, 8]},
+            {"name": "fc_b", "shape": [10]}
+          ],
+          "train_hlo": "train_m_d_q.hlo.txt",
+          "eval_hlo": "eval_m_d.hlo.txt",
+          "weights": "weights_m_d.bin"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = &m.graphs["m_d_q"];
+        assert_eq!(g.batch, 8);
+        assert_eq!(g.params.len(), 2);
+        assert_eq!(g.params[0].numel(), 216);
+        assert!(g.params[0].is_weight());
+        assert!(!g.params[1].is_weight());
+        assert_eq!(g.example_numel(), 48);
+        assert_eq!(g.total_params(), 226);
+        assert_eq!(g.quant_layer_names, vec!["conv1", "fc"]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"graphs": {"x": {"model": "m"}}}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Integration hook: when artifacts exist, the real manifest must
+        // parse and be internally consistent.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(!m.graphs.is_empty());
+            for (tag, g) in &m.graphs {
+                assert_eq!(g.quant_layer_names.len(), g.n_quant_layers, "{tag}");
+                assert!(g.total_params() > 0, "{tag}");
+            }
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute
+//! them from the coordinator's hot path.
+//!
+//! `python/compile/aot.py` runs **once** at build time; afterwards the
+//! Rust binary is self-contained: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, following
+//! /opt/xla-example/load_hlo (HLO *text* is the interchange format — see
+//! aot.py's docstring for why not serialized protos).
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use manifest::{GraphInfo, Manifest};
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT CPU client; create once per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`?"))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            artifacts_dir: dir,
+            manifest,
+        })
+    }
+
+    /// Load + compile one graph (train + eval executables + init weights).
+    pub fn load(&self, tag: &str) -> Result<LoadedGraph> {
+        let info = self
+            .manifest
+            .graphs
+            .get(tag)
+            .ok_or_else(|| anyhow!("graph '{tag}' not in manifest"))?
+            .clone();
+
+        let train_exe = self.compile_hlo(&info.train_hlo)?;
+        let eval_exe = self.compile_hlo(&info.eval_hlo)?;
+        let init_weights = self.read_weights(&info)?;
+        Ok(LoadedGraph {
+            info,
+            train_exe,
+            eval_exe,
+            init_weights,
+        })
+    }
+
+    fn compile_hlo(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    fn read_weights(&self, info: &GraphInfo) -> Result<Vec<Vec<f32>>> {
+        let path = self.artifacts_dir.join(&info.weights);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let total: usize = info.params.iter().map(|p| p.numel()).sum();
+        if bytes.len() != total * 4 {
+            return Err(anyhow!(
+                "{path:?}: {} bytes, expected {} ({} f32 params)",
+                bytes.len(),
+                total * 4,
+                total
+            ));
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(info.params.len());
+        let mut off = 0;
+        for p in &info.params {
+            let n = p.numel();
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+/// A compiled (train, eval) pair plus its metadata and initial weights.
+pub struct LoadedGraph {
+    pub info: GraphInfo,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    pub init_weights: Vec<Vec<f32>>,
+}
+
+/// Output of one DP-SGD train step (before noise/update, which are the
+/// coordinator's job).
+pub struct TrainOutput {
+    /// Σ over the batch of clipped per-sample grads, one per parameter.
+    pub grad_sums: Vec<Vec<f32>>,
+    pub loss_sum: f32,
+    pub correct_sum: f32,
+    /// Σ over the batch of pre-clip per-sample gradient L2 norms
+    /// (Fig. 1c / Table 2 tap).
+    pub raw_norm_sum: f32,
+    /// Max over the batch of pre-clip per-sample gradient L2 norms.
+    pub raw_norm_max: f32,
+}
+
+/// Output of one eval call.
+pub struct EvalOutput {
+    pub loss_sum: f32,
+    pub correct_sum: f32,
+}
+
+impl LoadedGraph {
+    /// Physical batch size baked into the executables.
+    pub fn batch(&self) -> usize {
+        self.info.batch
+    }
+
+    /// Number of parameter tensors.
+    pub fn n_params(&self) -> usize {
+        self.info.params.len()
+    }
+
+    fn example_literal(&self, x: &[f32], b: usize) -> Result<xla::Literal> {
+        let ex: usize = self.info.example_shape.iter().product();
+        assert_eq!(x.len(), b * ex, "batch data size");
+        let mut dims: Vec<i64> = vec![b as i64];
+        dims.extend(self.info.example_shape.iter().map(|&d| d as i64));
+        if self.info.example_dtype == "int32" {
+            // Token inputs arrive as f32 storage from the dataset layer;
+            // convert.
+            let ints: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+            Ok(xla::Literal::vec1(&ints).reshape(&dims)?)
+        } else {
+            Ok(xla::Literal::vec1(x).reshape(&dims)?)
+        }
+    }
+
+    fn param_literals(&self, weights: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        assert_eq!(weights.len(), self.info.params.len(), "param count");
+        weights
+            .iter()
+            .zip(&self.info.params)
+            .map(|(w, p)| {
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                assert_eq!(w.len(), p.numel(), "param {} size", p.name);
+                Ok(xla::Literal::vec1(w).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Run one DP-SGD step. `x` is row-major batch data (padded to the
+    /// physical batch), `y` labels, `mask` 1.0 for real examples.
+    pub fn train_step(
+        &self,
+        weights: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        quant_mask: &[f32],
+        seed: f32,
+    ) -> Result<TrainOutput> {
+        let b = self.batch();
+        assert_eq!(y.len(), b);
+        assert_eq!(mask.len(), b);
+        assert_eq!(quant_mask.len(), self.info.n_quant_layers, "quant mask len");
+
+        let mut args = self.param_literals(weights)?;
+        args.push(self.example_literal(x, b)?);
+        args.push(xla::Literal::vec1(y).reshape(&[b as i64])?);
+        args.push(xla::Literal::vec1(mask).reshape(&[b as i64])?);
+        args.push(
+            xla::Literal::vec1(quant_mask).reshape(&[self.info.n_quant_layers as i64])?,
+        );
+        args.push(xla::Literal::from(seed));
+
+        let result = self.train_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let n = self.n_params();
+        if outs.len() != n + 4 {
+            return Err(anyhow!("train outputs: got {}, want {}", outs.len(), n + 4));
+        }
+        let mut grad_sums = Vec::with_capacity(n);
+        for lit in outs.iter().take(n) {
+            grad_sums.push(lit.to_vec::<f32>()?);
+        }
+        let loss_sum = outs[n].to_vec::<f32>()?[0];
+        let correct_sum = outs[n + 1].to_vec::<f32>()?[0];
+        let raw_norm_sum = outs[n + 2].to_vec::<f32>()?[0];
+        let raw_norm_max = outs[n + 3].to_vec::<f32>()?[0];
+        Ok(TrainOutput {
+            grad_sums,
+            loss_sum,
+            correct_sum,
+            raw_norm_sum,
+            raw_norm_max,
+        })
+    }
+
+    /// Full-precision evaluation of a (masked) batch. The compiled graph
+    /// also takes a quant_mask + seed (kept as runtime inputs so XLA's
+    /// constant folder cannot recurse into the pallas loops); standard
+    /// evaluation passes all-zeros.
+    pub fn eval_step(
+        &self,
+        weights: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOutput> {
+        let b = self.batch();
+        let mut args = self.param_literals(weights)?;
+        args.push(self.example_literal(x, b)?);
+        args.push(xla::Literal::vec1(y).reshape(&[b as i64])?);
+        args.push(xla::Literal::vec1(mask).reshape(&[b as i64])?);
+        let zeros = vec![0f32; self.info.n_quant_layers];
+        args.push(xla::Literal::vec1(&zeros).reshape(&[self.info.n_quant_layers as i64])?);
+        args.push(xla::Literal::from(0f32));
+
+        let result = self.eval_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(anyhow!("eval outputs: got {}, want 2", outs.len()));
+        }
+        Ok(EvalOutput {
+            loss_sum: outs[0].to_vec::<f32>()?[0],
+            correct_sum: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+}

@@ -1,0 +1,144 @@
+//! Gaussian sampling for the DP mechanism.
+//!
+//! Per §A.17 of the paper, noise is sampled and added in full fp32/fp64
+//! precision *before* any quantized computation touches the gradients, so
+//! the vulnerability profile matches standard DP-SGD. This module is the
+//! single source of Gaussian noise in the coordinator.
+
+use super::rng::Xoshiro256;
+
+/// Marsaglia polar-method Gaussian sampler with one cached deviate.
+///
+/// Polar Box-Muller avoids trig calls and is numerically well behaved;
+/// the cached second deviate halves the cost on the optimizer hot path
+/// where we draw one sample per parameter.
+#[derive(Clone, Debug)]
+pub struct GaussianSampler {
+    rng: Xoshiro256,
+    cached: Option<f64>,
+}
+
+impl GaussianSampler {
+    /// New sampler owning its RNG stream.
+    pub fn new(rng: Xoshiro256) -> Self {
+        Self { rng, cached: None }
+    }
+
+    /// Convenience: seed directly.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(Xoshiro256::seed_from_u64(seed))
+    }
+
+    /// Standard normal deviate.
+    #[inline]
+    pub fn standard(&mut self) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            let v = 2.0 * self.rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.cached = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal deviate with given mean and standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.standard()
+    }
+
+    /// Fill a slice with `N(0, std²)` noise in fp32 (the precision the
+    /// gradients live in), computed from fp64 deviates.
+    pub fn fill_noise_f32(&mut self, out: &mut [f32], std: f64) {
+        for o in out.iter_mut() {
+            *o = (std * self.standard()) as f32;
+        }
+    }
+
+    /// Add `N(0, std²)` noise to a parameter slice in place (fp32).
+    pub fn add_noise_f32(&mut self, xs: &mut [f32], std: f64) {
+        for x in xs.iter_mut() {
+            *x += (std * self.standard()) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(n: usize, seed: u64) -> (f64, f64, f64, f64) {
+        let mut g = GaussianSampler::seed_from_u64(seed);
+        let (mut m1, mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = g.standard();
+            m1 += z;
+            m2 += z * z;
+            m3 += z * z * z;
+            m4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        (m1 / nf, m2 / nf, m3 / nf, m4 / nf)
+    }
+
+    #[test]
+    fn standard_normal_moments() {
+        let (m1, m2, m3, m4) = moments(400_000, 17);
+        assert!(m1.abs() < 0.01, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var={m2}");
+        assert!(m3.abs() < 0.05, "skew={m3}");
+        assert!((m4 - 3.0).abs() < 0.1, "kurtosis={m4}");
+    }
+
+    #[test]
+    fn scaled_normal() {
+        let mut g = GaussianSampler::seed_from_u64(5);
+        let n = 200_000;
+        let (mut s, mut ss) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = g.normal(3.0, 2.0);
+            s += z;
+            ss += z * z;
+        }
+        let mean = s / n as f64;
+        let var = ss / n as f64 - mean * mean;
+        assert!((mean - 3.0).abs() < 0.02);
+        assert!((var - 4.0).abs() < 0.08);
+    }
+
+    #[test]
+    fn fill_noise_matches_std() {
+        let mut g = GaussianSampler::seed_from_u64(23);
+        let mut buf = vec![0f32; 100_000];
+        g.fill_noise_f32(&mut buf, 0.5);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = GaussianSampler::seed_from_u64(1);
+        let mut b = GaussianSampler::seed_from_u64(1);
+        for _ in 0..100 {
+            assert_eq!(a.standard(), b.standard());
+        }
+    }
+
+    #[test]
+    fn tail_probability_sane() {
+        // P(|Z| > 2) ≈ 0.0455
+        let mut g = GaussianSampler::seed_from_u64(99);
+        let n = 200_000;
+        let tail = (0..n).filter(|_| g.standard().abs() > 2.0).count() as f64 / n as f64;
+        assert!((tail - 0.0455).abs() < 0.004, "tail={tail}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared low-level utilities: PRNG, Gaussian sampling, special
+//! functions, and a minimal JSON codec (offline crate set has no rand /
+//! statrs / serde).
+
+pub mod gaussian;
+pub mod json;
+pub mod rng;
+pub mod special;

@@ -1,0 +1,181 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These require `make artifacts` (they are skipped, loudly, when the
+//! artifact directory is missing — CI without Python can still run the
+//! pure-Rust suite).
+
+use dpquant::config::{OptimizerKind, TrainConfig};
+use dpquant::coordinator::{train, StepExecutor, TrainerOptions};
+use dpquant::data;
+use dpquant::privacy::Mechanism;
+use dpquant::runtime::Runtime;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_and_all_graphs_listed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.manifest.graphs.len() >= 8);
+    for (tag, g) in &rt.manifest.graphs {
+        assert_eq!(g.quant_layer_names.len(), g.n_quant_layers, "{tag}");
+        assert!(g.batch > 0 && g.total_params() > 0, "{tag}");
+    }
+}
+
+#[test]
+fn train_step_executes_and_respects_mask_semantics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let g = rt.load("miniconvnet_gtsrb_luq4").unwrap();
+    let b = g.batch();
+    let ds = data::generate("gtsrb", b, 1).unwrap();
+    let batch = &data::eval_batches(&ds, b)[0];
+
+    // Full-precision step.
+    let fp_mask = vec![0f32; g.info.n_quant_layers];
+    let out = g
+        .train_step(&g.init_weights, &batch.x, &batch.y, &batch.mask, &fp_mask, 1.0)
+        .unwrap();
+    assert_eq!(out.grad_sums.len(), g.info.params.len());
+    assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
+    assert!(out.raw_norm_max >= 0.0);
+
+    // Clip bound: ‖Σ clipped‖ ≤ B·C.
+    let total: f64 = out
+        .grad_sums
+        .iter()
+        .flat_map(|gs| gs.iter())
+        .map(|&x| x as f64 * x as f64)
+        .sum();
+    assert!(total.sqrt() <= b as f64 * g.info.clip_norm + 1e-3);
+
+    // Quantized step differs from fp but still bounded.
+    let q_mask = vec![1f32; g.info.n_quant_layers];
+    let qout = g
+        .train_step(&g.init_weights, &batch.x, &batch.y, &batch.mask, &q_mask, 1.0)
+        .unwrap();
+    let diff: f64 = out
+        .grad_sums
+        .iter()
+        .zip(&qout.grad_sums)
+        .flat_map(|(a, c)| a.iter().zip(c.iter()))
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .sum();
+    assert!(diff > 0.0, "quantization must perturb gradients");
+
+    // Determinism: same inputs + seed → identical outputs.
+    let out2 = g
+        .train_step(&g.init_weights, &batch.x, &batch.y, &batch.mask, &fp_mask, 1.0)
+        .unwrap();
+    assert_eq!(out.grad_sums, out2.grad_sums);
+    assert_eq!(out.loss_sum, out2.loss_sum);
+}
+
+#[test]
+fn eval_matches_manual_count_bounds() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let g = rt.load("miniconvnet_cifar_luq4").unwrap();
+    let b = g.batch();
+    let ds = data::generate("cifar", b, 2).unwrap();
+    let batch = &data::eval_batches(&ds, b)[0];
+    let out = g
+        .eval_step(&g.init_weights, &batch.x, &batch.y, &batch.mask)
+        .unwrap();
+    assert!(out.correct_sum >= 0.0 && out.correct_sum <= b as f32);
+    assert!(out.loss_sum > 0.0);
+
+    // Half-masked batch counts at most the full batch.
+    let mut half = batch.mask.clone();
+    for m in half.iter_mut().skip(b / 2) {
+        *m = 0.0;
+    }
+    let out_half = g
+        .eval_step(&g.init_weights, &batch.x, &batch.y, &half)
+        .unwrap();
+    assert!(out_half.correct_sum <= out.correct_sum + 1e-3);
+    assert!(out_half.loss_sum <= out.loss_sum + 1e-3);
+}
+
+#[test]
+fn short_training_reduces_loss_and_accounts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let g = rt.load("miniconvnet_gtsrb_luq4").unwrap();
+    let cfg = TrainConfig {
+        epochs: 3,
+        dataset_size: 512,
+        val_size: 128,
+        batch_size: 64,
+        noise_multiplier: 0.6,
+        lr: 0.5,
+        scheduler: "dpquant".into(),
+        quant_fraction: 0.5,
+        ..TrainConfig::default()
+    };
+    let full = data::generate("gtsrb", cfg.dataset_size + cfg.val_size, 5).unwrap();
+    let (tr, va) = full.split(cfg.val_size);
+    let res = train(&g, &cfg, &tr, &va, &TrainerOptions::default()).unwrap();
+    assert_eq!(res.record.epochs.len(), 3);
+    let first = res.record.epochs.first().unwrap().train_loss;
+    let last = res.record.epochs.last().unwrap().train_loss;
+    assert!(last < first, "loss should fall: {first} -> {last}");
+    assert!(res.record.final_epsilon > 0.0);
+    assert_eq!(res.accountant.steps_of(Mechanism::Analysis), 2); // epochs 0, 2
+    // Every epoch quantized exactly k = 4 of 8 layers.
+    for e in &res.record.epochs {
+        assert_eq!(e.quantized_layers.len(), 4);
+    }
+}
+
+#[test]
+fn transformer_dp_adamw_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let g = rt.load("tinytransformer_snli_luq4").unwrap();
+    assert_eq!(g.info.example_dtype, "int32");
+    let cfg = TrainConfig {
+        model: "tinytransformer".into(),
+        dataset: "snli".into(),
+        optimizer: OptimizerKind::AdamW,
+        lr: 0.01,
+        epochs: 2,
+        dataset_size: 512,
+        val_size: 128,
+        batch_size: 64,
+        scheduler: "pls".into(),
+        quant_fraction: 0.5,
+        ..TrainConfig::default()
+    };
+    let full = data::generate("snli", cfg.dataset_size + cfg.val_size, 6).unwrap();
+    let (tr, va) = full.split(cfg.val_size);
+    let res = train(&g, &cfg, &tr, &va, &TrainerOptions::default()).unwrap();
+    assert!(res.record.final_accuracy > 0.15); // 3-way task, should be ≥ near-chance
+    assert!(res.record.final_epsilon > 0.0);
+}
+
+#[test]
+fn quantizer_variants_load_and_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    for tag in ["miniresnet_cifar_fp8", "miniresnet_cifar_uniform4"] {
+        let g = rt.load(tag).unwrap();
+        let b = g.batch();
+        let ds = data::generate("cifar", b, 3).unwrap();
+        let batch = &data::eval_batches(&ds, b)[0];
+        let mask = vec![1f32; g.info.n_quant_layers];
+        let out = g
+            .train_step(&g.init_weights, &batch.x, &batch.y, &batch.mask, &mask, 0.0)
+            .unwrap();
+        assert!(out.loss_sum.is_finite(), "{tag}");
+    }
+}
