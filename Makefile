@@ -1,0 +1,58 @@
+# DPQuant build entry points. `make verify` mirrors the tier-1 gate
+# exactly; everything else is convenience around it.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all verify build test fmt fmt-check clippy bench bench-smoke artifacts clean
+
+all: verify
+
+## Tier-1 verification, exactly as CI and the roadmap run it.
+verify:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+build:
+	$(CARGO) build --release --all-targets
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all
+
+fmt-check:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+## Full bench suite (uses artifacts when present, skips PJRT benches
+## loudly otherwise).
+bench:
+	$(CARGO) bench
+
+## CI smoke: quantizer benches only, tiny iteration budget.
+bench-smoke:
+	DPQUANT_BENCH_QUICK=1 $(CARGO) bench -- quantizers
+
+## AOT-export the JAX/Pallas train+eval graphs into rust/artifacts/
+## (the directory rust/tests/integration.rs and the PJRT benches read).
+## Skips with an explanation when the Python toolchain is unavailable —
+## the pure-Rust suite runs fine without artifacts, and executing the
+## compiled graphs additionally needs a real `xla` backend in place of
+## the bundled stub (see rust/src/xla.rs).
+artifacts:
+	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
+		cd python && $(PYTHON) -m compile.aot --out ../rust/artifacts; \
+	else \
+		echo "SKIP: $(PYTHON) with jax is not available; rust/artifacts/ not built."; \
+		echo "  - cargo test / cargo bench run without artifacts (PJRT paths skip loudly)."; \
+		echo "  - To build artifacts: install jax, then re-run 'make artifacts'."; \
+		echo "  - To execute them:   vendor a real 'xla' crate (see rust/src/xla.rs)."; \
+	fi
+
+clean:
+	$(CARGO) clean
+	rm -rf results

@@ -15,6 +15,7 @@ use dpquant::config::TrainConfig;
 use dpquant::coordinator::{train, MockExecutor, TrainerOptions};
 use dpquant::data::Dataset;
 use dpquant::quant::{by_name, empirical_variance};
+use dpquant::util::error::Result;
 use dpquant::util::gaussian::GaussianSampler;
 use dpquant::util::rng::Xoshiro256;
 
@@ -37,7 +38,7 @@ fn toy_dataset(n: usize, feats: usize, classes: usize, seed: u64) -> Dataset {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     println!("== 1. Proposition 1: quantization variance scales with ‖x‖∞² ==");
     let q = by_name("luq4").unwrap();
     let mut g = GaussianSampler::seed_from_u64(1);

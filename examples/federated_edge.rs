@@ -11,8 +11,9 @@ use dpquant::coordinator::{train, TrainerOptions};
 use dpquant::data;
 use dpquant::perfmodel::SpeedupModel;
 use dpquant::runtime::Runtime;
+use dpquant::util::error::{Error, Result};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg_base = TrainConfig {
         model: "miniconvnet".into(),
         dataset: "emnist".into(),
@@ -30,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::open("artifacts")?;
     let graph = rt.load("miniconvnet_emnist_luq4")?;
     let full = data::generate("emnist", cfg_base.dataset_size + cfg_base.val_size, 3)
-        .map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
     let (train_ds, val_ds) = full.split(cfg_base.val_size);
 
     println!("== Federated edge: 90% of layers must run in FP4 ==");

@@ -14,8 +14,9 @@ use dpquant::config::TrainConfig;
 use dpquant::coordinator::{train, TrainerOptions};
 use dpquant::data;
 use dpquant::runtime::Runtime;
+use dpquant::util::error::{Error, Result};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = TrainConfig {
         model: "miniconvnet".into(),
         dataset: "gtsrb".into(),
@@ -43,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let graph = rt.load(&cfg.graph_tag())?;
 
     let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
-        .map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
     let (train_ds, val_ds) = full.split(cfg.val_size);
 
     let opts = TrainerOptions {

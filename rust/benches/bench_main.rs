@@ -2,7 +2,7 @@
 //! this is a hand-rolled timing harness with criterion-like output).
 //!
 //! Benches, one per perf-relevant layer of the stack:
-//!   quantizers        — Rust mirrors of LUQ4/uniform4/FP8 (ns/elem)
+//!   quantizers/*      — Rust mirrors of LUQ4/uniform4/FP8 (ns/elem)
 //!   gaussian          — DP noise generation (the mechanism hot path)
 //!   accountant        — RDP curve + ε conversion (per-step budget check)
 //!   sampler           — Algorithm 2 layer selection
@@ -12,7 +12,9 @@
 //!                       skipped with a notice if absent)
 //!   pjrt-epoch        — one full epoch end-to-end (needs artifacts)
 //!
-//! Filter: `cargo bench -- <substring>`.
+//! Filter: `cargo bench -- <substring>` (e.g. `cargo bench -- quantizers`).
+//! CI smoke: set `DPQUANT_BENCH_QUICK=1` to cap every bench at 2
+//! iterations — checks the harness end-to-end without burning minutes.
 
 use dpquant::config::TrainConfig;
 use dpquant::coordinator::{train, MockExecutor, StepExecutor, TrainerOptions};
@@ -25,6 +27,8 @@ use std::time::Instant;
 
 struct Bench {
     filter: Option<String>,
+    /// Tiny iteration budget (DPQUANT_BENCH_QUICK): smoke-test mode.
+    quick: bool,
 }
 
 impl Bench {
@@ -34,6 +38,7 @@ impl Bench {
                 return;
             }
         }
+        let iters = if self.quick { iters.min(2) } else { iters };
         // Warmup.
         f();
         let t0 = Instant::now();
@@ -76,7 +81,8 @@ fn main() {
     let filter = std::env::args()
         .skip(1)
         .find(|a| !a.starts_with('-') && a != "bench");
-    let b = Bench { filter };
+    let quick = std::env::var_os("DPQUANT_BENCH_QUICK").is_some();
+    let b = Bench { filter, quick };
     println!("dpquant bench harness (criterion-style, offline)\n");
 
     // --- L1 mirrors: quantizer throughput -------------------------------
@@ -86,7 +92,7 @@ fn main() {
     for name in ["luq4", "uniform4", "fp8"] {
         let q = by_name(name).unwrap();
         let mut buf = base.clone();
-        b.run(&format!("quantizer/{name}/64k-elems"), 50, || {
+        b.run(&format!("quantizers/{name}/64k-elems"), 50, || {
             buf.copy_from_slice(&base);
             q.quantize(&mut buf, &mut rng);
         });

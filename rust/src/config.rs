@@ -70,13 +70,13 @@ impl ConfigFile {
             if let Some(rest) = line.strip_prefix('[') {
                 let name = rest
                     .strip_suffix(']')
-                    .ok_or(format!("line {}: unterminated section", lineno + 1))?;
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
                 section = name.trim().to_string();
                 continue;
             }
             let eq = line
                 .find('=')
-                .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
             let key = line[..eq].trim().to_string();
             let val = parse_value(line[eq + 1..].trim())
                 .map_err(|e| format!("line {}: {e}", lineno + 1))?;
@@ -366,7 +366,7 @@ alphas = [1.5, 2.0, 3.0]
         assert_eq!(cf.str_or("train", "model", "x"), "miniresnet");
         assert_eq!(cf.i64_or("train", "epochs", 0), 30);
         assert_eq!(cf.f64_or("train", "beta", 0.0), 10.57);
-        assert_eq!(cf.bool_or("train", "ema_enabled", false), true);
+        assert!(cf.bool_or("train", "ema_enabled", false));
         let arr = cf.get("train", "alphas").unwrap().as_array().unwrap();
         assert_eq!(arr.len(), 3);
         assert_eq!(arr[1].as_f64(), Some(2.0));

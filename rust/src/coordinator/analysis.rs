@@ -17,8 +17,8 @@ use super::policy::Policy;
 use crate::config::TrainConfig;
 use crate::data::Batch;
 use crate::privacy::RdpAccountant;
+use crate::util::error::Result;
 use crate::util::gaussian::GaussianSampler;
-use anyhow::Result;
 
 /// Outcome of one analysis invocation.
 pub struct AnalysisReport {

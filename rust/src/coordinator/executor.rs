@@ -3,7 +3,7 @@
 //! well as the real PJRT-backed graphs.
 
 use crate::runtime::{EvalOutput, LoadedGraph, TrainOutput};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Everything the coordinator needs from a (train, eval) executable pair.
 pub trait StepExecutor {

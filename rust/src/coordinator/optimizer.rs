@@ -243,6 +243,11 @@ mod tests {
         let mut g = vec![vec![per; n]];
         let stats = opt.update(&mut w, &mut g);
         assert!((stats.grad_l2 - 1.0).abs() < 1e-3);
-        assert!(stats.noise_linf > 10.0 * stats.grad_linf, "noise_linf={} grad_linf={}", stats.noise_linf, stats.grad_linf);
+        assert!(
+            stats.noise_linf > 10.0 * stats.grad_linf,
+            "noise_linf={} grad_linf={}",
+            stats.noise_linf,
+            stats.grad_linf
+        );
     }
 }

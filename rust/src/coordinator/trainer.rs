@@ -13,9 +13,9 @@ use crate::config::TrainConfig;
 use crate::data::{eval_batches, make_batches, poisson_sample, Dataset};
 use crate::metrics::{EpochRecord, RunRecord};
 use crate::privacy::{Mechanism, RdpAccountant};
+use crate::util::error::{err, Result};
 use crate::util::gaussian::GaussianSampler;
 use crate::util::rng::Xoshiro256;
-use anyhow::{anyhow, Result};
 
 /// Scheduling strategy (paper §6.3 ablation + baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,7 +47,7 @@ impl Scheduler {
             "static_last" => Self::StaticLast,
             "none" | "fp" => Self::None,
             "all" => Self::All,
-            other => return Err(anyhow!("unknown scheduler '{other}'")),
+            other => return Err(err!("unknown scheduler '{other}'")),
         })
     }
 }
@@ -81,7 +81,11 @@ pub struct TrainResult {
 }
 
 /// Evaluate `weights` over a full dataset; returns (mean loss, accuracy).
-pub fn evaluate<E: StepExecutor>(exec: &E, weights: &[Vec<f32>], ds: &Dataset) -> Result<(f64, f64)> {
+pub fn evaluate<E: StepExecutor>(
+    exec: &E,
+    weights: &[Vec<f32>],
+    ds: &Dataset,
+) -> Result<(f64, f64)> {
     let mut loss = 0f64;
     let mut correct = 0f64;
     for b in eval_batches(ds, exec.physical_batch()) {

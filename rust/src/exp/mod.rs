@@ -20,7 +20,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::{train, StepExecutor, TrainResult, TrainerOptions};
 use crate::data::{self, Dataset};
 use crate::runtime::{LoadedGraph, Runtime};
-use anyhow::{anyhow, Result};
+use crate::util::error::{err, Error, Result};
 
 pub fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
@@ -54,8 +54,8 @@ pub fn run(args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        Some(other) => Err(anyhow!("unknown experiment '{other}'")),
-        None => Err(anyhow!(
+        Some(other) => Err(err!("unknown experiment '{other}'")),
+        None => Err(err!(
             "usage: dpquant exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6|tab1|tab2|tab4|tab6|tab8|tab9|tab10|tab11|tab12|tab14|all>"
         )),
     }
@@ -75,8 +75,8 @@ pub struct ExpCtx {
 impl ExpCtx {
     /// Open the default (or flag-selected) substrate with scaled sizes.
     pub fn open(args: &Args, model: &str, dataset: &str, quantizer: &str) -> Result<Self> {
-        let scale = args.f64_or("scale", 1.0).map_err(|e| anyhow!(e))?;
-        let seeds = args.u64_or("seeds", 3).map_err(|e| anyhow!(e))?;
+        let scale = args.f64_or("scale", 1.0).map_err(Error::msg)?;
+        let seeds = args.u64_or("seeds", 3).map_err(Error::msg)?;
         let model = args.str_or("model", model);
         let dataset = args.str_or("dataset", dataset);
         let quantizer = args.str_or("quantizer", quantizer);
@@ -93,20 +93,20 @@ impl ExpCtx {
             lr: 0.5,
             ..TrainConfig::default()
         };
-        base.epochs = args.usize_or("epochs", base.epochs).map_err(|e| anyhow!(e))?;
+        base.epochs = args.usize_or("epochs", base.epochs).map_err(Error::msg)?;
         base.dataset_size = args
             .usize_or("dataset-size", base.dataset_size)
-            .map_err(|e| anyhow!(e))?;
+            .map_err(Error::msg)?;
         base.noise_multiplier = args
             .f64_or("noise-multiplier", base.noise_multiplier)
-            .map_err(|e| anyhow!(e))?;
-        base.lr = args.f64_or("lr", base.lr).map_err(|e| anyhow!(e))?;
+            .map_err(Error::msg)?;
+        base.lr = args.f64_or("lr", base.lr).map_err(Error::msg)?;
 
         let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
         let tag = format!("{}_{}_{}", model, dataset, quantizer);
         let graph = rt.load(&tag)?;
         let full = data::generate(&dataset, base.dataset_size + base.val_size, 12345)
-            .map_err(|e| anyhow!(e))?;
+            .map_err(Error::msg)?;
         let (train_ds, val_ds) = full.split(base.val_size);
         Ok(Self {
             graph,

@@ -4,8 +4,8 @@ use super::{save_json, ExpCtx};
 use crate::cli::Args;
 use crate::config::OptimizerKind;
 use crate::metrics::{mean_std, Table};
+use crate::util::error::Result;
 use crate::util::json::{self, Json};
-use anyhow::Result;
 
 /// Shared engine for the Table-1 family: baseline (static random, N
 /// seeds) vs DPQuant at each (ε, fraction) cell.
@@ -229,6 +229,8 @@ pub fn tab11(args: &Args) -> Result<()> {
 /// Table 12 (A.9.2): uniform INT4 stochastic rounding.
 pub fn tab12(args: &Args) -> Result<()> {
     let ctx = ExpCtx::open(args, "miniresnet", "cifar", "uniform4")?;
-    println!("Table 12 — uniform 4-bit (expect: degradation like LUQ-FP4; ours ≥ baseline at high frac)");
+    println!(
+        "Table 12 — uniform 4-bit (expect: degradation like LUQ-FP4; ours ≥ baseline at high frac)"
+    );
     budget_table(&ctx, "tab12", &[4.5], &[0.5, 0.75, 0.9], |_| {})
 }

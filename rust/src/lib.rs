@@ -27,3 +27,4 @@ pub mod privacy;
 pub mod quant;
 pub mod runtime;
 pub mod util;
+pub mod xla;

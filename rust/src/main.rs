@@ -17,7 +17,6 @@
 //!   dpquant exp fig3
 //!   dpquant exp tab1 --scale 0.25
 
-use anyhow::{anyhow, Result};
 use dpquant::cli::Args;
 use dpquant::config::{ConfigFile, OptimizerKind, TrainConfig};
 use dpquant::coordinator::{train, TrainerOptions};
@@ -25,6 +24,7 @@ use dpquant::data;
 use dpquant::exp;
 use dpquant::privacy::{default_alphas, rdp_sgm_step, rdp_to_epsilon, RdpAccountant};
 use dpquant::runtime::Runtime;
+use dpquant::util::error::{err, Error, Result};
 
 fn main() {
     let args = match Args::from_env() {
@@ -48,7 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("accountant") => cmd_accountant(args),
         Some("exp") => exp::run(args),
         Some("bench-step") => cmd_bench_step(args),
-        Some(other) => Err(anyhow!("unknown command '{other}' (see README)")),
+        Some(other) => Err(err!("unknown command '{other}' (see README)")),
         None => {
             println!("usage: dpquant <train|eval-only|list|accountant|exp|bench-step> [flags]");
             Ok(())
@@ -60,8 +60,8 @@ fn dispatch(args: &Args) -> Result<()> {
 fn config_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => {
-            let cf = ConfigFile::load(path).map_err(|e| anyhow!(e))?;
-            TrainConfig::from_file(&cf).map_err(|e| anyhow!(e))?
+            let cf = ConfigFile::load(path).map_err(Error::msg)?;
+            TrainConfig::from_file(&cf).map_err(Error::msg)?
         }
         None => TrainConfig::default(),
     };
@@ -78,36 +78,34 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
         cfg.scheduler = v.to_string();
     }
     if let Some(v) = args.get("optimizer") {
-        cfg.optimizer = OptimizerKind::parse(v).map_err(|e| anyhow!(e))?;
+        cfg.optimizer = OptimizerKind::parse(v).map_err(Error::msg)?;
     }
-    cfg.epochs = args.usize_or("epochs", cfg.epochs).map_err(|e| anyhow!(e))?;
-    cfg.batch_size = args
-        .usize_or("batch-size", cfg.batch_size)
-        .map_err(|e| anyhow!(e))?;
+    cfg.epochs = args.usize_or("epochs", cfg.epochs).map_err(Error::msg)?;
+    cfg.batch_size = args.usize_or("batch-size", cfg.batch_size).map_err(Error::msg)?;
     cfg.noise_multiplier = args
         .f64_or("noise-multiplier", cfg.noise_multiplier)
-        .map_err(|e| anyhow!(e))?;
-    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm).map_err(|e| anyhow!(e))?;
-    cfg.lr = args.f64_or("lr", cfg.lr).map_err(|e| anyhow!(e))?;
+        .map_err(Error::msg)?;
+    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm).map_err(Error::msg)?;
+    cfg.lr = args.f64_or("lr", cfg.lr).map_err(Error::msg)?;
     cfg.quant_fraction = args
         .f64_or("quant-fraction", cfg.quant_fraction)
-        .map_err(|e| anyhow!(e))?;
-    cfg.beta = args.f64_or("beta", cfg.beta).map_err(|e| anyhow!(e))?;
+        .map_err(Error::msg)?;
+    cfg.beta = args.f64_or("beta", cfg.beta).map_err(Error::msg)?;
     cfg.analysis_interval = args
         .usize_or("analysis-interval", cfg.analysis_interval)
-        .map_err(|e| anyhow!(e))?;
+        .map_err(Error::msg)?;
     cfg.sigma_measure = args
         .f64_or("sigma-measure", cfg.sigma_measure)
-        .map_err(|e| anyhow!(e))?;
+        .map_err(Error::msg)?;
     cfg.analysis_samples = args
         .usize_or("analysis-samples", cfg.analysis_samples)
-        .map_err(|e| anyhow!(e))?;
+        .map_err(Error::msg)?;
     cfg.dataset_size = args
         .usize_or("dataset-size", cfg.dataset_size)
-        .map_err(|e| anyhow!(e))?;
-    cfg.val_size = args.usize_or("val-size", cfg.val_size).map_err(|e| anyhow!(e))?;
-    cfg.seed = args.u64_or("seed", cfg.seed).map_err(|e| anyhow!(e))?;
-    if let Some(eps) = args.f64_opt("target-epsilon").map_err(|e| anyhow!(e))? {
+        .map_err(Error::msg)?;
+    cfg.val_size = args.usize_or("val-size", cfg.val_size).map_err(Error::msg)?;
+    cfg.seed = args.u64_or("seed", cfg.seed).map_err(Error::msg)?;
+    if let Some(eps) = args.f64_opt("target-epsilon").map_err(Error::msg)? {
         cfg.target_epsilon = Some(eps);
     }
     if args.has_flag("no-ema") {
@@ -127,7 +125,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let graph = rt.load(&tag)?;
 
     let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
-        .map_err(|e| anyhow!(e))?;
+        .map_err(Error::msg)?;
     let (train_ds, val_ds) = full.split(cfg.val_size);
 
     let opts = TrainerOptions {
@@ -152,7 +150,7 @@ fn cmd_eval_only(args: &Args) -> Result<()> {
     let rt = Runtime::open(artifacts_dir(args))?;
     let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
     let graph = rt.load(&tag)?;
-    let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed).map_err(|e| anyhow!(e))?;
+    let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed).map_err(Error::msg)?;
     let (loss, acc) = dpquant::coordinator::trainer::evaluate(&graph, &graph.init_weights, &ds)?;
     println!("init weights: loss={loss:.4} acc={acc:.4}");
     Ok(())
@@ -195,12 +193,12 @@ fn cmd_accountant(args: &Args) -> Result<()> {
         return Ok(());
     }
     // Compose a schedule: ε for (q, σ, steps) + optional analysis steps.
-    let q = args.f64_or("q", 0.02).map_err(|e| anyhow!(e))?;
-    let sigma = args.f64_or("sigma", 1.0).map_err(|e| anyhow!(e))?;
-    let steps = args.u64_or("steps", 1000).map_err(|e| anyhow!(e))?;
-    let delta = args.f64_or("delta", 1e-5).map_err(|e| anyhow!(e))?;
-    let analysis_steps = args.u64_or("analysis-steps", 0).map_err(|e| anyhow!(e))?;
-    let sigma_measure = args.f64_or("sigma-measure", 0.5).map_err(|e| anyhow!(e))?;
+    let q = args.f64_or("q", 0.02).map_err(Error::msg)?;
+    let sigma = args.f64_or("sigma", 1.0).map_err(Error::msg)?;
+    let steps = args.u64_or("steps", 1000).map_err(Error::msg)?;
+    let delta = args.f64_or("delta", 1e-5).map_err(Error::msg)?;
+    let analysis_steps = args.u64_or("analysis-steps", 0).map_err(Error::msg)?;
+    let sigma_measure = args.f64_or("sigma-measure", 0.5).map_err(Error::msg)?;
 
     let mut acc = RdpAccountant::new();
     acc.step_training(q, sigma, steps);
@@ -232,11 +230,11 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
     let graph = rt.load(&tag)?;
     let b = graph.batch();
-    let ds = data::generate(&cfg.dataset, b, cfg.seed).map_err(|e| anyhow!(e))?;
+    let ds = data::generate(&cfg.dataset, b, cfg.seed).map_err(Error::msg)?;
     let batches = data::eval_batches(&ds, b);
     let batch = &batches[0];
     let mask = vec![1f32; graph.info.n_quant_layers];
-    let reps = args.usize_or("reps", 20).map_err(|e| anyhow!(e))?;
+    let reps = args.usize_or("reps", 20).map_err(Error::msg)?;
 
     // Warmup.
     graph.train_step(&graph.init_weights, &batch.x, &batch.y, &batch.mask, &mask, 0.0)?;

@@ -63,13 +63,13 @@ fn get_str(o: &Json, key: &str) -> Result<String, String> {
     o.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or(format!("missing string '{key}'"))
+        .ok_or_else(|| format!("missing string '{key}'"))
 }
 
 fn get_usize(o: &Json, key: &str) -> Result<usize, String> {
     o.get(key)
         .and_then(Json::as_usize)
-        .ok_or(format!("missing number '{key}'"))
+        .ok_or_else(|| format!("missing number '{key}'"))
 }
 
 impl Manifest {
@@ -94,7 +94,7 @@ impl Manifest {
                             .and_then(Json::as_arr)
                             .ok_or("param missing shape")?
                             .iter()
-                            .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                            .map(|d| d.as_usize().ok_or_else(|| "bad dim".to_string()))
                             .collect::<Result<_, String>>()?,
                     })
                 })
@@ -104,14 +104,18 @@ impl Manifest {
                 .and_then(Json::as_arr)
                 .ok_or("missing quant_layer_names")?
                 .iter()
-                .map(|v| v.as_str().map(str::to_string).ok_or("bad layer name".to_string()))
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| "bad layer name".to_string())
+                })
                 .collect::<Result<Vec<_>, String>>()?;
             let example_shape = g
                 .get("example_shape")
                 .and_then(Json::as_arr)
                 .ok_or("missing example_shape")?
                 .iter()
-                .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                .map(|d| d.as_usize().ok_or_else(|| "bad dim".to_string()))
                 .collect::<Result<Vec<_>, String>>()?;
             graphs.insert(
                 tag.clone(),

@@ -9,7 +9,8 @@
 
 pub mod manifest;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{err, Context, Result};
+use crate::xla;
 use manifest::{GraphInfo, Manifest};
 use std::path::{Path, PathBuf};
 
@@ -27,7 +28,7 @@ impl Runtime {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`?"))?;
-        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let manifest = Manifest::parse(&text).map_err(|e| err!("manifest: {e}"))?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Self {
             client,
@@ -42,7 +43,7 @@ impl Runtime {
             .manifest
             .graphs
             .get(tag)
-            .ok_or_else(|| anyhow!("graph '{tag}' not in manifest"))?
+            .ok_or_else(|| err!("graph '{tag}' not in manifest"))?
             .clone();
 
         let train_exe = self.compile_hlo(&info.train_hlo)?;
@@ -59,7 +60,7 @@ impl Runtime {
     fn compile_hlo(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
         let path = self.artifacts_dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path {path:?}"))?,
+            path.to_str().ok_or_else(|| err!("bad path {path:?}"))?,
         )
         .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -71,7 +72,7 @@ impl Runtime {
         let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
         let total: usize = info.params.iter().map(|p| p.numel()).sum();
         if bytes.len() != total * 4 {
-            return Err(anyhow!(
+            return Err(err!(
                 "{path:?}: {} bytes, expected {} ({} f32 params)",
                 bytes.len(),
                 total * 4,
@@ -189,7 +190,7 @@ impl LoadedGraph {
         let outs = result.to_tuple()?;
         let n = self.n_params();
         if outs.len() != n + 4 {
-            return Err(anyhow!("train outputs: got {}, want {}", outs.len(), n + 4));
+            return Err(err!("train outputs: got {}, want {}", outs.len(), n + 4));
         }
         let mut grad_sums = Vec::with_capacity(n);
         for lit in outs.iter().take(n) {
@@ -231,7 +232,7 @@ impl LoadedGraph {
         let result = self.eval_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
         let outs = result.to_tuple()?;
         if outs.len() != 2 {
-            return Err(anyhow!("eval outputs: got {}, want 2", outs.len()));
+            return Err(err!("eval outputs: got {}, want 2", outs.len()));
         }
         Ok(EvalOutput {
             loss_sum: outs[0].to_vec::<f32>()?[0],

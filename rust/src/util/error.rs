@@ -1,0 +1,317 @@
+//! Homegrown error handling (the offline crate set has no `anyhow`).
+//!
+//! [`Error`] is a chain of human-readable frames: the first frame is the
+//! outermost context, the last is the root cause. Converting any
+//! `std::error::Error` into an [`Error`] (via `?` or `From`) walks its
+//! `source()` chain so no causal information is lost. The [`Context`]
+//! extension trait adds frames to fallible expressions, and the [`err!`],
+//! [`bail!`] and [`ensure!`] macros build or return ad-hoc errors.
+//!
+//! The API deliberately mirrors the `anyhow` subset this crate used to
+//! depend on, so call sites migrate mechanically:
+//!
+//! * `anyhow::Result<T>`            -> `util::error::Result<T>`
+//! * `anyhow!(...)`                 -> `err!(...)`
+//! * `anyhow::Error::msg`           -> `Error::msg`
+//! * `.context(...)/.with_context`  -> unchanged (this `Context` trait)
+//! * `"{e:#}"`                      -> unchanged (full chain, `: `-joined)
+
+use std::fmt;
+
+/// Crate-wide result type, defaulting to the chained [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A chain of error messages, outermost context first.
+///
+/// Deliberately *not* `std::error::Error` itself: that keeps the blanket
+/// `From<E: std::error::Error>` impl coherent (the same trick `anyhow`
+/// uses).
+pub struct Error {
+    /// Never empty. `frames[0]` is the outermost message, the last entry
+    /// the root cause.
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Ad-hoc error from anything printable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self {
+            frames: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Self {
+        self.frames.insert(0, ctx.to_string());
+        self
+    }
+
+    /// Iterate the chain from the outermost message to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` the whole chain joined
+    /// with `": "` (matching `anyhow`'s alternate formatting, which
+    /// `main.rs` relies on).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(&self.frames[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.frames[0])?;
+        if self.frames.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, frame) in self.frames[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any standard error converts by flattening its `source()` chain into
+/// message frames, so `?` keeps working across error types.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Self { frames }
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Extension trait attaching context frames to fallible expressions.
+pub trait Context<T>: private::Sealed {
+    /// Wrap the error (if any) with an outer message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    /// Like [`Context::context`], but the message is built lazily (only
+    /// on the error path).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (plus args) or from any single
+/// printable expression — the drop-in for `anyhow!`.
+#[macro_export]
+macro_rules! err {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`err!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::err!($($tt)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)+) => {
+        if !($cond) {
+            return Err($crate::err!($($tt)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+// Make the macros importable alongside the types:
+// `use crate::util::error::{bail, ensure, err, ...}`.
+pub use crate::{bail, ensure, err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    /// A std error with an explicit `source()` — a two-frame chain.
+    /// (Note `io::Error::other(..)` would NOT work here: io's Custom repr
+    /// delegates `source()` to the payload, hiding the wrapper level.)
+    #[derive(Debug)]
+    struct Wrapped {
+        inner: io::Error,
+    }
+
+    impl fmt::Display for Wrapped {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("wrapped io failure")
+        }
+    }
+
+    impl std::error::Error for Wrapped {
+        fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+            Some(&self.inner)
+        }
+    }
+
+    fn io_chain() -> Wrapped {
+        Wrapped {
+            inner: io::Error::new(io::ErrorKind::NotFound, "manifest.json missing"),
+        }
+    }
+
+    #[test]
+    fn msg_and_display() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(e.root_cause(), "boom");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "middle", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn std_source_chain_preserved() {
+        let e: Error = io_chain().into();
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames.len(), 2, "{frames:?}");
+        assert_eq!(frames[1], "manifest.json missing");
+        assert_eq!(e.root_cause(), "manifest.json missing");
+    }
+
+    #[test]
+    fn context_on_std_result() {
+        let r: Result<(), Wrapped> = Err(io_chain());
+        let e = r.context("opening artifacts").unwrap_err();
+        assert_eq!(format!("{e}"), "opening artifacts");
+        assert_eq!(e.root_cause(), "manifest.json missing");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, Error> = Ok(7);
+        let called = std::cell::Cell::new(false);
+        let v = ok
+            .with_context(|| {
+                called.set(true);
+                "never built"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called.get(), "closure must not run on the Ok path");
+
+        let bad: Result<u32, Error> = Err(Error::msg("root"));
+        let e = bad.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: root");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert_eq!(Some(5).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn err_macro_forms() {
+        assert_eq!(format!("{}", err!("plain")), "plain");
+        assert_eq!(format!("{}", err!("got {} of {}", 2, 3)), "got 2 of 3");
+        let n = 4;
+        assert_eq!(format!("{}", err!("inline {n}")), "inline 4");
+        let s = String::from("owned message");
+        assert_eq!(format!("{}", err!(s)), "owned message");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too large: {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(21).unwrap(), 42);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too large: 101");
+
+        fn g(x: i32) -> Result<()> {
+            ensure!(x == 0);
+            Ok(())
+        }
+        assert_eq!(format!("{}", g(1).unwrap_err()), "condition failed: x == 0");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read_missing() -> Result<String> {
+            let text = std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+                .context("reading config")?;
+            Ok(text)
+        }
+        let e = read_missing().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(e.chain().count() >= 2);
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("0: root"), "{dbg}");
+    }
+}

@@ -51,13 +51,6 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
-    /// Serialize to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -93,6 +86,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`value.to_string()` comes with it for free).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -135,7 +137,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn peek(&self) -> Option<u8> {
         self.bytes.get(self.pos).copied()
     }
@@ -201,7 +203,8 @@ impl<'a> Parser<'a> {
                         for _ in 0..4 {
                             let d = self.bump().ok_or("eof in \\u")? as char;
                             code = code * 16
-                                + d.to_digit(16).ok_or(format!("bad hex at {}", self.pos))?;
+                                + d.to_digit(16)
+                                    .ok_or_else(|| format!("bad hex at {}", self.pos))?;
                         }
                         s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                     }

@@ -1,7 +1,8 @@
-//! Shared low-level utilities: PRNG, Gaussian sampling, special
-//! functions, and a minimal JSON codec (offline crate set has no rand /
-//! statrs / serde).
+//! Shared low-level utilities: error handling, PRNG, Gaussian sampling,
+//! special functions, and a minimal JSON codec (offline crate set has no
+//! anyhow / rand / statrs / serde).
 
+pub mod error;
 pub mod gaussian;
 pub mod json;
 pub mod rng;

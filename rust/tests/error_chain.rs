@@ -1,0 +1,59 @@
+//! Integration tests for the homegrown error subsystem, exercised from
+//! *outside* the crate (validates the `$crate` macro paths and the
+//! `util::error` re-exports the way downstream code — the CLI, benches,
+//! examples — consumes them).
+
+use dpquant::util::error::{bail, ensure, err, Context, Error, Result};
+
+fn parse_port(s: &str) -> Result<u16> {
+    ensure!(!s.is_empty(), "empty port");
+    let n: u64 = s.parse().with_context(|| format!("parsing port '{s}'"))?;
+    if n > u64::from(u16::MAX) {
+        bail!("port {n} out of range");
+    }
+    Ok(n as u16)
+}
+
+#[test]
+fn macros_work_across_the_crate_boundary() {
+    assert_eq!(parse_port("8080").unwrap(), 8080);
+    assert_eq!(format!("{}", parse_port("").unwrap_err()), "empty port");
+    assert_eq!(
+        format!("{}", parse_port("70000").unwrap_err()),
+        "port 70000 out of range"
+    );
+
+    let e = parse_port("abc").unwrap_err();
+    assert_eq!(format!("{e}"), "parsing port 'abc'");
+    // The std ParseIntError survives as the root-cause frame.
+    assert_eq!(e.chain().count(), 2);
+
+    // The bare err! form, via the module re-export.
+    assert_eq!(format!("{}", err!("x = {}", 3)), "x = 3");
+}
+
+#[test]
+fn alternate_display_joins_the_chain() {
+    let e = Error::msg("root").context("mid").context("top");
+    assert_eq!(format!("{e:#}"), "top: mid: root");
+}
+
+#[test]
+fn io_errors_convert_through_question_mark() {
+    fn read() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/dpquant/error_chain")?;
+        Ok(s)
+    }
+    let e = read().unwrap_err();
+    assert!(!format!("{e}").is_empty());
+}
+
+#[test]
+fn runtime_open_reports_missing_artifacts_with_context() {
+    // The exact failure CI sees without `make artifacts`: the error chain
+    // must point at the manifest and at the remedy, not panic.
+    let e = dpquant::runtime::Runtime::open("/nonexistent/artifacts-dir").unwrap_err();
+    let full = format!("{e:#}");
+    assert!(full.contains("manifest.json"), "{full}");
+    assert!(full.contains("make artifacts"), "{full}");
+}
