@@ -33,9 +33,10 @@ clippy:
 bench:
 	$(CARGO) bench
 
-## CI smoke: quantizer benches only, tiny iteration budget.
+## CI smoke: quantizer + native-backend benches, tiny iteration budget.
 bench-smoke:
 	DPQUANT_BENCH_QUICK=1 $(CARGO) bench -- quantizers
+	DPQUANT_BENCH_QUICK=1 $(CARGO) bench -- backend
 
 ## AOT-export the JAX/Pallas train+eval graphs into rust/artifacts/
 ## (the directory rust/tests/integration.rs and the PJRT benches read).

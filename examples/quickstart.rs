@@ -1,19 +1,22 @@
-//! Quickstart: the end-to-end driver proving all three layers compose.
+//! Quickstart: the end-to-end driver — **no artifacts required**.
 //!
-//! Loads the AOT-compiled (JAX + Pallas) DP-SGD train/eval graphs from
-//! `artifacts/`, generates a synthetic GTSRB-like dataset, and trains a
-//! mini CNN with the full DPQuant scheduler (Algorithm 1 loss-impact
-//! analysis + Algorithm 2 probabilistic layer selection) under a fixed
-//! privacy budget, logging the loss curve and ε per epoch.
+//! Builds the native pure-Rust execution backend (real forward/backward
+//! passes, exact per-sample gradient clipping, LUQ-FP4 kernels on the
+//! live compute path), generates a synthetic GTSRB-like dataset, and
+//! trains the mini CNN with the full DPQuant scheduler (Algorithm 1
+//! loss-impact analysis + Algorithm 2 probabilistic layer selection)
+//! under a fixed privacy budget, logging the loss curve and ε per epoch.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! To target the AOT-compiled PJRT graphs instead, run the `dpquant`
+//! CLI with `--backend pjrt` after `make artifacts`. The run is
+//! recorded in EXPERIMENTS.md §End-to-end.
 
+use dpquant::backend::NativeExecutor;
 use dpquant::config::TrainConfig;
 use dpquant::coordinator::{train, TrainerOptions};
 use dpquant::data;
-use dpquant::runtime::Runtime;
 use dpquant::util::error::{Error, Result};
 
 fn main() -> Result<()> {
@@ -34,24 +37,22 @@ fn main() -> Result<()> {
         ..TrainConfig::default()
     };
 
-    println!("== DPQuant quickstart ==");
+    println!("== DPQuant quickstart (native backend, zero artifacts) ==");
     println!(
         "model={} dataset={} quantizer={} scheduler={} quant_fraction={}",
         cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler, cfg.quant_fraction
     );
 
-    let rt = Runtime::open("artifacts")?;
-    let graph = rt.load(&cfg.graph_tag())?;
-
     let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
         .map_err(Error::msg)?;
     let (train_ds, val_ds) = full.split(cfg.val_size);
+    let exec = NativeExecutor::from_config(&cfg, train_ds.example_numel, train_ds.n_classes)?;
 
     let opts = TrainerOptions {
         collect_step_stats: false,
         verbose: true,
     };
-    let res = train(&graph, &cfg, &train_ds, &val_ds, &opts)?;
+    let res = train(&exec, &cfg, &train_ds, &val_ds, &opts)?;
 
     println!("\nloss curve:");
     for e in &res.record.epochs {

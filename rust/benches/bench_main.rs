@@ -8,6 +8,9 @@
 //!   sampler           — Algorithm 2 layer selection
 //!   dataset           — synthetic generator + Poisson batching
 //!   mock-train        — coordinator loop against the mock executor
+//!   backend/*         — the NATIVE pure-Rust engine: real fwd/bwd step
+//!                       latency, fp32 vs quantized per quantizer, plus
+//!                       a full native epoch (no artifacts needed)
 //!   pjrt-train-step   — the REAL compiled DP-SGD step (needs artifacts;
 //!                       skipped with a notice if absent)
 //!   pjrt-epoch        — one full epoch end-to-end (needs artifacts)
@@ -156,6 +159,82 @@ fn main() {
     b.run("mock-train/2-epochs-dpquant", 10, || {
         std::hint::black_box(train(&exec, &cfg, &tr, &va, &TrainerOptions::default()).unwrap());
     });
+
+    // --- Native backend: real fwd/bwd with on-path quantizer kernels ------
+    // Quantized-vs-fp32 step latency is the paper's headline cost axis
+    // (Fig. 6 / Table 14): the fp32 row is the baseline, one quantized
+    // row per quantizer shows the scalar-kernel overhead (a low-precision
+    // ALU would turn that overhead into the modeled ~4x speedup).
+    {
+        use dpquant::backend::NativeExecutor;
+        let bsz = 32usize;
+        let nds = data::generate("gtsrb", bsz, 7).unwrap();
+        let nbatches = data::eval_batches(&nds, bsz);
+        let nbatch = &nbatches[0];
+        let mk = |quantizer: &str| {
+            let cfg = TrainConfig {
+                model: "miniconvnet".into(),
+                dataset: "gtsrb".into(),
+                quantizer: quantizer.into(),
+                physical_batch: bsz,
+                ..TrainConfig::default()
+            };
+            NativeExecutor::from_config(&cfg, nds.example_numel, nds.n_classes).unwrap()
+        };
+        let fp_exec = mk("luq4");
+        let w = fp_exec.initial_weights();
+        let nl = fp_exec.n_quant_layers();
+        let fp_mask = vec![0f32; nl];
+        let mut i = 0f32;
+        b.run("backend/native-step/miniconvnet-b32-fp32", 20, || {
+            i += 1.0;
+            std::hint::black_box(
+                fp_exec
+                    .train_step(&w, &nbatch.x, &nbatch.y, &nbatch.mask, &fp_mask, i)
+                    .unwrap(),
+            );
+        });
+        for qname in ["luq4", "uniform4", "fp8"] {
+            let qexec = mk(qname);
+            let qw = qexec.initial_weights();
+            let q_mask = vec![1f32; qexec.n_quant_layers()];
+            let mut j = 0f32;
+            b.run(&format!("backend/native-step/miniconvnet-b32-{qname}"), 20, || {
+                j += 1.0;
+                std::hint::black_box(
+                    qexec
+                        .train_step(&qw, &nbatch.x, &nbatch.y, &nbatch.mask, &q_mask, j)
+                        .unwrap(),
+                );
+            });
+        }
+        b.run("backend/native-eval-step/miniconvnet-b32", 20, || {
+            std::hint::black_box(
+                fp_exec
+                    .eval_step(&w, &nbatch.x, &nbatch.y, &nbatch.mask)
+                    .unwrap(),
+            );
+        });
+
+        // One full native epoch through the whole coordinator.
+        let nfull = data::generate("gtsrb", 512 + 128, 3).unwrap();
+        let (ntr, nva) = nfull.split(128);
+        let ncfg = TrainConfig {
+            model: "miniconvnet".into(),
+            dataset: "gtsrb".into(),
+            epochs: 1,
+            batch_size: 64,
+            dataset_size: 512,
+            scheduler: "dpquant".into(),
+            ..TrainConfig::default()
+        };
+        let nexec = mk("luq4");
+        b.run("backend/native-epoch/miniconvnet-512-examples", 3, || {
+            std::hint::black_box(
+                train(&nexec, &ncfg, &ntr, &nva, &TrainerOptions::default()).unwrap(),
+            );
+        });
+    }
 
     // --- Real PJRT graphs (end-to-end, per paper table timings) ----------
     match dpquant::runtime::Runtime::open("artifacts") {

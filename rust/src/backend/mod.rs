@@ -1,0 +1,478 @@
+//! Native pure-Rust execution backend: a real training engine behind
+//! the [`StepExecutor`] trait, with **zero artifacts and zero external
+//! dependencies**.
+//!
+//! * [`tensor`]   — contiguous-f32 kernels (matmul, conv-lite, pooling,
+//!   ReLU, softmax-xent) with hand-derived backward passes;
+//! * [`model`]    — the model zoo (logreg, MLP, mini-CNN) over the
+//!   `data/synth.rs` shapes, per-sample forward/backward;
+//! * [`parallel`] — scoped-thread microbatch parallelism.
+//!
+//! [`NativeExecutor`] computes **exact per-sample gradients** and clips
+//! them (Σ of clipped per-sample grads — the same contract the compiled
+//! PJRT graphs and `MockExecutor` expose), and runs the `quant/` kernels
+//! **on the actual compute path**: a masked layer's weight tensor is
+//! quantize-dequantized once per call and the gradient tensor entering
+//! its backward pass is quantize-dequantized per sample. With an
+//! all-zero `quant_mask` the step is exact fp32 — the parity tests pin
+//! this against hand-computed gradients and against `MockExecutor`.
+//!
+//! Backend selection (`--backend native|pjrt|mock`) lives here too, so
+//! `cli.rs`/`exp/` pick an executor through one entry point.
+
+pub mod model;
+pub mod parallel;
+pub mod tensor;
+
+use crate::config::TrainConfig;
+use crate::coordinator::executor::{MockExecutor, StepExecutor};
+use crate::quant::{self, Quantizer};
+use crate::runtime::{EvalOutput, Runtime, TrainOutput};
+use crate::util::error::{ensure, err, Error, Result};
+use crate::util::rng::Xoshiro256;
+use model::Model;
+
+/// The pure-Rust training engine.
+pub struct NativeExecutor {
+    model: Model,
+    init: Vec<Vec<f32>>,
+    batch: usize,
+    clip_norm: f32,
+    quantizer: Box<dyn Quantizer>,
+    threads: usize,
+}
+
+impl NativeExecutor {
+    /// Build from an explicit model (tests / custom zoos).
+    pub fn new(
+        model: Model,
+        batch: usize,
+        clip_norm: f32,
+        quantizer: Box<dyn Quantizer>,
+        init_seed: u64,
+    ) -> Self {
+        assert!(batch > 0, "physical batch must be positive");
+        let init = model.init_weights(init_seed);
+        Self {
+            model,
+            init,
+            batch,
+            clip_norm,
+            quantizer,
+            threads: parallel::default_threads(),
+        }
+    }
+
+    /// Resolve the model zoo + quantizer from a training config and the
+    /// dataset's shape. This is the no-artifacts replacement for
+    /// `Runtime::open` + `load`.
+    pub fn from_config(cfg: &TrainConfig, example_numel: usize, n_classes: usize) -> Result<Self> {
+        ensure!(
+            cfg.physical_batch > 0,
+            "native backend: physical_batch must be positive"
+        );
+        let mut model = Model::by_name(&cfg.model, example_numel, n_classes).map_err(Error::msg)?;
+        if cfg.dataset == "snli" {
+            // Token ids arrive as raw f32 in [0, VOCAB); scale into [0, 1)
+            // so first-layer activations start sane.
+            model.input_scale = 1.0 / crate::data::synth::VOCAB as f32;
+        }
+        let quantizer = quant::by_name(&cfg.quantizer)
+            .ok_or_else(|| err!("unknown quantizer '{}' for the native backend", cfg.quantizer))?;
+        Ok(Self::new(
+            model,
+            cfg.physical_batch,
+            cfg.clip_norm as f32,
+            quantizer,
+            cfg.seed,
+        ))
+    }
+
+    /// Override the worker-thread count (defaults to
+    /// [`parallel::default_threads`]).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    pub fn quantizer(&self) -> &dyn Quantizer {
+        self.quantizer.as_ref()
+    }
+
+    /// Per-sample RNG stream: keyed by (step seed, sample index) so the
+    /// result is independent of the thread partition.
+    fn sample_rng(seed: f32, i: usize) -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(
+            (seed.to_bits() as u64 ^ 0x51E9_D5A1_0000_0000)
+                ^ (i as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F),
+        )
+    }
+}
+
+/// Quantize-dequantize the weight tensor of every masked layer exactly
+/// as the hot path does before a train step (biases stay fp32). Public
+/// so the quant-on-live-path property tests exercise the real code.
+pub fn quantize_masked_weights(
+    model: &Model,
+    weights: &[Vec<f32>],
+    quant_mask: &[f32],
+    quantizer: &dyn Quantizer,
+    seed: f32,
+) -> Vec<Vec<f32>> {
+    let mut out = weights.to_vec();
+    for (l, &m) in quant_mask.iter().enumerate() {
+        if m <= 0.0 {
+            continue;
+        }
+        let wi = model.weight_index(l);
+        let mut rng = Xoshiro256::seed_from_u64(
+            (seed.to_bits() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((l as u64 + 1) << 32),
+        );
+        quantizer.quantize(&mut out[wi], &mut rng);
+    }
+    out
+}
+
+impl StepExecutor for NativeExecutor {
+    fn n_quant_layers(&self) -> usize {
+        self.model.n_layers()
+    }
+
+    fn physical_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn param_sizes(&self) -> Vec<usize> {
+        self.model.param_numels()
+    }
+
+    fn initial_weights(&self) -> Vec<Vec<f32>> {
+        self.init.clone()
+    }
+
+    fn train_step(
+        &self,
+        weights: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        quant_mask: &[f32],
+        seed: f32,
+    ) -> Result<TrainOutput> {
+        let en = self.model.input_numel;
+        ensure!(
+            x.len() == self.batch * en,
+            "native train_step: x has {} values, want batch {} x {}",
+            x.len(),
+            self.batch,
+            en
+        );
+        ensure!(
+            y.len() == self.batch && mask.len() == self.batch,
+            "native train_step: y/mask length != batch {}",
+            self.batch
+        );
+        ensure!(
+            quant_mask.len() == self.model.n_layers(),
+            "native train_step: quant_mask has {} entries, model has {} layers",
+            quant_mask.len(),
+            self.model.n_layers()
+        );
+
+        let any_q = quant_mask.iter().any(|&m| m > 0.0);
+        let qweights = if any_q {
+            Some(quantize_masked_weights(
+                &self.model,
+                weights,
+                quant_mask,
+                self.quantizer.as_ref(),
+                seed,
+            ))
+        } else {
+            None
+        };
+        let wref: &[Vec<f32>] = qweights.as_deref().unwrap_or(weights);
+
+        let chunks = parallel::map_chunks(self.batch, self.threads, |rows| {
+            let mut grad_sums = self.model.zero_grads();
+            let mut gbuf = self.model.zero_grads();
+            let mut loss_sum = 0f32;
+            let mut correct_sum = 0f32;
+            let mut raw_norm_sum = 0f32;
+            let mut raw_norm_max = 0f32;
+            for i in rows {
+                if mask[i] == 0.0 {
+                    continue;
+                }
+                for g in gbuf.iter_mut() {
+                    g.fill(0.0);
+                }
+                let mut rng = Self::sample_rng(seed, i);
+                let (loss, correct) = self.model.forward_backward(
+                    wref,
+                    &x[i * en..(i + 1) * en],
+                    y[i] as usize,
+                    &mut gbuf,
+                    quant_mask,
+                    if any_q {
+                        Some(self.quantizer.as_ref())
+                    } else {
+                        None
+                    },
+                    &mut rng,
+                );
+                loss_sum += loss;
+                if correct {
+                    correct_sum += 1.0;
+                }
+                // Exact per-sample clip: ‖g_i‖₂ ≤ C before accumulation.
+                let norm: f32 =
+                    gbuf.iter().flat_map(|g| g.iter()).map(|&v| v * v).sum::<f32>().sqrt();
+                raw_norm_sum += norm;
+                raw_norm_max = raw_norm_max.max(norm);
+                let scale = (self.clip_norm / norm.max(1e-12)).min(1.0);
+                for (acc, g) in grad_sums.iter_mut().zip(&gbuf) {
+                    for (a, &v) in acc.iter_mut().zip(g) {
+                        *a += v * scale;
+                    }
+                }
+            }
+            (grad_sums, loss_sum, correct_sum, raw_norm_sum, raw_norm_max)
+        });
+
+        let mut it = chunks.into_iter();
+        let (mut grad_sums, mut loss_sum, mut correct_sum, mut raw_norm_sum, mut raw_norm_max) =
+            it.next().expect("map_chunks yields at least one chunk");
+        for (g, l, c, rs, rm) in it {
+            for (acc, part) in grad_sums.iter_mut().zip(&g) {
+                for (a, &v) in acc.iter_mut().zip(part) {
+                    *a += v;
+                }
+            }
+            loss_sum += l;
+            correct_sum += c;
+            raw_norm_sum += rs;
+            raw_norm_max = raw_norm_max.max(rm);
+        }
+        Ok(TrainOutput {
+            grad_sums,
+            loss_sum,
+            correct_sum,
+            raw_norm_sum,
+            raw_norm_max,
+        })
+    }
+
+    fn eval_step(
+        &self,
+        weights: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOutput> {
+        let en = self.model.input_numel;
+        ensure!(
+            x.len() == self.batch * en && y.len() == self.batch && mask.len() == self.batch,
+            "native eval_step: batch shape mismatch"
+        );
+        let chunks = parallel::map_chunks(self.batch, self.threads, |rows| {
+            let mut loss_sum = 0f32;
+            let mut correct_sum = 0f32;
+            for i in rows {
+                if mask[i] == 0.0 {
+                    continue;
+                }
+                let logits = self.model.forward(weights, &x[i * en..(i + 1) * en]);
+                let (loss, correct, _) = tensor::softmax_xent(&logits, y[i] as usize);
+                loss_sum += loss;
+                if correct {
+                    correct_sum += 1.0;
+                }
+            }
+            (loss_sum, correct_sum)
+        });
+        let (loss_sum, correct_sum) = chunks
+            .into_iter()
+            .fold((0f32, 0f32), |(l, c), (pl, pc)| (l + pl, c + pc));
+        Ok(EvalOutput {
+            loss_sum,
+            correct_sum,
+        })
+    }
+}
+
+/// Open the executor selected by `cfg.backend`:
+///
+/// * `"native"` — this module's pure-Rust engine (default; needs no
+///   artifacts and no external runtime);
+/// * `"pjrt"` (alias `"xla"`) — AOT artifacts + the PJRT runtime (fails
+///   with a pointer back to `--backend native` while `xla.rs` is a
+///   stub);
+/// * `"mock"` — the logistic-regression mock with *simulated*
+///   quantization damage (unit-test substrate).
+pub fn open_executor(
+    cfg: &TrainConfig,
+    example_numel: usize,
+    n_classes: usize,
+    artifacts_dir: &str,
+) -> Result<Box<dyn StepExecutor>> {
+    match cfg.backend.as_str() {
+        "native" => Ok(Box::new(NativeExecutor::from_config(cfg, example_numel, n_classes)?)),
+        "pjrt" | "xla" => {
+            let rt = Runtime::open(artifacts_dir)?;
+            Ok(Box::new(rt.load(&cfg.graph_tag())?))
+        }
+        "mock" => {
+            let mut exec = MockExecutor::new(example_numel, n_classes, 8, cfg.physical_batch);
+            exec.clip_norm = cfg.clip_norm as f32;
+            Ok(Box::new(exec))
+        }
+        other => Err(err!("unknown backend '{other}' (expected native | pjrt | mock)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_exec(quantizer: &str, clip: f32, batch: usize) -> NativeExecutor {
+        let cfg = TrainConfig {
+            model: "mlp".into(),
+            quantizer: quantizer.into(),
+            clip_norm: clip as f64,
+            physical_batch: batch,
+            seed: 11,
+            ..TrainConfig::default()
+        };
+        NativeExecutor::from_config(&cfg, 12, 4).unwrap()
+    }
+
+    fn toy_batch(exec: &NativeExecutor, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let b = exec.physical_batch();
+        let en = exec.model().input_numel;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut x = vec![0f32; b * en];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let c = rng.next_below(4) as i32;
+            y[i] = c;
+            for f in 0..en {
+                x[i * en + f] = rng.next_f32() + if f == c as usize { 1.0 } else { 0.0 };
+            }
+        }
+        (x, y, vec![1.0; b])
+    }
+
+    #[test]
+    fn clip_bound_holds_and_masked_rows_skip() {
+        let exec = small_exec("luq4", 1.0, 8);
+        let w = exec.initial_weights();
+        let (x, y, mut mask) = toy_batch(&exec, 1);
+        let zero = vec![0f32; exec.n_quant_layers()];
+        let full = exec.train_step(&w, &x, &y, &mask, &zero, 0.0).unwrap();
+        let norm: f32 = full.grad_sums.iter().flatten().map(|&g| g * g).sum::<f32>().sqrt();
+        assert!(norm <= 8.0 + 1e-3, "norm={norm}");
+        // Masking half the rows halves loss contributions.
+        for m in mask.iter_mut().skip(4) {
+            *m = 0.0;
+        }
+        let half = exec.train_step(&w, &x, &y, &mask, &zero, 0.0).unwrap();
+        assert!(half.loss_sum < full.loss_sum);
+        assert!(half.correct_sum <= full.correct_sum);
+        // Eval agrees with train-side loss accounting on the same rows.
+        let ev = exec.eval_step(&w, &x, &y, &mask).unwrap();
+        assert!((ev.loss_sum - half.loss_sum).abs() < 1e-3);
+        assert!((ev.correct_sum - half.correct_sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_thread_count_and_seeded_quantization() {
+        let exec = small_exec("luq4", 1.0, 6).with_threads(2);
+        let w = exec.initial_weights();
+        let (x, y, mask) = toy_batch(&exec, 2);
+        let ones = vec![1f32; exec.n_quant_layers()];
+        let a = exec.train_step(&w, &x, &y, &mask, &ones, 3.0).unwrap();
+        let b = exec.train_step(&w, &x, &y, &mask, &ones, 3.0).unwrap();
+        assert_eq!(a.grad_sums, b.grad_sums);
+        assert_eq!(a.loss_sum, b.loss_sum);
+        // A different step seed re-rolls the stochastic rounding.
+        let c = exec.train_step(&w, &x, &y, &mask, &ones, 4.0).unwrap();
+        assert_ne!(a.grad_sums, c.grad_sums);
+    }
+
+    #[test]
+    fn thread_partition_only_reorders_float_sums() {
+        let e1 = small_exec("uniform4", 1.0, 12).with_threads(1);
+        let e4 = small_exec("uniform4", 1.0, 12).with_threads(4);
+        let w = e1.initial_weights();
+        let (x, y, mask) = toy_batch(&e1, 3);
+        let ones = vec![1f32; e1.n_quant_layers()];
+        let a = e1.train_step(&w, &x, &y, &mask, &ones, 5.0).unwrap();
+        let b = e4.train_step(&w, &x, &y, &mask, &ones, 5.0).unwrap();
+        for (ga, gb) in a.grad_sums.iter().zip(&b.grad_sums) {
+            for (va, vb) in ga.iter().zip(gb) {
+                assert!((va - vb).abs() < 1e-4, "{va} vs {vb}");
+            }
+        }
+        assert!((a.loss_sum - b.loss_sum).abs() < 1e-3);
+        assert_eq!(a.correct_sum, b.correct_sum);
+    }
+
+    #[test]
+    fn quantized_step_differs_from_fp32() {
+        let exec = small_exec("luq4", 1.0, 8);
+        let w = exec.initial_weights();
+        let (x, y, mask) = toy_batch(&exec, 4);
+        let zero = vec![0f32; exec.n_quant_layers()];
+        let ones = vec![1f32; exec.n_quant_layers()];
+        let fp = exec.train_step(&w, &x, &y, &mask, &zero, 1.0).unwrap();
+        let q = exec.train_step(&w, &x, &y, &mask, &ones, 1.0).unwrap();
+        let diff: f32 = fp
+            .grad_sums
+            .iter()
+            .flatten()
+            .zip(q.grad_sums.iter().flatten())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.0, "quantization must perturb the step");
+    }
+
+    #[test]
+    fn open_executor_variants() {
+        let cfg = TrainConfig::default(); // backend = native
+        let exec = open_executor(&cfg, 16 * 16 * 3, 10, "no-such-dir").unwrap();
+        assert_eq!(exec.n_quant_layers(), 5);
+        let mock_cfg = TrainConfig {
+            backend: "mock".into(),
+            ..TrainConfig::default()
+        };
+        let mock = open_executor(&mock_cfg, 8, 3, "no-such-dir").unwrap();
+        assert_eq!(mock.param_sizes(), vec![24]);
+        let bad = TrainConfig {
+            backend: "tpu".into(),
+            ..TrainConfig::default()
+        };
+        let e = open_executor(&bad, 8, 3, "no-such-dir").unwrap_err();
+        assert!(format!("{e}").contains("unknown backend"), "{e}");
+        let pjrt = TrainConfig {
+            backend: "pjrt".into(),
+            ..TrainConfig::default()
+        };
+        let e = open_executor(&pjrt, 8, 3, "no-such-dir").unwrap_err();
+        assert!(format!("{e:#}").contains("manifest.json"), "{e:#}");
+    }
+
+    #[test]
+    fn bad_shapes_error_not_panic() {
+        let exec = small_exec("fp8", 1.0, 4);
+        let w = exec.initial_weights();
+        let err = exec
+            .train_step(&w, &[0.0; 4], &[0; 4], &[1.0; 4], &[0.0; 5], 0.0)
+            .unwrap_err();
+        assert!(format!("{err}").contains("train_step"), "{err}");
+    }
+}

@@ -1,0 +1,691 @@
+//! The native model zoo: layer specs, parameter bookkeeping,
+//! initialization, and the hand-derived per-sample forward/backward pass
+//! with on-path quantization hooks.
+//!
+//! A model is a chain of [`LayerSpec`]s ending in a logits layer; loss
+//! is softmax cross-entropy. Every spec is **one quantizable layer** (the
+//! unit Algorithms 1–2 schedule over): when `quant_mask[l] > 0` the
+//! executor runs layer `l` low-precision — its weight tensor is
+//! quantize-dequantized before the step and the gradient tensor entering
+//! its backward computation is quantize-dequantized per sample. Biases
+//! stay fp32 (they are O(width) of the O(width²) weights and the paper's
+//! kernels likewise keep accumulators high-precision).
+
+use super::tensor;
+use crate::quant::Quantizer;
+use crate::util::rng::Xoshiro256;
+
+/// One quantizable layer of the native zoo.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// 3x3 same-padding conv (HWC) + ReLU, optionally followed by 2x2
+    /// average pooling. `h`/`w` are the *input* spatial dims.
+    Conv3x3 {
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        pool: bool,
+    },
+    /// Fully-connected layer, optional bias and ReLU.
+    Dense {
+        input: usize,
+        output: usize,
+        bias: bool,
+        relu: bool,
+    },
+}
+
+impl LayerSpec {
+    pub fn in_numel(&self) -> usize {
+        match self {
+            LayerSpec::Conv3x3 { h, w, cin, .. } => h * w * cin,
+            LayerSpec::Dense { input, .. } => *input,
+        }
+    }
+
+    pub fn out_numel(&self) -> usize {
+        match self {
+            LayerSpec::Conv3x3 { h, w, cout, pool } => {
+                if *pool {
+                    (h / 2) * (w / 2) * cout
+                } else {
+                    h * w * cout
+                }
+            }
+            LayerSpec::Dense { output, .. } => *output,
+        }
+    }
+
+    /// Shapes of this layer's parameter tensors (weight first, then
+    /// bias when present).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        match self {
+            LayerSpec::Conv3x3 { cin, cout, .. } => {
+                vec![vec![*cout, *cin, 3, 3], vec![*cout]]
+            }
+            LayerSpec::Dense {
+                input,
+                output,
+                bias,
+                ..
+            } => {
+                let mut v = vec![vec![*output, *input]];
+                if *bias {
+                    v.push(vec![*output]);
+                }
+                v
+            }
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        match self {
+            LayerSpec::Conv3x3 { cin, .. } => cin * 9,
+            LayerSpec::Dense { input, .. } => *input,
+        }
+    }
+
+    /// Human-readable tag (DESIGN.md / debug output).
+    pub fn name(&self) -> String {
+        match self {
+            LayerSpec::Conv3x3 {
+                cin, cout, pool, ..
+            } => format!(
+                "conv3x3_{cin}to{cout}{}",
+                if *pool { "_pool" } else { "" }
+            ),
+            LayerSpec::Dense { input, output, .. } => format!("dense_{input}to{output}"),
+        }
+    }
+}
+
+/// A fully-specified native model: validated layer chain + parameter
+/// layout. Runtime weights live outside (as `Vec<Vec<f32>>`, one entry
+/// per parameter tensor) so the executor matches the `StepExecutor`
+/// contract exactly.
+#[derive(Clone, Debug)]
+pub struct Model {
+    specs: Vec<LayerSpec>,
+    pub n_classes: usize,
+    pub input_numel: usize,
+    /// Multiplier applied to raw features at the model input (1.0 for
+    /// images; `1/VOCAB` for token-id sequences so logits start sane).
+    pub input_scale: f32,
+    /// `param_start[l]` = index of layer `l`'s weight tensor in the
+    /// flat parameter list.
+    param_start: Vec<usize>,
+    param_shapes: Vec<Vec<usize>>,
+}
+
+impl Model {
+    /// Validate the chain (each layer's input numel must equal the
+    /// previous output) and precompute the parameter layout.
+    pub fn new(
+        specs: Vec<LayerSpec>,
+        input_numel: usize,
+        input_scale: f32,
+    ) -> Result<Self, String> {
+        if specs.is_empty() {
+            return Err("model needs at least one layer".into());
+        }
+        let mut cur = input_numel;
+        let mut param_start = Vec::with_capacity(specs.len());
+        let mut param_shapes: Vec<Vec<usize>> = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            if s.in_numel() != cur {
+                return Err(format!(
+                    "layer {i} ({}) expects {} inputs, previous layer produces {cur}",
+                    s.name(),
+                    s.in_numel()
+                ));
+            }
+            cur = s.out_numel();
+            param_start.push(param_shapes.len());
+            param_shapes.extend(s.param_shapes());
+        }
+        Ok(Self {
+            specs,
+            n_classes: cur,
+            input_numel,
+            input_scale,
+            param_start,
+            param_shapes,
+        })
+    }
+
+    /// Zoo lookup. `logreg` and `mlp` are native-first; the artifact
+    /// model tags (`miniconvnet` / `miniresnet` / `minidensenet` /
+    /// `tinytransformer`) map onto the mini-CNN when the input is
+    /// image-shaped (16x16x3, the `data/synth.rs` contract) and onto
+    /// the MLP otherwise — so every config that works against the
+    /// compiled graphs also runs natively. Unknown names are an error
+    /// (a typo must not silently train a different model).
+    pub fn by_name(name: &str, input_numel: usize, n_classes: usize) -> Result<Self, String> {
+        use crate::data::synth::{C, H, W};
+        match name {
+            "logreg" => Self::new(
+                vec![LayerSpec::Dense {
+                    input: input_numel,
+                    output: n_classes,
+                    bias: false,
+                    relu: false,
+                }],
+                input_numel,
+                1.0,
+            ),
+            "mlp" | "tinytransformer" => Self::mlp(input_numel, n_classes),
+            "miniconvnet" | "miniresnet" | "minidensenet" => {
+                if input_numel == H * W * C {
+                    Self::mini_cnn(n_classes)
+                } else {
+                    Self::mlp(input_numel, n_classes)
+                }
+            }
+            other => Err(format!(
+                "unknown model '{other}' for the native backend (expected logreg | mlp | \
+                 miniconvnet | miniresnet | minidensenet | tinytransformer)"
+            )),
+        }
+    }
+
+    /// 5-layer ReLU MLP over flattened features.
+    pub fn mlp(input_numel: usize, n_classes: usize) -> Result<Self, String> {
+        let mut specs = Vec::new();
+        let mut cur = input_numel;
+        for &hdim in &[96usize, 64, 48, 32] {
+            specs.push(LayerSpec::Dense {
+                input: cur,
+                output: hdim,
+                bias: true,
+                relu: true,
+            });
+            cur = hdim;
+        }
+        specs.push(LayerSpec::Dense {
+            input: cur,
+            output: n_classes,
+            bias: true,
+            relu: false,
+        });
+        Self::new(specs, input_numel, 1.0)
+    }
+
+    /// Mini-CNN over the 16x16x3 synthetic image shape: two conv+pool
+    /// stages then a 3-layer head — 5 quantizable layers.
+    pub fn mini_cnn(n_classes: usize) -> Result<Self, String> {
+        use crate::data::synth::{C, H, W};
+        let specs = vec![
+            LayerSpec::Conv3x3 {
+                h: H,
+                w: W,
+                cin: C,
+                cout: 8,
+                pool: true,
+            },
+            LayerSpec::Conv3x3 {
+                h: H / 2,
+                w: W / 2,
+                cin: 8,
+                cout: 16,
+                pool: true,
+            },
+            LayerSpec::Dense {
+                input: (H / 4) * (W / 4) * 16,
+                output: 96,
+                bias: true,
+                relu: true,
+            },
+            LayerSpec::Dense {
+                input: 96,
+                output: 48,
+                bias: true,
+                relu: true,
+            },
+            LayerSpec::Dense {
+                input: 48,
+                output: n_classes,
+                bias: true,
+                relu: false,
+            },
+        ];
+        Self::new(specs, H * W * C, 1.0)
+    }
+
+    pub fn specs(&self) -> &[LayerSpec] {
+        &self.specs
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn param_shapes(&self) -> &[Vec<usize>] {
+        &self.param_shapes
+    }
+
+    pub fn param_numels(&self) -> Vec<usize> {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product())
+            .collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.param_numels().iter().sum()
+    }
+
+    /// Index of layer `l`'s weight tensor in the parameter list.
+    pub fn weight_index(&self, l: usize) -> usize {
+        self.param_start[l]
+    }
+
+    /// Zeroed gradient buffers, one per parameter tensor.
+    pub fn zero_grads(&self) -> Vec<Vec<f32>> {
+        self.param_numels().iter().map(|&n| vec![0.0; n]).collect()
+    }
+
+    /// Deterministic He-uniform weights (biases zero) from a seed.
+    pub fn init_weights(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x6D0D_E15E);
+        let mut out = Vec::with_capacity(self.param_shapes.len());
+        for spec in &self.specs {
+            for (ti, shape) in spec.param_shapes().iter().enumerate() {
+                if ti == 0 {
+                    out.push(tensor::Tensor::he_uniform(shape, spec.fan_in(), &mut rng).data);
+                } else {
+                    out.push(vec![0.0; shape.iter().product()]);
+                }
+            }
+        }
+        out
+    }
+
+    /// One layer's forward for one sample. Returns `(output, pre_pool)`
+    /// where `pre_pool` is the post-ReLU pre-pooling activation a
+    /// pooled conv layer's backward needs.
+    fn layer_forward(
+        &self,
+        l: usize,
+        weights: &[Vec<f32>],
+        a: &[f32],
+    ) -> (Vec<f32>, Option<Vec<f32>>) {
+        let p0 = self.param_start[l];
+        match &self.specs[l] {
+            LayerSpec::Conv3x3 {
+                h,
+                w,
+                cin,
+                cout,
+                pool,
+            } => {
+                let mut y = vec![0.0; h * w * cout];
+                tensor::conv3x3_forward(
+                    &weights[p0],
+                    &weights[p0 + 1],
+                    a,
+                    &mut y,
+                    *h,
+                    *w,
+                    *cin,
+                    *cout,
+                );
+                tensor::relu_inplace(&mut y);
+                if *pool {
+                    let mut p = vec![0.0; (h / 2) * (w / 2) * cout];
+                    tensor::avgpool2_forward(&y, &mut p, *h, *w, *cout);
+                    (p, Some(y))
+                } else {
+                    (y, None)
+                }
+            }
+            LayerSpec::Dense {
+                input,
+                output,
+                bias,
+                relu,
+            } => {
+                assert_eq!(a.len(), *input, "dense input numel");
+                let b = if *bias {
+                    Some(&weights[p0 + 1][..])
+                } else {
+                    None
+                };
+                let mut y = vec![0.0; *output];
+                tensor::dense_forward(&weights[p0], b, a, &mut y);
+                if *relu {
+                    tensor::relu_inplace(&mut y);
+                }
+                (y, None)
+            }
+        }
+    }
+
+    /// Full-precision forward for one sample; returns the logits.
+    pub fn forward(&self, weights: &[Vec<f32>], x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.input_numel, "input numel");
+        let mut a: Vec<f32> = x.iter().map(|&v| v * self.input_scale).collect();
+        for l in 0..self.specs.len() {
+            a = self.layer_forward(l, weights, &a).0;
+        }
+        a
+    }
+
+    /// Exact per-sample forward + backward. Gradients are accumulated
+    /// into `grads` (zeroed by the caller); returns `(loss, correct)`.
+    ///
+    /// `weights` should already hold quantized tensors for masked layers
+    /// (the executor pre-quantizes once per call); per sample, the
+    /// gradient entering a masked layer's backward is additionally
+    /// quantize-dequantized, injecting the backward-path quantization
+    /// error the scheduler's loss-impact analysis measures.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_backward(
+        &self,
+        weights: &[Vec<f32>],
+        x: &[f32],
+        label: usize,
+        grads: &mut [Vec<f32>],
+        quant_mask: &[f32],
+        quantizer: Option<&dyn Quantizer>,
+        rng: &mut Xoshiro256,
+    ) -> (f32, bool) {
+        let n = self.specs.len();
+        assert_eq!(quant_mask.len(), n, "quant mask len");
+        assert_eq!(grads.len(), self.param_shapes.len(), "grad tensor count");
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n + 1);
+        acts.push(x.iter().map(|&v| v * self.input_scale).collect());
+        let mut prepool: Vec<Option<Vec<f32>>> = Vec::with_capacity(n);
+        for l in 0..n {
+            let (out, pp) = self.layer_forward(l, weights, acts.last().unwrap());
+            acts.push(out);
+            prepool.push(pp);
+        }
+        let (loss, correct, mut dy) = tensor::softmax_xent(&acts[n], label);
+        for l in (0..n).rev() {
+            if quant_mask[l] > 0.0 {
+                if let Some(q) = quantizer {
+                    q.quantize(&mut dy, rng);
+                }
+            }
+            let p0 = self.param_start[l];
+            let need_da = l > 0;
+            match &self.specs[l] {
+                LayerSpec::Dense {
+                    input, bias, relu, ..
+                } => {
+                    if *relu {
+                        tensor::relu_backward_mask(&acts[l + 1], &mut dy);
+                    }
+                    let (head, tail) = grads.split_at_mut(p0 + 1);
+                    let gw = head.last_mut().unwrap();
+                    let gb = if *bias { Some(&mut tail[0][..]) } else { None };
+                    let mut da = if need_da { vec![0.0; *input] } else { Vec::new() };
+                    tensor::dense_backward(
+                        &weights[p0],
+                        &acts[l],
+                        &dy,
+                        gw,
+                        gb,
+                        if need_da { Some(&mut da) } else { None },
+                    );
+                    if need_da {
+                        dy = da;
+                    }
+                }
+                LayerSpec::Conv3x3 {
+                    h,
+                    w,
+                    cin,
+                    cout,
+                    pool,
+                } => {
+                    let mut d = if *pool {
+                        let mut full = vec![0.0; h * w * cout];
+                        tensor::avgpool2_backward(&dy, &mut full, *h, *w, *cout);
+                        full
+                    } else {
+                        std::mem::take(&mut dy)
+                    };
+                    let relu_out = prepool[l].as_deref().unwrap_or(&acts[l + 1]);
+                    tensor::relu_backward_mask(relu_out, &mut d);
+                    let (head, tail) = grads.split_at_mut(p0 + 1);
+                    let gw = head.last_mut().unwrap();
+                    let gb = &mut tail[0];
+                    let mut da = if need_da {
+                        vec![0.0; h * w * cin]
+                    } else {
+                        Vec::new()
+                    };
+                    tensor::conv3x3_backward(
+                        &weights[p0],
+                        &acts[l],
+                        &d,
+                        gw,
+                        gb,
+                        if need_da { Some(&mut da) } else { None },
+                        *h,
+                        *w,
+                        *cin,
+                        *cout,
+                    );
+                    if need_da {
+                        dy = da;
+                    }
+                }
+            }
+        }
+        (loss, correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+
+    #[test]
+    fn zoo_shapes_chain() {
+        let lr = Model::by_name("logreg", 10, 4).unwrap();
+        assert_eq!(lr.n_layers(), 1);
+        assert_eq!(lr.param_numels(), vec![40]);
+
+        let mlp = Model::by_name("mlp", 20, 5).unwrap();
+        assert_eq!(mlp.n_layers(), 5);
+        assert_eq!(mlp.n_classes, 5);
+        // weight + bias per layer.
+        assert_eq!(mlp.param_shapes().len(), 10);
+
+        let cnn = Model::by_name("miniconvnet", 16 * 16 * 3, 10).unwrap();
+        assert_eq!(cnn.n_layers(), 5);
+        assert_eq!(cnn.n_classes, 10);
+        assert!(cnn.total_params() > 10_000);
+        // miniresnet maps to the same CNN; non-image inputs fall back
+        // to the MLP.
+        assert_eq!(
+            Model::by_name("miniresnet", 16 * 16 * 3, 10).unwrap().total_params(),
+            cnn.total_params()
+        );
+        let seq = Model::by_name("tinytransformer", 24, 3).unwrap();
+        assert_eq!(seq.n_classes, 3);
+        // Typos fail fast instead of silently training another model.
+        assert!(Model::by_name("miniconvnt", 16 * 16 * 3, 10).is_err());
+    }
+
+    #[test]
+    fn chain_validation_rejects_mismatches() {
+        let bad = Model::new(
+            vec![
+                LayerSpec::Dense {
+                    input: 8,
+                    output: 4,
+                    bias: true,
+                    relu: true,
+                },
+                LayerSpec::Dense {
+                    input: 5, // should be 4
+                    output: 2,
+                    bias: true,
+                    relu: false,
+                },
+            ],
+            8,
+            1.0,
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn init_deterministic_and_scaled() {
+        let m = Model::by_name("mlp", 12, 3).unwrap();
+        let a = m.init_weights(7);
+        let b = m.init_weights(7);
+        assert_eq!(a, b);
+        let c = m.init_weights(8);
+        assert_ne!(a, c);
+        // Biases zero, weights bounded by the He limit of the widest
+        // fan-in.
+        for (t, shape) in a.iter().zip(m.param_shapes()) {
+            if shape.len() == 1 {
+                assert!(t.iter().all(|&v| v == 0.0));
+            } else {
+                assert!(t.iter().any(|&v| v != 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_finite_and_shaped() {
+        let m = Model::by_name("miniconvnet", 16 * 16 * 3, 7).unwrap();
+        let w = m.init_weights(1);
+        let x: Vec<f32> = (0..m.input_numel).map(|i| (i % 17) as f32 / 17.0).collect();
+        let logits = m.forward(&w, &x);
+        assert_eq!(logits.len(), 7);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    /// End-to-end gradient check: per-sample grads from
+    /// `forward_backward` vs central finite differences of the loss,
+    /// over a small MLP-like chain (keeps runtime tiny).
+    #[test]
+    fn full_model_gradients_match_finite_differences() {
+        let m = Model::new(
+            vec![
+                LayerSpec::Dense {
+                    input: 6,
+                    output: 5,
+                    bias: true,
+                    relu: true,
+                },
+                LayerSpec::Dense {
+                    input: 5,
+                    output: 3,
+                    bias: true,
+                    relu: false,
+                },
+            ],
+            6,
+            1.0,
+        )
+        .unwrap();
+        let w = m.init_weights(3);
+        let x: Vec<f32> = vec![0.4, -0.3, 0.8, 0.1, -0.6, 0.5];
+        let label = 1usize;
+        let mut grads = m.zero_grads();
+        let zero_mask = vec![0f32; m.n_layers()];
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (loss, _correct) =
+            m.forward_backward(&w, &x, label, &mut grads, &zero_mask, None, &mut rng);
+        assert!(loss > 0.0);
+        let eps = 1e-2f32;
+        for t in 0..w.len() {
+            for i in 0..w[t].len() {
+                let mut hi = w.clone();
+                hi[t][i] += eps;
+                let mut lo = w.clone();
+                lo[t][i] -= eps;
+                let lh = tensor::softmax_xent(&m.forward(&hi, &x), label).0;
+                let ll = tensor::softmax_xent(&m.forward(&lo, &x), label).0;
+                let num = (lh - ll) / (2.0 * eps);
+                assert!(
+                    (grads[t][i] - num).abs() < 2e-2 + 0.05 * num.abs(),
+                    "param {t}[{i}]: analytic {} vs numeric {num}",
+                    grads[t][i]
+                );
+            }
+        }
+    }
+
+    /// Same check through a conv+pool stage.
+    #[test]
+    fn conv_model_gradients_match_finite_differences() {
+        let m = Model::new(
+            vec![
+                LayerSpec::Conv3x3 {
+                    h: 4,
+                    w: 4,
+                    cin: 2,
+                    cout: 3,
+                    pool: true,
+                },
+                LayerSpec::Dense {
+                    input: 2 * 2 * 3,
+                    output: 3,
+                    bias: true,
+                    relu: false,
+                },
+            ],
+            4 * 4 * 2,
+            1.0,
+        )
+        .unwrap();
+        let w = m.init_weights(5);
+        let x: Vec<f32> = (0..32).map(|i| ((i * 13 % 11) as f32 / 11.0) - 0.4).collect();
+        let label = 2usize;
+        let mut grads = m.zero_grads();
+        let zero_mask = vec![0f32; m.n_layers()];
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        m.forward_backward(&w, &x, label, &mut grads, &zero_mask, None, &mut rng);
+        let eps = 1e-2f32;
+        // Check the conv weight tensor (index 0) and conv bias (1).
+        for t in [0usize, 1] {
+            for i in 0..w[t].len() {
+                let mut hi = w.clone();
+                hi[t][i] += eps;
+                let mut lo = w.clone();
+                lo[t][i] -= eps;
+                let lh = tensor::softmax_xent(&m.forward(&hi, &x), label).0;
+                let ll = tensor::softmax_xent(&m.forward(&lo, &x), label).0;
+                let num = (lh - ll) / (2.0 * eps);
+                assert!(
+                    (grads[t][i] - num).abs() < 2e-2 + 0.05 * num.abs(),
+                    "param {t}[{i}]: analytic {} vs numeric {num}",
+                    grads[t][i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_backward_perturbs_gradients() {
+        let m = Model::by_name("mlp", 10, 4).unwrap();
+        let w = m.init_weights(9);
+        let x: Vec<f32> = (0..10).map(|i| 0.1 * i as f32).collect();
+        let q = quant::by_name("luq4").unwrap();
+        let mut base = m.zero_grads();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let zero_mask = vec![0f32; m.n_layers()];
+        m.forward_backward(&w, &x, 0, &mut base, &zero_mask, None, &mut rng);
+        let mut qg = m.zero_grads();
+        let ones = vec![1f32; m.n_layers()];
+        let mut rng2 = Xoshiro256::seed_from_u64(4);
+        m.forward_backward(&w, &x, 0, &mut qg, &ones, Some(q.as_ref()), &mut rng2);
+        let diff: f32 = base
+            .iter()
+            .flatten()
+            .zip(qg.iter().flatten())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.0, "quantized backward must differ");
+    }
+}

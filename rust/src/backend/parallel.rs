@@ -1,0 +1,93 @@
+//! Scoped-thread microbatch parallelism for the native backend.
+//!
+//! Per-sample gradient work is embarrassingly parallel across the rows
+//! of a physical batch: each sample's forward/backward touches only
+//! shared read-only state (weights, inputs, specs) plus thread-local
+//! buffers. We split the batch into contiguous chunks, run each chunk on
+//! a `std::thread::scope` worker, and merge partial results **in chunk
+//! order** — so for a fixed thread count the result is bit-for-bit
+//! deterministic (per-sample RNG streams are keyed by sample index, not
+//! by thread).
+
+/// Worker-thread count: the `DPQUANT_THREADS` env var wins, else the
+/// machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DPQUANT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into at most `threads` contiguous chunks and run `f` on
+/// each in its own scoped thread, returning results in chunk order.
+/// `threads <= 1` (or `n <= 1`) degenerates to a plain call on the
+/// current thread — no spawn overhead for tiny batches.
+pub fn map_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+            .filter(|&(lo, hi)| lo < hi)
+            .map(|(lo, hi)| s.spawn(move || f(lo..hi)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("native backend worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_every_index_once() {
+        for n in [0usize, 1, 2, 7, 16, 33] {
+            for threads in [1usize, 2, 3, 8, 64] {
+                let ranges = map_chunks(n, threads, |r| r.collect::<Vec<_>>());
+                let flat: Vec<usize> = ranges.into_iter().flatten().collect();
+                assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<u64> = (0..1000).map(|i| i * i).collect();
+        let serial: u64 = data.iter().sum();
+        for threads in [1usize, 2, 5, 16] {
+            let partials = map_chunks(data.len(), threads, |r| -> u64 {
+                r.map(|i| data[i]).sum()
+            });
+            assert_eq!(partials.iter().sum::<u64>(), serial);
+        }
+    }
+
+    #[test]
+    fn single_thread_no_spawn_path() {
+        let out = map_chunks(5, 1, |r| r.len());
+        assert_eq!(out, vec![5]);
+        let empty = map_chunks(0, 4, |r| r.len());
+        assert_eq!(empty, vec![0]);
+    }
+
+    #[test]
+    fn env_override_parses() {
+        // default_threads never returns 0 regardless of the env.
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,513 @@
+//! Tiny tensor kernels for the native backend: contiguous `f32` buffers
+//! plus the dense / conv-lite / pooling / activation / loss primitives
+//! the model zoo composes into real forward and backward passes.
+//!
+//! Everything is scalar Rust (no SIMD intrinsics, no allocation inside
+//! the inner loops beyond caller-owned buffers), written for exactness:
+//! the backward functions are the hand-derived adjoints of the forwards,
+//! and the unit tests check them against central finite differences.
+//!
+//! Layout conventions:
+//! * images are HWC (`[(y*W + x)*C + c]`), matching `data/synth.rs`;
+//! * dense weights are `[out][in]` row-major;
+//! * conv weights are `[cout][cin][ky][kx]` with a 3x3 kernel and same
+//!   padding (stride 1).
+
+use crate::util::rng::Xoshiro256;
+
+/// A contiguous f32 tensor with an explicit row-major shape. The hot
+/// path passes raw slices; `Tensor` carries shape metadata for
+/// initialization, parameter bookkeeping and the property tests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "tensor data/shape mismatch"
+        );
+        Self {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// He-style uniform init: `U(-sqrt(6/fan_in), +sqrt(6/fan_in))` —
+    /// keeps activation scale roughly constant through ReLU stacks.
+    pub fn he_uniform(shape: &[usize], fan_in: usize, rng: &mut Xoshiro256) -> Self {
+        let lim = (6.0 / fan_in.max(1) as f32).sqrt();
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| (2.0 * rng.next_f32() - 1.0) * lim).collect();
+        Self {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+}
+
+/// `out[m×n] = a[m×k] · b[k×n]` (row-major, accumulate-free overwrite).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul lhs shape");
+    assert_eq!(b.len(), k * n, "matmul rhs shape");
+    assert_eq!(out.len(), m * n, "matmul out shape");
+    out.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Dense forward for one sample: `out = W·a (+ b)` with `W` as
+/// `[out][in]` row-major.
+pub fn dense_forward(w: &[f32], b: Option<&[f32]>, a: &[f32], out: &mut [f32]) {
+    let input = a.len();
+    let output = out.len();
+    assert_eq!(w.len(), input * output, "dense weight shape");
+    for (o, slot) in out.iter_mut().enumerate() {
+        let row = &w[o * input..(o + 1) * input];
+        let mut acc = b.map_or(0.0, |bb| bb[o]);
+        for (&wi, &ai) in row.iter().zip(a) {
+            acc += wi * ai;
+        }
+        *slot = acc;
+    }
+}
+
+/// Dense backward for one sample. `gw`/`gb` are *accumulated into*
+/// (callers zero per-sample buffers); `da`, when present, is overwritten
+/// with the gradient w.r.t. the layer input.
+pub fn dense_backward(
+    w: &[f32],
+    a: &[f32],
+    dy: &[f32],
+    gw: &mut [f32],
+    mut gb: Option<&mut [f32]>,
+    da: Option<&mut [f32]>,
+) {
+    let input = a.len();
+    let output = dy.len();
+    assert_eq!(w.len(), input * output, "dense weight shape");
+    assert_eq!(gw.len(), input * output, "dense grad shape");
+    for (o, &d) in dy.iter().enumerate() {
+        if let Some(gb) = gb.as_deref_mut() {
+            gb[o] += d;
+        }
+        if d == 0.0 {
+            continue;
+        }
+        let grow = &mut gw[o * input..(o + 1) * input];
+        for (g, &ai) in grow.iter_mut().zip(a) {
+            *g += d * ai;
+        }
+    }
+    if let Some(da) = da {
+        assert_eq!(da.len(), input, "dense da shape");
+        da.fill(0.0);
+        for (o, &d) in dy.iter().enumerate() {
+            if d == 0.0 {
+                continue;
+            }
+            let row = &w[o * input..(o + 1) * input];
+            for (x, &wi) in da.iter_mut().zip(row) {
+                *x += d * wi;
+            }
+        }
+    }
+}
+
+/// 3x3 same-padding convolution over one HWC image (stride 1).
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_forward(
+    w: &[f32],
+    b: &[f32],
+    a: &[f32],
+    out: &mut [f32],
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+) {
+    assert_eq!(a.len(), h * wd * cin, "conv input shape");
+    assert_eq!(out.len(), h * wd * cout, "conv output shape");
+    assert_eq!(w.len(), cout * cin * 9, "conv weight shape");
+    assert_eq!(b.len(), cout, "conv bias shape");
+    for y in 0..h {
+        for x in 0..wd {
+            let obase = (y * wd + x) * cout;
+            for co in 0..cout {
+                let mut acc = b[co];
+                let wbase = co * cin * 9;
+                for ky in 0..3usize {
+                    // `y + ky - 1` via wrapping: out-of-range wraps to a
+                    // huge value and fails the `< h` bound check.
+                    let sy = (y + ky).wrapping_sub(1);
+                    if sy >= h {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let sx = (x + kx).wrapping_sub(1);
+                        if sx >= wd {
+                            continue;
+                        }
+                        let abase = (sy * wd + sx) * cin;
+                        let koff = ky * 3 + kx;
+                        for ci in 0..cin {
+                            acc += w[wbase + ci * 9 + koff] * a[abase + ci];
+                        }
+                    }
+                }
+                out[obase + co] = acc;
+            }
+        }
+    }
+}
+
+/// Backward of [`conv3x3_forward`] for one sample: accumulates `gw`/`gb`
+/// and (when present) overwrites `da` with the input gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_backward(
+    w: &[f32],
+    a: &[f32],
+    dy: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    mut da: Option<&mut [f32]>,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+) {
+    assert_eq!(a.len(), h * wd * cin, "conv input shape");
+    assert_eq!(dy.len(), h * wd * cout, "conv dy shape");
+    assert_eq!(gw.len(), cout * cin * 9, "conv grad shape");
+    assert_eq!(gb.len(), cout, "conv bias grad shape");
+    if let Some(d) = da.as_deref_mut() {
+        assert_eq!(d.len(), h * wd * cin, "conv da shape");
+        d.fill(0.0);
+    }
+    for y in 0..h {
+        for x in 0..wd {
+            let obase = (y * wd + x) * cout;
+            for co in 0..cout {
+                let d = dy[obase + co];
+                if d == 0.0 {
+                    continue;
+                }
+                gb[co] += d;
+                let wbase = co * cin * 9;
+                for ky in 0..3usize {
+                    let sy = (y + ky).wrapping_sub(1);
+                    if sy >= h {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let sx = (x + kx).wrapping_sub(1);
+                        if sx >= wd {
+                            continue;
+                        }
+                        let abase = (sy * wd + sx) * cin;
+                        let koff = ky * 3 + kx;
+                        for ci in 0..cin {
+                            gw[wbase + ci * 9 + koff] += d * a[abase + ci];
+                            if let Some(dd) = da.as_deref_mut() {
+                                dd[abase + ci] += d * w[wbase + ci * 9 + koff];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2x2 average pooling over an HWC image (`h`, `wd` must be even).
+pub fn avgpool2_forward(a: &[f32], out: &mut [f32], h: usize, wd: usize, c: usize) {
+    assert!(h % 2 == 0 && wd % 2 == 0, "avgpool2 needs even dims");
+    assert_eq!(a.len(), h * wd * c, "avgpool input shape");
+    assert_eq!(out.len(), (h / 2) * (wd / 2) * c, "avgpool output shape");
+    let w2 = wd / 2;
+    for y in 0..h / 2 {
+        for x in 0..w2 {
+            for ch in 0..c {
+                let s = a[((2 * y) * wd + 2 * x) * c + ch]
+                    + a[((2 * y) * wd + 2 * x + 1) * c + ch]
+                    + a[((2 * y + 1) * wd + 2 * x) * c + ch]
+                    + a[((2 * y + 1) * wd + 2 * x + 1) * c + ch];
+                out[(y * w2 + x) * c + ch] = 0.25 * s;
+            }
+        }
+    }
+}
+
+/// Backward of [`avgpool2_forward`]: each output grad spreads equally
+/// over its 2x2 window. `h`, `wd` are the *input* dims; `da` is
+/// overwritten in full.
+pub fn avgpool2_backward(dy: &[f32], da: &mut [f32], h: usize, wd: usize, c: usize) {
+    assert_eq!(dy.len(), (h / 2) * (wd / 2) * c, "avgpool dy shape");
+    assert_eq!(da.len(), h * wd * c, "avgpool da shape");
+    let w2 = wd / 2;
+    for y in 0..h {
+        for x in 0..wd {
+            for ch in 0..c {
+                da[(y * wd + x) * c + ch] = 0.25 * dy[((y / 2) * w2 + x / 2) * c + ch];
+            }
+        }
+    }
+}
+
+/// ReLU forward, in place.
+pub fn relu_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: zero the upstream grads wherever the (post-ReLU)
+/// activation was clamped.
+pub fn relu_backward_mask(out: &[f32], dy: &mut [f32]) {
+    assert_eq!(out.len(), dy.len(), "relu mask shape");
+    for (d, &o) in dy.iter_mut().zip(out) {
+        if o <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Numerically-stable softmax cross-entropy for one sample. Returns
+/// `(loss, correct, dlogits)`. Argmax tie-breaking (last max wins)
+/// deliberately matches `MockExecutor` so the parity tests can compare
+/// `correct_sum` exactly.
+pub fn softmax_xent(logits: &[f32], label: usize) -> (f32, bool, Vec<f32>) {
+    assert!(label < logits.len(), "label out of range");
+    let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - maxl).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let loss = z.ln() + maxl - logits[label];
+    // total_cmp orders like partial_cmp on real values but cannot panic
+    // on NaN logits (a diverged run must surface as bad numbers in the
+    // returned loss, not kill a worker thread).
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap()
+        .0;
+    let mut d: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+    d[label] -= 1.0;
+    (loss, argmax == label, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(seed)
+    }
+
+    fn rand_vec(n: usize, scale: f32, r: &mut Xoshiro256) -> Vec<f32> {
+        (0..n).map(|_| (2.0 * r.next_f32() - 1.0) * scale).collect()
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn dense_forward_matches_matmul() {
+        let mut r = rng(1);
+        let (input, output) = (7, 5);
+        let w = rand_vec(input * output, 1.0, &mut r);
+        let a = rand_vec(input, 1.0, &mut r);
+        let mut out = vec![0f32; output];
+        dense_forward(&w, None, &a, &mut out);
+        let mut mm = vec![0f32; output];
+        matmul(&w, &a, output, input, 1, &mut mm);
+        for (x, y) in out.iter().zip(&mm) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    /// Central finite differences of `f` at `xs[i]`.
+    fn fdiff<F: FnMut(&[f32]) -> f32>(xs: &[f32], i: usize, eps: f32, mut f: F) -> f32 {
+        let mut hi = xs.to_vec();
+        hi[i] += eps;
+        let mut lo = xs.to_vec();
+        lo[i] -= eps;
+        (f(&hi) - f(&lo)) / (2.0 * eps)
+    }
+
+    #[test]
+    fn dense_backward_matches_finite_differences() {
+        let mut r = rng(2);
+        let (input, output) = (6, 4);
+        let w = rand_vec(input * output, 0.6, &mut r);
+        let b = rand_vec(output, 0.3, &mut r);
+        let a = rand_vec(input, 1.0, &mut r);
+        // Scalar objective: L = c · (W a + b).
+        let c = rand_vec(output, 1.0, &mut r);
+        let loss = |wv: &[f32], bv: &[f32], av: &[f32]| -> f32 {
+            let mut y = vec![0f32; output];
+            dense_forward(wv, Some(bv), av, &mut y);
+            y.iter().zip(&c).map(|(yi, ci)| yi * ci).sum()
+        };
+        let mut gw = vec![0f32; w.len()];
+        let mut gb = vec![0f32; b.len()];
+        let mut da = vec![0f32; a.len()];
+        dense_backward(&w, &a, &c, &mut gw, Some(&mut gb), Some(&mut da));
+        let eps = 1e-2;
+        for i in 0..w.len() {
+            let num = fdiff(&w, i, eps, |wv| loss(wv, &b, &a));
+            assert!((gw[i] - num).abs() < 2e-2, "gw[{i}]: {} vs {num}", gw[i]);
+        }
+        for i in 0..b.len() {
+            let num = fdiff(&b, i, eps, |bv| loss(&w, bv, &a));
+            assert!((gb[i] - num).abs() < 2e-2, "gb[{i}]: {} vs {num}", gb[i]);
+        }
+        for i in 0..a.len() {
+            let num = fdiff(&a, i, eps, |av| loss(&w, &b, av));
+            assert!((da[i] - num).abs() < 2e-2, "da[{i}]: {} vs {num}", da[i]);
+        }
+    }
+
+    #[test]
+    fn conv_backward_matches_finite_differences() {
+        let (h, wd, cin, cout) = (4usize, 4usize, 2usize, 3usize);
+        let mut r = rng(3);
+        let w = rand_vec(cout * cin * 9, 0.4, &mut r);
+        let b = rand_vec(cout, 0.2, &mut r);
+        let a = rand_vec(h * wd * cin, 1.0, &mut r);
+        let c = rand_vec(h * wd * cout, 1.0, &mut r);
+        let loss = |wv: &[f32], av: &[f32]| -> f32 {
+            let mut y = vec![0f32; h * wd * cout];
+            conv3x3_forward(wv, &b, av, &mut y, h, wd, cin, cout);
+            y.iter().zip(&c).map(|(yi, ci)| yi * ci).sum()
+        };
+        let mut gw = vec![0f32; w.len()];
+        let mut gb = vec![0f32; b.len()];
+        let mut da = vec![0f32; a.len()];
+        conv3x3_backward(&w, &a, &c, &mut gw, &mut gb, Some(&mut da), h, wd, cin, cout);
+        let eps = 1e-2;
+        for i in 0..w.len() {
+            let num = fdiff(&w, i, eps, |wv| loss(wv, &a));
+            assert!((gw[i] - num).abs() < 3e-2, "gw[{i}]: {} vs {num}", gw[i]);
+        }
+        for i in 0..a.len() {
+            let num = fdiff(&a, i, eps, |av| loss(&w, av));
+            assert!((da[i] - num).abs() < 3e-2, "da[{i}]: {} vs {num}", da[i]);
+        }
+        // gb is just the per-channel sum of dy.
+        for co in 0..cout {
+            let expect: f32 = (0..h * wd).map(|p| c[p * cout + co]).sum();
+            assert!((gb[co] - expect).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn avgpool_roundtrip_and_gradient() {
+        let (h, wd, c) = (4usize, 4usize, 2usize);
+        let mut r = rng(4);
+        let a = rand_vec(h * wd * c, 1.0, &mut r);
+        let mut out = vec![0f32; (h / 2) * (wd / 2) * c];
+        avgpool2_forward(&a, &mut out, h, wd, c);
+        // A constant image pools to the same constant.
+        let ones = vec![1.5f32; h * wd * c];
+        let mut pooled = vec![0f32; out.len()];
+        avgpool2_forward(&ones, &mut pooled, h, wd, c);
+        assert!(pooled.iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        // Backward spreads each grad by 1/4: column sums preserved.
+        let dy = rand_vec(out.len(), 1.0, &mut r);
+        let mut da = vec![0f32; a.len()];
+        avgpool2_backward(&dy, &mut da, h, wd, c);
+        let dy_sum: f32 = dy.iter().sum();
+        let da_sum: f32 = da.iter().sum();
+        assert!((dy_sum - da_sum).abs() < 1e-4, "{dy_sum} vs {da_sum}");
+    }
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut xs = vec![-1.0f32, 0.0, 2.0, -0.5, 3.0];
+        relu_inplace(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.0, 2.0, 0.0, 3.0]);
+        let mut dy = vec![1.0f32; 5];
+        relu_backward_mask(&xs, &mut dy);
+        assert_eq!(dy, vec![0.0, 0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_xent_properties() {
+        let logits = [0.3f32, -1.0, 2.0];
+        let (loss, correct, d) = softmax_xent(&logits, 2);
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!(correct);
+        // dlogits sums to zero and d[label] < 0.
+        let s: f32 = d.iter().sum();
+        assert!(s.abs() < 1e-6, "sum={s}");
+        assert!(d[2] < 0.0 && d[0] > 0.0);
+        // Wrong label: not correct, higher loss.
+        let (loss0, correct0, _) = softmax_xent(&logits, 1);
+        assert!(!correct0);
+        assert!(loss0 > loss);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_matches_finite_differences() {
+        let logits = vec![0.5f32, -0.2, 1.1, 0.0];
+        let (_, _, d) = softmax_xent(&logits, 1);
+        let eps = 1e-2;
+        for i in 0..logits.len() {
+            let mut hi = logits.clone();
+            hi[i] += eps;
+            let mut lo = logits.clone();
+            lo[i] -= eps;
+            let num = (softmax_xent(&hi, 1).0 - softmax_xent(&lo, 1).0) / (2.0 * eps);
+            assert!((d[i] - num).abs() < 1e-3, "d[{i}]: {} vs {num}", d[i]);
+        }
+    }
+
+    #[test]
+    fn tensor_helpers() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        let u = Tensor::from_vec(vec![1.0; 12], &[3, 4]);
+        assert_eq!(u.shape, vec![3, 4]);
+        let mut r = rng(5);
+        let he = Tensor::he_uniform(&[8, 4], 4, &mut r);
+        let lim = (6.0f32 / 4.0).sqrt();
+        assert!(he.data.iter().all(|&v| v.abs() <= lim));
+        assert!(he.data.iter().any(|&v| v != 0.0));
+    }
+}

@@ -243,6 +243,10 @@ pub struct TrainConfig {
     /// Physical batch cap (memory bound; Poisson batches are trimmed/padded
     /// to at most this many examples per executable call).
     pub physical_batch: usize,
+    /// Execution backend: "native" (pure-Rust engine, default — needs no
+    /// artifacts), "pjrt" (AOT artifacts + XLA runtime), or "mock"
+    /// (logistic regression with simulated quantization damage).
+    pub backend: String,
 }
 
 impl Default for TrainConfig {
@@ -273,6 +277,7 @@ impl Default for TrainConfig {
             val_size: 1024,
             seed: 0,
             physical_batch: 64,
+            backend: "native".into(),
         }
     }
 }
@@ -312,6 +317,7 @@ impl TrainConfig {
             val_size: cf.i64_or(sec, "val_size", d.val_size as i64) as usize,
             seed: cf.i64_or(sec, "seed", d.seed as i64) as u64,
             physical_batch: cf.i64_or(sec, "physical_batch", d.physical_batch as i64) as usize,
+            backend: cf.str_or(sec, "backend", &d.backend),
         })
     }
 
@@ -385,6 +391,10 @@ alphas = [1.5, 2.0, 3.0]
         // Missing keys fall back to defaults.
         assert_eq!(tc.analysis_reps, 2);
         assert!((tc.sigma_measure - 0.5).abs() < 1e-12);
+        assert_eq!(tc.backend, "native");
+        // Explicit backend keys resolve.
+        let cf = ConfigFile::parse("[train]\nbackend = \"pjrt\"\n").unwrap();
+        assert_eq!(TrainConfig::from_file(&cf).unwrap().backend, "pjrt");
     }
 
     #[test]

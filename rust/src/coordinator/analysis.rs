@@ -34,7 +34,7 @@ pub struct AnalysisReport {
 /// caller at rate |B|/|D|); `weights` is the *current* model, restored
 /// after every probe.
 #[allow(clippy::too_many_arguments)]
-pub fn compute_loss_impact<E: StepExecutor>(
+pub fn compute_loss_impact<E: StepExecutor + ?Sized>(
     exec: &E,
     cfg: &TrainConfig,
     weights: &[Vec<f32>],

@@ -81,7 +81,7 @@ pub struct TrainResult {
 }
 
 /// Evaluate `weights` over a full dataset; returns (mean loss, accuracy).
-pub fn evaluate<E: StepExecutor>(
+pub fn evaluate<E: StepExecutor + ?Sized>(
     exec: &E,
     weights: &[Vec<f32>],
     ds: &Dataset,
@@ -102,7 +102,7 @@ pub fn evaluate<E: StepExecutor>(
 /// (DPQuant only), then SELECTTARGETS a policy for the epoch, then run
 /// the epoch's Poisson-sampled DP-SGD steps with the policy's
 /// `quant_mask`; truncate when the privacy budget is exhausted.
-pub fn train<E: StepExecutor>(
+pub fn train<E: StepExecutor + ?Sized>(
     exec: &E,
     cfg: &TrainConfig,
     train_ds: &Dataset,
@@ -229,11 +229,24 @@ pub fn train<E: StepExecutor>(
             // Poisson batches can exceed the physical batch: chunk and
             // accumulate the clipped-grad sums (exact — the sum is linear).
             let mut agg: Option<Vec<Vec<f32>>> = None;
-            let seed = (cfg.seed as usize * 1_000_003 + epoch * 10_007 + step) as f32;
+            let step_base = (cfg.seed as usize)
+                .wrapping_mul(1_000_003)
+                .wrapping_add(epoch * 10_007 + step);
             let mut step_rawsum = 0f64;
             let mut step_rawmax = 0f64;
-            for b in make_batches(train_ds, &idx, exec.physical_batch()) {
-                let out = exec.train_step(&weights, &b.x, &b.y, &b.mask, &quant_mask, seed)?;
+            // Each physical chunk gets a distinct seed so per-sample
+            // stochastic-rounding streams never collide across chunks of
+            // one logical step (executors key their RNG on (seed, row)
+            // with row < physical_batch ≤ the 4096 stride). Seeds travel
+            // as f32 (the compiled graphs take a scalar f32 input), so
+            // reduce mod 2^24 *after* the chunk offset — every value
+            // stays in f32's exact-integer range and never rounds.
+            for (ci, b) in make_batches(train_ds, &idx, exec.physical_batch())
+                .into_iter()
+                .enumerate()
+            {
+                let chunk_seed = (step_base.wrapping_add(ci * 4096) % (1 << 24)) as f32;
+                let out = exec.train_step(&weights, &b.x, &b.y, &b.mask, &quant_mask, chunk_seed)?;
                 train_loss_sum += out.loss_sum as f64;
                 train_count += b.real as f64;
                 step_rawsum += out.raw_norm_sum as f64;

@@ -15,11 +15,11 @@ pub mod figs;
 pub mod perf;
 pub mod tables;
 
+use crate::backend;
 use crate::cli::Args;
 use crate::config::TrainConfig;
 use crate::coordinator::{train, StepExecutor, TrainResult, TrainerOptions};
 use crate::data::{self, Dataset};
-use crate::runtime::{LoadedGraph, Runtime};
 use crate::util::error::{err, Error, Result};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -61,10 +61,11 @@ pub fn run(args: &Args) -> Result<()> {
     }
 }
 
-/// Shared experiment context: one Runtime + one loaded graph + datasets,
-/// reused across the (many) runs of one experiment.
+/// Shared experiment context: one executor (native by default, PJRT or
+/// mock via `--backend`) + datasets, reused across the (many) runs of
+/// one experiment.
 pub struct ExpCtx {
-    pub graph: LoadedGraph,
+    pub exec: Box<dyn StepExecutor>,
     pub train_ds: Dataset,
     pub val_ds: Dataset,
     pub base: TrainConfig,
@@ -101,15 +102,19 @@ impl ExpCtx {
             .f64_or("noise-multiplier", base.noise_multiplier)
             .map_err(Error::msg)?;
         base.lr = args.f64_or("lr", base.lr).map_err(Error::msg)?;
+        base.backend = args.str_or("backend", &base.backend);
 
-        let rt = Runtime::open(args.str_or("artifacts", "artifacts"))?;
-        let tag = format!("{}_{}_{}", model, dataset, quantizer);
-        let graph = rt.load(&tag)?;
         let full = data::generate(&dataset, base.dataset_size + base.val_size, 12345)
             .map_err(Error::msg)?;
         let (train_ds, val_ds) = full.split(base.val_size);
+        let exec = backend::open_executor(
+            &base,
+            train_ds.example_numel,
+            train_ds.n_classes,
+            &args.str_or("artifacts", "artifacts"),
+        )?;
         Ok(Self {
-            graph,
+            exec,
             train_ds,
             val_ds,
             base,
@@ -124,7 +129,7 @@ impl ExpCtx {
             collect_step_stats: stats,
             verbose: false,
         };
-        train(&self.graph, cfg, &self.train_ds, &self.val_ds, &opts)
+        train(self.exec.as_ref(), cfg, &self.train_ds, &self.val_ds, &opts)
     }
 
     /// Baseline sweep: `seeds` runs of `scheduler`, returning best
@@ -151,7 +156,7 @@ impl ExpCtx {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.graph.n_quant_layers()
+        self.exec.n_quant_layers()
     }
 }
 

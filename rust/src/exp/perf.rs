@@ -44,28 +44,29 @@ pub fn fig6(args: &Args) -> Result<()> {
 }
 
 /// Measure our own runtime decomposition (Table 14 analogue): time the
-/// compiled graph (fwd+bwd+clip), the noise draw, the optimizer update,
-/// and batch assembly, then feed the same Fig-6 model.
+/// executor's fused step (fwd+bwd+clip), the noise draw, the optimizer
+/// update, and batch assembly, then feed the same Fig-6 model.
 pub fn tab14(args: &Args) -> Result<()> {
     let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
-    let graph = &ctx.graph;
-    let b = graph.physical_batch();
+    let exec = ctx.exec.as_ref();
+    let b = exec.physical_batch();
     let batches = crate::data::eval_batches(&ctx.train_ds, b);
     let batch = &batches[0];
-    let mask = vec![1f32; graph.n_quant_layers()];
+    let mask = vec![1f32; exec.n_quant_layers()];
     let reps = args.usize_or("reps", 10).map_err(Error::msg)?;
 
-    // Graph time (forward + backward + per-sample clip, inside XLA).
-    let w = graph.initial_weights();
-    graph.train_step(&w, &batch.x, &batch.y, &batch.mask, &mask, 0.0)?; // warmup
+    // Step time (forward + backward + per-sample clip, inside the
+    // executor — XLA for pjrt, the pure-Rust engine for native).
+    let w = exec.initial_weights();
+    exec.train_step(&w, &batch.x, &batch.y, &batch.mask, &mask, 0.0)?; // warmup
     let t0 = std::time::Instant::now();
     for i in 0..reps {
-        graph.train_step(&w, &batch.x, &batch.y, &batch.mask, &mask, i as f32)?;
+        exec.train_step(&w, &batch.x, &batch.y, &batch.mask, &mask, i as f32)?;
     }
     let t_graph = t0.elapsed().as_secs_f64() / reps as f64;
 
     // Noise generation over all params (the DP mechanism).
-    let sizes = graph.param_sizes();
+    let sizes = exec.param_sizes();
     let mut gaus = crate::util::gaussian::GaussianSampler::seed_from_u64(1);
     let mut bufs: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0f32; n]).collect();
     let t0 = std::time::Instant::now();
@@ -77,7 +78,7 @@ pub fn tab14(args: &Args) -> Result<()> {
     let t_noise = t0.elapsed().as_secs_f64() / reps as f64;
 
     // Optimizer scale + update (SGD arithmetic).
-    let mut weights = graph.initial_weights();
+    let mut weights = exec.initial_weights();
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
         for (wt, g) in weights.iter_mut().zip(&bufs) {

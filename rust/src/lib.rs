@@ -13,9 +13,16 @@
 //!   optimizers, the RDP privacy accountant, data pipeline, experiment
 //!   harness and CLI. Python never runs on the training path.
 //!
+//! The [`backend`] module additionally provides a **native pure-Rust
+//! execution engine** (`--backend native`, the default): real
+//! forward/backward passes with exact per-sample gradients and the
+//! `quant/` kernels applied on the live compute path — so training,
+//! experiments and benches run end-to-end with zero artifacts.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+pub mod backend;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -3,23 +3,31 @@
 //! Subcommands:
 //!   train            — run one training job (scheduler, model, dataset
 //!                      and DP parameters from flags or --config file)
-//!   eval-only        — load a graph and evaluate its initial weights
+//!   eval-only        — evaluate a model's initial weights
 //!   list             — list compiled graphs in the artifact manifest
 //!   accountant       — privacy-accountant utilities (`--dump` emits RDP
 //!                      values for the Python numerical-integration
 //!                      oracle; otherwise composes a training schedule)
 //!   exp <id>         — regenerate a paper table/figure (fig1a..tab14)
-//!   bench-step       — time the compiled train step (perf harness)
+//!   bench-step       — time one train step, fp32 vs fully quantized
+//!
+//! Every model-executing subcommand takes `--backend native|pjrt|mock`.
+//! The default, `native`, is the pure-Rust engine in `backend/` — real
+//! forward/backward with per-sample clipping and on-path quantizers,
+//! needing **no artifacts**. `pjrt` targets the AOT artifacts + XLA
+//! runtime (requires `make artifacts` and a vendored `xla` crate).
 //!
 //! Examples:
 //!   dpquant train --model miniconvnet --dataset gtsrb --scheduler dpquant \
 //!       --quant-fraction 0.9 --epochs 12 --target-epsilon 8
+//!   dpquant train --backend native --model mlp --dataset cifar
 //!   dpquant exp fig3
 //!   dpquant exp tab1 --scale 0.25
 
+use dpquant::backend;
 use dpquant::cli::Args;
 use dpquant::config::{ConfigFile, OptimizerKind, TrainConfig};
-use dpquant::coordinator::{train, TrainerOptions};
+use dpquant::coordinator::{train, StepExecutor, TrainerOptions};
 use dpquant::data;
 use dpquant::exp;
 use dpquant::privacy::{default_alphas, rdp_sgm_step, rdp_to_epsilon, RdpAccountant};
@@ -50,7 +58,10 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bench-step") => cmd_bench_step(args),
         Some(other) => Err(err!("unknown command '{other}' (see README)")),
         None => {
-            println!("usage: dpquant <train|eval-only|list|accountant|exp|bench-step> [flags]");
+            println!(
+                "usage: dpquant <train|eval-only|list|accountant|exp|bench-step> [flags]\n\
+                 model-executing commands take --backend native|pjrt|mock (default: native)"
+            );
             Ok(())
         }
     }
@@ -111,6 +122,9 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     if args.has_flag("no-ema") {
         cfg.ema_enabled = false;
     }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = v.to_string();
+    }
     Ok(cfg)
 }
 
@@ -120,19 +134,27 @@ fn artifacts_dir(args: &Args) -> String {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::open(artifacts_dir(args))?;
-    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
-    let graph = rt.load(&tag)?;
-
     let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
         .map_err(Error::msg)?;
     let (train_ds, val_ds) = full.split(cfg.val_size);
+    let exec = backend::open_executor(
+        &cfg,
+        train_ds.example_numel,
+        train_ds.n_classes,
+        &artifacts_dir(args),
+    )?;
 
     let opts = TrainerOptions {
         collect_step_stats: args.has_flag("stats"),
         verbose: !args.has_flag("quiet"),
     };
-    let res = train(&graph, &cfg, &train_ds, &val_ds, &opts)?;
+    if opts.verbose {
+        println!(
+            "backend={} model={} dataset={} quantizer={} scheduler={}",
+            cfg.backend, cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler
+        );
+    }
+    let res = train(exec.as_ref(), &cfg, &train_ds, &val_ds, &opts)?;
     println!(
         "final: val_acc={:.4} eps={:.3} (analysis eps alone: {:.3}) epochs={}",
         res.record.final_accuracy,
@@ -147,12 +169,11 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval_only(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::open(artifacts_dir(args))?;
-    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
-    let graph = rt.load(&tag)?;
     let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed).map_err(Error::msg)?;
-    let (loss, acc) = dpquant::coordinator::trainer::evaluate(&graph, &graph.init_weights, &ds)?;
-    println!("init weights: loss={loss:.4} acc={acc:.4}");
+    let exec = backend::open_executor(&cfg, ds.example_numel, ds.n_classes, &artifacts_dir(args))?;
+    let weights = exec.initial_weights();
+    let (loss, acc) = dpquant::coordinator::trainer::evaluate(exec.as_ref(), &weights, &ds)?;
+    println!("init weights ({} backend): loss={loss:.4} acc={acc:.4}", cfg.backend);
     Ok(())
 }
 
@@ -226,34 +247,37 @@ fn cmd_accountant(args: &Args) -> Result<()> {
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::open(artifacts_dir(args))?;
-    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
-    let graph = rt.load(&tag)?;
-    let b = graph.batch();
+    let ds_probe = data::generate(&cfg.dataset, 1, cfg.seed).map_err(Error::msg)?;
+    let exec = backend::open_executor(
+        &cfg,
+        ds_probe.example_numel,
+        ds_probe.n_classes,
+        &artifacts_dir(args),
+    )?;
+    let b = exec.physical_batch();
     let ds = data::generate(&cfg.dataset, b, cfg.seed).map_err(Error::msg)?;
     let batches = data::eval_batches(&ds, b);
     let batch = &batches[0];
-    let mask = vec![1f32; graph.info.n_quant_layers];
+    let nl = exec.n_quant_layers();
     let reps = args.usize_or("reps", 20).map_err(Error::msg)?;
+    let weights = exec.initial_weights();
+    let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
 
-    // Warmup.
-    graph.train_step(&graph.init_weights, &batch.x, &batch.y, &batch.mask, &mask, 0.0)?;
-    let t0 = std::time::Instant::now();
-    for i in 0..reps {
-        graph.train_step(
-            &graph.init_weights,
-            &batch.x,
-            &batch.y,
-            &batch.mask,
-            &mask,
-            i as f32,
-        )?;
+    // fp32 step vs fully-quantized step, so the quantization overhead
+    // (or the modeled low-precision speedup target) is visible directly.
+    for (label, mask) in [("fp32", vec![0f32; nl]), ("quantized", vec![1f32; nl])] {
+        exec.train_step(&weights, &batch.x, &batch.y, &batch.mask, &mask, 0.0)?; // warmup
+        let t0 = std::time::Instant::now();
+        for i in 0..reps {
+            exec.train_step(&weights, &batch.x, &batch.y, &batch.mask, &mask, i as f32)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "{tag} [{} backend, {label}]: train_step {:.2} ms/batch ({b} examples, {:.1} ex/s)",
+            cfg.backend,
+            per * 1e3,
+            b as f64 / per
+        );
     }
-    let per = t0.elapsed().as_secs_f64() / reps as f64;
-    println!(
-        "{tag}: train_step {:.2} ms/batch ({b} examples, {:.1} ex/s)",
-        per * 1e3,
-        b as f64 / per
-    );
     Ok(())
 }

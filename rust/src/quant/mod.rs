@@ -13,7 +13,12 @@ pub mod fp8;
 use crate::util::rng::Xoshiro256;
 
 /// A tensor quantizer: quantize-dequantize a slice in place.
-pub trait Quantizer {
+///
+/// `Send + Sync` is a supertrait so trait objects can be shared across
+/// the native backend's scoped worker threads (all implementations are
+/// stateless unit structs; per-call randomness comes from the `rng`
+/// argument).
+pub trait Quantizer: Send + Sync {
     /// Short identifier (matches artifact naming: luq4 / uniform4 / fp8).
     fn name(&self) -> &'static str;
     /// Nominal bit width (speedup modeling).

@@ -26,8 +26,12 @@ impl Runtime {
     pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`?"))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {manifest_path:?} — run `make artifacts`? (`--backend native` \
+                 trains without any artifacts)"
+            )
+        })?;
         let manifest = Manifest::parse(&text).map_err(|e| err!("manifest: {e}"))?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Self {

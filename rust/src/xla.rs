@@ -9,10 +9,12 @@
 //!
 //! In practice nothing ever reaches those errors unless real artifacts
 //! exist: [`crate::runtime::Runtime::open`] fails earlier (and the test
-//! suite skips, loudly) when `artifacts/manifest.json` is absent. When a
-//! real `xla` crate is vendored, delete this module, add the dependency,
-//! and drop the `use crate::xla;` line in `runtime/mod.rs` — no other
-//! code changes.
+//! suite skips, loudly) when `artifacts/manifest.json` is absent. The
+//! **working offline path is `--backend native`** — the pure-Rust engine
+//! in [`crate::backend`] executes real training steps with no artifacts
+//! and no PJRT at all. When a real `xla` crate is vendored, delete this
+//! module, add the dependency, and drop the `use crate::xla;` line in
+//! `runtime/mod.rs` — no other code changes.
 
 use std::fmt;
 
@@ -33,8 +35,9 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 fn unavailable(what: &str) -> Error {
     Error(format!(
-        "{what}: no PJRT/XLA backend in this build (offline stub — vendor the real `xla` \
-         crate to execute compiled graphs)"
+        "{what}: no PJRT/XLA backend in this build (offline stub — use `--backend native` \
+         for the pure-Rust training engine, or vendor the real `xla` crate to execute \
+         compiled graphs)"
     ))
 }
 

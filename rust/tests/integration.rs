@@ -2,7 +2,10 @@
 //!
 //! These require `make artifacts` (they are skipped, loudly, when the
 //! artifact directory is missing — CI without Python can still run the
-//! pure-Rust suite).
+//! pure-Rust suite). The same coordinator loop is exercised **without
+//! artifacts** by `tests/native_backend.rs` via the default
+//! `--backend native` engine, so `cargo test -q` always covers the full
+//! train path end to end.
 
 use dpquant::config::{OptimizerKind, TrainConfig};
 use dpquant::coordinator::{train, StepExecutor, TrainerOptions};
@@ -13,7 +16,10 @@ use dpquant::runtime::Runtime;
 fn open_runtime() -> Option<Runtime> {
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        eprintln!(
+            "SKIP: artifacts/ missing — run `make artifacts` (the native-backend tests \
+             cover the offline path)"
+        );
         return None;
     }
     // Artifacts alone are not enough: executing them needs a real PJRT
@@ -21,7 +27,10 @@ fn open_runtime() -> Option<Runtime> {
     match Runtime::open(&dir) {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("SKIP: artifacts present but runtime unavailable: {e:#}");
+            eprintln!(
+                "SKIP: artifacts present but runtime unavailable (use `--backend native` \
+                 for artifact-free runs): {e:#}"
+            );
             None
         }
     }
