@@ -9,7 +9,7 @@ use dpquant::config::{OptimizerKind, TrainConfig};
 use dpquant::coordinator::{train, TrainerOptions};
 use dpquant::data;
 use dpquant::runtime::Runtime;
-use dpquant::util::error::{Error, Result};
+use dpquant::util::error::Result;
 
 fn main() -> Result<()> {
     let mut cfg = TrainConfig {
@@ -30,7 +30,7 @@ fn main() -> Result<()> {
 
     let rt = Runtime::open("artifacts")?;
     let graph = rt.load("tinytransformer_snli_luq4")?;
-    let full = data::generate("snli", cfg.dataset_size + cfg.val_size, 7).map_err(Error::msg)?;
+    let full = data::generate("snli", cfg.dataset_size + cfg.val_size, 7)?;
     let (train_ds, val_ds) = full.split(cfg.val_size);
 
     println!("== DP-AdamW + DPQuant on SNLI-like sequence pairs ==");

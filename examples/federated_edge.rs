@@ -11,7 +11,7 @@ use dpquant::coordinator::{train, TrainerOptions};
 use dpquant::data;
 use dpquant::perfmodel::SpeedupModel;
 use dpquant::runtime::Runtime;
-use dpquant::util::error::{Error, Result};
+use dpquant::util::error::Result;
 
 fn main() -> Result<()> {
     let cfg_base = TrainConfig {
@@ -30,8 +30,7 @@ fn main() -> Result<()> {
 
     let rt = Runtime::open("artifacts")?;
     let graph = rt.load("miniconvnet_emnist_luq4")?;
-    let full = data::generate("emnist", cfg_base.dataset_size + cfg_base.val_size, 3)
-        .map_err(Error::msg)?;
+    let full = data::generate("emnist", cfg_base.dataset_size + cfg_base.val_size, 3)?;
     let (train_ds, val_ds) = full.split(cfg_base.val_size);
 
     println!("== Federated edge: 90% of layers must run in FP4 ==");

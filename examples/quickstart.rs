@@ -3,9 +3,18 @@
 //! Builds the native pure-Rust execution backend (real forward/backward
 //! passes, exact per-sample gradient clipping, LUQ-FP4 kernels on the
 //! live compute path), generates a synthetic GTSRB-like dataset, and
-//! trains the mini CNN with the full DPQuant scheduler (Algorithm 1
+//! drives a [`TrainSession`] — the resumable training state machine —
+//! epoch by epoch with the full DPQuant scheduler (Algorithm 1
 //! loss-impact analysis + Algorithm 2 probabilistic layer selection)
-//! under a fixed privacy budget, logging the loss curve and ε per epoch.
+//! under a fixed privacy budget.
+//!
+//! Along the way it demonstrates the session API's three pillars:
+//! * **observability** — a custom [`EventSink`] logs analyses and
+//!   epochs from the typed event stream (no flags, no println taps);
+//! * **checkpointing** — the run snapshots itself at the halfway mark
+//!   and proves `resume` continues bit-exactly;
+//! * **stepping** — `step_epoch()` hands control back every epoch, the
+//!   hook later PRs use for job multiplexing and early stopping.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -15,9 +24,42 @@
 
 use dpquant::backend::NativeExecutor;
 use dpquant::config::TrainConfig;
-use dpquant::coordinator::{train, TrainerOptions};
+use dpquant::coordinator::{EpochOutcome, EventSink, TrainEvent, TrainSession};
 use dpquant::data;
-use dpquant::util::error::{Error, Result};
+use dpquant::util::error::Result;
+
+/// A sink that narrates the run from the typed event stream.
+struct Narrator;
+
+impl EventSink for Narrator {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        match event {
+            TrainEvent::AnalysisCompleted { epoch, impacts, .. } => {
+                let worst = impacts
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(l, _)| l)
+                    .unwrap_or(0);
+                println!("  [epoch {epoch}] loss-impact analysis: layer {worst} most sensitive");
+            }
+            TrainEvent::EpochCompleted { record } => {
+                println!(
+                    "  epoch {:>2}  loss {:.4}  val_acc {:.3}  eps {:.3}  layers {:?}",
+                    record.epoch,
+                    record.train_loss,
+                    record.val_accuracy,
+                    record.epsilon,
+                    record.quantized_layers
+                );
+            }
+            TrainEvent::Truncated { epoch, epsilon, .. } => {
+                println!("  [epoch {epoch}] privacy budget reached (eps {epsilon:.3}); stopping");
+            }
+            _ => {}
+        }
+    }
+}
 
 fn main() -> Result<()> {
     let cfg = TrainConfig {
@@ -43,31 +85,65 @@ fn main() -> Result<()> {
         cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler, cfg.quant_fraction
     );
 
-    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
-        .map_err(Error::msg)?;
+    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)?;
     let (train_ds, val_ds) = full.split(cfg.val_size);
     let exec = NativeExecutor::from_config(&cfg, train_ds.example_numel, train_ds.n_classes)?;
 
-    let opts = TrainerOptions {
-        collect_step_stats: false,
-        verbose: true,
-    };
-    let res = train(&exec, &cfg, &train_ds, &val_ds, &opts)?;
+    // The session owns all cross-epoch state; we own the loop.
+    let mut session = TrainSession::builder(cfg.clone()).build(&exec, &train_ds)?;
+    let mut narrator = Narrator;
+    let ckpt_path = std::env::temp_dir().join("dpquant_quickstart_ckpt.json");
+    let ckpt_path = ckpt_path.to_string_lossy().to_string();
+    let mut ckpt_written = false;
+    loop {
+        match session.step_epoch(&exec, &train_ds, &val_ds, &mut narrator)? {
+            EpochOutcome::Finished => break,
+            _ => {
+                if !ckpt_written && session.epochs_completed() >= cfg.epochs / 2 {
+                    session.checkpoint(&ckpt_path)?;
+                    ckpt_written = true;
+                    println!("  [checkpoint] full session state -> {ckpt_path}");
+                }
+            }
+        }
+    }
+    let (record, _weights, _accountant) = session.finish();
+
+    // Prove the checkpoint restores bit-exactly: resume from the
+    // mid-run snapshot and finish the run a second time.
+    if ckpt_written {
+        println!("\nresuming from the mid-run checkpoint (should match bit-for-bit):");
+        let mut resumed = TrainSession::resume(&ckpt_path, &exec)?;
+        let mut quiet = dpquant::coordinator::NullSink;
+        resumed.run(&exec, &train_ds, &val_ds, &mut quiet)?;
+        let (rec2, _, _) = resumed.finish();
+        assert_eq!(
+            rec2.final_accuracy.to_bits(),
+            record.final_accuracy.to_bits(),
+            "resume must reproduce the uninterrupted run exactly"
+        );
+        assert_eq!(rec2.final_epsilon.to_bits(), record.final_epsilon.to_bits());
+        println!(
+            "  resumed run: val_acc={:.4} eps={:.3} — identical to the uninterrupted run",
+            rec2.final_accuracy, rec2.final_epsilon
+        );
+        std::fs::remove_file(&ckpt_path).ok();
+    }
 
     println!("\nloss curve:");
-    for e in &res.record.epochs {
+    for e in &record.epochs {
         let bar = "#".repeat((e.train_loss * 12.0).min(60.0) as usize);
         println!("  epoch {:>2}  {:.4} {}", e.epoch, e.train_loss, bar);
     }
     println!(
         "\nfinal: val_acc={:.4} (best {:.4})  eps={:.3} of target {:?}  analysis-eps={:.3}",
-        res.record.final_accuracy,
-        res.record.best_accuracy,
-        res.record.final_epsilon,
+        record.final_accuracy,
+        record.best_accuracy,
+        record.final_epsilon,
         cfg.target_epsilon,
-        res.record.analysis_epsilon,
+        record.analysis_epsilon,
     );
-    let path = res.record.save("results")?;
+    let path = record.save("results")?;
     println!("run record: {path}");
     Ok(())
 }

@@ -2,8 +2,34 @@
 //!
 //! Grammar: `dpquant <command> [subcommand] [--key value]... [--flag]...`
 //! Values are parsed on demand with typed accessors.
+//!
+//! Every accessor returns [`ArgError`], which implements
+//! `std::error::Error`, so call sites propagate with plain `?` into
+//! `util::error::Error` — no `map_err` needed. [`Args::require_known`]
+//! rejects misspelled options (`--quant-fracton`) instead of silently
+//! ignoring them and running the wrong experiment.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A command-line parsing/validation failure. Converts into
+/// `util::error::Error` through the blanket `std::error::Error` impl.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgError(String);
+
+impl ArgError {
+    pub fn new<M: fmt::Display>(msg: M) -> Self {
+        Self(msg.to_string())
+    }
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -18,21 +44,17 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, ArgError> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
                 if name.is_empty() {
-                    return Err("bare '--' not supported".into());
+                    return Err(ArgError::new("bare '--' not supported"));
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let v = it.next().unwrap();
                     out.options.insert(name.to_string(), v);
                 } else {
@@ -45,7 +67,7 @@ impl Args {
         Ok(out)
     }
 
-    pub fn from_env() -> Result<Self, String> {
+    pub fn from_env() -> Result<Self, ArgError> {
         Self::parse(std::env::args().skip(1))
     }
 
@@ -68,42 +90,127 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| format!("--{name} '{v}': {e}")),
+                .map_err(|e| ArgError::new(format!("--{name} '{v}': {e}"))),
         }
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| format!("--{name} '{v}': {e}")),
+                .map_err(|e| ArgError::new(format!("--{name} '{v}': {e}"))),
         }
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgError> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| format!("--{name} '{v}': {e}")),
+                .map_err(|e| ArgError::new(format!("--{name} '{v}': {e}"))),
         }
     }
 
-    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, String> {
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, ArgError> {
         match self.get(name) {
             None => Ok(None),
             Some(v) => v
                 .parse()
                 .map(Some)
-                .map_err(|e| format!("--{name} '{v}': {e}")),
+                .map_err(|e| ArgError::new(format!("--{name} '{v}': {e}"))),
         }
     }
+
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>, ArgError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| ArgError::new(format!("--{name} '{v}': {e}"))),
+        }
+    }
+
+    /// Validate that every parsed option/flag is one the current command
+    /// understands. A misspelled `--quant-fracton 0.9` otherwise runs a
+    /// full-precision job and spends the privacy budget on the wrong
+    /// experiment — this makes it a hard error, with a nearest-match
+    /// suggestion when one is close.
+    pub fn require_known(
+        &self,
+        command: &str,
+        options: &[&str],
+        flags: &[&str],
+    ) -> Result<(), ArgError> {
+        for key in self.options.keys() {
+            if options.iter().any(|&o| o == key) {
+                continue;
+            }
+            if flags.iter().any(|&f| f == key) {
+                return Err(ArgError::new(format!(
+                    "'{command}': --{key} is a flag and does not take a value"
+                )));
+            }
+            return Err(unknown_key_error(command, key, "option", options, flags));
+        }
+        for key in &self.flags {
+            if flags.iter().any(|f| f == key) {
+                continue;
+            }
+            if options.iter().any(|o| o == key) {
+                return Err(ArgError::new(format!(
+                    "'{command}': option --{key} requires a value"
+                )));
+            }
+            return Err(unknown_key_error(command, key, "flag", options, flags));
+        }
+        Ok(())
+    }
+}
+
+fn unknown_key_error(
+    command: &str,
+    key: &str,
+    kind: &str,
+    options: &[&str],
+    flags: &[&str],
+) -> ArgError {
+    let mut msg = format!("'{command}': unknown {kind} --{key}");
+    if let Some(near) = nearest(key, options.iter().chain(flags.iter()).copied()) {
+        msg.push_str(&format!(" (did you mean --{near}?)"));
+    }
+    ArgError::new(msg)
+}
+
+/// Closest known key by edit distance, if within 3 edits.
+fn nearest<'a>(key: &str, known: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    known
+        .map(|k| (edit_distance(key, k), k))
+        .min()
+        .filter(|&(d, _)| d <= 3)
+        .map(|(_, k)| k)
+}
+
+/// Plain Levenshtein distance (keys are short; O(nm) is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -142,7 +249,7 @@ mod tests {
     fn bad_parse_reports_key() {
         let a = parse("x --epochs abc");
         let err = a.usize_or("epochs", 0).unwrap_err();
-        assert!(err.contains("epochs"), "{err}");
+        assert!(err.to_string().contains("epochs"), "{err}");
     }
 
     #[test]
@@ -150,5 +257,64 @@ mod tests {
         let a = parse("train");
         assert_eq!(a.f64_or("lr", 0.25).unwrap(), 0.25);
         assert_eq!(a.f64_opt("target_epsilon").unwrap(), None);
+        assert_eq!(a.usize_opt("epochs").unwrap(), None);
+    }
+
+    #[test]
+    fn known_keys_accepted() {
+        let a = parse("train --epochs 3 --stats");
+        a.require_known("train", &["epochs", "lr"], &["stats", "quiet"])
+            .unwrap();
+    }
+
+    #[test]
+    fn misspelled_option_rejected_with_suggestion() {
+        let a = parse("train --quant-fracton 0.9");
+        let err = a
+            .require_known("train", &["quant-fraction", "epochs"], &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("quant-fracton"), "{err}");
+        assert!(err.contains("did you mean --quant-fraction"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("train --turbo");
+        let err = a
+            .require_known("train", &["epochs"], &["stats"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag --turbo"), "{err}");
+    }
+
+    #[test]
+    fn option_missing_value_reported() {
+        // `--epochs` at the end of the line parses as a flag; validation
+        // recognizes it as a value-taking option and says so.
+        let a = parse("train --epochs");
+        let err = a
+            .require_known("train", &["epochs"], &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("requires a value"), "{err}");
+    }
+
+    #[test]
+    fn flag_with_value_reported() {
+        let a = parse("train --stats yes");
+        let err = a
+            .require_known("train", &["epochs"], &["stats"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not take a value"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("quant-fracton", "quant-fraction"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

@@ -6,6 +6,26 @@
 //! string / bool / int / float / homogeneous scalar arrays, `#` comments.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A config parsing/validation failure. Implements `std::error::Error`,
+/// so call sites propagate with plain `?` into `util::error::Error`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigError(String);
+
+impl ConfigError {
+    pub fn new<M: fmt::Display>(msg: M) -> Self {
+        Self(msg.to_string())
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A scalar or array value from a config file.
 #[derive(Clone, Debug, PartialEq)]
@@ -59,7 +79,7 @@ pub struct ConfigFile {
 }
 
 impl ConfigFile {
-    pub fn parse(text: &str) -> Result<Self, String> {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
@@ -68,25 +88,26 @@ impl ConfigFile {
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
-                let name = rest
-                    .strip_suffix(']')
-                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    ConfigError::new(format!("line {}: unterminated section", lineno + 1))
+                })?;
                 section = name.trim().to_string();
                 continue;
             }
-            let eq = line
-                .find('=')
-                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let eq = line.find('=').ok_or_else(|| {
+                ConfigError::new(format!("line {}: expected key = value", lineno + 1))
+            })?;
             let key = line[..eq].trim().to_string();
             let val = parse_value(line[eq + 1..].trim())
-                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                .map_err(|e| ConfigError::new(format!("line {}: {e}", lineno + 1)))?;
             entries.insert((section.clone(), key), val);
         }
         Ok(Self { entries })
     }
 
-    pub fn load(path: &str) -> Result<Self, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::new(format!("{path}: {e}")))?;
         Self::parse(&text)
     }
 
@@ -166,12 +187,12 @@ pub enum OptimizerKind {
 }
 
 impl OptimizerKind {
-    pub fn parse(s: &str) -> Result<Self, String> {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
         match s.to_ascii_lowercase().as_str() {
             "sgd" | "dp-sgd" | "dpsgd" => Ok(Self::Sgd),
             "adam" | "dp-adam" | "dpadam" => Ok(Self::Adam),
             "adamw" | "dp-adamw" | "dpadamw" => Ok(Self::AdamW),
-            other => Err(format!("unknown optimizer '{other}'")),
+            other => Err(ConfigError::new(format!("unknown optimizer '{other}'"))),
         }
     }
     pub fn name(&self) -> &'static str {
@@ -282,10 +303,78 @@ impl Default for TrainConfig {
     }
 }
 
+/// Every key `TrainConfig::from_file` reads from the `[train]` section.
+/// Anything else in that section is a typo (or a key from a different
+/// version) — `from_file` warns so a misspelled `quant_fracton` cannot
+/// silently run the wrong experiment.
+pub const KNOWN_TRAIN_KEYS: &[&str] = &[
+    "model",
+    "dataset",
+    "quantizer",
+    "epochs",
+    "batch_size",
+    "noise_multiplier",
+    "clip_norm",
+    "lr",
+    "optimizer",
+    "target_epsilon",
+    "delta",
+    "quant_fraction",
+    "scheduler",
+    "beta",
+    "analysis_interval",
+    "analysis_reps",
+    "analysis_samples",
+    "sigma_measure",
+    "clip_measure",
+    "ema_alpha",
+    "ema_enabled",
+    "dataset_size",
+    "val_size",
+    "seed",
+    "physical_batch",
+    "backend",
+];
+
 impl TrainConfig {
+    /// Keys in the `[train]` section that `from_file` does not read.
+    pub fn unknown_keys(cf: &ConfigFile) -> Vec<String> {
+        cf.entries
+            .keys()
+            .filter(|(sec, key)| sec == "train" && !KNOWN_TRAIN_KEYS.contains(&key.as_str()))
+            .map(|(_, key)| key.clone())
+            .collect()
+    }
+
+    /// Sections other than `[train]` that contain trainer keys — almost
+    /// certainly a misspelled section header (`[trian]`, `[Train]`):
+    /// every key inside one is silently dropped by `from_file`.
+    pub fn suspect_sections(cf: &ConfigFile) -> Vec<String> {
+        let mut sections: Vec<String> = cf
+            .entries
+            .keys()
+            .filter(|(sec, key)| sec != "train" && KNOWN_TRAIN_KEYS.contains(&key.as_str()))
+            .map(|(sec, _)| sec.clone())
+            .collect();
+        sections.dedup();
+        sections
+    }
+
     /// Resolve from a parsed file (section `[train]`), falling back to
-    /// defaults for missing keys.
-    pub fn from_file(cf: &ConfigFile) -> Result<Self, String> {
+    /// defaults for missing keys. Unknown keys in `[train]` — and
+    /// non-`[train]` sections that hold trainer keys (a misspelled
+    /// header) — produce a stderr warning: both would otherwise run the
+    /// wrong experiment silently.
+    pub fn from_file(cf: &ConfigFile) -> Result<Self, ConfigError> {
+        for key in Self::unknown_keys(cf) {
+            eprintln!("warning: config key [train] {key} is not recognized and will be ignored");
+        }
+        for sec in Self::suspect_sections(cf) {
+            eprintln!(
+                "warning: section [{sec}] contains trainer keys but only [train] is read — \
+                 did you mean [train]?"
+            );
+        }
         let d = Self::default();
         let sec = "train";
         let optimizer = OptimizerKind::parse(&cf.str_or(sec, "optimizer", d.optimizer.name()))?;
@@ -405,10 +494,100 @@ alphas = [1.5, 2.0, 3.0]
 
     #[test]
     fn errors_are_reported_with_lines() {
-        let err = ConfigFile::parse("[oops\n").unwrap_err();
+        let err = ConfigFile::parse("[oops\n").unwrap_err().to_string();
         assert!(err.contains("line 1"), "{err}");
-        let err = ConfigFile::parse("justkey\n").unwrap_err();
+        let err = ConfigFile::parse("justkey\n").unwrap_err().to_string();
         assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn unknown_train_keys_detected() {
+        let cf = ConfigFile::parse("[train]\nquant_fracton = 0.9\nepochs = 3\n").unwrap();
+        assert_eq!(TrainConfig::unknown_keys(&cf), vec!["quant_fracton".to_string()]);
+        // Keys outside [train] are other subsystems' business.
+        let cf = ConfigFile::parse("[bench]\nreps = 10\n").unwrap();
+        assert!(TrainConfig::unknown_keys(&cf).is_empty());
+        assert!(TrainConfig::suspect_sections(&cf).is_empty());
+        // ...unless they hold trainer keys: that's a misspelled header.
+        let cf = ConfigFile::parse("[trian]\nepochs = 99\nnoise_multiplier = 2.0\n").unwrap();
+        assert_eq!(TrainConfig::suspect_sections(&cf), vec!["trian".to_string()]);
+        // The sample config's keys are all known (minus the alphas array,
+        // which documents the array syntax).
+        let cf = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(TrainConfig::unknown_keys(&cf), vec!["alphas".to_string()]);
+    }
+
+    #[test]
+    fn known_train_keys_are_exactly_what_from_file_reads() {
+        // One entry per KNOWN_TRAIN_KEYS key, every value non-default:
+        // (a) none may be reported unknown, and (b) every resolved field
+        // must differ from the default — so the allow-list and the
+        // `from_file` reads cannot silently drift apart.
+        let text = r#"
+[train]
+model = "k_model"
+dataset = "k_dataset"
+quantizer = "k_quant"
+epochs = 99
+batch_size = 98
+noise_multiplier = 9.1
+clip_norm = 9.2
+lr = 9.3
+optimizer = "adamw"
+target_epsilon = 5.5
+delta = 0.123
+quant_fraction = 0.77
+scheduler = "pls"
+beta = 8.8
+analysis_interval = 93
+analysis_reps = 92
+analysis_samples = 91
+sigma_measure = 7.7
+clip_measure = 6.6
+ema_alpha = 0.11
+ema_enabled = false
+dataset_size = 97
+val_size = 96
+seed = 95
+physical_batch = 94
+backend = "mock"
+"#;
+        let cf = ConfigFile::parse(text).unwrap();
+        let keys_in_sample = cf.entries.len();
+        assert_eq!(
+            keys_in_sample,
+            KNOWN_TRAIN_KEYS.len(),
+            "sample must cover every known key"
+        );
+        assert!(TrainConfig::unknown_keys(&cf).is_empty());
+        let c = TrainConfig::from_file(&cf).unwrap();
+        let d = TrainConfig::default();
+        assert_ne!(c.model, d.model);
+        assert_ne!(c.dataset, d.dataset);
+        assert_ne!(c.quantizer, d.quantizer);
+        assert_ne!(c.epochs, d.epochs);
+        assert_ne!(c.batch_size, d.batch_size);
+        assert_ne!(c.noise_multiplier, d.noise_multiplier);
+        assert_ne!(c.clip_norm, d.clip_norm);
+        assert_ne!(c.lr, d.lr);
+        assert_ne!(c.optimizer, d.optimizer);
+        assert_ne!(c.target_epsilon, d.target_epsilon);
+        assert_ne!(c.delta, d.delta);
+        assert_ne!(c.quant_fraction, d.quant_fraction);
+        assert_ne!(c.scheduler, d.scheduler);
+        assert_ne!(c.beta, d.beta);
+        assert_ne!(c.analysis_interval, d.analysis_interval);
+        assert_ne!(c.analysis_reps, d.analysis_reps);
+        assert_ne!(c.analysis_samples, d.analysis_samples);
+        assert_ne!(c.sigma_measure, d.sigma_measure);
+        assert_ne!(c.clip_measure, d.clip_measure);
+        assert_ne!(c.ema_alpha, d.ema_alpha);
+        assert_ne!(c.ema_enabled, d.ema_enabled);
+        assert_ne!(c.dataset_size, d.dataset_size);
+        assert_ne!(c.val_size, d.val_size);
+        assert_ne!(c.seed, d.seed);
+        assert_ne!(c.physical_batch, d.physical_batch);
+        assert_ne!(c.backend, d.backend);
     }
 
     #[test]

@@ -27,6 +27,18 @@ impl EmaScores {
         }
     }
 
+    /// Rebuild from checkpointed state (scores + the seeded flag);
+    /// `alpha`/`enabled` come back from the config as in [`EmaScores::new`].
+    pub fn from_parts(scores: Vec<f64>, alpha: f64, enabled: bool, initialized: bool) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self {
+            scores,
+            alpha,
+            enabled,
+            initialized,
+        }
+    }
+
     /// Fold one privatized measurement vector in.
     pub fn update(&mut self, measured: &[f64]) {
         assert_eq!(measured.len(), self.scores.len());

@@ -6,7 +6,9 @@
 //! * [`analysis`]  — Algorithm 1 (COMPUTELOSSIMPACT, the DP estimator);
 //! * [`optimizer`] — DP-SGD/Adam/AdamW with fp32 noise (§A.17);
 //! * [`executor`]  — abstraction over the compiled PJRT step + mock;
-//! * [`trainer`]   — the epoch loop wiring it all together.
+//! * [`session`]   — the public API: `TrainSession`, a resumable,
+//!   observable, checkpointable state machine over the epoch loop;
+//! * [`trainer`]   — the batch-mode `train()` compatibility wrapper.
 
 pub mod analysis;
 pub mod ema;
@@ -14,8 +16,13 @@ pub mod executor;
 pub mod optimizer;
 pub mod policy;
 pub mod sampler;
+pub mod session;
 pub mod trainer;
 
 pub use executor::{MockExecutor, StepExecutor};
 pub use policy::{budget_to_k, Policy};
+pub use session::{
+    Checkpoint, EpochOutcome, EventSink, MultiSink, NullSink, SessionBuilder, TraceSink,
+    TrainEvent, TrainSession, VerboseSink,
+};
 pub use trainer::{train, Scheduler, TrainResult, TrainerOptions};

@@ -74,6 +74,36 @@ impl DpOptimizer {
         }
     }
 
+    /// Steps taken so far (drives Adam's bias correction).
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// First/second moment tensors (empty for SGD), for checkpointing.
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// The optimizer's Gaussian noise stream, for checkpointing.
+    pub fn sampler(&self) -> &GaussianSampler {
+        &self.sampler
+    }
+
+    /// Restore moments + step count captured from another optimizer
+    /// with the same configuration (checkpoint resume). Hyperparameters
+    /// and the noise sampler are not part of this call — they are
+    /// supplied to `new` (the sampler with its checkpointed state).
+    pub fn restore(&mut self, step: u64, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) {
+        assert_eq!(m.len(), self.m.len(), "moment tensor count mismatch");
+        assert_eq!(v.len(), self.v.len(), "moment tensor count mismatch");
+        for (restored, fresh) in m.iter().zip(&self.m).chain(v.iter().zip(&self.v)) {
+            assert_eq!(restored.len(), fresh.len(), "moment tensor shape mismatch");
+        }
+        self.step = step;
+        self.m = m;
+        self.v = v;
+    }
+
     /// Add noise to the clipped-grad sums and update weights in place.
     /// Returns the step's gradient/noise norm statistics.
     pub fn update(&mut self, weights: &mut [Vec<f32>], grad_sums: &mut [Vec<f32>]) -> NoiseStats {

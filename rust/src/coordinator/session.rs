@@ -1,0 +1,1543 @@
+//! `TrainSession` — the coordinator's public API: a resumable,
+//! observable, checkpointable training state machine.
+//!
+//! The paper's epoch loop (Fig. 2: COMPUTELOSSIMPACT → SELECTTARGETS →
+//! DP-SGD steps → truncate-at-budget) is inherently stateful across
+//! epochs: EMA'd loss-impact scores, the composed RDP curve, optimizer
+//! moments, and four independent RNG streams all carry over. This module
+//! makes that state a first-class value instead of locals trapped in a
+//! 300-line `train()` body:
+//!
+//! * [`TrainSession::builder`] validates a [`TrainConfig`] **once** at
+//!   build time (scheduler parsed into an enum, hostile values like
+//!   `batch_size == 0` or `quant_fraction ∉ [0, 1]` rejected with
+//!   actionable messages);
+//! * [`TrainSession::step_epoch`] advances one epoch and reports an
+//!   [`EpochOutcome`]; [`TrainSession::run`] drives it to completion,
+//!   reproducing the legacy `train()` semantics bit-for-bit;
+//! * progress is observed through a typed [`TrainEvent`] stream into an
+//!   [`EventSink`] — the provided [`VerboseSink`] and [`TraceSink`]
+//!   replace the old `TrainerOptions { verbose, collect_step_stats }`
+//!   flags;
+//! * [`TrainSession::checkpoint`] / [`TrainSession::resume`] serialize
+//!   the **full** state (weights, optimizer moments, RDP history, EMA
+//!   scores, RNG streams, counters) in a versioned zero-dependency JSON
+//!   format; resuming continues the run **bit-exactly** — floats travel
+//!   as IEEE-754 bit patterns in hex, never as decimal text.
+
+use super::analysis::compute_loss_impact;
+use super::ema::EmaScores;
+use super::executor::StepExecutor;
+use super::optimizer::{DpOptimizer, NoiseStats};
+use super::policy::{budget_to_k, Policy};
+use super::sampler::select_targets;
+use super::trainer::{evaluate, Scheduler, StepTrace};
+use crate::config::TrainConfig;
+use crate::data::{make_batches, poisson_sample, Dataset};
+use crate::metrics::{EpochRecord, RunRecord};
+use crate::privacy::{Mechanism, RdpAccountant, StepRecord};
+use crate::util::error::{ensure, err, Context, Result};
+use crate::util::gaussian::GaussianSampler;
+use crate::util::json::{self, Json};
+use crate::util::rng::Xoshiro256;
+use std::fmt::Write as _;
+
+// ---------------------------------------------------------------------
+// Event stream
+// ---------------------------------------------------------------------
+
+/// A typed progress event emitted by [`TrainSession`]. Borrowed payloads
+/// point into the session; sinks that need to keep them clone.
+#[derive(Debug)]
+pub enum TrainEvent<'a> {
+    /// An epoch is about to run.
+    EpochStarted { epoch: usize },
+    /// Algorithm 1 ran (DPQuant scheduler only): privatized per-layer
+    /// loss impacts, already folded into the EMA.
+    AnalysisCompleted {
+        epoch: usize,
+        impacts: &'a [f64],
+        seconds: f64,
+    },
+    /// Algorithm 2 picked this epoch's quantization policy.
+    PolicySelected { epoch: usize, policy: &'a Policy },
+    /// One DP-SGD step finished (emitted for non-empty Poisson batches).
+    StepCompleted {
+        epoch: usize,
+        step: usize,
+        /// Examples in the logical (Poisson) batch.
+        examples: usize,
+        stats: NoiseStats,
+        /// Mean pre-clip per-sample grad norm over the batch.
+        raw_norm_mean: f64,
+        /// Max pre-clip per-sample grad norm over the batch.
+        raw_norm_max: f64,
+    },
+    /// The privacy budget was reached mid-epoch; no further steps run.
+    Truncated { epoch: usize, step: usize, epsilon: f64 },
+    /// The epoch's record (eval + ε) was appended to the run record.
+    EpochCompleted { record: &'a EpochRecord },
+}
+
+impl TrainEvent<'_> {
+    /// Stable short name, for logs and golden tests.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TrainEvent::EpochStarted { .. } => "epoch_started",
+            TrainEvent::AnalysisCompleted { .. } => "analysis_completed",
+            TrainEvent::PolicySelected { .. } => "policy_selected",
+            TrainEvent::StepCompleted { .. } => "step_completed",
+            TrainEvent::Truncated { .. } => "truncated",
+            TrainEvent::EpochCompleted { .. } => "epoch_completed",
+        }
+    }
+}
+
+/// Receives [`TrainEvent`]s as the session advances.
+pub trait EventSink {
+    fn on_event(&mut self, event: &TrainEvent<'_>);
+}
+
+/// Discards every event.
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn on_event(&mut self, _event: &TrainEvent<'_>) {}
+}
+
+/// Prints the per-epoch progress line the legacy `verbose` flag printed.
+pub struct VerboseSink;
+
+impl EventSink for VerboseSink {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        if let TrainEvent::EpochCompleted { record } = event {
+            println!(
+                "epoch {:>3}  loss {:.4}  val_acc {:.3}  eps {:.3}  layers {:?}",
+                record.epoch,
+                record.train_loss,
+                record.val_accuracy,
+                record.epsilon,
+                record.quantized_layers
+            );
+        }
+    }
+}
+
+/// Accumulates a [`StepTrace`] — the typed replacement for the legacy
+/// `collect_step_stats` flag.
+#[derive(Default)]
+pub struct TraceSink {
+    trace: StepTrace,
+}
+
+impl TraceSink {
+    pub fn trace(&self) -> &StepTrace {
+        &self.trace
+    }
+    pub fn into_trace(self) -> StepTrace {
+        self.trace
+    }
+}
+
+impl EventSink for TraceSink {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        if let TrainEvent::StepCompleted {
+            stats,
+            raw_norm_mean,
+            raw_norm_max,
+            ..
+        } = event
+        {
+            self.trace.stats.push(*stats);
+            self.trace.raw_norm_mean.push(*raw_norm_mean);
+            self.trace.raw_norm_max.push(*raw_norm_max);
+        }
+    }
+}
+
+/// Fans one event stream out to several sinks.
+pub struct MultiSink<'a> {
+    sinks: Vec<&'a mut dyn EventSink>,
+}
+
+impl<'a> MultiSink<'a> {
+    pub fn new(sinks: Vec<&'a mut dyn EventSink>) -> Self {
+        Self { sinks }
+    }
+}
+
+impl EventSink for MultiSink<'_> {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        for sink in self.sinks.iter_mut() {
+            sink.on_event(event);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Builder + validation
+// ---------------------------------------------------------------------
+
+/// Validates a config and produces a fresh [`TrainSession`].
+pub struct SessionBuilder {
+    cfg: TrainConfig,
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: TrainConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Validate the config against the executor and training set, then
+    /// build a session positioned before epoch 0.
+    pub fn build<E: StepExecutor + ?Sized>(
+        self,
+        exec: &E,
+        train_ds: &Dataset,
+    ) -> Result<TrainSession> {
+        let scheduler = validate_config(&self.cfg, train_ds.len())?;
+        Ok(TrainSession::fresh(self.cfg, scheduler, exec, train_ds.len()))
+    }
+}
+
+/// Reject configurations that would divide by zero, drive the Poisson
+/// rate out of \[0, 1\], or otherwise corrupt a run midway. Returns the
+/// parsed scheduler so the loop never re-parses strings.
+pub fn validate_config(cfg: &TrainConfig, train_len: usize) -> Result<Scheduler> {
+    ensure!(
+        cfg.batch_size > 0,
+        "batch_size must be positive: steps_per_epoch = |D|/B and q = B/|D| are undefined at 0"
+    );
+    ensure!(
+        train_len > 0,
+        "training set is empty: the Poisson rate q = B/|D| is undefined"
+    );
+    ensure!(
+        cfg.batch_size <= train_len,
+        "batch_size {} exceeds the training-set size {}: the Poisson rate q = B/|D| would \
+         exceed 1, which the RDP accountant cannot compose",
+        cfg.batch_size,
+        train_len
+    );
+    ensure!(
+        cfg.physical_batch > 0,
+        "physical_batch must be positive (it is the executor's chunk size)"
+    );
+    ensure!(
+        cfg.dataset_size > 0,
+        "dataset_size must be positive (the analysis SGM rate divides by it)"
+    );
+    ensure!(
+        cfg.quant_fraction.is_finite() && (0.0..=1.0).contains(&cfg.quant_fraction),
+        "quant_fraction {} is outside [0, 1]: it is the fraction of layers quantized per epoch",
+        cfg.quant_fraction
+    );
+    ensure!(
+        cfg.noise_multiplier.is_finite() && cfg.noise_multiplier >= 0.0,
+        "noise_multiplier {} must be a finite value >= 0",
+        cfg.noise_multiplier
+    );
+    ensure!(
+        cfg.clip_norm.is_finite() && cfg.clip_norm > 0.0,
+        "clip_norm {} must be a finite value > 0",
+        cfg.clip_norm
+    );
+    ensure!(cfg.lr.is_finite(), "lr {} must be finite", cfg.lr);
+    ensure!(
+        cfg.delta > 0.0 && cfg.delta < 1.0,
+        "delta {} must lie strictly inside (0, 1) for the RDP-to-(eps, delta) conversion",
+        cfg.delta
+    );
+    ensure!(
+        cfg.beta.is_finite() && cfg.beta >= 0.0,
+        "beta {} (Algorithm 2 softmax temperature) must be a finite value >= 0",
+        cfg.beta
+    );
+    ensure!(
+        (0.0..=1.0).contains(&cfg.ema_alpha),
+        "ema_alpha {} is outside [0, 1]",
+        cfg.ema_alpha
+    );
+    if let Some(target) = cfg.target_epsilon {
+        ensure!(
+            target.is_finite() && target > 0.0,
+            "target_epsilon {target} must be a finite value > 0"
+        );
+    }
+    Scheduler::parse(&cfg.scheduler)
+}
+
+// ---------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------
+
+/// Result of one [`TrainSession::step_epoch`] call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EpochOutcome {
+    /// An epoch ran to completion.
+    Completed { epoch: usize, epsilon: f64, val_accuracy: f64 },
+    /// An epoch ran but hit the privacy budget mid-way; the session is
+    /// finished.
+    Truncated { epoch: usize, epsilon: f64, val_accuracy: f64 },
+    /// Nothing ran: all epochs are done, the budget was already
+    /// exhausted, or a previous epoch truncated.
+    Finished,
+}
+
+/// The training state machine. Owns every piece of cross-epoch state;
+/// the executor and datasets stay outside and are passed to each call
+/// (they are immutable throughout a run).
+pub struct TrainSession {
+    cfg: TrainConfig,
+    scheduler: Scheduler,
+    n_layers: usize,
+    k: usize,
+    /// Poisson rate q = B / |D_train|.
+    q: f64,
+    steps_per_epoch: usize,
+    /// |D_train| the session was built against (guards mismatched data).
+    train_len: usize,
+    /// |D_val| observed on the first epoch (None until then); later
+    /// epochs — including resumed ones — must present the same set.
+    val_len: Option<usize>,
+    weights: Vec<Vec<f32>>,
+    opt: DpOptimizer,
+    accountant: RdpAccountant,
+    ema: EmaScores,
+    data_rng: Xoshiro256,
+    sched_rng: Xoshiro256,
+    analysis_noise: GaussianSampler,
+    /// Frozen subset for the static baselines (None for rotating
+    /// schedulers).
+    static_policy: Option<Policy>,
+    record: RunRecord,
+    /// Next epoch index to run == number of completed epochs.
+    epoch: usize,
+    truncated: bool,
+    finished: bool,
+}
+
+impl TrainSession {
+    /// Entry point: `TrainSession::builder(cfg).build(exec, train_ds)`.
+    pub fn builder(cfg: TrainConfig) -> SessionBuilder {
+        SessionBuilder::new(cfg)
+    }
+
+    fn fresh<E: StepExecutor + ?Sized>(
+        cfg: TrainConfig,
+        scheduler: Scheduler,
+        exec: &E,
+        train_len: usize,
+    ) -> Self {
+        let n_layers = exec.n_quant_layers();
+        let k = budget_to_k(n_layers, cfg.quant_fraction);
+        let q = cfg.batch_size as f64 / train_len as f64;
+        let steps_per_epoch = (train_len / cfg.batch_size).max(1);
+
+        // Stream order is part of the reproducibility contract: the
+        // legacy trainer split data/sched/noise/analysis in exactly this
+        // order from the root seed.
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+        let mut data_rng = rng.split(0xDA7A);
+        let mut sched_rng = rng.split(0x5C4E);
+        let noise = GaussianSampler::new(rng.split(0x0153));
+        let analysis_noise = GaussianSampler::new(rng.split(0xA2A1));
+
+        let weights = exec.initial_weights();
+        let opt = DpOptimizer::new(
+            cfg.optimizer,
+            cfg.lr,
+            cfg.noise_multiplier,
+            cfg.clip_norm,
+            cfg.batch_size as f64,
+            &exec.param_sizes(),
+            noise,
+        );
+        let accountant = RdpAccountant::new();
+        let ema = EmaScores::new(n_layers, cfg.ema_alpha, cfg.ema_enabled);
+
+        // Frozen subsets for the static baselines (drawn once, before
+        // any epoch, from the scheduler stream — as the legacy loop did).
+        let static_policy = match scheduler {
+            Scheduler::StaticRandom => Some(Policy::from_layers(
+                n_layers,
+                sched_rng.sample_indices(n_layers, k),
+            )),
+            Scheduler::StaticFirst => Some(Policy::from_layers(n_layers, (0..k).collect())),
+            Scheduler::StaticLast => Some(Policy::from_layers(
+                n_layers,
+                (n_layers - k..n_layers).collect(),
+            )),
+            Scheduler::None => Some(Policy::baseline(n_layers)),
+            Scheduler::All => Some(Policy::all(n_layers)),
+            _ => None,
+        };
+
+        let record = RunRecord {
+            name: format!(
+                "{}_{}_{}_{}_k{}_s{}",
+                cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler, k, cfg.seed
+            ),
+            config_summary: format!(
+                "opt={} lr={} sigma={} C={} B={} |D|={} eps_target={:?} beta={}",
+                cfg.optimizer.name(),
+                cfg.lr,
+                cfg.noise_multiplier,
+                cfg.clip_norm,
+                cfg.batch_size,
+                train_len,
+                cfg.target_epsilon,
+                cfg.beta
+            ),
+            ..Default::default()
+        };
+
+        Self {
+            cfg,
+            scheduler,
+            n_layers,
+            k,
+            q,
+            steps_per_epoch,
+            train_len,
+            val_len: None,
+            weights,
+            opt,
+            accountant,
+            ema,
+            data_rng,
+            sched_rng,
+            analysis_noise,
+            static_policy,
+            record,
+            epoch: 0,
+            truncated: false,
+            finished: false,
+        }
+    }
+
+    /// Advance one epoch (Fig. 2 pipeline: budget check → Algorithm 1 →
+    /// Algorithm 2 → Poisson-sampled DP-SGD steps → eval + record).
+    pub fn step_epoch<E: StepExecutor + ?Sized>(
+        &mut self,
+        exec: &E,
+        train_ds: &Dataset,
+        val_ds: &Dataset,
+        sink: &mut dyn EventSink,
+    ) -> Result<EpochOutcome> {
+        ensure!(
+            train_ds.len() == self.train_len,
+            "training set has {} examples but the session was built against {}; \
+             resume must regenerate the identical dataset",
+            train_ds.len(),
+            self.train_len
+        );
+        match self.val_len {
+            None => self.val_len = Some(val_ds.len()),
+            Some(n) => ensure!(
+                val_ds.len() == n,
+                "validation set has {} examples but earlier epochs evaluated {}; \
+                 resume must regenerate the identical dataset",
+                val_ds.len(),
+                n
+            ),
+        }
+        if self.finished || self.truncated || self.epoch >= self.cfg.epochs {
+            self.finished = true;
+            return Ok(EpochOutcome::Finished);
+        }
+        // Budget check before spending on analysis.
+        if let Some(target) = self.cfg.target_epsilon {
+            if self.accountant.epsilon(self.cfg.delta).0 >= target {
+                self.finished = true;
+                return Ok(EpochOutcome::Finished);
+            }
+        }
+
+        let epoch = self.epoch;
+        sink.on_event(&TrainEvent::EpochStarted { epoch });
+
+        // ---- Algorithm 1 (DPQuant only, every analysis_interval epochs)
+        let mut analysis_seconds = 0.0;
+        if self.scheduler == Scheduler::DpQuant && epoch % self.cfg.analysis_interval.max(1) == 0 {
+            // The probe subsample is n_sample examples in expectation
+            // (paper Table 3), NOT a full training batch — this keeps
+            // the analysis SGM's privacy cost negligible (Fig. 3).
+            let q_meas = (self.cfg.analysis_samples as f64 / train_ds.len() as f64).min(1.0);
+            let probe_idx = poisson_sample(&mut self.data_rng, train_ds.len(), q_meas);
+            if !probe_idx.is_empty() {
+                let probes = make_batches(train_ds, &probe_idx, exec.physical_batch());
+                let report = compute_loss_impact(
+                    exec,
+                    &self.cfg,
+                    &self.weights,
+                    &probes,
+                    &mut self.ema,
+                    &mut self.accountant,
+                    &mut self.analysis_noise,
+                    (epoch * 7919) as f32,
+                )?;
+                analysis_seconds = report.seconds;
+                sink.on_event(&TrainEvent::AnalysisCompleted {
+                    epoch,
+                    impacts: &report.privatized_impacts,
+                    seconds: report.seconds,
+                });
+            }
+        }
+
+        // ---- Algorithm 2: pick this epoch's policy
+        let policy = match self.scheduler {
+            Scheduler::DpQuant => {
+                let scores = self.ema.scores().to_vec();
+                Policy::from_layers(
+                    self.n_layers,
+                    select_targets(&mut self.sched_rng, &scores, self.cfg.beta, self.k),
+                )
+            }
+            Scheduler::Pls => Policy::from_layers(
+                self.n_layers,
+                self.sched_rng.sample_indices(self.n_layers, self.k),
+            ),
+            _ => self.static_policy.clone().unwrap(),
+        };
+        sink.on_event(&TrainEvent::PolicySelected { epoch, policy: &policy });
+        let quant_mask = policy.mask();
+
+        // ---- The epoch's DP-SGD steps
+        let t0 = std::time::Instant::now();
+        let mut train_loss_sum = 0f64;
+        let mut train_count = 0f64;
+        for step in 0..self.steps_per_epoch {
+            let idx = poisson_sample(&mut self.data_rng, train_ds.len(), self.q);
+            self.accountant.step_training(self.q, self.cfg.noise_multiplier, 1);
+            if idx.is_empty() {
+                continue;
+            }
+            // Poisson batches can exceed the physical batch: chunk and
+            // accumulate the clipped-grad sums (exact — the sum is linear).
+            let mut agg: Option<Vec<Vec<f32>>> = None;
+            let step_base = (self.cfg.seed as usize)
+                .wrapping_mul(1_000_003)
+                .wrapping_add(epoch * 10_007 + step);
+            let mut step_rawsum = 0f64;
+            let mut step_rawmax = 0f64;
+            // Each physical chunk gets a distinct seed so per-sample
+            // stochastic-rounding streams never collide across chunks of
+            // one logical step (executors key their RNG on (seed, row)
+            // with row < physical_batch ≤ the 4096 stride). Seeds travel
+            // as f32 (the compiled graphs take a scalar f32 input), so
+            // reduce mod 2^24 *after* the chunk offset — every value
+            // stays in f32's exact-integer range and never rounds.
+            for (ci, b) in make_batches(train_ds, &idx, exec.physical_batch())
+                .into_iter()
+                .enumerate()
+            {
+                let chunk_seed = (step_base.wrapping_add(ci * 4096) % (1 << 24)) as f32;
+                let out =
+                    exec.train_step(&self.weights, &b.x, &b.y, &b.mask, &quant_mask, chunk_seed)?;
+                train_loss_sum += out.loss_sum as f64;
+                train_count += b.real as f64;
+                step_rawsum += out.raw_norm_sum as f64;
+                step_rawmax = step_rawmax.max(out.raw_norm_max as f64);
+                match agg.as_mut() {
+                    None => agg = Some(out.grad_sums),
+                    Some(acc) => {
+                        for (a, g) in acc.iter_mut().zip(&out.grad_sums) {
+                            for (ai, gi) in a.iter_mut().zip(g) {
+                                *ai += gi;
+                            }
+                        }
+                    }
+                }
+            }
+            let mut grads = agg.unwrap();
+            let stats = self.opt.update(&mut self.weights, &mut grads);
+            sink.on_event(&TrainEvent::StepCompleted {
+                epoch,
+                step,
+                examples: idx.len(),
+                stats,
+                raw_norm_mean: step_rawsum / idx.len() as f64,
+                raw_norm_max: step_rawmax,
+            });
+
+            // Budget check: truncate training at the target ε (paper §6.2
+            // "truncating the training at the respective privacy
+            // budgets").
+            if let Some(target) = self.cfg.target_epsilon {
+                let (eps_now, _) = self.accountant.epsilon(self.cfg.delta);
+                if eps_now >= target {
+                    self.truncated = true;
+                    sink.on_event(&TrainEvent::Truncated {
+                        epoch,
+                        step,
+                        epsilon: eps_now,
+                    });
+                }
+            }
+            if self.truncated {
+                break;
+            }
+        }
+        let train_seconds = t0.elapsed().as_secs_f64();
+
+        // ---- Eval + record
+        let (val_loss, val_acc) = evaluate(exec, &self.weights, val_ds)?;
+        let (eps, _) = self.accountant.epsilon(self.cfg.delta);
+        self.record.analysis_epsilon =
+            self.accountant.epsilon_of(Mechanism::Analysis, self.cfg.delta).0;
+        self.record.push(EpochRecord {
+            epoch,
+            train_loss: train_loss_sum / train_count.max(1.0),
+            val_loss,
+            val_accuracy: val_acc,
+            epsilon: eps,
+            quantized_layers: policy.layers.clone(),
+            train_seconds,
+            analysis_seconds,
+        });
+        sink.on_event(&TrainEvent::EpochCompleted {
+            record: self.record.epochs.last().unwrap(),
+        });
+        self.epoch += 1;
+
+        if self.truncated {
+            self.finished = true;
+            Ok(EpochOutcome::Truncated {
+                epoch,
+                epsilon: eps,
+                val_accuracy: val_acc,
+            })
+        } else {
+            Ok(EpochOutcome::Completed {
+                epoch,
+                epsilon: eps,
+                val_accuracy: val_acc,
+            })
+        }
+    }
+
+    /// Drive [`TrainSession::step_epoch`] until the session finishes —
+    /// the convenience reproducing the legacy `train()` loop.
+    pub fn run<E: StepExecutor + ?Sized>(
+        &mut self,
+        exec: &E,
+        train_ds: &Dataset,
+        val_ds: &Dataset,
+        sink: &mut dyn EventSink,
+    ) -> Result<()> {
+        while self.step_epoch(exec, train_ds, val_ds, sink)? != EpochOutcome::Finished {}
+        Ok(())
+    }
+
+    // -- observers ----------------------------------------------------
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+    pub fn record(&self) -> &RunRecord {
+        &self.record
+    }
+    pub fn weights(&self) -> &[Vec<f32>] {
+        &self.weights
+    }
+    /// Number of completed epochs (== next epoch index).
+    pub fn epochs_completed(&self) -> usize {
+        self.epoch
+    }
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+    pub fn is_truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// Raise (or lower) the epoch target — the supported override when
+    /// resuming a checkpoint with `--epochs`. A session that finished
+    /// only because its epochs ran out becomes runnable again.
+    pub fn set_epochs(&mut self, epochs: usize) {
+        self.cfg.epochs = epochs;
+        if !self.truncated {
+            self.finished = false;
+        }
+    }
+
+    /// Consume the session: `(record, final_weights, accountant)`.
+    pub fn finish(self) -> (RunRecord, Vec<Vec<f32>>, RdpAccountant) {
+        (self.record, self.weights, self.accountant)
+    }
+
+    // -- checkpointing ------------------------------------------------
+
+    /// Serialize the full session state to `path` (versioned JSON; see
+    /// the module docs). Safe at any epoch boundary. The write is
+    /// atomic (temp file + rename), so a crash mid-write — the exact
+    /// scenario checkpointing defends against — can never destroy the
+    /// previous good snapshot at the same path.
+    pub fn checkpoint(&self, path: &str) -> Result<()> {
+        let parent = std::path::Path::new(path).parent();
+        if let Some(dir) = parent.filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint directory {}", dir.display()))?;
+        }
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing checkpoint {tmp}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving checkpoint {tmp} into place"))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint and rebuild the session against `exec`. The
+    /// caller must supply the same executor configuration and regenerate
+    /// the identical datasets (the checkpoint stores the config needed
+    /// to do both — see [`Checkpoint::config`]).
+    pub fn resume<E: StepExecutor + ?Sized>(path: &str, exec: &E) -> Result<Self> {
+        Self::resume_from(Checkpoint::load(path)?, exec)
+    }
+
+    /// Rebuild a session from an already-loaded [`Checkpoint`].
+    pub fn resume_from<E: StepExecutor + ?Sized>(ckpt: Checkpoint, exec: &E) -> Result<Self> {
+        let scheduler = validate_config(&ckpt.cfg, ckpt.train_len)?;
+        ensure!(
+            exec.n_quant_layers() == ckpt.n_layers,
+            "checkpoint was written for a model with {} quantizable layers; executor has {}",
+            ckpt.n_layers,
+            exec.n_quant_layers()
+        );
+        let sizes = exec.param_sizes();
+        ensure!(
+            sizes.len() == ckpt.weights.len(),
+            "checkpoint has {} weight tensors; executor expects {}",
+            ckpt.weights.len(),
+            sizes.len()
+        );
+        for (i, (w, &n)) in ckpt.weights.iter().zip(&sizes).enumerate() {
+            ensure!(
+                w.len() == n,
+                "checkpoint weight tensor {i} has {} values; executor expects {n}",
+                w.len()
+            );
+        }
+        ensure!(
+            ckpt.ema_scores.len() == ckpt.n_layers,
+            "checkpoint EMA has {} scores for {} layers",
+            ckpt.ema_scores.len(),
+            ckpt.n_layers
+        );
+        let moments_ok = match ckpt.cfg.optimizer {
+            crate::config::OptimizerKind::Sgd => ckpt.opt_m.is_empty() && ckpt.opt_v.is_empty(),
+            _ => {
+                ckpt.opt_m.len() == sizes.len()
+                    && ckpt.opt_v.len() == sizes.len()
+                    && ckpt.opt_m.iter().zip(&sizes).all(|(m, &n)| m.len() == n)
+                    && ckpt.opt_v.iter().zip(&sizes).all(|(v, &n)| v.len() == n)
+            }
+        };
+        ensure!(
+            moments_ok,
+            "checkpoint optimizer moments do not match the '{}' optimizer and model shapes",
+            ckpt.cfg.optimizer.name()
+        );
+        if let Some(layers) = &ckpt.static_policy {
+            ensure!(
+                layers.iter().all(|&l| l < ckpt.n_layers),
+                "checkpoint static policy references a layer >= {}",
+                ckpt.n_layers
+            );
+        }
+        // Static schedulers dereference the frozen policy every epoch; a
+        // checkpoint missing it must fail here, not panic mid-training.
+        let needs_static = !matches!(scheduler, Scheduler::DpQuant | Scheduler::Pls);
+        ensure!(
+            !needs_static || ckpt.static_policy.is_some(),
+            "checkpoint uses the static '{}' scheduler but stores no static policy",
+            ckpt.cfg.scheduler
+        );
+
+        let k = budget_to_k(ckpt.n_layers, ckpt.cfg.quant_fraction);
+        let q = ckpt.cfg.batch_size as f64 / ckpt.train_len as f64;
+        let steps_per_epoch = (ckpt.train_len / ckpt.cfg.batch_size).max(1);
+
+        let mut opt = DpOptimizer::new(
+            ckpt.cfg.optimizer,
+            ckpt.cfg.lr,
+            ckpt.cfg.noise_multiplier,
+            ckpt.cfg.clip_norm,
+            ckpt.cfg.batch_size as f64,
+            &sizes,
+            ckpt.opt_sampler,
+        );
+        opt.restore(ckpt.opt_step, ckpt.opt_m, ckpt.opt_v);
+
+        let mut accountant = RdpAccountant::new();
+        for rec in &ckpt.history {
+            accountant.record(rec.mechanism, rec.sample_rate, rec.noise_multiplier, rec.steps);
+        }
+
+        let ema = EmaScores::from_parts(
+            ckpt.ema_scores,
+            ckpt.cfg.ema_alpha,
+            ckpt.cfg.ema_enabled,
+            ckpt.ema_initialized,
+        );
+        let static_policy = ckpt
+            .static_policy
+            .map(|layers| Policy::from_layers(ckpt.n_layers, layers));
+
+        Ok(Self {
+            cfg: ckpt.cfg,
+            scheduler,
+            n_layers: ckpt.n_layers,
+            k,
+            q,
+            steps_per_epoch,
+            train_len: ckpt.train_len,
+            val_len: ckpt.val_len,
+            weights: ckpt.weights,
+            opt,
+            accountant,
+            ema,
+            data_rng: ckpt.data_rng,
+            sched_rng: ckpt.sched_rng,
+            analysis_noise: ckpt.analysis_noise,
+            static_policy,
+            record: ckpt.record,
+            epoch: ckpt.epoch,
+            truncated: ckpt.truncated,
+            finished: ckpt.finished,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let (m, v) = self.opt.moments();
+        let history: Vec<Json> = self
+            .accountant
+            .history()
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("mechanism", json::s(mechanism_name(r.mechanism))),
+                    ("sample_rate", hex_f64(r.sample_rate)),
+                    ("noise_multiplier", hex_f64(r.noise_multiplier)),
+                    ("steps", hex_u64(r.steps)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("format", json::s(CHECKPOINT_FORMAT)),
+            ("version", json::num(CHECKPOINT_VERSION as f64)),
+            ("config", config_to_json(&self.cfg)),
+            ("train_len", json::num(self.train_len as f64)),
+            (
+                "val_len",
+                self.val_len.map(|n| json::num(n as f64)).unwrap_or(Json::Null),
+            ),
+            ("n_layers", json::num(self.n_layers as f64)),
+            ("epoch", json::num(self.epoch as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+            ("finished", Json::Bool(self.finished)),
+            (
+                "weights",
+                Json::Arr(self.weights.iter().map(|w| hex_f32s(w)).collect()),
+            ),
+            (
+                "optimizer",
+                json::obj(vec![
+                    ("step", hex_u64(self.opt.step_count())),
+                    ("m", Json::Arr(m.iter().map(|t| hex_f32s(t)).collect())),
+                    ("v", Json::Arr(v.iter().map(|t| hex_f32s(t)).collect())),
+                    ("sampler", sampler_json(self.opt.sampler())),
+                ]),
+            ),
+            ("accountant", Json::Arr(history)),
+            (
+                "ema",
+                json::obj(vec![
+                    (
+                        "scores",
+                        Json::Arr(self.ema.scores().iter().map(|&x| hex_f64(x)).collect()),
+                    ),
+                    ("initialized", Json::Bool(self.ema.is_initialized())),
+                ]),
+            ),
+            ("data_rng", rng_json(&self.data_rng)),
+            ("sched_rng", rng_json(&self.sched_rng)),
+            ("analysis_noise", sampler_json(&self.analysis_noise)),
+            (
+                "static_policy",
+                match &self.static_policy {
+                    Some(p) => Json::Arr(
+                        p.layers.iter().map(|&l| json::num(l as f64)).collect(),
+                    ),
+                    None => Json::Null,
+                },
+            ),
+            ("record", record_to_json(&self.record)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint format
+// ---------------------------------------------------------------------
+
+pub const CHECKPOINT_FORMAT: &str = "dpquant-trainsession";
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// A parsed, structurally-validated checkpoint. Loading is split from
+/// resuming so callers can read the stored [`TrainConfig`] first (the
+/// CLI needs it to regenerate the dataset and open the right backend).
+pub struct Checkpoint {
+    cfg: TrainConfig,
+    train_len: usize,
+    val_len: Option<usize>,
+    n_layers: usize,
+    epoch: usize,
+    truncated: bool,
+    finished: bool,
+    weights: Vec<Vec<f32>>,
+    opt_step: u64,
+    opt_m: Vec<Vec<f32>>,
+    opt_v: Vec<Vec<f32>>,
+    opt_sampler: GaussianSampler,
+    history: Vec<StepRecord>,
+    ema_scores: Vec<f64>,
+    ema_initialized: bool,
+    data_rng: Xoshiro256,
+    sched_rng: Xoshiro256,
+    analysis_noise: GaussianSampler,
+    static_policy: Option<Vec<usize>>,
+    record: RunRecord,
+}
+
+impl Checkpoint {
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path}"))?;
+        Self::from_json_text(&text).with_context(|| format!("checkpoint {path}"))
+    }
+
+    /// The training config the checkpointed session ran under.
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Completed epochs at checkpoint time.
+    pub fn epochs_completed(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| err!("malformed JSON: {e}"))?;
+        let format = j.get("format").and_then(Json::as_str).unwrap_or("<missing>");
+        ensure!(
+            format == CHECKPOINT_FORMAT,
+            "not a TrainSession checkpoint (format '{format}', want '{CHECKPOINT_FORMAT}')"
+        );
+        let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint version {version} is not readable by this build (which reads version \
+             {CHECKPOINT_VERSION}); re-create the checkpoint with a matching build"
+        );
+        let cfg = config_from_json(field(&j, "config")?)?;
+        let weights = field(&j, "weights")?
+            .as_arr()
+            .ok_or_else(|| err!("'weights' must be an array"))?
+            .iter()
+            .map(|w| parse_f32s(w, "weights"))
+            .collect::<Result<Vec<_>>>()?;
+        let opt = field(&j, "optimizer")?;
+        let opt_m = field(opt, "m")?
+            .as_arr()
+            .ok_or_else(|| err!("'optimizer.m' must be an array"))?
+            .iter()
+            .map(|t| parse_f32s(t, "optimizer.m"))
+            .collect::<Result<Vec<_>>>()?;
+        let opt_v = field(opt, "v")?
+            .as_arr()
+            .ok_or_else(|| err!("'optimizer.v' must be an array"))?
+            .iter()
+            .map(|t| parse_f32s(t, "optimizer.v"))
+            .collect::<Result<Vec<_>>>()?;
+        let history = field(&j, "accountant")?
+            .as_arr()
+            .ok_or_else(|| err!("'accountant' must be an array"))?
+            .iter()
+            .map(parse_step_record)
+            .collect::<Result<Vec<_>>>()?;
+        let ema = field(&j, "ema")?;
+        let ema_scores = field(ema, "scores")?
+            .as_arr()
+            .ok_or_else(|| err!("'ema.scores' must be an array"))?
+            .iter()
+            .map(|x| parse_hex_f64(x, "ema.scores"))
+            .collect::<Result<Vec<_>>>()?;
+        let static_policy = match field(&j, "static_policy")? {
+            Json::Null => None,
+            Json::Arr(layers) => Some(
+                layers
+                    .iter()
+                    .map(|l| parse_usize(l, "static_policy"))
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            _ => return Err(err!("'static_policy' must be null or an array")),
+        };
+        Ok(Self {
+            cfg,
+            train_len: parse_usize(field(&j, "train_len")?, "train_len")?,
+            val_len: match field(&j, "val_len")? {
+                Json::Null => None,
+                v => Some(parse_usize(v, "val_len")?),
+            },
+            n_layers: parse_usize(field(&j, "n_layers")?, "n_layers")?,
+            epoch: parse_usize(field(&j, "epoch")?, "epoch")?,
+            truncated: parse_bool(field(&j, "truncated")?, "truncated")?,
+            finished: parse_bool(field(&j, "finished")?, "finished")?,
+            weights,
+            opt_step: parse_hex_u64(field(opt, "step")?, "optimizer.step")?,
+            opt_m,
+            opt_v,
+            opt_sampler: parse_sampler(field(opt, "sampler")?, "optimizer.sampler")?,
+            history,
+            ema_scores,
+            ema_initialized: parse_bool(field(ema, "initialized")?, "ema.initialized")?,
+            data_rng: parse_rng(field(&j, "data_rng")?, "data_rng")?,
+            sched_rng: parse_rng(field(&j, "sched_rng")?, "sched_rng")?,
+            analysis_noise: parse_sampler(field(&j, "analysis_noise")?, "analysis_noise")?,
+            static_policy,
+            record: record_from_json(field(&j, "record")?)?,
+        })
+    }
+}
+
+fn mechanism_name(m: Mechanism) -> &'static str {
+    match m {
+        Mechanism::Training => "training",
+        Mechanism::Analysis => "analysis",
+    }
+}
+
+fn parse_step_record(j: &Json) -> Result<StepRecord> {
+    let mechanism = match field(j, "mechanism")?.as_str() {
+        Some("training") => Mechanism::Training,
+        Some("analysis") => Mechanism::Analysis,
+        other => return Err(err!("unknown accountant mechanism {other:?}")),
+    };
+    Ok(StepRecord {
+        mechanism,
+        sample_rate: parse_hex_f64(field(j, "sample_rate")?, "accountant.sample_rate")?,
+        noise_multiplier: parse_hex_f64(
+            field(j, "noise_multiplier")?,
+            "accountant.noise_multiplier",
+        )?,
+        steps: parse_hex_u64(field(j, "steps")?, "accountant.steps")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Serialization helpers: floats travel as IEEE-754 bit patterns in hex
+// so a checkpoint round-trip is bit-exact by construction (decimal
+// formatting would lose -0.0 and invite rounding subtleties).
+// ---------------------------------------------------------------------
+
+fn hex_u64(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn hex_f64(x: f64) -> Json {
+    hex_u64(x.to_bits())
+}
+
+fn hex_f32s(xs: &[f32]) -> Json {
+    let mut s = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        let _ = write!(s, "{:08x}", x.to_bits());
+    }
+    Json::Str(s)
+}
+
+fn rng_json(rng: &Xoshiro256) -> Json {
+    Json::Arr(rng.state().iter().map(|&x| hex_u64(x)).collect())
+}
+
+fn sampler_json(g: &GaussianSampler) -> Json {
+    let (rng, cached) = g.state();
+    json::obj(vec![
+        ("rng", Json::Arr(rng.iter().map(|&x| hex_u64(x)).collect())),
+        ("cached", cached.map(hex_f64).unwrap_or(Json::Null)),
+    ])
+}
+
+fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json> {
+    obj.get(key).ok_or_else(|| err!("missing field '{key}'"))
+}
+
+fn parse_hex_u64(j: &Json, what: &str) -> Result<u64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| err!("{what}: expected a hex string"))?;
+    u64::from_str_radix(s, 16).map_err(|e| err!("{what}: bad hex '{s}': {e}"))
+}
+
+fn parse_hex_f64(j: &Json, what: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_hex_u64(j, what)?))
+}
+
+fn parse_f32s(j: &Json, what: &str) -> Result<Vec<f32>> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| err!("{what}: expected a hex blob"))?;
+    ensure!(
+        s.len() % 8 == 0 && s.is_ascii(),
+        "{what}: hex blob length {} is not a multiple of 8",
+        s.len()
+    );
+    (0..s.len() / 8)
+        .map(|i| {
+            u32::from_str_radix(&s[i * 8..i * 8 + 8], 16)
+                .map(f32::from_bits)
+                .map_err(|e| err!("{what}: bad hex at value {i}: {e}"))
+        })
+        .collect()
+}
+
+fn parse_usize(j: &Json, what: &str) -> Result<usize> {
+    j.as_f64()
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as usize)
+        .ok_or_else(|| err!("{what}: expected a non-negative integer"))
+}
+
+fn parse_bool(j: &Json, what: &str) -> Result<bool> {
+    j.as_bool().ok_or_else(|| err!("{what}: expected a bool"))
+}
+
+fn parse_str(j: &Json, what: &str) -> Result<String> {
+    j.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| err!("{what}: expected a string"))
+}
+
+fn parse_rng(j: &Json, what: &str) -> Result<Xoshiro256> {
+    let arr = j.as_arr().ok_or_else(|| err!("{what}: expected an array"))?;
+    ensure!(arr.len() == 4, "{what}: RNG state must have 4 words");
+    let mut s = [0u64; 4];
+    for (out, word) in s.iter_mut().zip(arr) {
+        *out = parse_hex_u64(word, what)?;
+    }
+    Ok(Xoshiro256::from_state(s))
+}
+
+fn parse_sampler(j: &Json, what: &str) -> Result<GaussianSampler> {
+    let rng = parse_rng(field(j, "rng")?, what)?;
+    let cached = match field(j, "cached")? {
+        Json::Null => None,
+        v => Some(parse_hex_f64(v, what)?),
+    };
+    Ok(GaussianSampler::from_state(rng.state(), cached))
+}
+
+fn config_to_json(cfg: &TrainConfig) -> Json {
+    json::obj(vec![
+        ("model", json::s(&cfg.model)),
+        ("dataset", json::s(&cfg.dataset)),
+        ("quantizer", json::s(&cfg.quantizer)),
+        ("epochs", json::num(cfg.epochs as f64)),
+        ("batch_size", json::num(cfg.batch_size as f64)),
+        ("noise_multiplier", hex_f64(cfg.noise_multiplier)),
+        ("clip_norm", hex_f64(cfg.clip_norm)),
+        ("lr", hex_f64(cfg.lr)),
+        ("optimizer", json::s(cfg.optimizer.name())),
+        (
+            "target_epsilon",
+            cfg.target_epsilon.map(hex_f64).unwrap_or(Json::Null),
+        ),
+        ("delta", hex_f64(cfg.delta)),
+        ("quant_fraction", hex_f64(cfg.quant_fraction)),
+        ("scheduler", json::s(&cfg.scheduler)),
+        ("beta", hex_f64(cfg.beta)),
+        ("analysis_interval", json::num(cfg.analysis_interval as f64)),
+        ("analysis_reps", json::num(cfg.analysis_reps as f64)),
+        ("analysis_samples", json::num(cfg.analysis_samples as f64)),
+        ("sigma_measure", hex_f64(cfg.sigma_measure)),
+        ("clip_measure", hex_f64(cfg.clip_measure)),
+        ("ema_alpha", hex_f64(cfg.ema_alpha)),
+        ("ema_enabled", Json::Bool(cfg.ema_enabled)),
+        ("dataset_size", json::num(cfg.dataset_size as f64)),
+        ("val_size", json::num(cfg.val_size as f64)),
+        ("seed", hex_u64(cfg.seed)),
+        ("physical_batch", json::num(cfg.physical_batch as f64)),
+        ("backend", json::s(&cfg.backend)),
+    ])
+}
+
+fn config_from_json(j: &Json) -> Result<TrainConfig> {
+    Ok(TrainConfig {
+        model: parse_str(field(j, "model")?, "config.model")?,
+        dataset: parse_str(field(j, "dataset")?, "config.dataset")?,
+        quantizer: parse_str(field(j, "quantizer")?, "config.quantizer")?,
+        epochs: parse_usize(field(j, "epochs")?, "config.epochs")?,
+        batch_size: parse_usize(field(j, "batch_size")?, "config.batch_size")?,
+        noise_multiplier: parse_hex_f64(field(j, "noise_multiplier")?, "config.noise_multiplier")?,
+        clip_norm: parse_hex_f64(field(j, "clip_norm")?, "config.clip_norm")?,
+        lr: parse_hex_f64(field(j, "lr")?, "config.lr")?,
+        optimizer: crate::config::OptimizerKind::parse(&parse_str(
+            field(j, "optimizer")?,
+            "config.optimizer",
+        )?)?,
+        target_epsilon: match field(j, "target_epsilon")? {
+            Json::Null => None,
+            v => Some(parse_hex_f64(v, "config.target_epsilon")?),
+        },
+        delta: parse_hex_f64(field(j, "delta")?, "config.delta")?,
+        quant_fraction: parse_hex_f64(field(j, "quant_fraction")?, "config.quant_fraction")?,
+        scheduler: parse_str(field(j, "scheduler")?, "config.scheduler")?,
+        beta: parse_hex_f64(field(j, "beta")?, "config.beta")?,
+        analysis_interval: parse_usize(field(j, "analysis_interval")?, "config.analysis_interval")?,
+        analysis_reps: parse_usize(field(j, "analysis_reps")?, "config.analysis_reps")?,
+        analysis_samples: parse_usize(field(j, "analysis_samples")?, "config.analysis_samples")?,
+        sigma_measure: parse_hex_f64(field(j, "sigma_measure")?, "config.sigma_measure")?,
+        clip_measure: parse_hex_f64(field(j, "clip_measure")?, "config.clip_measure")?,
+        ema_alpha: parse_hex_f64(field(j, "ema_alpha")?, "config.ema_alpha")?,
+        ema_enabled: parse_bool(field(j, "ema_enabled")?, "config.ema_enabled")?,
+        dataset_size: parse_usize(field(j, "dataset_size")?, "config.dataset_size")?,
+        val_size: parse_usize(field(j, "val_size")?, "config.val_size")?,
+        seed: parse_hex_u64(field(j, "seed")?, "config.seed")?,
+        physical_batch: parse_usize(field(j, "physical_batch")?, "config.physical_batch")?,
+        backend: parse_str(field(j, "backend")?, "config.backend")?,
+    })
+}
+
+fn record_to_json(r: &RunRecord) -> Json {
+    json::obj(vec![
+        ("name", json::s(&r.name)),
+        ("config_summary", json::s(&r.config_summary)),
+        ("final_epsilon", hex_f64(r.final_epsilon)),
+        ("analysis_epsilon", hex_f64(r.analysis_epsilon)),
+        ("final_accuracy", hex_f64(r.final_accuracy)),
+        ("best_accuracy", hex_f64(r.best_accuracy)),
+        (
+            "epochs",
+            Json::Arr(
+                r.epochs
+                    .iter()
+                    .map(|e| {
+                        json::obj(vec![
+                            ("epoch", json::num(e.epoch as f64)),
+                            ("train_loss", hex_f64(e.train_loss)),
+                            ("val_loss", hex_f64(e.val_loss)),
+                            ("val_accuracy", hex_f64(e.val_accuracy)),
+                            ("epsilon", hex_f64(e.epsilon)),
+                            (
+                                "quantized_layers",
+                                Json::Arr(
+                                    e.quantized_layers
+                                        .iter()
+                                        .map(|&l| json::num(l as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            ("train_seconds", hex_f64(e.train_seconds)),
+                            ("analysis_seconds", hex_f64(e.analysis_seconds)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn record_from_json(j: &Json) -> Result<RunRecord> {
+    let epochs = field(j, "epochs")?
+        .as_arr()
+        .ok_or_else(|| err!("'record.epochs' must be an array"))?
+        .iter()
+        .map(|e| {
+            Ok(EpochRecord {
+                epoch: parse_usize(field(e, "epoch")?, "record.epoch")?,
+                train_loss: parse_hex_f64(field(e, "train_loss")?, "record.train_loss")?,
+                val_loss: parse_hex_f64(field(e, "val_loss")?, "record.val_loss")?,
+                val_accuracy: parse_hex_f64(field(e, "val_accuracy")?, "record.val_accuracy")?,
+                epsilon: parse_hex_f64(field(e, "epsilon")?, "record.epsilon")?,
+                quantized_layers: field(e, "quantized_layers")?
+                    .as_arr()
+                    .ok_or_else(|| err!("'record.quantized_layers' must be an array"))?
+                    .iter()
+                    .map(|l| parse_usize(l, "record.quantized_layers"))
+                    .collect::<Result<Vec<_>>>()?,
+                train_seconds: parse_hex_f64(field(e, "train_seconds")?, "record.train_seconds")?,
+                analysis_seconds: parse_hex_f64(
+                    field(e, "analysis_seconds")?,
+                    "record.analysis_seconds",
+                )?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(RunRecord {
+        name: parse_str(field(j, "name")?, "record.name")?,
+        config_summary: parse_str(field(j, "config_summary")?, "record.config_summary")?,
+        epochs,
+        final_epsilon: parse_hex_f64(field(j, "final_epsilon")?, "record.final_epsilon")?,
+        analysis_epsilon: parse_hex_f64(field(j, "analysis_epsilon")?, "record.analysis_epsilon")?,
+        final_accuracy: parse_hex_f64(field(j, "final_accuracy")?, "record.final_accuracy")?,
+        best_accuracy: parse_hex_f64(field(j, "best_accuracy")?, "record.best_accuracy")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::MockExecutor;
+
+    fn toy_dataset(n: usize, feats: usize, classes: usize, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let c = rng.next_below(classes as u64) as i32;
+            for f in 0..feats {
+                xs.push(0.5 * rng.next_f32() + if f == c as usize { 1.0 } else { 0.0 });
+            }
+            ys.push(c);
+        }
+        Dataset {
+            xs,
+            ys,
+            example_numel: feats,
+            n_classes: classes,
+        }
+    }
+
+    fn base_cfg() -> TrainConfig {
+        TrainConfig {
+            epochs: 4,
+            batch_size: 16,
+            dataset_size: 256,
+            noise_multiplier: 0.6,
+            clip_norm: 1.0,
+            lr: 0.8,
+            quant_fraction: 0.5,
+            scheduler: "dpquant".into(),
+            analysis_interval: 2,
+            seed: 3,
+            physical_batch: 32,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn fixtures(cfg: &TrainConfig) -> (MockExecutor, Dataset, Dataset) {
+        let exec = MockExecutor::new(8, 4, 6, 32);
+        let ds = toy_dataset(256 + 64, 8, 4, cfg.seed);
+        let (tr, va) = ds.split(64);
+        (exec, tr, va)
+    }
+
+    fn reject(mutate: impl FnOnce(&mut TrainConfig), needle: &str) {
+        let mut cfg = base_cfg();
+        mutate(&mut cfg);
+        let err = validate_config(&cfg, 256).unwrap_err().to_string();
+        assert!(err.contains(needle), "expected '{needle}' in: {err}");
+    }
+
+    #[test]
+    fn validation_rejects_hostile_configs() {
+        reject(|c| c.batch_size = 0, "batch_size");
+        reject(|c| c.batch_size = 10_000, "exceeds the training-set size");
+        reject(|c| c.physical_batch = 0, "physical_batch");
+        reject(|c| c.dataset_size = 0, "dataset_size");
+        reject(|c| c.quant_fraction = 1.5, "quant_fraction");
+        reject(|c| c.quant_fraction = -0.1, "quant_fraction");
+        reject(|c| c.quant_fraction = f64::NAN, "quant_fraction");
+        reject(|c| c.noise_multiplier = -1.0, "noise_multiplier");
+        reject(|c| c.clip_norm = 0.0, "clip_norm");
+        reject(|c| c.lr = f64::INFINITY, "lr");
+        reject(|c| c.delta = 0.0, "delta");
+        reject(|c| c.delta = 1.0, "delta");
+        reject(|c| c.beta = -2.0, "beta");
+        reject(|c| c.ema_alpha = 1.5, "ema_alpha");
+        reject(|c| c.target_epsilon = Some(0.0), "target_epsilon");
+        reject(|c| c.scheduler = "dpqaunt".into(), "scheduler");
+        // An empty training set is rejected regardless of config.
+        assert!(validate_config(&base_cfg(), 0).is_err());
+        // The default config is valid.
+        assert!(validate_config(&base_cfg(), 256).is_ok());
+    }
+
+    #[test]
+    fn session_matches_legacy_train_wrapper() {
+        let cfg = base_cfg();
+        let (exec, tr, va) = fixtures(&cfg);
+        let legacy = super::super::trainer::train(
+            &exec,
+            &cfg,
+            &tr,
+            &va,
+            &super::super::trainer::TrainerOptions::default(),
+        )
+        .unwrap();
+
+        let mut session = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        let mut outcomes = 0;
+        loop {
+            match session.step_epoch(&exec, &tr, &va, &mut NullSink).unwrap() {
+                EpochOutcome::Finished => break,
+                _ => outcomes += 1,
+            }
+        }
+        assert_eq!(outcomes, cfg.epochs);
+        let (record, weights, _) = session.finish();
+        assert_eq!(record.final_accuracy, legacy.record.final_accuracy);
+        assert_eq!(record.final_epsilon, legacy.record.final_epsilon);
+        assert_eq!(weights, legacy.final_weights);
+        let layers: Vec<_> = record.epochs.iter().map(|e| &e.quantized_layers).collect();
+        let legacy_layers: Vec<_> =
+            legacy.record.epochs.iter().map(|e| &e.quantized_layers).collect();
+        assert_eq!(layers, legacy_layers);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let cfg = base_cfg();
+        let (exec, tr, va) = fixtures(&cfg);
+
+        // Uninterrupted reference run.
+        let mut full = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        full.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        let (full_record, full_weights, mut full_acc) = full.finish();
+
+        // Checkpoint after epoch 2, resume through JSON, run to the end.
+        let mut first = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        for _ in 0..2 {
+            assert!(matches!(
+                first.step_epoch(&exec, &tr, &va, &mut NullSink).unwrap(),
+                EpochOutcome::Completed { .. }
+            ));
+        }
+        let path = std::env::temp_dir()
+            .join(format!("dpquant_ckpt_roundtrip_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        first.checkpoint(&path).unwrap();
+
+        let mut resumed = TrainSession::resume(&path, &exec).unwrap();
+        assert_eq!(resumed.epochs_completed(), 2);
+        resumed.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        let (record, weights, mut acc) = resumed.finish();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(record.final_accuracy.to_bits(), full_record.final_accuracy.to_bits());
+        assert_eq!(record.final_epsilon.to_bits(), full_record.final_epsilon.to_bits());
+        assert_eq!(record.best_accuracy.to_bits(), full_record.best_accuracy.to_bits());
+        assert_eq!(weights, full_weights);
+        assert_eq!(record.epochs.len(), full_record.epochs.len());
+        for (a, b) in record.epochs.iter().zip(&full_record.epochs) {
+            assert_eq!(a.quantized_layers, b.quantized_layers);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.epsilon.to_bits(), b.epsilon.to_bits());
+        }
+        assert_eq!(acc.epsilon(1e-5), full_acc.epsilon(1e-5));
+    }
+
+    #[test]
+    fn corrupted_and_mismatched_checkpoints_rejected() {
+        let err = Checkpoint::from_json_text("{not json").unwrap_err().to_string();
+        assert!(err.contains("malformed JSON"), "{err}");
+
+        let err = Checkpoint::from_json_text("{\"hello\": 1}").unwrap_err().to_string();
+        assert!(err.contains("not a TrainSession checkpoint"), "{err}");
+
+        let future = format!(
+            "{{\"format\": \"{CHECKPOINT_FORMAT}\", \"version\": {}}}",
+            CHECKPOINT_VERSION + 7
+        );
+        let err = Checkpoint::from_json_text(&future).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        // A truncated (torn-write) checkpoint fails loudly too.
+        let cfg = base_cfg();
+        let (exec, tr, va) = fixtures(&cfg);
+        let mut s = TrainSession::builder(cfg).build(&exec, &tr).unwrap();
+        s.step_epoch(&exec, &tr, &va, &mut NullSink).unwrap();
+        let text = s.to_json().to_string();
+        assert!(Checkpoint::from_json_text(&text[..text.len() / 2]).is_err());
+        // And the intact text parses.
+        assert!(Checkpoint::from_json_text(&text).is_ok());
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_executor() {
+        let cfg = base_cfg();
+        let (exec, tr, va) = fixtures(&cfg);
+        let mut s = TrainSession::builder(cfg).build(&exec, &tr).unwrap();
+        s.step_epoch(&exec, &tr, &va, &mut NullSink).unwrap();
+        let text = s.to_json().to_string();
+        let ckpt = Checkpoint::from_json_text(&text).unwrap();
+        // 5 quantizable layers instead of 6.
+        let other = MockExecutor::new(8, 4, 5, 32);
+        let err = TrainSession::resume_from(ckpt, &other).unwrap_err().to_string();
+        assert!(err.contains("quantizable layers"), "{err}");
+    }
+
+    #[test]
+    fn event_stream_golden_sequence() {
+        // batch_size == |D_train| makes every Poisson step non-empty
+        // (q = 1) with exactly one step per epoch, and analysis_samples
+        // == |D_train| makes the probe deterministic — so the exact event
+        // sequence is provable, not just observed.
+        struct Recorder(Vec<String>);
+        impl EventSink for Recorder {
+            fn on_event(&mut self, event: &TrainEvent<'_>) {
+                self.0.push(event.kind().to_string());
+            }
+        }
+        let cfg = TrainConfig {
+            epochs: 2,
+            batch_size: 64,
+            dataset_size: 64,
+            analysis_interval: 1,
+            analysis_samples: 64,
+            quant_fraction: 0.5,
+            scheduler: "dpquant".into(),
+            seed: 11,
+            physical_batch: 64,
+            ..TrainConfig::default()
+        };
+        let exec = MockExecutor::new(8, 4, 6, 64);
+        let ds = toy_dataset(64 + 16, 8, 4, 1);
+        let (tr, va) = ds.split(16);
+        let mut session = TrainSession::builder(cfg).build(&exec, &tr).unwrap();
+        let mut rec = Recorder(Vec::new());
+        session.run(&exec, &tr, &va, &mut rec).unwrap();
+        let per_epoch = [
+            "epoch_started",
+            "analysis_completed",
+            "policy_selected",
+            "step_completed",
+            "epoch_completed",
+        ];
+        let expected: Vec<String> = per_epoch
+            .iter()
+            .cycle()
+            .take(2 * per_epoch.len())
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(rec.0, expected);
+    }
+
+    #[test]
+    fn set_epochs_extends_a_finished_session() {
+        let mut cfg = base_cfg();
+        cfg.epochs = 2;
+        let (exec, tr, va) = fixtures(&cfg);
+        let mut s = TrainSession::builder(cfg).build(&exec, &tr).unwrap();
+        s.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        assert!(s.is_finished());
+        assert_eq!(s.epochs_completed(), 2);
+        s.set_epochs(3);
+        assert!(!s.is_finished());
+        s.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        assert_eq!(s.epochs_completed(), 3);
+    }
+}

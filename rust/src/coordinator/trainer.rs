@@ -1,21 +1,20 @@
-//! The DPQuant training coordinator: epoch loop tying together Poisson
-//! sampling, the compiled DP-SGD step, the fp32 noise mechanism, the
-//! privacy accountant, and the dynamic quantization scheduler
-//! (Algorithms 1 + 2).
+//! Batch-mode compatibility wrapper around [`super::session`].
+//!
+//! The epoch loop itself lives in [`TrainSession`](super::session::TrainSession)
+//! — a resumable, observable state machine. This module keeps the
+//! original run-to-completion API (`train()` + `TrainerOptions` +
+//! `TrainResult`) as a thin adapter so existing callers and tests work
+//! unchanged, and hosts the pieces both APIs share: the [`Scheduler`]
+//! enum, [`StepTrace`], and [`evaluate`].
 
-use super::analysis::compute_loss_impact;
-use super::ema::EmaScores;
 use super::executor::StepExecutor;
-use super::optimizer::{DpOptimizer, NoiseStats};
-use super::policy::{budget_to_k, Policy};
-use super::sampler::select_targets;
+use super::optimizer::NoiseStats;
+use super::session::{EventSink, MultiSink, TraceSink, TrainSession, VerboseSink};
 use crate::config::TrainConfig;
-use crate::data::{eval_batches, make_batches, poisson_sample, Dataset};
-use crate::metrics::{EpochRecord, RunRecord};
-use crate::privacy::{Mechanism, RdpAccountant};
+use crate::data::{eval_batches, Dataset};
+use crate::metrics::RunRecord;
+use crate::privacy::RdpAccountant;
 use crate::util::error::{err, Result};
-use crate::util::gaussian::GaussianSampler;
-use crate::util::rng::Xoshiro256;
 
 /// Scheduling strategy (paper §6.3 ablation + baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +62,11 @@ pub struct StepTrace {
 }
 
 /// Options beyond `TrainConfig` (experiment taps).
+///
+/// Kept for the batch API only: each flag maps onto a provided
+/// [`EventSink`] (`collect_step_stats` → [`TraceSink`], `verbose` →
+/// [`VerboseSink`]). New code should attach sinks to a
+/// [`TrainSession`](super::session::TrainSession) directly.
 #[derive(Clone, Debug, Default)]
 pub struct TrainerOptions {
     /// Record per-step grad/noise norms (costs nothing extra — they fall
@@ -97,11 +101,13 @@ pub fn evaluate<E: StepExecutor + ?Sized>(
     Ok((loss / n, correct / n))
 }
 
-/// Train with the configured scheduler. This is the paper's Figure 2
-/// pipeline: every `analysis_interval` epochs run COMPUTELOSSIMPACT
-/// (DPQuant only), then SELECTTARGETS a policy for the epoch, then run
-/// the epoch's Poisson-sampled DP-SGD steps with the policy's
-/// `quant_mask`; truncate when the privacy budget is exhausted.
+/// Train with the configured scheduler, start to finish. This is the
+/// paper's Figure 2 pipeline, now implemented by
+/// [`TrainSession`](super::session::TrainSession); this wrapper builds a
+/// session, attaches the sinks the legacy flags asked for
+/// ([`VerboseSink`] / [`TraceSink`]), runs it to completion, and packs
+/// the pieces into a [`TrainResult`]. Bit-for-bit identical to the
+/// historical monolithic loop.
 pub fn train<E: StepExecutor + ?Sized>(
     exec: &E,
     cfg: &TrainConfig,
@@ -109,213 +115,23 @@ pub fn train<E: StepExecutor + ?Sized>(
     val_ds: &Dataset,
     opts: &TrainerOptions,
 ) -> Result<TrainResult> {
-    let scheduler = Scheduler::parse(&cfg.scheduler)?;
-    let n_layers = exec.n_quant_layers();
-    let k = budget_to_k(n_layers, cfg.quant_fraction);
-    let q = cfg.batch_size as f64 / train_ds.len() as f64;
-    let steps_per_epoch = (train_ds.len() / cfg.batch_size).max(1);
-
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
-    let mut data_rng = rng.split(0xDA7A);
-    let mut sched_rng = rng.split(0x5C4E);
-    let noise = GaussianSampler::new(rng.split(0x0153));
-    let mut analysis_noise = GaussianSampler::new(rng.split(0xA2A1));
-
-    let mut weights = exec.initial_weights();
-    let mut opt = DpOptimizer::new(
-        cfg.optimizer,
-        cfg.lr,
-        cfg.noise_multiplier,
-        cfg.clip_norm,
-        cfg.batch_size as f64,
-        &exec.param_sizes(),
-        noise.clone(),
-    );
-    let mut accountant = RdpAccountant::new();
-    let mut ema = EmaScores::new(n_layers, cfg.ema_alpha, cfg.ema_enabled);
-    let mut record = RunRecord {
-        name: format!(
-            "{}_{}_{}_{}_k{}_s{}",
-            cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler, k, cfg.seed
-        ),
-        config_summary: format!(
-            "opt={} lr={} sigma={} C={} B={} |D|={} eps_target={:?} beta={}",
-            cfg.optimizer.name(),
-            cfg.lr,
-            cfg.noise_multiplier,
-            cfg.clip_norm,
-            cfg.batch_size,
-            train_ds.len(),
-            cfg.target_epsilon,
-            cfg.beta
-        ),
-        ..Default::default()
-    };
-    let mut trace = StepTrace::default();
-
-    // Frozen subsets for the static baselines.
-    let static_policy = match scheduler {
-        Scheduler::StaticRandom => Some(Policy::from_layers(
-            n_layers,
-            sched_rng.sample_indices(n_layers, k),
-        )),
-        Scheduler::StaticFirst => Some(Policy::from_layers(n_layers, (0..k).collect())),
-        Scheduler::StaticLast => Some(Policy::from_layers(
-            n_layers,
-            (n_layers - k..n_layers).collect(),
-        )),
-        Scheduler::None => Some(Policy::baseline(n_layers)),
-        Scheduler::All => Some(Policy::all(n_layers)),
-        _ => None,
-    };
-
-    let mut truncated = false;
-    'epochs: for epoch in 0..cfg.epochs {
-        // ---- Budget check before spending on analysis.
-        if let Some(target) = cfg.target_epsilon {
-            if accountant.epsilon(cfg.delta).0 >= target {
-                break 'epochs;
-            }
-        }
-
-        // ---- Algorithm 1 (DPQuant only, every analysis_interval epochs)
-        let mut analysis_seconds = 0.0;
-        if scheduler == Scheduler::DpQuant && epoch % cfg.analysis_interval.max(1) == 0 {
-            // The probe subsample is n_sample examples in expectation
-            // (paper Table 3), NOT a full training batch — this keeps
-            // the analysis SGM's privacy cost negligible (Fig. 3).
-            let q_meas =
-                (cfg.analysis_samples as f64 / train_ds.len() as f64).min(1.0);
-            let probe_idx = poisson_sample(&mut data_rng, train_ds.len(), q_meas);
-            if !probe_idx.is_empty() {
-                let probes = make_batches(train_ds, &probe_idx, exec.physical_batch());
-                let report = compute_loss_impact(
-                    exec,
-                    cfg,
-                    &weights,
-                    &probes,
-                    &mut ema,
-                    &mut accountant,
-                    &mut analysis_noise,
-                    (epoch * 7919) as f32,
-                )?;
-                analysis_seconds = report.seconds;
-            }
-        }
-
-        // ---- Algorithm 2: pick this epoch's policy
-        let policy = match scheduler {
-            Scheduler::DpQuant => {
-                let scores = ema.scores().to_vec();
-                Policy::from_layers(n_layers, select_targets(&mut sched_rng, &scores, cfg.beta, k))
-            }
-            Scheduler::Pls => {
-                Policy::from_layers(n_layers, sched_rng.sample_indices(n_layers, k))
-            }
-            _ => static_policy.clone().unwrap(),
-        };
-        let quant_mask = policy.mask();
-
-        // ---- The epoch's DP-SGD steps
-        let t0 = std::time::Instant::now();
-        let mut train_loss_sum = 0f64;
-        let mut train_count = 0f64;
-        for step in 0..steps_per_epoch {
-            let idx = poisson_sample(&mut data_rng, train_ds.len(), q);
-            accountant.step_training(q, cfg.noise_multiplier, 1);
-            if idx.is_empty() {
-                continue;
-            }
-            // Poisson batches can exceed the physical batch: chunk and
-            // accumulate the clipped-grad sums (exact — the sum is linear).
-            let mut agg: Option<Vec<Vec<f32>>> = None;
-            let step_base = (cfg.seed as usize)
-                .wrapping_mul(1_000_003)
-                .wrapping_add(epoch * 10_007 + step);
-            let mut step_rawsum = 0f64;
-            let mut step_rawmax = 0f64;
-            // Each physical chunk gets a distinct seed so per-sample
-            // stochastic-rounding streams never collide across chunks of
-            // one logical step (executors key their RNG on (seed, row)
-            // with row < physical_batch ≤ the 4096 stride). Seeds travel
-            // as f32 (the compiled graphs take a scalar f32 input), so
-            // reduce mod 2^24 *after* the chunk offset — every value
-            // stays in f32's exact-integer range and never rounds.
-            for (ci, b) in make_batches(train_ds, &idx, exec.physical_batch())
-                .into_iter()
-                .enumerate()
-            {
-                let chunk_seed = (step_base.wrapping_add(ci * 4096) % (1 << 24)) as f32;
-                let out = exec.train_step(&weights, &b.x, &b.y, &b.mask, &quant_mask, chunk_seed)?;
-                train_loss_sum += out.loss_sum as f64;
-                train_count += b.real as f64;
-                step_rawsum += out.raw_norm_sum as f64;
-                step_rawmax = step_rawmax.max(out.raw_norm_max as f64);
-                match agg.as_mut() {
-                    None => agg = Some(out.grad_sums),
-                    Some(acc) => {
-                        for (a, g) in acc.iter_mut().zip(&out.grad_sums) {
-                            for (ai, gi) in a.iter_mut().zip(g) {
-                                *ai += gi;
-                            }
-                        }
-                    }
-                }
-            }
-            let mut grads = agg.unwrap();
-            let stats = opt.update(&mut weights, &mut grads);
-            if opts.collect_step_stats {
-                trace.stats.push(stats);
-                trace.raw_norm_mean.push(step_rawsum / idx.len() as f64);
-                trace.raw_norm_max.push(step_rawmax);
-            }
-
-            // Budget check: truncate training at the target ε (paper §6.2
-            // "truncating the training at the respective privacy
-            // budgets").
-            if let Some(target) = cfg.target_epsilon {
-                if accountant.epsilon(cfg.delta).0 >= target {
-                    truncated = true;
-                }
-            }
-            if truncated {
-                break;
-            }
-        }
-        let train_seconds = t0.elapsed().as_secs_f64();
-
-        // ---- Eval + record
-        let (val_loss, val_acc) = evaluate(exec, &weights, val_ds)?;
-        let (eps, _) = accountant.epsilon(cfg.delta);
-        record.analysis_epsilon = accountant.epsilon_of(Mechanism::Analysis, cfg.delta).0;
-        record.push(EpochRecord {
-            epoch,
-            train_loss: train_loss_sum / train_count.max(1.0),
-            val_loss,
-            val_accuracy: val_acc,
-            epsilon: eps,
-            quantized_layers: policy.layers.clone(),
-            train_seconds,
-            analysis_seconds,
-        });
-        if opts.verbose {
-            println!(
-                "epoch {epoch:>3}  loss {:.4}  val_acc {:.3}  eps {:.3}  layers {:?}",
-                record.epochs.last().unwrap().train_loss,
-                val_acc,
-                eps,
-                policy.layers
-            );
-        }
-        if truncated {
-            break 'epochs;
-        }
+    let mut session = TrainSession::builder(cfg.clone()).build(exec, train_ds)?;
+    let mut trace_sink = TraceSink::default();
+    let mut verbose_sink = VerboseSink;
+    let mut sinks: Vec<&mut dyn EventSink> = Vec::new();
+    if opts.collect_step_stats {
+        sinks.push(&mut trace_sink);
     }
-
+    if opts.verbose {
+        sinks.push(&mut verbose_sink);
+    }
+    let mut sink = MultiSink::new(sinks);
+    session.run(exec, train_ds, val_ds, &mut sink)?;
+    let (record, final_weights, accountant) = session.finish();
     Ok(TrainResult {
         record,
-        trace,
-        final_weights: weights,
+        trace: trace_sink.into_trace(),
+        final_weights,
         accountant,
     })
 }
@@ -324,6 +140,8 @@ pub fn train<E: StepExecutor + ?Sized>(
 mod tests {
     use super::*;
     use crate::coordinator::executor::MockExecutor;
+    use crate::privacy::Mechanism;
+    use crate::util::rng::Xoshiro256;
 
     fn toy_dataset(n: usize, feats: usize, classes: usize, seed: u64) -> Dataset {
         let mut rng = Xoshiro256::seed_from_u64(seed);

@@ -14,6 +14,7 @@
 
 pub mod synth;
 
+use crate::util::error::{err, Result};
 use crate::util::rng::Xoshiro256;
 
 /// An in-memory dataset: row-major examples + labels.
@@ -56,13 +57,13 @@ impl Dataset {
 
 /// Generate a dataset by name. `image_shape`/`seq_len` must match the
 /// compiled graph (16x16x3 images, 24-token sequences).
-pub fn generate(name: &str, n: usize, seed: u64) -> Result<Dataset, String> {
+pub fn generate(name: &str, n: usize, seed: u64) -> Result<Dataset> {
     match name {
         "gtsrb" => Ok(synth::images(n, 43, seed, synth::ImageStyle::Signs)),
         "emnist" => Ok(synth::images(n, 47, seed, synth::ImageStyle::Glyphs)),
         "cifar" => Ok(synth::images(n, 10, seed, synth::ImageStyle::Objects)),
         "snli" => Ok(synth::sequence_pairs(n, seed)),
-        other => Err(format!("unknown dataset '{other}'")),
+        other => Err(err!("unknown dataset '{other}' (gtsrb|emnist|cifar|snli)")),
     }
 }
 

@@ -4,7 +4,7 @@ use super::{save_json, ExpCtx};
 use crate::cli::Args;
 use crate::metrics::{mean_std, Table};
 use crate::privacy::{Mechanism, RdpAccountant};
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 use crate::util::json::{self, Json};
 
 /// Fig 1a: accuracy loss vs #layers quantized, DP-SGD vs (near-)non-DP
@@ -128,7 +128,7 @@ pub fn fig1c(args: &Args) -> Result<()> {
 pub fn fig3(args: &Args) -> Result<()> {
     // Paper config: ResNet18/GTSRB, |D| = 26640, B = 1024, σ = 1.0,
     // 60 epochs, analysis every 2 epochs, n_sample = 1, σ_measure = 0.5.
-    let d = args.f64_or("dataset-size", 26_640.0).map_err(Error::msg)?;
+    let d = args.f64_or("dataset-size", 26_640.0)?;
     let b = 1024.0;
     let q_train = b / d;
     let steps_per_epoch = (d / b).round() as u64;
@@ -178,7 +178,7 @@ pub fn fig4(args: &Args) -> Result<()> {
     let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
     let n = ctx.n_layers();
     let fracs = [0.25, 0.5, 0.75, 0.9];
-    let subsets = args.u64_or("subsets", 5).map_err(Error::msg)?;
+    let subsets = args.u64_or("subsets", 5)?;
 
     let mut rows = Vec::new();
     let mut table = Table::new(&["k/n", "random subsets (best/mean/worst)", "DPQuant"]);

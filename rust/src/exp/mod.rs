@@ -18,9 +18,9 @@ pub mod tables;
 use crate::backend;
 use crate::cli::Args;
 use crate::config::TrainConfig;
-use crate::coordinator::{train, StepExecutor, TrainResult, TrainerOptions};
+use crate::coordinator::{NullSink, StepExecutor, TraceSink, TrainResult, TrainSession};
 use crate::data::{self, Dataset};
-use crate::util::error::{err, Error, Result};
+use crate::util::error::{err, Result};
 
 pub fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
@@ -76,8 +76,8 @@ pub struct ExpCtx {
 impl ExpCtx {
     /// Open the default (or flag-selected) substrate with scaled sizes.
     pub fn open(args: &Args, model: &str, dataset: &str, quantizer: &str) -> Result<Self> {
-        let scale = args.f64_or("scale", 1.0).map_err(Error::msg)?;
-        let seeds = args.u64_or("seeds", 3).map_err(Error::msg)?;
+        let scale = args.f64_or("scale", 1.0)?;
+        let seeds = args.u64_or("seeds", 3)?;
         let model = args.str_or("model", model);
         let dataset = args.str_or("dataset", dataset);
         let quantizer = args.str_or("quantizer", quantizer);
@@ -94,18 +94,13 @@ impl ExpCtx {
             lr: 0.5,
             ..TrainConfig::default()
         };
-        base.epochs = args.usize_or("epochs", base.epochs).map_err(Error::msg)?;
-        base.dataset_size = args
-            .usize_or("dataset-size", base.dataset_size)
-            .map_err(Error::msg)?;
-        base.noise_multiplier = args
-            .f64_or("noise-multiplier", base.noise_multiplier)
-            .map_err(Error::msg)?;
-        base.lr = args.f64_or("lr", base.lr).map_err(Error::msg)?;
+        base.epochs = args.usize_or("epochs", base.epochs)?;
+        base.dataset_size = args.usize_or("dataset-size", base.dataset_size)?;
+        base.noise_multiplier = args.f64_or("noise-multiplier", base.noise_multiplier)?;
+        base.lr = args.f64_or("lr", base.lr)?;
         base.backend = args.str_or("backend", &base.backend);
 
-        let full = data::generate(&dataset, base.dataset_size + base.val_size, 12345)
-            .map_err(Error::msg)?;
+        let full = data::generate(&dataset, base.dataset_size + base.val_size, 12345)?;
         let (train_ds, val_ds) = full.split(base.val_size);
         let exec = backend::open_executor(
             &base,
@@ -123,13 +118,24 @@ impl ExpCtx {
         })
     }
 
-    /// One training run under a config derived from the base.
+    /// One training run under a config derived from the base, through
+    /// the session API: a `TraceSink` taps per-step stats when asked
+    /// (the typed replacement for the old `collect_step_stats` flag).
     pub fn run_cfg(&self, cfg: &TrainConfig, stats: bool) -> Result<TrainResult> {
-        let opts = TrainerOptions {
-            collect_step_stats: stats,
-            verbose: false,
-        };
-        train(self.exec.as_ref(), cfg, &self.train_ds, &self.val_ds, &opts)
+        let mut session =
+            TrainSession::builder(cfg.clone()).build(self.exec.as_ref(), &self.train_ds)?;
+        let mut trace_sink = TraceSink::default();
+        let mut null_sink = NullSink;
+        let sink: &mut dyn crate::coordinator::EventSink =
+            if stats { &mut trace_sink } else { &mut null_sink };
+        session.run(self.exec.as_ref(), &self.train_ds, &self.val_ds, sink)?;
+        let (record, final_weights, accountant) = session.finish();
+        Ok(TrainResult {
+            record,
+            trace: trace_sink.into_trace(),
+            final_weights,
+            accountant,
+        })
     }
 
     /// Baseline sweep: `seeds` runs of `scheduler`, returning best

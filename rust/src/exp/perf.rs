@@ -7,19 +7,19 @@ use crate::cli::Args;
 use crate::coordinator::StepExecutor;
 use crate::metrics::Table;
 use crate::perfmodel::{Decomposition, SpeedupModel, PAPER_TABLE14};
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 use crate::util::json::{self, Json};
 
 /// Fig 6: theoretical speedup at 90% quantization via the paper's linear
 /// cost model — exact from the paper's own Table-14 decomposition, plus
 /// the same model over our measured decomposition.
 pub fn fig6(args: &Args) -> Result<()> {
-    let p = args.f64_or("fraction", 0.9).map_err(Error::msg)?;
-    let s = args.f64_or("speedup-factor", 4.0).map_err(Error::msg)?;
+    let p = args.f64_or("fraction", 0.9)?;
+    let s = args.f64_or("speedup-factor", 4.0)?;
     // Analysis cost amortized per iteration: (n_layers+1)·R probe steps
     // every n_interval epochs — with n_sample=1 probes the paper treats
     // it as ~1-2% of an iteration; expose as a flag.
-    let analysis_frac = args.f64_or("analysis-frac", 0.02).map_err(Error::msg)?;
+    let analysis_frac = args.f64_or("analysis-frac", 0.02)?;
 
     let mut table = Table::new(&["config", "overhead %", "T_ours/T_base", "speedup"]);
     let mut rows = Vec::new();
@@ -53,7 +53,7 @@ pub fn tab14(args: &Args) -> Result<()> {
     let batches = crate::data::eval_batches(&ctx.train_ds, b);
     let batch = &batches[0];
     let mask = vec![1f32; exec.n_quant_layers()];
-    let reps = args.usize_or("reps", 10).map_err(Error::msg)?;
+    let reps = args.usize_or("reps", 10)?;
 
     // Step time (forward + backward + per-sample clip, inside the
     // executor — XLA for pjrt, the pure-Rust engine for native).

@@ -13,6 +13,13 @@
 //!   optimizers, the RDP privacy accountant, data pipeline, experiment
 //!   harness and CLI. Python never runs on the training path.
 //!
+//! The coordinator's public API is
+//! [`TrainSession`](coordinator::TrainSession): a resumable state
+//! machine over the epoch loop with a typed
+//! [`TrainEvent`](coordinator::TrainEvent) stream and bit-exact
+//! checkpoint/resume (DESIGN.md §10); the batch
+//! [`train()`](coordinator::train) entry point is a thin wrapper.
+//!
 //! The [`backend`] module additionally provides a **native pure-Rust
 //! execution engine** (`--backend native`, the default): real
 //! forward/backward passes with exact per-sample gradients and the

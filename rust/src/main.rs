@@ -2,7 +2,13 @@
 //!
 //! Subcommands:
 //!   train            — run one training job (scheduler, model, dataset
-//!                      and DP parameters from flags or --config file)
+//!                      and DP parameters from flags or --config file).
+//!                      `--checkpoint-every N` snapshots the full
+//!                      session (weights, optimizer moments, RDP curve,
+//!                      EMA scores, RNG streams) every N epochs;
+//!                      `--resume <ckpt>` continues a snapshot
+//!                      bit-exactly (`--epochs` is the only override —
+//!                      everything else comes from the checkpoint)
 //!   eval-only        — evaluate a model's initial weights
 //!   list             — list compiled graphs in the artifact manifest
 //!   accountant       — privacy-accountant utilities (`--dump` emits RDP
@@ -17,22 +23,29 @@
 //! needing **no artifacts**. `pjrt` targets the AOT artifacts + XLA
 //! runtime (requires `make artifacts` and a vendored `xla` crate).
 //!
+//! Unknown or misspelled `--flags` are hard errors (with a nearest-match
+//! suggestion), so a typo cannot silently run the wrong experiment.
+//!
 //! Examples:
 //!   dpquant train --model miniconvnet --dataset gtsrb --scheduler dpquant \
 //!       --quant-fraction 0.9 --epochs 12 --target-epsilon 8
-//!   dpquant train --backend native --model mlp --dataset cifar
+//!   dpquant train --epochs 8 --checkpoint-every 2 --checkpoint-path results/ck.json
+//!   dpquant train --resume results/ck.json --epochs 16
 //!   dpquant exp fig3
 //!   dpquant exp tab1 --scale 0.25
 
 use dpquant::backend;
 use dpquant::cli::Args;
 use dpquant::config::{ConfigFile, OptimizerKind, TrainConfig};
-use dpquant::coordinator::{train, StepExecutor, TrainerOptions};
-use dpquant::data;
+use dpquant::coordinator::{
+    Checkpoint, EpochOutcome, EventSink, MultiSink, StepExecutor, TraceSink, TrainSession,
+    VerboseSink,
+};
+use dpquant::data::{self, Dataset};
 use dpquant::exp;
 use dpquant::privacy::{default_alphas, rdp_sgm_step, rdp_to_epsilon, RdpAccountant};
 use dpquant::runtime::Runtime;
-use dpquant::util::error::{err, Error, Result};
+use dpquant::util::error::{err, Result};
 
 fn main() {
     let args = match Args::from_env() {
@@ -48,14 +61,92 @@ fn main() {
     }
 }
 
+/// Options shared by every command that builds a `TrainConfig`.
+const CONFIG_OPTS: &[&str] = &[
+    "config",
+    "model",
+    "dataset",
+    "quantizer",
+    "scheduler",
+    "optimizer",
+    "epochs",
+    "batch-size",
+    "noise-multiplier",
+    "clip-norm",
+    "lr",
+    "quant-fraction",
+    "beta",
+    "analysis-interval",
+    "sigma-measure",
+    "analysis-samples",
+    "dataset-size",
+    "val-size",
+    "seed",
+    "target-epsilon",
+    "backend",
+];
+
+fn spec(base: &[&'static str], extra: &[&'static str]) -> Vec<&'static str> {
+    base.iter().chain(extra.iter()).copied().collect()
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command() {
-        Some("train") => cmd_train(args),
-        Some("eval-only") => cmd_eval_only(args),
-        Some("list") => cmd_list(args),
-        Some("accountant") => cmd_accountant(args),
-        Some("exp") => exp::run(args),
-        Some("bench-step") => cmd_bench_step(args),
+        Some("train") => {
+            let opts = spec(
+                CONFIG_OPTS,
+                &["artifacts", "results", "checkpoint-every", "checkpoint-path", "resume"],
+            );
+            args.require_known("train", &opts, &["no-ema", "stats", "quiet"])?;
+            cmd_train(args)
+        }
+        Some("eval-only") => {
+            let opts = spec(CONFIG_OPTS, &["artifacts"]);
+            args.require_known("eval-only", &opts, &["no-ema"])?;
+            cmd_eval_only(args)
+        }
+        Some("list") => {
+            args.require_known("list", &["artifacts"], &[])?;
+            cmd_list(args)
+        }
+        Some("accountant") => {
+            args.require_known(
+                "accountant",
+                &["q", "sigma", "steps", "delta", "analysis-steps", "sigma-measure"],
+                &["dump"],
+            )?;
+            cmd_accountant(args)
+        }
+        Some("exp") => {
+            args.require_known(
+                "exp",
+                &[
+                    "scale",
+                    "seeds",
+                    "model",
+                    "dataset",
+                    "quantizer",
+                    "epochs",
+                    "dataset-size",
+                    "noise-multiplier",
+                    "lr",
+                    "backend",
+                    "artifacts",
+                    "subsets",
+                    "fraction",
+                    "speedup-factor",
+                    "analysis-frac",
+                    "reps",
+                ],
+                &[],
+            )?;
+            exp::run(args)
+        }
+        Some("bench-step") => {
+            let opts = spec(CONFIG_OPTS, &["artifacts", "reps"]);
+            args.require_known("bench-step", &opts, &["no-ema"])?;
+            cmd_bench_step(args)
+        }
         Some(other) => Err(err!("unknown command '{other}' (see README)")),
         None => {
             println!(
@@ -70,10 +161,7 @@ fn dispatch(args: &Args) -> Result<()> {
 /// Build a TrainConfig from `--config file` + flag overrides.
 fn config_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = match args.get("config") {
-        Some(path) => {
-            let cf = ConfigFile::load(path).map_err(Error::msg)?;
-            TrainConfig::from_file(&cf).map_err(Error::msg)?
-        }
+        Some(path) => TrainConfig::from_file(&ConfigFile::load(path)?)?,
         None => TrainConfig::default(),
     };
     if let Some(v) = args.get("model") {
@@ -89,34 +177,22 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
         cfg.scheduler = v.to_string();
     }
     if let Some(v) = args.get("optimizer") {
-        cfg.optimizer = OptimizerKind::parse(v).map_err(Error::msg)?;
+        cfg.optimizer = OptimizerKind::parse(v)?;
     }
-    cfg.epochs = args.usize_or("epochs", cfg.epochs).map_err(Error::msg)?;
-    cfg.batch_size = args.usize_or("batch-size", cfg.batch_size).map_err(Error::msg)?;
-    cfg.noise_multiplier = args
-        .f64_or("noise-multiplier", cfg.noise_multiplier)
-        .map_err(Error::msg)?;
-    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm).map_err(Error::msg)?;
-    cfg.lr = args.f64_or("lr", cfg.lr).map_err(Error::msg)?;
-    cfg.quant_fraction = args
-        .f64_or("quant-fraction", cfg.quant_fraction)
-        .map_err(Error::msg)?;
-    cfg.beta = args.f64_or("beta", cfg.beta).map_err(Error::msg)?;
-    cfg.analysis_interval = args
-        .usize_or("analysis-interval", cfg.analysis_interval)
-        .map_err(Error::msg)?;
-    cfg.sigma_measure = args
-        .f64_or("sigma-measure", cfg.sigma_measure)
-        .map_err(Error::msg)?;
-    cfg.analysis_samples = args
-        .usize_or("analysis-samples", cfg.analysis_samples)
-        .map_err(Error::msg)?;
-    cfg.dataset_size = args
-        .usize_or("dataset-size", cfg.dataset_size)
-        .map_err(Error::msg)?;
-    cfg.val_size = args.usize_or("val-size", cfg.val_size).map_err(Error::msg)?;
-    cfg.seed = args.u64_or("seed", cfg.seed).map_err(Error::msg)?;
-    if let Some(eps) = args.f64_opt("target-epsilon").map_err(Error::msg)? {
+    cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
+    cfg.batch_size = args.usize_or("batch-size", cfg.batch_size)?;
+    cfg.noise_multiplier = args.f64_or("noise-multiplier", cfg.noise_multiplier)?;
+    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.quant_fraction = args.f64_or("quant-fraction", cfg.quant_fraction)?;
+    cfg.beta = args.f64_or("beta", cfg.beta)?;
+    cfg.analysis_interval = args.usize_or("analysis-interval", cfg.analysis_interval)?;
+    cfg.sigma_measure = args.f64_or("sigma-measure", cfg.sigma_measure)?;
+    cfg.analysis_samples = args.usize_or("analysis-samples", cfg.analysis_samples)?;
+    cfg.dataset_size = args.usize_or("dataset-size", cfg.dataset_size)?;
+    cfg.val_size = args.usize_or("val-size", cfg.val_size)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if let Some(eps) = args.f64_opt("target-epsilon")? {
         cfg.target_epsilon = Some(eps);
     }
     if args.has_flag("no-ema") {
@@ -132,44 +208,154 @@ fn artifacts_dir(args: &Args) -> String {
     args.str_or("artifacts", "artifacts")
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
-    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)
-        .map_err(Error::msg)?;
-    let (train_ds, val_ds) = full.split(cfg.val_size);
-    let exec = backend::open_executor(
-        &cfg,
-        train_ds.example_numel,
-        train_ds.n_classes,
-        &artifacts_dir(args),
-    )?;
+/// Regenerate the datasets a config describes (identical on resume —
+/// generation is deterministic from the config's dataset/sizes/seed).
+fn open_data(cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
+    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)?;
+    Ok(full.split(cfg.val_size))
+}
 
-    let opts = TrainerOptions {
-        collect_step_stats: args.has_flag("stats"),
-        verbose: !args.has_flag("quiet"),
+fn cmd_train(args: &Args) -> Result<()> {
+    let verbose = !args.has_flag("quiet");
+    let (session, exec, train_ds, val_ds) = if let Some(path) = args.get("resume") {
+        // Everything comes from the checkpoint; `--epochs` is the one
+        // supported override (extend or shorten the run). Any other
+        // config flag would be silently ignored — make that a hard
+        // error rather than let a run spend the wrong privacy budget.
+        for key in CONFIG_OPTS {
+            if *key != "epochs" && args.get(key).is_some() {
+                return Err(err!(
+                    "--{key} cannot be combined with --resume: the configuration comes from \
+                     the checkpoint, and --epochs is the only supported override"
+                ));
+            }
+        }
+        if args.has_flag("no-ema") {
+            return Err(err!(
+                "--no-ema cannot be combined with --resume: the configuration comes from \
+                 the checkpoint"
+            ));
+        }
+        let ckpt = Checkpoint::load(path)?;
+        let cfg = ckpt.config().clone();
+        let (train_ds, val_ds) = open_data(&cfg)?;
+        let exec = backend::open_executor(
+            &cfg,
+            train_ds.example_numel,
+            train_ds.n_classes,
+            &artifacts_dir(args),
+        )?;
+        let mut session = TrainSession::resume_from(ckpt, exec.as_ref())?;
+        if let Some(epochs) = args.usize_opt("epochs")? {
+            if session.is_truncated() {
+                eprintln!(
+                    "warning: ignoring --epochs {epochs}: the checkpointed session already \
+                     reached its privacy budget and cannot run further epochs"
+                );
+            } else {
+                session.set_epochs(epochs);
+            }
+        }
+        if verbose {
+            if session.is_truncated() {
+                println!(
+                    "resumed {path}: {} epochs completed; session hit its privacy budget \
+                     (no further epochs will run)",
+                    session.epochs_completed()
+                );
+            } else {
+                println!(
+                    "resumed {path}: {} epochs completed, running to epoch {}",
+                    session.epochs_completed(),
+                    session.config().epochs
+                );
+            }
+        }
+        (session, exec, train_ds, val_ds)
+    } else {
+        let cfg = config_from_args(args)?;
+        let (train_ds, val_ds) = open_data(&cfg)?;
+        let exec = backend::open_executor(
+            &cfg,
+            train_ds.example_numel,
+            train_ds.n_classes,
+            &artifacts_dir(args),
+        )?;
+        let session = TrainSession::builder(cfg.clone()).build(exec.as_ref(), &train_ds)?;
+        if verbose {
+            println!(
+                "backend={} model={} dataset={} quantizer={} scheduler={}",
+                cfg.backend, cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler
+            );
+        }
+        (session, exec, train_ds, val_ds)
     };
-    if opts.verbose {
-        println!(
-            "backend={} model={} dataset={} quantizer={} scheduler={}",
-            cfg.backend, cfg.model, cfg.dataset, cfg.quantizer, cfg.scheduler
-        );
+    run_session(args, session, exec.as_ref(), &train_ds, &val_ds)
+}
+
+/// Drive a session epoch by epoch, checkpointing on the requested
+/// cadence, then print + save the run record.
+fn run_session(
+    args: &Args,
+    mut session: TrainSession,
+    exec: &dyn StepExecutor,
+    train_ds: &Dataset,
+    val_ds: &Dataset,
+) -> Result<()> {
+    let verbose = !args.has_flag("quiet");
+    let ckpt_every = args.usize_or("checkpoint-every", 0)?;
+    let ckpt_path = args.str_or("checkpoint-path", "results/checkpoint.json");
+    if args.get("checkpoint-path").is_some() && ckpt_every == 0 {
+        return Err(err!(
+            "--checkpoint-path without --checkpoint-every N never writes a checkpoint; \
+             pass --checkpoint-every to set the cadence"
+        ));
     }
-    let res = train(exec.as_ref(), &cfg, &train_ds, &val_ds, &opts)?;
+
+    let mut trace_sink = TraceSink::default();
+    let mut verbose_sink = VerboseSink;
+    let mut sinks: Vec<&mut dyn EventSink> = Vec::new();
+    if args.has_flag("stats") {
+        sinks.push(&mut trace_sink);
+    }
+    if verbose {
+        sinks.push(&mut verbose_sink);
+    }
+    let mut sink = MultiSink::new(sinks);
+
+    loop {
+        match session.step_epoch(exec, train_ds, val_ds, &mut sink)? {
+            EpochOutcome::Finished => break,
+            EpochOutcome::Completed { .. } | EpochOutcome::Truncated { .. } => {
+                if ckpt_every > 0 && session.epochs_completed() % ckpt_every == 0 {
+                    session.checkpoint(&ckpt_path)?;
+                    if verbose {
+                        println!(
+                            "checkpoint: {ckpt_path} (after epoch {})",
+                            session.epochs_completed()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    let (record, _weights, _accountant) = session.finish();
     println!(
         "final: val_acc={:.4} eps={:.3} (analysis eps alone: {:.3}) epochs={}",
-        res.record.final_accuracy,
-        res.record.final_epsilon,
-        res.record.analysis_epsilon,
-        res.record.epochs.len()
+        record.final_accuracy,
+        record.final_epsilon,
+        record.analysis_epsilon,
+        record.epochs.len()
     );
-    let path = res.record.save(&args.str_or("results", "results"))?;
+    let path = record.save(&args.str_or("results", "results"))?;
     println!("saved {path}");
     Ok(())
 }
 
 fn cmd_eval_only(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed).map_err(Error::msg)?;
+    let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed)?;
     let exec = backend::open_executor(&cfg, ds.example_numel, ds.n_classes, &artifacts_dir(args))?;
     let weights = exec.initial_weights();
     let (loss, acc) = dpquant::coordinator::trainer::evaluate(exec.as_ref(), &weights, &ds)?;
@@ -214,12 +400,12 @@ fn cmd_accountant(args: &Args) -> Result<()> {
         return Ok(());
     }
     // Compose a schedule: ε for (q, σ, steps) + optional analysis steps.
-    let q = args.f64_or("q", 0.02).map_err(Error::msg)?;
-    let sigma = args.f64_or("sigma", 1.0).map_err(Error::msg)?;
-    let steps = args.u64_or("steps", 1000).map_err(Error::msg)?;
-    let delta = args.f64_or("delta", 1e-5).map_err(Error::msg)?;
-    let analysis_steps = args.u64_or("analysis-steps", 0).map_err(Error::msg)?;
-    let sigma_measure = args.f64_or("sigma-measure", 0.5).map_err(Error::msg)?;
+    let q = args.f64_or("q", 0.02)?;
+    let sigma = args.f64_or("sigma", 1.0)?;
+    let steps = args.u64_or("steps", 1000)?;
+    let delta = args.f64_or("delta", 1e-5)?;
+    let analysis_steps = args.u64_or("analysis-steps", 0)?;
+    let sigma_measure = args.f64_or("sigma-measure", 0.5)?;
 
     let mut acc = RdpAccountant::new();
     acc.step_training(q, sigma, steps);
@@ -247,7 +433,7 @@ fn cmd_accountant(args: &Args) -> Result<()> {
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let ds_probe = data::generate(&cfg.dataset, 1, cfg.seed).map_err(Error::msg)?;
+    let ds_probe = data::generate(&cfg.dataset, 1, cfg.seed)?;
     let exec = backend::open_executor(
         &cfg,
         ds_probe.example_numel,
@@ -255,11 +441,11 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
         &artifacts_dir(args),
     )?;
     let b = exec.physical_batch();
-    let ds = data::generate(&cfg.dataset, b, cfg.seed).map_err(Error::msg)?;
+    let ds = data::generate(&cfg.dataset, b, cfg.seed)?;
     let batches = data::eval_batches(&ds, b);
     let batch = &batches[0];
     let nl = exec.n_quant_layers();
-    let reps = args.usize_or("reps", 20).map_err(Error::msg)?;
+    let reps = args.usize_or("reps", 20)?;
     let weights = exec.initial_weights();
     let tag = format!("{}_{}_{}", cfg.model, cfg.dataset, cfg.quantizer);
 

@@ -29,6 +29,22 @@ impl GaussianSampler {
         Self::new(Xoshiro256::seed_from_u64(seed))
     }
 
+    /// Full sampler state (RNG state + the polar method's cached second
+    /// deviate), for checkpointing. The cached deviate matters: dropping
+    /// it would shift every subsequent draw by one.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.rng.state(), self.cached)
+    }
+
+    /// Rebuild a sampler from a captured [`GaussianSampler::state`];
+    /// continues the deviate stream bit-exactly.
+    pub fn from_state(rng: [u64; 4], cached: Option<f64>) -> Self {
+        Self {
+            rng: Xoshiro256::from_state(rng),
+            cached,
+        }
+    }
+
     /// Standard normal deviate.
     #[inline]
     pub fn standard(&mut self) -> f64 {

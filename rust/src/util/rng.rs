@@ -42,6 +42,22 @@ impl Xoshiro256 {
         }
     }
 
+    /// The raw generator state, for checkpointing. Restoring via
+    /// [`Xoshiro256::from_state`] continues the stream bit-exactly.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a captured [`Xoshiro256::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        // Same all-zero guard as seeding: the zero state is a fixed point.
+        if s == [0, 0, 0, 0] {
+            Self { s: [1, 2, 3, 4] }
+        } else {
+            Self { s }
+        }
+    }
+
     /// Derive an independent stream for a subsystem. `tag` should be a
     /// distinct constant per use-site (e.g. hash of a name).
     pub fn split(&mut self, tag: u64) -> Self {
