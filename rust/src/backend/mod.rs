@@ -335,6 +335,42 @@ pub fn open_executor(
     }
 }
 
+/// Open an executor for one **sweep worker** (`sweep/` runs whole grid
+/// points in parallel, one executor per worker).
+///
+/// Differences from [`open_executor`]:
+///
+/// * the native engine is pinned to **one** internal thread — sweep
+///   parallelism is across grid points, and the native backend's float
+///   sums are deterministic only *per* worker-thread count, so pinning
+///   makes every grid point's result independent of `--jobs` and of
+///   `DPQUANT_THREADS` (the sweep determinism contract, DESIGN.md §11);
+/// * artifact-backed backends are rejected: sweep workers must be
+///   self-contained, and the PJRT runtime is not shareable across
+///   threads.
+pub fn open_sweep_executor(
+    cfg: &TrainConfig,
+    example_numel: usize,
+    n_classes: usize,
+) -> Result<Box<dyn StepExecutor>> {
+    match cfg.backend.as_str() {
+        "native" => Ok(Box::new(
+            NativeExecutor::from_config(cfg, example_numel, n_classes)?.with_threads(1),
+        )),
+        "mock" => {
+            let mut exec = MockExecutor::new(example_numel, n_classes, 8, cfg.physical_batch);
+            exec.clip_norm = cfg.clip_norm as f32;
+            Ok(Box::new(exec))
+        }
+        "pjrt" | "xla" => Err(err!(
+            "sweep workers need an artifact-free backend; use --backend native or mock, \
+             not '{}'",
+            cfg.backend
+        )),
+        other => Err(err!("unknown backend '{other}' (sweep supports native | mock)")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,6 +8,11 @@
 //! order** — so for a fixed thread count the result is bit-for-bit
 //! deterministic (per-sample RNG streams are keyed by sample index, not
 //! by thread).
+//!
+//! For coarse-grained jobs of uneven duration (whole training runs),
+//! static chunking wastes wall-clock; `sweep::pool::run_ordered` is the
+//! work-stealing generalization of this module used by the sweep
+//! orchestrator.
 
 /// Worker-thread count: the `DPQUANT_THREADS` env var wins, else the
 /// machine's available parallelism, else 1.

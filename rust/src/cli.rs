@@ -188,8 +188,10 @@ fn unknown_key_error(
     ArgError::new(msg)
 }
 
-/// Closest known key by edit distance, if within 3 edits.
-fn nearest<'a>(key: &str, known: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+/// Closest known key by edit distance, if within 3 edits. Public so
+/// other keyed front-ends (the sweep grid parser) can offer the same
+/// did-you-mean suggestions.
+pub fn nearest<'a>(key: &str, known: impl Iterator<Item = &'a str>) -> Option<&'a str> {
     known
         .map(|k| (edit_distance(key, k), k))
         .min()

@@ -336,6 +336,34 @@ pub const KNOWN_TRAIN_KEYS: &[&str] = &[
     "backend",
 ];
 
+/// The `--key` command-line forms [`TrainConfig::from_args`] reads.
+/// Commands that build a config pass these to `Args::require_known`
+/// (plus their own extras), and `train --resume` uses the list to
+/// reject silently-ignored overrides.
+pub const CONFIG_ARG_KEYS: &[&str] = &[
+    "config",
+    "model",
+    "dataset",
+    "quantizer",
+    "scheduler",
+    "optimizer",
+    "epochs",
+    "batch-size",
+    "noise-multiplier",
+    "clip-norm",
+    "lr",
+    "quant-fraction",
+    "beta",
+    "analysis-interval",
+    "sigma-measure",
+    "analysis-samples",
+    "dataset-size",
+    "val-size",
+    "seed",
+    "target-epsilon",
+    "backend",
+];
+
 impl TrainConfig {
     /// Keys in the `[train]` section that `from_file` does not read.
     pub fn unknown_keys(cf: &ConfigFile) -> Vec<String> {
@@ -349,11 +377,15 @@ impl TrainConfig {
     /// Sections other than `[train]` that contain trainer keys — almost
     /// certainly a misspelled section header (`[trian]`, `[Train]`):
     /// every key inside one is silently dropped by `from_file`.
+    /// `[sweep]` is exempt: it legitimately holds trainer keys as sweep
+    /// axes (read by `sweep::grid::GridSpec::from_config`).
     pub fn suspect_sections(cf: &ConfigFile) -> Vec<String> {
         let mut sections: Vec<String> = cf
             .entries
             .keys()
-            .filter(|(sec, key)| sec != "train" && KNOWN_TRAIN_KEYS.contains(&key.as_str()))
+            .filter(|(sec, key)| {
+                sec != "train" && sec != "sweep" && KNOWN_TRAIN_KEYS.contains(&key.as_str())
+            })
             .map(|(sec, _)| sec.clone())
             .collect();
         sections.dedup();
@@ -408,6 +440,67 @@ impl TrainConfig {
             physical_batch: cf.i64_or(sec, "physical_batch", d.physical_batch as i64) as usize,
             backend: cf.str_or(sec, "backend", &d.backend),
         })
+    }
+
+    /// Resolve from the command line: `--config file` first (when
+    /// given), then individual `--key` overrides on top. Shared by every
+    /// config-consuming command (`train`, `eval-only`, `bench-step`,
+    /// `sweep`); the accepted keys are [`CONFIG_ARG_KEYS`].
+    pub fn from_args(args: &crate::cli::Args) -> crate::util::error::Result<Self> {
+        let base = match args.get("config") {
+            Some(path) => Self::from_file(&ConfigFile::load(path)?)?,
+            None => Self::default(),
+        };
+        base.with_arg_overrides(args)
+    }
+
+    /// Apply the `--key` overrides to an already-resolved base config.
+    /// Split from [`TrainConfig::from_args`] for callers that parse the
+    /// `--config` file themselves (the sweep also reads its `[sweep]`
+    /// section from the same parse).
+    pub fn with_arg_overrides(
+        mut self,
+        args: &crate::cli::Args,
+    ) -> crate::util::error::Result<Self> {
+        let cfg = &mut self;
+        if let Some(v) = args.get("model") {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = args.get("dataset") {
+            cfg.dataset = v.to_string();
+        }
+        if let Some(v) = args.get("quantizer") {
+            cfg.quantizer = v.to_string();
+        }
+        if let Some(v) = args.get("scheduler") {
+            cfg.scheduler = v.to_string();
+        }
+        if let Some(v) = args.get("optimizer") {
+            cfg.optimizer = OptimizerKind::parse(v)?;
+        }
+        cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
+        cfg.batch_size = args.usize_or("batch-size", cfg.batch_size)?;
+        cfg.noise_multiplier = args.f64_or("noise-multiplier", cfg.noise_multiplier)?;
+        cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm)?;
+        cfg.lr = args.f64_or("lr", cfg.lr)?;
+        cfg.quant_fraction = args.f64_or("quant-fraction", cfg.quant_fraction)?;
+        cfg.beta = args.f64_or("beta", cfg.beta)?;
+        cfg.analysis_interval = args.usize_or("analysis-interval", cfg.analysis_interval)?;
+        cfg.sigma_measure = args.f64_or("sigma-measure", cfg.sigma_measure)?;
+        cfg.analysis_samples = args.usize_or("analysis-samples", cfg.analysis_samples)?;
+        cfg.dataset_size = args.usize_or("dataset-size", cfg.dataset_size)?;
+        cfg.val_size = args.usize_or("val-size", cfg.val_size)?;
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        if let Some(eps) = args.f64_opt("target-epsilon")? {
+            cfg.target_epsilon = Some(eps);
+        }
+        if args.has_flag("no-ema") {
+            cfg.ema_enabled = false;
+        }
+        if let Some(v) = args.get("backend") {
+            cfg.backend = v.to_string();
+        }
+        Ok(self)
     }
 
     /// Poisson sampling rate q = B/|D| used by the accountant.
@@ -588,6 +681,35 @@ backend = "mock"
         assert_ne!(c.seed, d.seed);
         assert_ne!(c.physical_batch, d.physical_batch);
         assert_ne!(c.backend, d.backend);
+    }
+
+    #[test]
+    fn from_args_layers_flag_overrides_on_defaults() {
+        let args = crate::cli::Args::parse(
+            "train --epochs 9 --lr 0.125 --backend mock --no-ema --seed 7"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(c.epochs, 9);
+        assert_eq!(c.lr, 0.125);
+        assert_eq!(c.backend, "mock");
+        assert!(!c.ema_enabled);
+        assert_eq!(c.seed, 7);
+        // Untouched keys keep their defaults.
+        assert_eq!(c.model, TrainConfig::default().model);
+        assert_eq!(c.target_epsilon, None);
+    }
+
+    #[test]
+    fn sweep_section_is_not_a_suspect_header() {
+        // Trainer keys inside [sweep] are sweep axes, not a typo'd
+        // [train]; a genuinely misspelled header still warns.
+        let cf =
+            ConfigFile::parse("[sweep]\nepochs = [1, 2]\nseed = [0, 1]\n[trian]\nlr = 0.5\n")
+                .unwrap();
+        assert_eq!(TrainConfig::suspect_sections(&cf), vec!["trian".to_string()]);
     }
 
     #[test]

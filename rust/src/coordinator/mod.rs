@@ -25,4 +25,5 @@ pub use session::{
     Checkpoint, EpochOutcome, EventSink, MultiSink, NullSink, SessionBuilder, TraceSink,
     TrainEvent, TrainSession, VerboseSink,
 };
-pub use trainer::{train, Scheduler, TrainResult, TrainerOptions};
+pub use session::evaluate;
+pub use trainer::{train, train_with_sink, Scheduler, TrainResult, TrainerOptions};

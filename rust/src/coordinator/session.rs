@@ -31,9 +31,9 @@ use super::executor::StepExecutor;
 use super::optimizer::{DpOptimizer, NoiseStats};
 use super::policy::{budget_to_k, Policy};
 use super::sampler::select_targets;
-use super::trainer::{evaluate, Scheduler, StepTrace};
+use super::trainer::{Scheduler, StepTrace};
 use crate::config::TrainConfig;
-use crate::data::{make_batches, poisson_sample, Dataset};
+use crate::data::{eval_batches, make_batches, poisson_sample, Dataset};
 use crate::metrics::{EpochRecord, RunRecord};
 use crate::privacy::{Mechanism, RdpAccountant, StepRecord};
 use crate::util::error::{ensure, err, Context, Result};
@@ -172,6 +172,28 @@ impl EventSink for MultiSink<'_> {
             sink.on_event(event);
         }
     }
+}
+
+/// Evaluate `weights` over a full dataset; returns (mean loss, accuracy).
+///
+/// This is the single shared implementation behind the session's
+/// per-epoch eval, the `trainer::train` wrapper, and the CLI's
+/// `eval-only` — it lives beside the session (the core API) and is
+/// re-exported from `trainer` for the legacy call sites.
+pub fn evaluate<E: StepExecutor + ?Sized>(
+    exec: &E,
+    weights: &[Vec<f32>],
+    ds: &Dataset,
+) -> Result<(f64, f64)> {
+    let mut loss = 0f64;
+    let mut correct = 0f64;
+    for b in eval_batches(ds, exec.physical_batch()) {
+        let out = exec.eval_step(weights, &b.x, &b.y, &b.mask)?;
+        loss += out.loss_sum as f64;
+        correct += out.correct_sum as f64;
+    }
+    let n = ds.len() as f64;
+    Ok((loss / n, correct / n))
 }
 
 // ---------------------------------------------------------------------
@@ -1524,6 +1546,67 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         assert_eq!(rec.0, expected);
+    }
+
+    #[test]
+    fn evaluate_mean_semantics_and_batch_invariance() {
+        // A linearly separable set with a huge margin: under the identity
+        // weight matrix every example is classified correctly and the
+        // per-example loss is ~0, so (mean loss, accuracy) are provable.
+        let feats = 3;
+        let classes = 3;
+        let n = 10;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let c = i % classes;
+            for f in 0..feats {
+                xs.push(if f == c { 20.0 } else { 0.0 });
+            }
+            ys.push(c as i32);
+        }
+        let ds = Dataset {
+            xs,
+            ys,
+            example_numel: feats,
+            n_classes: classes,
+        };
+        // Identity weights: logit_c = 20 for the true class, 0 elsewhere.
+        let mut w = vec![0f32; classes * feats];
+        for c in 0..classes {
+            w[c * feats + c] = 1.0;
+        }
+        let weights = vec![w];
+
+        let exec = MockExecutor::new(feats, classes, 2, 4);
+        let (loss, acc) = evaluate(&exec, &weights, &ds).unwrap();
+        assert_eq!(acc, 1.0, "separated set must be fully correct");
+        assert!(loss >= 0.0 && loss < 1e-6, "loss={loss}");
+
+        // The physical batch size (and thus the padded final chunk) must
+        // not change the result: n=10 over batches of 4 vs 7 vs 16.
+        for batch in [7usize, 16] {
+            let other = MockExecutor::new(feats, classes, 2, batch);
+            let (l2, a2) = evaluate(&other, &weights, &ds).unwrap();
+            assert_eq!(a2, acc);
+            assert!((l2 - loss).abs() < 1e-9, "{l2} vs {loss}");
+        }
+
+        // Mean semantics: duplicating the dataset leaves (loss, acc)
+        // unchanged.
+        let mut xs2 = ds.xs.clone();
+        xs2.extend_from_slice(&ds.xs);
+        let mut ys2 = ds.ys.clone();
+        ys2.extend_from_slice(&ds.ys);
+        let doubled = Dataset {
+            xs: xs2,
+            ys: ys2,
+            example_numel: feats,
+            n_classes: classes,
+        };
+        let (l3, a3) = evaluate(&exec, &weights, &doubled).unwrap();
+        assert_eq!(a3, acc);
+        assert!((l3 - loss).abs() < 1e-9);
     }
 
     #[test]

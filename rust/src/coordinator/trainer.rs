@@ -4,17 +4,21 @@
 //! — a resumable, observable state machine. This module keeps the
 //! original run-to-completion API (`train()` + `TrainerOptions` +
 //! `TrainResult`) as a thin adapter so existing callers and tests work
-//! unchanged, and hosts the pieces both APIs share: the [`Scheduler`]
-//! enum, [`StepTrace`], and [`evaluate`].
+//! unchanged, hosts the pieces both APIs share (the [`Scheduler`] enum,
+//! [`StepTrace`], [`train_with_sink`]), and re-exports
+//! [`evaluate`](super::session::evaluate) from its new home beside the
+//! session.
 
 use super::executor::StepExecutor;
 use super::optimizer::NoiseStats;
 use super::session::{EventSink, MultiSink, TraceSink, TrainSession, VerboseSink};
 use crate::config::TrainConfig;
-use crate::data::{eval_batches, Dataset};
+use crate::data::Dataset;
 use crate::metrics::RunRecord;
 use crate::privacy::RdpAccountant;
 use crate::util::error::{err, Result};
+
+pub use super::session::evaluate;
 
 /// Scheduling strategy (paper §6.3 ablation + baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,21 +88,24 @@ pub struct TrainResult {
     pub accountant: RdpAccountant,
 }
 
-/// Evaluate `weights` over a full dataset; returns (mean loss, accuracy).
-pub fn evaluate<E: StepExecutor + ?Sized>(
+/// Build a fresh session from `cfg`, run it to completion against the
+/// given `sink`, and return the pieces every batch-mode caller wants:
+/// `(record, final weights, accountant)`.
+///
+/// This is the one shared run-to-completion engine behind
+/// [`train`] (which attaches the legacy flag-mapped sinks), the
+/// experiment harness's `ExpCtx::run_cfg`, and the sweep orchestrator's
+/// workers (which attach a per-grid-point progress sink).
+pub fn train_with_sink<E: StepExecutor + ?Sized>(
     exec: &E,
-    weights: &[Vec<f32>],
-    ds: &Dataset,
-) -> Result<(f64, f64)> {
-    let mut loss = 0f64;
-    let mut correct = 0f64;
-    for b in eval_batches(ds, exec.physical_batch()) {
-        let out = exec.eval_step(weights, &b.x, &b.y, &b.mask)?;
-        loss += out.loss_sum as f64;
-        correct += out.correct_sum as f64;
-    }
-    let n = ds.len() as f64;
-    Ok((loss / n, correct / n))
+    cfg: &TrainConfig,
+    train_ds: &Dataset,
+    val_ds: &Dataset,
+    sink: &mut dyn EventSink,
+) -> Result<(RunRecord, Vec<Vec<f32>>, RdpAccountant)> {
+    let mut session = TrainSession::builder(cfg.clone()).build(exec, train_ds)?;
+    session.run(exec, train_ds, val_ds, sink)?;
+    Ok(session.finish())
 }
 
 /// Train with the configured scheduler, start to finish. This is the
@@ -115,7 +122,6 @@ pub fn train<E: StepExecutor + ?Sized>(
     val_ds: &Dataset,
     opts: &TrainerOptions,
 ) -> Result<TrainResult> {
-    let mut session = TrainSession::builder(cfg.clone()).build(exec, train_ds)?;
     let mut trace_sink = TraceSink::default();
     let mut verbose_sink = VerboseSink;
     let mut sinks: Vec<&mut dyn EventSink> = Vec::new();
@@ -126,8 +132,8 @@ pub fn train<E: StepExecutor + ?Sized>(
         sinks.push(&mut verbose_sink);
     }
     let mut sink = MultiSink::new(sinks);
-    session.run(exec, train_ds, val_ds, &mut sink)?;
-    let (record, final_weights, accountant) = session.finish();
+    let (record, final_weights, accountant) =
+        train_with_sink(exec, cfg, train_ds, val_ds, &mut sink)?;
     Ok(TrainResult {
         record,
         trace: trace_sink.into_trace(),

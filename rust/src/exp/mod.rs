@@ -18,7 +18,7 @@ pub mod tables;
 use crate::backend;
 use crate::cli::Args;
 use crate::config::TrainConfig;
-use crate::coordinator::{NullSink, StepExecutor, TraceSink, TrainResult, TrainSession};
+use crate::coordinator::{train_with_sink, NullSink, StepExecutor, TraceSink, TrainResult};
 use crate::data::{self, Dataset};
 use crate::util::error::{err, Result};
 
@@ -122,14 +122,12 @@ impl ExpCtx {
     /// the session API: a `TraceSink` taps per-step stats when asked
     /// (the typed replacement for the old `collect_step_stats` flag).
     pub fn run_cfg(&self, cfg: &TrainConfig, stats: bool) -> Result<TrainResult> {
-        let mut session =
-            TrainSession::builder(cfg.clone()).build(self.exec.as_ref(), &self.train_ds)?;
         let mut trace_sink = TraceSink::default();
         let mut null_sink = NullSink;
         let sink: &mut dyn crate::coordinator::EventSink =
             if stats { &mut trace_sink } else { &mut null_sink };
-        session.run(self.exec.as_ref(), &self.train_ds, &self.val_ds, sink)?;
-        let (record, final_weights, accountant) = session.finish();
+        let (record, final_weights, accountant) =
+            train_with_sink(self.exec.as_ref(), cfg, &self.train_ds, &self.val_ds, sink)?;
         Ok(TrainResult {
             record,
             trace: trace_sink.into_trace(),

@@ -1,4 +1,5 @@
-//! Table experiments (Tables 1, 2, 4, 6, 8, 9, 10, 11, 12).
+//! Table experiments (Tables 1, 2, 4, 6, 8, 9, 10, 11, 12) plus the
+//! accuracy-vs-ε Pareto view the sweep orchestrator renders.
 
 use super::{save_json, ExpCtx};
 use crate::cli::Args;
@@ -6,6 +7,52 @@ use crate::config::OptimizerKind;
 use crate::metrics::{mean_std, Table};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
+
+/// One sweep outcome for the Pareto view: higher accuracy and lower ε
+/// are both better.
+pub struct SweepRow {
+    pub label: String,
+    pub accuracy: f64,
+    pub epsilon: f64,
+}
+
+/// Which rows sit on the (accuracy ↑, ε ↓) Pareto frontier: row `i` is
+/// on it iff no other row has `ε ≤ ε_i` and `acc ≥ acc_i` with at least
+/// one strict. O(n²), fine at sweep scale.
+pub fn pareto_flags(rows: &[SweepRow]) -> Vec<bool> {
+    rows.iter()
+        .map(|a| {
+            !rows.iter().any(|b| {
+                b.epsilon <= a.epsilon
+                    && b.accuracy >= a.accuracy
+                    && (b.epsilon < a.epsilon || b.accuracy > a.accuracy)
+            })
+        })
+        .collect()
+}
+
+/// Render sweep outcomes sorted by ε, frontier rows starred — the
+/// Fig.-4-style "which configs are worth running" summary.
+pub fn pareto_table(rows: &[SweepRow]) -> Table {
+    let flags = pareto_flags(rows);
+    let mut order: Vec<usize> = (0..rows.len()).collect();
+    order.sort_by(|&a, &b| {
+        rows[a]
+            .epsilon
+            .total_cmp(&rows[b].epsilon)
+            .then(rows[b].accuracy.total_cmp(&rows[a].accuracy))
+    });
+    let mut t = Table::new(&["point", "best acc", "final eps", "pareto"]);
+    for i in order {
+        t.row(vec![
+            rows[i].label.clone(),
+            format!("{:.4}", rows[i].accuracy),
+            format!("{:.3}", rows[i].epsilon),
+            if flags[i] { "*".to_string() } else { String::new() },
+        ]);
+    }
+    t
+}
 
 /// Shared engine for the Table-1 family: baseline (static random, N
 /// seeds) vs DPQuant at each (ε, fraction) cell.
@@ -233,4 +280,46 @@ pub fn tab12(args: &Args) -> Result<()> {
         "Table 12 — uniform 4-bit (expect: degradation like LUQ-FP4; ours ≥ baseline at high frac)"
     );
     budget_table(&ctx, "tab12", &[4.5], &[0.5, 0.75, 0.9], |_| {})
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(label: &str, accuracy: f64, epsilon: f64) -> SweepRow {
+        SweepRow {
+            label: label.into(),
+            accuracy,
+            epsilon,
+        }
+    }
+
+    #[test]
+    fn pareto_frontier_dominance() {
+        let rows = [
+            row("a", 0.9, 2.0), // frontier
+            row("b", 0.5, 3.0), // dominated by a
+            row("c", 0.4, 1.0), // frontier: cheapest eps
+            row("d", 0.9, 2.5), // dominated by a (same acc, worse eps)
+            row("e", 0.95, 8.0), // frontier: best acc
+        ];
+        assert_eq!(pareto_flags(&rows), vec![true, false, true, false, true]);
+    }
+
+    #[test]
+    fn pareto_duplicates_both_survive() {
+        // Two identical points dominate each other weakly but not
+        // strictly, so both stay on the frontier.
+        let rows = [row("a", 0.7, 2.0), row("b", 0.7, 2.0)];
+        assert_eq!(pareto_flags(&rows), vec![true, true]);
+    }
+
+    #[test]
+    fn pareto_table_sorted_by_epsilon() {
+        let rows = [row("hi", 0.9, 5.0), row("lo", 0.4, 1.0)];
+        let s = pareto_table(&rows).render();
+        let lo = s.find("lo").unwrap();
+        let hi = s.find("hi").unwrap();
+        assert!(lo < hi, "rows must sort by eps:\n{s}");
+    }
 }

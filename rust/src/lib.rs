@@ -26,6 +26,13 @@
 //! `quant/` kernels applied on the live compute path — so training,
 //! experiments and benches run end-to-end with zero artifacts.
 //!
+//! The [`sweep`] module runs whole evaluation *grids* (quantizer ×
+//! quant_fraction × scheduler × seed, the shape of the paper's Fig. 4 /
+//! Tab. 8 evidence) on a work-stealing thread pool — one session per
+//! worker over `Arc`-shared datasets — aggregating into a deterministic
+//! `BENCH_sweep.json` report that is byte-identical at any `--jobs`
+//! count (DESIGN.md §11).
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
@@ -40,5 +47,6 @@ pub mod perfmodel;
 pub mod privacy;
 pub mod quant;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 pub mod xla;

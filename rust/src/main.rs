@@ -15,6 +15,14 @@
 //!                      values for the Python numerical-integration
 //!                      oracle; otherwise composes a training schedule)
 //!   exp <id>         — regenerate a paper table/figure (fig1a..tab14)
+//!   sweep            — expand a config grid (`--grid` and/or a `[sweep]`
+//!                      config section) and train every point on a
+//!                      work-stealing thread pool (`--jobs N`), writing a
+//!                      deterministic JSON report (default
+//!                      BENCH_sweep.json) and a Pareto table; `--jobs N`
+//!                      output is byte-identical to `--jobs 1` (pass
+//!                      `--no-timing` to zero the wall-clock fields so
+//!                      whole files diff)
 //!   bench-step       — time one train step, fp32 vs fully quantized
 //!
 //! Every model-executing subcommand takes `--backend native|pjrt|mock`.
@@ -31,12 +39,13 @@
 //!       --quant-fraction 0.9 --epochs 12 --target-epsilon 8
 //!   dpquant train --epochs 8 --checkpoint-every 2 --checkpoint-path results/ck.json
 //!   dpquant train --resume results/ck.json --epochs 16
+//!   dpquant sweep --grid "quantizer=luq4,fp8;quant_fraction=0.5,0.75;seed=0..2" --jobs 4
 //!   dpquant exp fig3
 //!   dpquant exp tab1 --scale 0.25
 
 use dpquant::backend;
 use dpquant::cli::Args;
-use dpquant::config::{ConfigFile, OptimizerKind, TrainConfig};
+use dpquant::config::TrainConfig;
 use dpquant::coordinator::{
     Checkpoint, EpochOutcome, EventSink, MultiSink, StepExecutor, TraceSink, TrainSession,
     VerboseSink,
@@ -61,30 +70,9 @@ fn main() {
     }
 }
 
-/// Options shared by every command that builds a `TrainConfig`.
-const CONFIG_OPTS: &[&str] = &[
-    "config",
-    "model",
-    "dataset",
-    "quantizer",
-    "scheduler",
-    "optimizer",
-    "epochs",
-    "batch-size",
-    "noise-multiplier",
-    "clip-norm",
-    "lr",
-    "quant-fraction",
-    "beta",
-    "analysis-interval",
-    "sigma-measure",
-    "analysis-samples",
-    "dataset-size",
-    "val-size",
-    "seed",
-    "target-epsilon",
-    "backend",
-];
+/// Options shared by every command that builds a `TrainConfig` (the
+/// `--key` forms `TrainConfig::from_args` reads).
+const CONFIG_OPTS: &[&str] = dpquant::config::CONFIG_ARG_KEYS;
 
 fn spec(base: &[&'static str], extra: &[&'static str]) -> Vec<&'static str> {
     base.iter().chain(extra.iter()).copied().collect()
@@ -142,6 +130,11 @@ fn dispatch(args: &Args) -> Result<()> {
             )?;
             exp::run(args)
         }
+        Some("sweep") => {
+            let opts = spec(CONFIG_OPTS, &["grid", "jobs", "out"]);
+            args.require_known("sweep", &opts, &["no-ema", "no-timing", "quiet"])?;
+            dpquant::sweep::run(args)
+        }
         Some("bench-step") => {
             let opts = spec(CONFIG_OPTS, &["artifacts", "reps"]);
             args.require_known("bench-step", &opts, &["no-ema"])?;
@@ -150,58 +143,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some(other) => Err(err!("unknown command '{other}' (see README)")),
         None => {
             println!(
-                "usage: dpquant <train|eval-only|list|accountant|exp|bench-step> [flags]\n\
+                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|bench-step> [flags]\n\
                  model-executing commands take --backend native|pjrt|mock (default: native)"
             );
             Ok(())
         }
     }
-}
-
-/// Build a TrainConfig from `--config file` + flag overrides.
-fn config_from_args(args: &Args) -> Result<TrainConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => TrainConfig::from_file(&ConfigFile::load(path)?)?,
-        None => TrainConfig::default(),
-    };
-    if let Some(v) = args.get("model") {
-        cfg.model = v.to_string();
-    }
-    if let Some(v) = args.get("dataset") {
-        cfg.dataset = v.to_string();
-    }
-    if let Some(v) = args.get("quantizer") {
-        cfg.quantizer = v.to_string();
-    }
-    if let Some(v) = args.get("scheduler") {
-        cfg.scheduler = v.to_string();
-    }
-    if let Some(v) = args.get("optimizer") {
-        cfg.optimizer = OptimizerKind::parse(v)?;
-    }
-    cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
-    cfg.batch_size = args.usize_or("batch-size", cfg.batch_size)?;
-    cfg.noise_multiplier = args.f64_or("noise-multiplier", cfg.noise_multiplier)?;
-    cfg.clip_norm = args.f64_or("clip-norm", cfg.clip_norm)?;
-    cfg.lr = args.f64_or("lr", cfg.lr)?;
-    cfg.quant_fraction = args.f64_or("quant-fraction", cfg.quant_fraction)?;
-    cfg.beta = args.f64_or("beta", cfg.beta)?;
-    cfg.analysis_interval = args.usize_or("analysis-interval", cfg.analysis_interval)?;
-    cfg.sigma_measure = args.f64_or("sigma-measure", cfg.sigma_measure)?;
-    cfg.analysis_samples = args.usize_or("analysis-samples", cfg.analysis_samples)?;
-    cfg.dataset_size = args.usize_or("dataset-size", cfg.dataset_size)?;
-    cfg.val_size = args.usize_or("val-size", cfg.val_size)?;
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
-    if let Some(eps) = args.f64_opt("target-epsilon")? {
-        cfg.target_epsilon = Some(eps);
-    }
-    if args.has_flag("no-ema") {
-        cfg.ema_enabled = false;
-    }
-    if let Some(v) = args.get("backend") {
-        cfg.backend = v.to_string();
-    }
-    Ok(cfg)
 }
 
 fn artifacts_dir(args: &Args) -> String {
@@ -273,7 +220,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         (session, exec, train_ds, val_ds)
     } else {
-        let cfg = config_from_args(args)?;
+        let cfg = TrainConfig::from_args(args)?;
         let (train_ds, val_ds) = open_data(&cfg)?;
         let exec = backend::open_executor(
             &cfg,
@@ -354,7 +301,7 @@ fn run_session(
 }
 
 fn cmd_eval_only(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
+    let cfg = TrainConfig::from_args(args)?;
     let ds = data::generate(&cfg.dataset, cfg.val_size, cfg.seed)?;
     let exec = backend::open_executor(&cfg, ds.example_numel, ds.n_classes, &artifacts_dir(args))?;
     let weights = exec.initial_weights();
@@ -432,7 +379,7 @@ fn cmd_accountant(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
+    let cfg = TrainConfig::from_args(args)?;
     let ds_probe = data::generate(&cfg.dataset, 1, cfg.seed)?;
     let exec = backend::open_executor(
         &cfg,

@@ -1,0 +1,469 @@
+//! Grid specifications: the cartesian product of per-key value lists,
+//! expanded into concrete validated [`TrainConfig`]s.
+//!
+//! Two front-ends feed the same [`GridSpec`]:
+//!
+//! * CLI: `--grid "quantizer=fp8,luq4;quant_fraction=0.25,0.5;seed=0..2"`
+//!   — axes in spec order, `;`-separated, values `,`-separated, with
+//!   `lo..hi` an **inclusive** integer range;
+//! * config: a `[sweep]` section whose entries become axes (arrays are
+//!   multi-value axes, scalars single-value pins). Section keys iterate
+//!   alphabetically, so the axis order from a file is the sorted key
+//!   order — deterministic either way.
+//!
+//! Expansion is row-major with the **last axis fastest** (an odometer),
+//! so the grid index of every point is a pure function of the spec —
+//! the anchor for the sweep's "`--jobs N` ≡ `--jobs 1`" determinism
+//! contract.
+
+use crate::cli::nearest;
+use crate::config::{ConfigFile, OptimizerKind, TrainConfig, Value};
+use crate::coordinator::session::validate_config;
+use crate::util::error::{ensure, err, Context, Result};
+
+/// Hard cap on expanded grid size: a typo like `seed=0..999999` should
+/// fail fast, not enqueue a year of work.
+pub const MAX_GRID_POINTS: usize = 10_000;
+
+/// One sweep dimension: a config key and the values it takes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Axis {
+    /// Normalized key (hyphens folded to underscores).
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// An ordered list of axes; expansion is their cartesian product.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GridSpec {
+    pub axes: Vec<Axis>,
+}
+
+/// One expanded grid point: its flat index, the `key=value` assignments
+/// that produced it (in axis order), and the resulting config.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub index: usize,
+    pub params: Vec<(String, String)>,
+    pub cfg: TrainConfig,
+}
+
+impl GridPoint {
+    /// Human-readable `key=value key=value` label for logs and errors.
+    pub fn label(&self) -> String {
+        self.params
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Every key a sweep axis may vary, i.e. the `TrainConfig` fields.
+/// (`epochs`-style counts, DP knobs, substrate selectors, the seed.)
+pub const SWEEP_KEYS: &[&str] = &[
+    "model",
+    "dataset",
+    "quantizer",
+    "scheduler",
+    "optimizer",
+    "backend",
+    "epochs",
+    "batch_size",
+    "noise_multiplier",
+    "clip_norm",
+    "lr",
+    "quant_fraction",
+    "beta",
+    "analysis_interval",
+    "analysis_reps",
+    "analysis_samples",
+    "sigma_measure",
+    "clip_measure",
+    "ema_alpha",
+    "ema_enabled",
+    "dataset_size",
+    "val_size",
+    "seed",
+    "target_epsilon",
+    "delta",
+    "physical_batch",
+];
+
+impl GridSpec {
+    /// Parse the CLI grid string (see module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut out = GridSpec::default();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, vals) = part
+                .split_once('=')
+                .ok_or_else(|| err!("grid axis '{part}': expected key=value[,value...]"))?;
+            let key = normalize_key(key.trim());
+            check_key(&key)?;
+            let mut values = Vec::new();
+            for v in vals.split(',') {
+                let v = v.trim();
+                ensure!(!v.is_empty(), "grid axis '{key}': empty value");
+                values.extend(expand_range(v)?);
+            }
+            ensure!(!values.is_empty(), "grid axis '{key}': no values");
+            out.push_axis(Axis { key, values })?;
+        }
+        Ok(out)
+    }
+
+    /// Build from a config file's `[sweep]` section (arrays become
+    /// multi-value axes, scalars single-value pins). Empty if the file
+    /// has no such section.
+    pub fn from_config(cf: &ConfigFile) -> Result<Self> {
+        let mut out = GridSpec::default();
+        for ((section, key), value) in &cf.entries {
+            if section != "sweep" {
+                continue;
+            }
+            let key = normalize_key(key);
+            check_key(&key).with_context(|| format!("config section [sweep], key '{key}'"))?;
+            let values = match value {
+                Value::Array(items) => {
+                    ensure!(!items.is_empty(), "[sweep] {key}: empty value array");
+                    items.iter().map(scalar_to_string).collect::<Result<Vec<_>>>()?
+                }
+                v => vec![scalar_to_string(v)?],
+            };
+            out.push_axis(Axis { key, values })?;
+        }
+        Ok(out)
+    }
+
+    fn push_axis(&mut self, axis: Axis) -> Result<()> {
+        ensure!(
+            !self.axes.iter().any(|a| a.key == axis.key),
+            "grid axis '{}' is given twice",
+            axis.key
+        );
+        self.axes.push(axis);
+        Ok(())
+    }
+
+    /// Overlay `other`'s axes on top of these: a same-key axis from
+    /// `other` replaces ours (CLI `--grid` wins over the `[sweep]`
+    /// section), new keys append in `other`'s order.
+    pub fn merge(&mut self, other: GridSpec) {
+        for axis in other.axes {
+            match self.axes.iter_mut().find(|a| a.key == axis.key) {
+                Some(existing) => *existing = axis,
+                None => self.axes.push(axis),
+            }
+        }
+    }
+
+    /// Number of points the expansion will produce, saturating at
+    /// `usize::MAX` — a wrapped product must trip the cap in
+    /// [`GridSpec::points`], not slip under it.
+    pub fn len(&self) -> usize {
+        if self.axes.is_empty() {
+            0
+        } else {
+            self.axes
+                .iter()
+                .try_fold(1usize, |acc, a| acc.checked_mul(a.values.len()))
+                .unwrap_or(usize::MAX)
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.axes.is_empty()
+    }
+
+    /// Expand into concrete grid points over `base`, validating every
+    /// resulting config (so a hostile cell fails here, before any run
+    /// spends wall-clock or privacy budget).
+    pub fn points(&self, base: &TrainConfig) -> Result<Vec<GridPoint>> {
+        ensure!(
+            !self.axes.is_empty(),
+            "empty sweep grid: pass --grid \"key=v1,v2;...\" or a [sweep] config section"
+        );
+        let total = self.len();
+        ensure!(
+            total <= MAX_GRID_POINTS,
+            "sweep grid has {total} points, more than the {MAX_GRID_POINTS} cap"
+        );
+        let mut points = Vec::with_capacity(total);
+        // Odometer over axis value indices, last axis fastest.
+        let mut digits = vec![0usize; self.axes.len()];
+        for index in 0..total {
+            let mut cfg = base.clone();
+            let mut params = Vec::with_capacity(self.axes.len());
+            for (axis, &d) in self.axes.iter().zip(&digits) {
+                let value = &axis.values[d];
+                apply_key(&mut cfg, &axis.key, value)
+                    .with_context(|| format!("grid point #{index}"))?;
+                params.push((axis.key.clone(), value.clone()));
+            }
+            // Same validation the session builder performs, against the
+            // training-set size this config will generate.
+            validate_config(&cfg, cfg.dataset_size).with_context(|| {
+                format!(
+                    "grid point #{index} ({}) is invalid",
+                    params
+                        .iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                )
+            })?;
+            points.push(GridPoint { index, params, cfg });
+            for d in (0..digits.len()).rev() {
+                digits[d] += 1;
+                if digits[d] < self.axes[d].values.len() {
+                    break;
+                }
+                digits[d] = 0;
+            }
+        }
+        Ok(points)
+    }
+}
+
+fn normalize_key(key: &str) -> String {
+    key.replace('-', "_")
+}
+
+fn check_key(key: &str) -> Result<()> {
+    if SWEEP_KEYS.contains(&key) {
+        return Ok(());
+    }
+    let mut msg = format!("unknown sweep key '{key}'");
+    if let Some(near) = nearest(key, SWEEP_KEYS.iter().copied()) {
+        msg.push_str(&format!(" (did you mean '{near}'?)"));
+    } else {
+        msg.push_str(&format!(" (valid keys: {})", SWEEP_KEYS.join(", ")));
+    }
+    Err(err!("{msg}"))
+}
+
+/// `lo..hi` expands to the inclusive integer range; anything else is a
+/// single literal value.
+fn expand_range(v: &str) -> Result<Vec<String>> {
+    if let Some((lo, hi)) = v.split_once("..") {
+        if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<i64>(), hi.trim().parse::<i64>()) {
+            ensure!(lo <= hi, "range '{v}': start exceeds end");
+            // checked_sub: hi - lo can overflow i64 for hostile ranges,
+            // which must hit the cap error, not wrap past it.
+            let width_ok = hi
+                .checked_sub(lo)
+                .is_some_and(|w| w < MAX_GRID_POINTS as i64);
+            ensure!(
+                width_ok,
+                "range '{v}' expands to more than {MAX_GRID_POINTS} values"
+            );
+            return Ok((lo..=hi).map(|x| x.to_string()).collect());
+        }
+        return Err(err!("range '{v}': both ends must be integers (inclusive lo..hi)"));
+    }
+    Ok(vec![v.to_string()])
+}
+
+fn scalar_to_string(v: &Value) -> Result<String> {
+    Ok(match v {
+        Value::Str(s) => s.clone(),
+        Value::Bool(b) => b.to_string(),
+        Value::Int(i) => i.to_string(),
+        // f64 Display is shortest-roundtrip, so parsing it back in
+        // `apply_key` recovers the identical double.
+        Value::Float(f) => format!("{f}"),
+        Value::Array(_) => return Err(err!("[sweep] arrays cannot nest")),
+    })
+}
+
+/// Set one config field from its string form. Key set mirrors the
+/// `[train]` section / CLI flags (hyphens already normalized away).
+pub fn apply_key(cfg: &mut TrainConfig, key: &str, value: &str) -> Result<()> {
+    fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        value.parse().map_err(|e| err!("sweep key {key}='{value}': {e}"))
+    }
+    match key {
+        "model" => cfg.model = value.to_string(),
+        "dataset" => cfg.dataset = value.to_string(),
+        "quantizer" => cfg.quantizer = value.to_string(),
+        "scheduler" => cfg.scheduler = value.to_string(),
+        "backend" => cfg.backend = value.to_string(),
+        "optimizer" => cfg.optimizer = OptimizerKind::parse(value)?,
+        "epochs" => cfg.epochs = num(key, value)?,
+        "batch_size" => cfg.batch_size = num(key, value)?,
+        "noise_multiplier" => cfg.noise_multiplier = num(key, value)?,
+        "clip_norm" => cfg.clip_norm = num(key, value)?,
+        "lr" => cfg.lr = num(key, value)?,
+        "quant_fraction" => cfg.quant_fraction = num(key, value)?,
+        "beta" => cfg.beta = num(key, value)?,
+        "analysis_interval" => cfg.analysis_interval = num(key, value)?,
+        "analysis_reps" => cfg.analysis_reps = num(key, value)?,
+        "analysis_samples" => cfg.analysis_samples = num(key, value)?,
+        "sigma_measure" => cfg.sigma_measure = num(key, value)?,
+        "clip_measure" => cfg.clip_measure = num(key, value)?,
+        "ema_alpha" => cfg.ema_alpha = num(key, value)?,
+        "ema_enabled" => cfg.ema_enabled = num(key, value)?,
+        "dataset_size" => cfg.dataset_size = num(key, value)?,
+        "val_size" => cfg.val_size = num(key, value)?,
+        "seed" => cfg.seed = num(key, value)?,
+        "delta" => cfg.delta = num(key, value)?,
+        "physical_batch" => cfg.physical_batch = num(key, value)?,
+        "target_epsilon" => {
+            cfg.target_epsilon = if value == "none" { None } else { Some(num(key, value)?) }
+        }
+        other => return Err(err!("unknown sweep key '{other}'")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_axes_values_and_ranges() {
+        let g = GridSpec::parse("quantizer=fp8,luq4;quant_fraction=0.25,0.5,0.75;seed=0..4")
+            .unwrap();
+        assert_eq!(g.axes.len(), 3);
+        assert_eq!(g.axes[0].key, "quantizer");
+        assert_eq!(g.axes[0].values, vec!["fp8", "luq4"]);
+        assert_eq!(g.axes[2].values, vec!["0", "1", "2", "3", "4"]);
+        assert_eq!(g.len(), 2 * 3 * 5);
+    }
+
+    #[test]
+    fn hyphenated_keys_normalize() {
+        let g = GridSpec::parse("quant-fraction=0.5;noise-multiplier=1.0,2.0").unwrap();
+        assert_eq!(g.axes[0].key, "quant_fraction");
+        assert_eq!(g.axes[1].key, "noise_multiplier");
+    }
+
+    #[test]
+    fn unknown_key_suggests_nearest() {
+        let e = GridSpec::parse("quant_fracton=0.5").unwrap_err().to_string();
+        assert!(e.contains("unknown sweep key"), "{e}");
+        assert!(e.contains("quant_fraction"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_axis_rejected() {
+        let e = GridSpec::parse("seed=0,1;seed=2").unwrap_err().to_string();
+        assert!(e.contains("twice"), "{e}");
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        assert!(GridSpec::parse("seed").is_err());
+        assert!(GridSpec::parse("seed=").is_err());
+        assert!(GridSpec::parse("seed=4..1").is_err());
+        assert!(GridSpec::parse("seed=a..b").is_err());
+    }
+
+    #[test]
+    fn expansion_is_odometer_last_axis_fastest() {
+        let g = GridSpec::parse("quantizer=fp8,luq4;seed=0..1").unwrap();
+        let pts = g.points(&TrainConfig::default()).unwrap();
+        let labels: Vec<String> = pts.iter().map(GridPoint::label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "quantizer=fp8 seed=0",
+                "quantizer=fp8 seed=1",
+                "quantizer=luq4 seed=0",
+                "quantizer=luq4 seed=1",
+            ]
+        );
+        assert_eq!(pts[2].cfg.quantizer, "luq4");
+        assert_eq!(pts[2].cfg.seed, 0);
+        assert_eq!(pts[3].index, 3);
+    }
+
+    #[test]
+    fn invalid_cell_fails_at_expansion_with_the_point_named() {
+        let g = GridSpec::parse("quant_fraction=0.5,1.5").unwrap();
+        let e = g.points(&TrainConfig::default()).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("grid point #1"), "{msg}");
+        assert!(msg.contains("quant_fraction=1.5"), "{msg}");
+    }
+
+    #[test]
+    fn from_config_sweep_section() {
+        let cf = ConfigFile::parse(
+            "[train]\nepochs = 3\n[sweep]\nquantizer = [\"luq4\", \"fp8\"]\nseed = [0, 1, 2]\nlr = 0.25\n",
+        )
+        .unwrap();
+        let g = GridSpec::from_config(&cf).unwrap();
+        // BTreeMap order: lr, quantizer, seed.
+        assert_eq!(g.axes[0].key, "lr");
+        assert_eq!(g.axes[0].values, vec!["0.25"]);
+        assert_eq!(g.axes[1].values, vec!["luq4", "fp8"]);
+        assert_eq!(g.len(), 6);
+    }
+
+    #[test]
+    fn merge_cli_overrides_config() {
+        let mut base = GridSpec::parse("seed=0..2;lr=0.1").unwrap();
+        base.merge(GridSpec::parse("lr=0.5,0.9;beta=1.0").unwrap());
+        assert_eq!(base.axes.len(), 3);
+        assert_eq!(base.axes[1].key, "lr");
+        assert_eq!(base.axes[1].values, vec!["0.5", "0.9"]);
+        assert_eq!(base.axes[2].key, "beta");
+    }
+
+    #[test]
+    fn target_epsilon_none_and_values() {
+        let mut cfg = TrainConfig::default();
+        apply_key(&mut cfg, "target_epsilon", "4.5").unwrap();
+        assert_eq!(cfg.target_epsilon, Some(4.5));
+        apply_key(&mut cfg, "target_epsilon", "none").unwrap();
+        assert_eq!(cfg.target_epsilon, None);
+        assert!(apply_key(&mut cfg, "target_epsilon", "abc").is_err());
+    }
+
+    #[test]
+    fn oversized_grid_rejected() {
+        let g = GridSpec::parse("seed=0..9999;epochs=1,2").unwrap();
+        let e = g.points(&TrainConfig::default()).unwrap_err().to_string();
+        assert!(e.contains("cap"), "{e}");
+    }
+
+    #[test]
+    fn hostile_range_width_cannot_overflow_past_the_cap() {
+        // hi - lo overflows i64; the checked width must hit the cap
+        // error, not wrap negative and pass it.
+        let e = GridSpec::parse("seed=-9000000000000000000..9000000000000000000")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("more than"), "{e}");
+    }
+
+    #[test]
+    fn wrapped_axis_product_saturates_and_hits_the_cap() {
+        // 8192^5 = 2^65 wraps usize on 64-bit; len() must saturate so
+        // points() rejects the grid instead of running a tiny subset.
+        let axis = |key: &str| Axis {
+            key: key.into(),
+            values: (0..8192).map(|i| i.to_string()).collect(),
+        };
+        let g = GridSpec {
+            axes: vec![
+                axis("seed"),
+                axis("epochs"),
+                axis("batch_size"),
+                axis("dataset_size"),
+                axis("val_size"),
+            ],
+        };
+        assert_eq!(g.len(), usize::MAX);
+        let e = g.points(&TrainConfig::default()).unwrap_err().to_string();
+        assert!(e.contains("cap"), "{e}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Work-stealing job pool for sweep workers.
+//!
+//! This generalizes `backend/parallel.rs`: where `map_chunks` statically
+//! partitions the rows of one physical batch (microsecond-scale work,
+//! deterministic per thread count), sweep jobs are whole training runs
+//! with wildly different durations — so workers *steal* the next grid
+//! index from a shared atomic counter instead of owning a fixed slice.
+//! Determinism still holds because every job is self-contained (its own
+//! executor, session, and RNG streams seeded from its config) and
+//! results land in the slot of their **job index**, never in completion
+//! order.
+//!
+//! Failure contract: the first job that returns an error **or panics**
+//! aborts the pool — no new jobs are issued, in-flight jobs finish, and
+//! the caller gets a [`PoolError`] naming the offending job index. A
+//! sweep must fail loudly, not return a report with silent holes.
+
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::error::Result;
+
+/// A failed pool run: the index of the first failing job plus its error
+/// (or panic) message.
+#[derive(Debug)]
+pub struct PoolError {
+    pub index: usize,
+    pub message: String,
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job #{}: {}", self.index, self.message)
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Run `f(0), f(1), .., f(jobs - 1)` on up to `threads` worker threads,
+/// returning the results **ordered by job index**. Workers pull the next
+/// index from a shared counter (work stealing), so long and short jobs
+/// pack tightly; `threads <= 1` degenerates to a serial loop on the
+/// current thread with identical semantics.
+pub fn run_ordered<T, F>(
+    jobs: usize,
+    threads: usize,
+    f: F,
+) -> std::result::Result<Vec<T>, PoolError>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    if jobs == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.max(1).min(jobs);
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..jobs).map(|_| None).collect());
+    let failure: Mutex<Option<PoolError>> = Mutex::new(None);
+
+    // One worker loop, shared by the serial and threaded paths. Returns
+    // when the queue drains or a failure has been recorded.
+    let worker = || loop {
+        if failure.lock().unwrap().is_some() {
+            return;
+        }
+        let i = next.fetch_add(1, Ordering::SeqCst);
+        if i >= jobs {
+            return;
+        }
+        match catch_unwind(AssertUnwindSafe(|| f(i))) {
+            Ok(Ok(v)) => slots.lock().unwrap()[i] = Some(v),
+            Ok(Err(e)) => {
+                record_failure(&failure, i, format!("{e:#}"));
+                return;
+            }
+            Err(payload) => {
+                record_failure(&failure, i, format!("worker panicked: {}", panic_text(payload)));
+                return;
+            }
+        }
+    };
+
+    if threads == 1 {
+        worker();
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads).map(|_| s.spawn(&worker)).collect();
+            for h in handles {
+                // Workers catch job panics themselves; a join error here
+                // would mean the pool machinery itself panicked.
+                h.join().expect("sweep pool worker infrastructure panicked");
+            }
+        });
+    }
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let out = slots.into_inner().unwrap();
+    Ok(out
+        .into_iter()
+        .map(|v| v.expect("pool finished without failure; every slot must be filled"))
+        .collect())
+}
+
+/// Record the first failure only (later ones raced with the abort).
+fn record_failure(failure: &Mutex<Option<PoolError>>, index: usize, message: String) {
+    let mut slot = failure.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(PoolError { index, message });
+    }
+}
+
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::err;
+
+    #[test]
+    fn results_ordered_by_index_not_completion() {
+        for threads in [1usize, 2, 4, 16] {
+            let out = run_ordered(20, threads, |i| {
+                // Earlier indices sleep longer, so completion order is
+                // roughly reversed — output order must not be.
+                if threads > 1 {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        (20 - i as u64) * 50,
+                    ));
+                }
+                Ok(i * 3)
+            })
+            .unwrap();
+            assert_eq!(out, (0..20).map(|i| i * 3).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_oversubscribed() {
+        let empty: Vec<usize> = run_ordered(0, 8, |i| Ok(i)).unwrap();
+        assert!(empty.is_empty());
+        // More threads than jobs clamps down.
+        let out = run_ordered(3, 64, Ok).unwrap();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn error_names_the_job_and_aborts() {
+        let ran = AtomicUsize::new(0);
+        let e = run_ordered(100, 1, |i| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            if i == 5 {
+                return Err(err!("deliberate failure"));
+            }
+            Ok(i)
+        })
+        .unwrap_err();
+        assert_eq!(e.index, 5);
+        assert!(e.message.contains("deliberate failure"), "{e}");
+        // Serial path: jobs 0..=5 ran, nothing after the failure.
+        assert_eq!(ran.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn panic_is_captured_with_its_index() {
+        for threads in [1usize, 3] {
+            let e = run_ordered(8, threads, |i| {
+                if i == 6 {
+                    panic!("boom at six");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+            assert_eq!(e.index, 6, "threads={threads}");
+            assert!(e.message.contains("panicked"), "{e}");
+            assert!(e.message.contains("boom at six"), "{e}");
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Sweep results: a deterministic, machine-readable JSON report plus
+//! the stdout Pareto view.
+//!
+//! The report is a pure function of the grid spec and the per-point
+//! training outcomes — ordered by grid index, never by completion time,
+//! with no timestamps, hostnames, job counts, or output paths inside.
+//! The only nondeterministic fields are the wall-clock measurements
+//! (`wall_seconds`, `steps_per_sec`); `timing: false` zeroes them so
+//! two reports from the same grid diff byte-identically regardless of
+//! `--jobs` (the contract CI's `sweep-smoke` job and `tests/sweep.rs`
+//! enforce).
+
+use super::grid::GridPoint;
+use crate::exp::tables::{pareto_table, SweepRow};
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+
+pub const REPORT_FORMAT: &str = "dpquant-sweep-report";
+pub const REPORT_VERSION: u64 = 1;
+
+/// Outcome of one grid point's training run.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub index: usize,
+    /// `key=value` assignments, in axis order.
+    pub params: Vec<(String, String)>,
+    /// The run record's name (`model_dataset_quantizer_scheduler_k_seed`).
+    pub name: String,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_epsilon: f64,
+    pub analysis_epsilon: f64,
+    /// Epochs actually run (budget truncation can stop a run early).
+    pub epochs_run: usize,
+    pub truncated: bool,
+    /// Optimizer steps taken (non-empty Poisson batches only).
+    pub steps: usize,
+    /// Per-epoch quantized-layer schedule.
+    pub schedule: Vec<Vec<usize>>,
+    pub wall_seconds: f64,
+    pub steps_per_sec: f64,
+}
+
+/// A finished sweep, ready to render and serialize.
+pub struct SweepReport {
+    /// The expanded grid's axes: (key, values).
+    pub axes: Vec<(String, Vec<String>)>,
+    /// One entry per grid point, ordered by grid index.
+    pub points: Vec<PointResult>,
+}
+
+impl SweepReport {
+    /// Serialize. With `timing: false` the wall-clock fields are zeroed,
+    /// making the output a deterministic function of the grid alone.
+    pub fn to_json(&self, timing: bool) -> Json {
+        let axes = self
+            .axes
+            .iter()
+            .map(|(key, values)| {
+                json::obj(vec![
+                    ("key", json::s(key)),
+                    ("values", Json::Arr(values.iter().map(|v| json::s(v)).collect())),
+                ])
+            })
+            .collect();
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("index", json::num(p.index as f64)),
+                    (
+                        "params",
+                        Json::Obj(
+                            p.params
+                                .iter()
+                                .map(|(k, v)| (k.clone(), json::s(v)))
+                                .collect(),
+                        ),
+                    ),
+                    ("name", json::s(&p.name)),
+                    ("final_accuracy", json::num(p.final_accuracy)),
+                    ("best_accuracy", json::num(p.best_accuracy)),
+                    ("final_epsilon", json::num(p.final_epsilon)),
+                    ("analysis_epsilon", json::num(p.analysis_epsilon)),
+                    ("epochs_run", json::num(p.epochs_run as f64)),
+                    ("truncated", Json::Bool(p.truncated)),
+                    ("steps", json::num(p.steps as f64)),
+                    (
+                        "schedule",
+                        Json::Arr(
+                            p.schedule
+                                .iter()
+                                .map(|epoch| {
+                                    Json::Arr(
+                                        epoch.iter().map(|&l| json::num(l as f64)).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "wall_seconds",
+                        json::num(if timing { p.wall_seconds } else { 0.0 }),
+                    ),
+                    (
+                        "steps_per_sec",
+                        json::num(if timing { p.steps_per_sec } else { 0.0 }),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("format", json::s(REPORT_FORMAT)),
+            ("version", json::num(REPORT_VERSION as f64)),
+            ("axes", Json::Arr(axes)),
+            ("points", Json::Arr(points)),
+        ])
+    }
+
+    /// Write the JSON report to `path` (creating parent directories),
+    /// returning the path for the "saved ..." line.
+    pub fn write(&self, path: &str, timing: bool) -> Result<String> {
+        let parent = std::path::Path::new(path).parent();
+        if let Some(dir) = parent.filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating report directory {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json(timing).to_string())
+            .with_context(|| format!("writing sweep report {path}"))?;
+        Ok(path.to_string())
+    }
+
+    /// The stdout Pareto view over (best accuracy ↑, final ε ↓) — the
+    /// sweep-level rendering of the paper's Fig. 4 frontier.
+    pub fn render_pareto(&self) -> String {
+        let rows: Vec<SweepRow> = self
+            .points
+            .iter()
+            .map(|p| SweepRow {
+                label: label_of(p),
+                accuracy: p.best_accuracy,
+                epsilon: p.final_epsilon,
+            })
+            .collect();
+        pareto_table(&rows).render()
+    }
+}
+
+fn label_of(p: &PointResult) -> String {
+    let params = p
+        .params
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    format!("#{} {params}", p.index)
+}
+
+/// Attach the expanded grid's axes to the results (axis metadata travels
+/// from the [`GridPoint`]s so the report never disagrees with what ran).
+pub fn build_report(points: &[GridPoint], results: Vec<PointResult>) -> SweepReport {
+    let mut axes: Vec<(String, Vec<String>)> = Vec::new();
+    for point in points {
+        for (key, value) in &point.params {
+            match axes.iter_mut().find(|(k, _)| k == key) {
+                Some((_, values)) => {
+                    if !values.contains(value) {
+                        values.push(value.clone());
+                    }
+                }
+                None => axes.push((key.clone(), vec![value.clone()])),
+            }
+        }
+    }
+    SweepReport { axes, points: results }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(i: usize, acc: f64, eps: f64, wall: f64) -> PointResult {
+        PointResult {
+            index: i,
+            params: vec![("seed".into(), i.to_string())],
+            name: format!("run{i}"),
+            final_accuracy: acc,
+            best_accuracy: acc,
+            final_epsilon: eps,
+            analysis_epsilon: 0.1,
+            epochs_run: 2,
+            truncated: false,
+            steps: 8,
+            schedule: vec![vec![0, 2], vec![1]],
+            wall_seconds: wall,
+            steps_per_sec: 8.0 / wall,
+        }
+    }
+
+    #[test]
+    fn no_timing_strips_the_only_nondeterministic_fields() {
+        let mk = |wall| SweepReport {
+            axes: vec![("seed".into(), vec!["0".into(), "1".into()])],
+            points: vec![point(0, 0.8, 2.0, wall), point(1, 0.7, 1.0, wall * 3.0)],
+        };
+        let a = mk(0.5).to_json(false).to_string();
+        let b = mk(9.25).to_json(false).to_string();
+        assert_eq!(a, b, "timing-stripped reports must be identical");
+        let c = mk(0.5).to_json(true).to_string();
+        assert_ne!(a, c);
+        assert!(a.contains("\"wall_seconds\":0"), "{a}");
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_orders_points() {
+        let r = SweepReport {
+            axes: vec![("seed".into(), vec!["0".into()])],
+            points: vec![point(0, 0.5, 1.0, 1.0), point(1, 0.6, 2.0, 1.0)],
+        };
+        let parsed = crate::util::json::parse(&r.to_json(true).to_string()).unwrap();
+        assert_eq!(parsed.get("format").unwrap().as_str().unwrap(), REPORT_FORMAT);
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].get("index").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(
+            pts[0].get("params").unwrap().get("seed").unwrap().as_str().unwrap(),
+            "0"
+        );
+        assert_eq!(
+            pts[0].get("schedule").unwrap().as_arr().unwrap()[0]
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
+    }
+
+    #[test]
+    fn pareto_render_marks_frontier() {
+        let r = SweepReport {
+            axes: vec![],
+            points: vec![
+                point(0, 0.9, 2.0, 1.0), // frontier
+                point(1, 0.5, 3.0, 1.0), // dominated by #0
+                point(2, 0.4, 1.0, 1.0), // frontier (cheapest eps)
+            ],
+        };
+        let table = r.render_pareto();
+        let lines: Vec<&str> = table.lines().collect();
+        let row = |needle: &str| {
+            lines
+                .iter()
+                .find(|l| l.contains(needle))
+                .unwrap_or_else(|| panic!("missing {needle} in\n{table}"))
+                .to_string()
+        };
+        assert!(row("#0").contains('*'), "{table}");
+        assert!(!row("#1 ").contains('*'), "{table}");
+        assert!(row("#2").contains('*'), "{table}");
+    }
+}

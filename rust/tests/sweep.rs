@@ -1,0 +1,114 @@
+//! Sweep orchestrator determinism + failure-loudness (tier-1).
+//!
+//! The headline invariant: a sweep at `--jobs N` produces a report
+//! **byte-identical** to the same sweep at `--jobs 1` (once the
+//! wall-clock fields are zeroed via the no-timing serialization). The
+//! 3×2×2 grid below runs real native-backend training — the 5-layer
+//! MLP over the synthetic GTSRB shapes, so the quant_fraction axis
+//! selects genuinely different layer subsets — twelve times per jobs
+//! setting.
+//!
+//! Failure contract: a worker that errors or panics mid-sweep fails the
+//! whole sweep loudly, naming the offending grid point.
+
+use dpquant::config::TrainConfig;
+use dpquant::sweep::grid::GridSpec;
+use dpquant::sweep::{pool, run_sweep};
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        dataset: "gtsrb".into(),
+        dataset_size: 128,
+        val_size: 64,
+        batch_size: 32,
+        epochs: 2,
+        physical_batch: 32,
+        lr: 0.5,
+        scheduler: "dpquant".into(),
+        analysis_interval: 1,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn twelve_point_grid_byte_identical_across_jobs() {
+    // quantizer (3) × quant_fraction (2) × seed (2) = 12 points, the
+    // acceptance-criteria grid, on the real native backend.
+    let spec = GridSpec::parse("quantizer=luq4,uniform4,fp8;quant_fraction=0.5,1.0;seed=0..1")
+        .unwrap();
+    let points = spec.points(&base_cfg()).unwrap();
+    assert_eq!(points.len(), 12);
+
+    let serial = run_sweep(&points, 1, false).unwrap();
+    let parallel = run_sweep(&points, 4, false).unwrap();
+
+    let a = serial.to_json(false).to_string();
+    let b = parallel.to_json(false).to_string();
+    assert_eq!(a, b, "--jobs 4 must be byte-identical to --jobs 1");
+
+    // Spot-check the report is substantive, not vacuously equal.
+    assert_eq!(serial.points.len(), 12);
+    for (i, p) in serial.points.iter().enumerate() {
+        assert_eq!(p.index, i, "results must be ordered by grid index");
+        assert_eq!(p.epochs_run, 2);
+        assert!(p.steps > 0, "point {i} ran no steps");
+        assert!(p.final_epsilon > 0.0);
+        assert!((0.0..=1.0).contains(&p.final_accuracy));
+        assert_eq!(p.schedule.len(), 2);
+    }
+    // Different grid cells actually produce different runs: same
+    // quantizer and seed, quant_fraction 0.5 (k=3 of 5 layers) vs 1.0
+    // (all 5). Odometer order: index = 4*quantizer + 2*fraction + seed.
+    assert_eq!(serial.points[0].schedule[0].len(), 3);
+    assert_eq!(serial.points[2].schedule[0].len(), 5);
+    assert_ne!(
+        serial.points[0].name, serial.points[2].name,
+        "run names must encode the differing k"
+    );
+}
+
+#[test]
+fn sweep_repeat_is_bit_reproducible() {
+    // Same grid, same jobs, run twice: identical bytes including the
+    // timing-free JSON — the per-run determinism the report relies on.
+    let spec = GridSpec::parse("quantizer=luq4;seed=0..2").unwrap();
+    let points = spec.points(&base_cfg()).unwrap();
+    let a = run_sweep(&points, 2, false).unwrap().to_json(false).to_string();
+    let b = run_sweep(&points, 2, false).unwrap().to_json(false).to_string();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn failing_grid_point_fails_the_sweep_and_is_named() {
+    // 'nosuchmodel' passes config validation (the model zoo is resolved
+    // by the executor) but fails inside the worker — the sweep must
+    // surface the grid point, not hang or skip it.
+    let spec = GridSpec::parse("model=logreg,nosuchmodel;seed=0").unwrap();
+    let points = spec.points(&base_cfg()).unwrap();
+    let err = run_sweep(&points, 2, false).unwrap_err().to_string();
+    assert!(err.contains("grid point #1"), "{err}");
+    assert!(err.contains("model=nosuchmodel"), "{err}");
+}
+
+#[test]
+fn mid_sweep_panic_fails_loudly_with_the_grid_point_named() {
+    // Pool-level contract: a panicking worker aborts the sweep and the
+    // error names the offending job index (which run_sweep maps to the
+    // grid-point label, as exercised above).
+    let e = pool::run_ordered(12, 4, |i| {
+        if i == 7 {
+            panic!("synthetic mid-sweep failure");
+        }
+        Ok(i * i)
+    })
+    .unwrap_err();
+    assert_eq!(e.index, 7);
+    assert!(e.message.contains("panicked"), "{e}");
+    assert!(e.message.contains("synthetic mid-sweep failure"), "{e}");
+
+    // And the non-panicking version of the same pool call succeeds with
+    // index-ordered results.
+    let ok = pool::run_ordered(12, 4, |i| Ok(i * i)).unwrap();
+    assert_eq!(ok, (0..12).map(|i| i * i).collect::<Vec<_>>());
+}
