@@ -188,6 +188,19 @@ fn unknown_key_error(
     ArgError::new(msg)
 }
 
+/// Error for an unknown top-level (or nested) command, with a
+/// did-you-mean suggestion when a known command is within 3 edits —
+/// the command-level mirror of [`Args::require_known`]'s flag-level
+/// behavior, so `dpquant sweeep` points at `sweep` the same way
+/// `--quant-fracton` points at `--quant-fraction`.
+pub fn unknown_command_error(what: &str, cmd: &str, known: &[&str]) -> ArgError {
+    let mut msg = format!("unknown {what} '{cmd}'");
+    if let Some(near) = nearest(cmd, known.iter().copied()) {
+        msg.push_str(&format!(" (did you mean '{near}'?)"));
+    }
+    ArgError::new(msg)
+}
+
 /// Closest known key by edit distance, if within 3 edits. Public so
 /// other keyed front-ends (the sweep grid parser) can offer the same
 /// did-you-mean suggestions.
@@ -310,6 +323,24 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("does not take a value"), "{err}");
+    }
+
+    #[test]
+    fn unknown_command_suggests_nearest() {
+        let commands = &["train", "eval-only", "accountant", "exp", "sweep", "serve", "job"];
+        let msg = unknown_command_error("command", "sweeep", commands).to_string();
+        assert!(msg.contains("unknown command 'sweeep'"), "{msg}");
+        assert!(msg.contains("did you mean 'sweep'?"), "{msg}");
+        let msg = unknown_command_error("command", "serv", commands).to_string();
+        assert!(msg.contains("did you mean 'serve'?"), "{msg}");
+        // Nothing close: no suggestion at all.
+        let msg = unknown_command_error("command", "frobnicate", commands).to_string();
+        assert!(!msg.contains("did you mean"), "{msg}");
+        // Subcommand flavor for `dpquant job ...`.
+        let msg =
+            unknown_command_error("job subcommand", "sumbit", &["submit", "list"]).to_string();
+        assert!(msg.contains("unknown job subcommand 'sumbit'"), "{msg}");
+        assert!(msg.contains("did you mean 'submit'?"), "{msg}");
     }
 
     #[test]

@@ -524,6 +524,91 @@ impl TrainConfig {
     }
 }
 
+/// Every key the `[serve]` config section understands.
+pub const KNOWN_SERVE_KEYS: &[&str] = &["addr", "jobs", "state_dir"];
+
+/// Daemon configuration for `dpquant serve`, resolved from the
+/// `[serve]` config section with `--addr` / `--jobs` / `--state-dir`
+/// flag overrides on top (same layering as [`TrainConfig::from_args`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Listen address, `host:port`. Port 0 binds an ephemeral port (the
+    /// daemon prints the actual one).
+    pub addr: String,
+    /// Concurrent training jobs — the job manager's long-lived worker
+    /// count. Deliberately a small fixed default rather than the core
+    /// count: each worker runs a whole training session.
+    pub jobs: usize,
+    /// Durability directory: job manifests + per-job checkpoints land
+    /// here, and a restarted daemon recovers every job from it. `None`
+    /// disables persistence (jobs die with the process).
+    pub state_dir: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8117".into(),
+            jobs: 2,
+            state_dir: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve from a parsed file's `[serve]` section, warning on
+    /// unknown keys (the `[train]`-section treatment).
+    pub fn from_file(cf: &ConfigFile) -> Result<Self, ConfigError> {
+        for (sec, key) in cf.entries.keys() {
+            if sec == "serve" && !KNOWN_SERVE_KEYS.contains(&key.as_str()) {
+                eprintln!(
+                    "warning: config key [serve] {key} is not recognized and will be ignored"
+                );
+            }
+        }
+        let d = Self::default();
+        let jobs = cf.i64_or("serve", "jobs", d.jobs as i64);
+        if jobs < 1 {
+            return Err(ConfigError::new(format!(
+                "[serve] jobs = {jobs}: the daemon needs at least one worker"
+            )));
+        }
+        Ok(Self {
+            addr: cf.str_or("serve", "addr", &d.addr),
+            jobs: jobs as usize,
+            state_dir: cf
+                .get("serve", "state_dir")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+        })
+    }
+
+    /// Resolve from the command line: `--config file` first (when
+    /// given), then `--addr` / `--jobs` / `--state-dir` overrides.
+    pub fn from_args(args: &crate::cli::Args) -> crate::util::error::Result<Self> {
+        let mut sc = match args.get("config") {
+            Some(path) => Self::from_file(&ConfigFile::load(path)?)?,
+            None => Self::default(),
+        };
+        if let Some(addr) = args.get("addr") {
+            sc.addr = addr.to_string();
+        }
+        if let Some(jobs) = args.usize_opt("jobs")? {
+            if jobs < 1 {
+                return Err(crate::cli::ArgError::new(
+                    "--jobs 0: the daemon needs at least one worker",
+                )
+                .into());
+            }
+            sc.jobs = jobs;
+        }
+        if let Some(dir) = args.get("state-dir") {
+            sc.state_dir = Some(dir.to_string());
+        }
+        Ok(sc)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -710,6 +795,46 @@ backend = "mock"
             ConfigFile::parse("[sweep]\nepochs = [1, 2]\nseed = [0, 1]\n[trian]\nlr = 0.5\n")
                 .unwrap();
         assert_eq!(TrainConfig::suspect_sections(&cf), vec!["trian".to_string()]);
+    }
+
+    #[test]
+    fn serve_config_resolution_and_overrides() {
+        // Defaults with no [serve] section.
+        let d = ServeConfig::from_file(&ConfigFile::parse("").unwrap()).unwrap();
+        assert_eq!(d, ServeConfig::default());
+        assert_eq!(d.jobs, 2);
+        assert!(d.state_dir.is_none());
+
+        // File values resolve.
+        let cf = ConfigFile::parse(
+            "[serve]\naddr = \"0.0.0.0:9000\"\njobs = 4\nstate_dir = \"/tmp/dpq\"\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_file(&cf).unwrap();
+        assert_eq!(sc.addr, "0.0.0.0:9000");
+        assert_eq!(sc.jobs, 4);
+        assert_eq!(sc.state_dir.as_deref(), Some("/tmp/dpq"));
+
+        // Zero workers is rejected, not clamped.
+        let cf = ConfigFile::parse("[serve]\njobs = 0\n").unwrap();
+        assert!(ServeConfig::from_file(&cf).unwrap_err().to_string().contains("jobs"));
+
+        // Flag overrides land on top of defaults.
+        let args = crate::cli::Args::parse(
+            "serve --addr 127.0.0.1:0 --jobs 3 --state-dir /tmp/sd"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let sc = ServeConfig::from_args(&args).unwrap();
+        assert_eq!(sc.addr, "127.0.0.1:0");
+        assert_eq!(sc.jobs, 3);
+        assert_eq!(sc.state_dir.as_deref(), Some("/tmp/sd"));
+        let bad = crate::cli::Args::parse(
+            "serve --jobs 0".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(ServeConfig::from_args(&bad).is_err());
     }
 
     #[test]

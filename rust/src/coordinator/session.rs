@@ -704,10 +704,28 @@ impl TrainSession {
                 .with_context(|| format!("creating checkpoint directory {}", dir.display()))?;
         }
         let tmp = format!("{path}.tmp");
-        std::fs::write(&tmp, self.to_json().to_string())
+        std::fs::write(&tmp, self.checkpoint_text())
             .with_context(|| format!("writing checkpoint {tmp}"))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("moving checkpoint {tmp} into place"))?;
+        Ok(())
+    }
+
+    /// The checkpoint document as a string — the exact bytes
+    /// [`TrainSession::checkpoint`] writes. Callers that own their
+    /// durability story (the serving daemon's state dir, tests, an
+    /// object store) route the same versioned document through any
+    /// writer; [`Checkpoint::from_json_text`] reads it back.
+    pub fn checkpoint_text(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Stream the checkpoint document into `w` — same bytes as
+    /// [`TrainSession::checkpoint`], but the caller owns atomicity
+    /// (temp-file + rename, a socket, a pipe, ...).
+    pub fn write_checkpoint<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(self.checkpoint_text().as_bytes())
+            .context("writing checkpoint stream")?;
         Ok(())
     }
 
@@ -1418,6 +1436,33 @@ mod tests {
         let legacy_layers: Vec<_> =
             legacy.record.epochs.iter().map(|e| &e.quantized_layers).collect();
         assert_eq!(layers, legacy_layers);
+    }
+
+    #[test]
+    fn checkpoint_text_and_writer_match_file_bytes() {
+        let cfg = base_cfg();
+        let (exec, tr, va) = fixtures(&cfg);
+        let mut s = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        s.step_epoch(&exec, &tr, &va, &mut NullSink).unwrap();
+
+        let path = std::env::temp_dir()
+            .join(format!("dpquant_ckpt_text_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        s.checkpoint(&path).unwrap();
+        let file_bytes = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // The writer hooks emit the exact bytes checkpoint() persists.
+        assert_eq!(s.checkpoint_text(), file_bytes);
+        let mut streamed = Vec::new();
+        s.write_checkpoint(&mut streamed).unwrap();
+        assert_eq!(streamed, file_bytes.as_bytes());
+
+        // And the streamed document resumes like the file-backed one.
+        let ckpt = Checkpoint::from_json_text(std::str::from_utf8(&streamed).unwrap()).unwrap();
+        let resumed = TrainSession::resume_from(ckpt, &exec).unwrap();
+        assert_eq!(resumed.epochs_completed(), 1);
+        assert_eq!(resumed.weights(), s.weights());
     }
 
     #[test]

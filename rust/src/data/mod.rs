@@ -67,6 +67,15 @@ pub fn generate(name: &str, n: usize, seed: u64) -> Result<Dataset> {
     }
 }
 
+/// Generate the deterministic (train, val) pair described by a config's
+/// `(dataset, dataset_size, val_size, seed)` tuple — the single
+/// definition of "the same data" shared by the CLI's `train`, the
+/// sweep's dataset cache, and the serving daemon's resume path (a
+/// resumed session must see byte-identical examples).
+pub fn train_val(name: &str, train: usize, val: usize, seed: u64) -> Result<(Dataset, Dataset)> {
+    Ok(generate(name, train + val, seed)?.split(val))
+}
+
 /// Poisson subsampling: each of `0..n` included independently w.p. `q`.
 pub fn poisson_sample(rng: &mut Xoshiro256, n: usize, q: f64) -> Vec<usize> {
     (0..n).filter(|_| rng.bernoulli(q)).collect()

@@ -33,6 +33,15 @@
 //! `BENCH_sweep.json` report that is byte-identical at any `--jobs`
 //! count (DESIGN.md §11).
 //!
+//! The [`serve`] module turns training into a **service**: `dpquant
+//! serve` runs a zero-dependency HTTP/1.1 daemon whose job manager
+//! schedules concurrent `TrainSession`s on a long-lived worker pool,
+//! streams epoch progress into per-job ring buffers, and — with a
+//! `--state-dir` — checkpoints every job so a killed daemon restarts
+//! and finishes them bit-exactly; `dpquant job
+//! submit|list|status|events|cancel|wait` is the client (DESIGN.md
+//! §12).
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
@@ -47,6 +56,37 @@ pub mod perfmodel;
 pub mod privacy;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sweep;
 pub mod util;
 pub mod xla;
+
+/// The version banner `dpquant version` / `dpquant --version` print:
+/// crate version plus every on-disk/wire format version this build
+/// speaks, so operators can check client/daemon compatibility at a
+/// glance (a daemon reports the same list on `GET /v1/healthz`).
+pub fn version() -> String {
+    format!(
+        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}",
+        env!("CARGO_PKG_VERSION"),
+        coordinator::session::CHECKPOINT_FORMAT,
+        coordinator::session::CHECKPOINT_VERSION,
+        sweep::report::REPORT_FORMAT,
+        sweep::report::REPORT_VERSION,
+        serve::api::API_FORMAT,
+        serve::api::API_VERSION,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn version_names_every_format() {
+        let v = super::version();
+        assert!(v.starts_with("dpquant "), "{v}");
+        assert!(v.contains(env!("CARGO_PKG_VERSION")), "{v}");
+        assert!(v.contains("dpquant-trainsession v1"), "{v}");
+        assert!(v.contains("dpquant-sweep-report v1"), "{v}");
+        assert!(v.contains("dpquant-serve-api v1"), "{v}");
+    }
+}

@@ -23,6 +23,16 @@
 //!                      output is byte-identical to `--jobs 1` (pass
 //!                      `--no-timing` to zero the wall-clock fields so
 //!                      whole files diff)
+//!   serve            — run the DP-training job daemon: HTTP/1.1 API on
+//!                      `--addr`, up to `--jobs N` concurrent sessions,
+//!                      checkpoint-backed durability under `--state-dir`
+//!                      (a killed daemon restarts and finishes every
+//!                      in-flight job bit-exactly)
+//!   job              — client verbs against a running daemon:
+//!                      `submit|list|status|events|cancel|wait`
+//!                      (`--addr`, default 127.0.0.1:8117)
+//!   version          — crate version + the on-disk/wire format versions
+//!                      this build speaks (also `--version`)
 //!   bench-step       — time one train step, fp32 vs fully quantized
 //!
 //! Every model-executing subcommand takes `--backend native|pjrt|mock`.
@@ -31,8 +41,9 @@
 //! needing **no artifacts**. `pjrt` targets the AOT artifacts + XLA
 //! runtime (requires `make artifacts` and a vendored `xla` crate).
 //!
-//! Unknown or misspelled `--flags` are hard errors (with a nearest-match
-//! suggestion), so a typo cannot silently run the wrong experiment.
+//! Unknown or misspelled commands and `--flags` are hard errors (with a
+//! nearest-match suggestion), so a typo cannot silently run the wrong
+//! experiment.
 //!
 //! Examples:
 //!   dpquant train --model miniconvnet --dataset gtsrb --scheduler dpquant \
@@ -40,6 +51,8 @@
 //!   dpquant train --epochs 8 --checkpoint-every 2 --checkpoint-path results/ck.json
 //!   dpquant train --resume results/ck.json --epochs 16
 //!   dpquant sweep --grid "quantizer=luq4,fp8;quant_fraction=0.5,0.75;seed=0..2" --jobs 4
+//!   dpquant serve --addr 127.0.0.1:8117 --jobs 2 --state-dir serve-state
+//!   dpquant job submit --epochs 4 --seed 7 && dpquant job wait 1
 //!   dpquant exp fig3
 //!   dpquant exp tab1 --scale 0.25
 
@@ -78,7 +91,27 @@ fn spec(base: &[&'static str], extra: &[&'static str]) -> Vec<&'static str> {
     base.iter().chain(extra.iter()).copied().collect()
 }
 
+/// Every top-level command, for the unknown-command did-you-mean.
+const COMMANDS: &[&str] = &[
+    "train",
+    "eval-only",
+    "list",
+    "accountant",
+    "exp",
+    "sweep",
+    "serve",
+    "job",
+    "version",
+    "bench-step",
+];
+
 fn dispatch(args: &Args) -> Result<()> {
+    // `dpquant --version` / `-V`-style probe, honored regardless of
+    // position so scripts can always check compatibility.
+    if args.command().is_none() && args.has_flag("version") {
+        println!("{}", dpquant::version());
+        return Ok(());
+    }
     match args.command() {
         Some("train") => {
             let opts = spec(
@@ -135,15 +168,30 @@ fn dispatch(args: &Args) -> Result<()> {
             args.require_known("sweep", &opts, &["no-ema", "no-timing", "quiet"])?;
             dpquant::sweep::run(args)
         }
+        Some("serve") => {
+            args.require_known("serve", &["config", "addr", "jobs", "state-dir"], &[])?;
+            dpquant::serve::run_serve(args)
+        }
+        Some("job") => {
+            // Per-verb option validation happens inside run() — submit
+            // accepts the full train-config surface, the others don't.
+            dpquant::serve::client::run(args)
+        }
+        Some("version") => {
+            args.require_known("version", &[], &[])?;
+            println!("{}", dpquant::version());
+            Ok(())
+        }
         Some("bench-step") => {
             let opts = spec(CONFIG_OPTS, &["artifacts", "reps"]);
             args.require_known("bench-step", &opts, &["no-ema"])?;
             cmd_bench_step(args)
         }
-        Some(other) => Err(err!("unknown command '{other}' (see README)")),
+        Some(other) => Err(dpquant::cli::unknown_command_error("command", other, COMMANDS).into()),
         None => {
             println!(
-                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|bench-step> [flags]\n\
+                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|version|\
+                 bench-step> [flags]\n\
                  model-executing commands take --backend native|pjrt|mock (default: native)"
             );
             Ok(())
@@ -156,10 +204,11 @@ fn artifacts_dir(args: &Args) -> String {
 }
 
 /// Regenerate the datasets a config describes (identical on resume —
-/// generation is deterministic from the config's dataset/sizes/seed).
+/// generation is deterministic from the config's dataset/sizes/seed;
+/// `data::train_val` is the shared definition the sweep and the serving
+/// daemon use too).
 fn open_data(cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
-    let full = data::generate(&cfg.dataset, cfg.dataset_size + cfg.val_size, cfg.seed)?;
-    Ok(full.split(cfg.val_size))
+    data::train_val(&cfg.dataset, cfg.dataset_size, cfg.val_size, cfg.seed)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -288,13 +337,9 @@ fn run_session(
     }
 
     let (record, _weights, _accountant) = session.finish();
-    println!(
-        "final: val_acc={:.4} eps={:.3} (analysis eps alone: {:.3}) epochs={}",
-        record.final_accuracy,
-        record.final_epsilon,
-        record.analysis_epsilon,
-        record.epochs.len()
-    );
+    // The one shared formatter: `dpquant job status` rebuilds this line
+    // from the daemon's JSON and CI diffs the two byte-for-byte.
+    println!("{}", record.final_line());
     let path = record.save(&args.str_or("results", "results"))?;
     println!("saved {path}");
     Ok(())

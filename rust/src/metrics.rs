@@ -86,6 +86,17 @@ impl RunRecord {
         ])
     }
 
+    /// The canonical end-of-run summary line for this record — see
+    /// [`final_metrics_line`].
+    pub fn final_line(&self) -> String {
+        final_metrics_line(
+            self.final_accuracy,
+            self.final_epsilon,
+            self.analysis_epsilon,
+            self.epochs.len(),
+        )
+    }
+
     /// Write JSON to `results/<name>.json` (creates the directory).
     pub fn save(&self, dir: &str) -> std::io::Result<String> {
         std::fs::create_dir_all(dir)?;
@@ -94,6 +105,22 @@ impl RunRecord {
         f.write_all(self.to_json().to_string().as_bytes())?;
         Ok(path)
     }
+}
+
+/// The canonical `final: ...` summary line. ONE definition, shared by
+/// `dpquant train`'s closing print and `dpquant job status/wait` (which
+/// rebuilds it from the daemon's JSON summary) — CI's `serve-smoke` job
+/// diffs the two byte-for-byte, so the format must never fork.
+pub fn final_metrics_line(
+    final_accuracy: f64,
+    final_epsilon: f64,
+    analysis_epsilon: f64,
+    epochs: usize,
+) -> String {
+    format!(
+        "final: val_acc={final_accuracy:.4} eps={final_epsilon:.3} \
+         (analysis eps alone: {analysis_epsilon:.3}) epochs={epochs}"
+    )
 }
 
 /// Mean and (population) standard deviation of a sample.
@@ -188,6 +215,31 @@ mod tests {
         assert_eq!(
             parsed.get("epochs").unwrap().as_arr().unwrap().len(),
             3
+        );
+    }
+
+    #[test]
+    fn final_line_formats_like_the_cli() {
+        let mut r = RunRecord::default();
+        r.push(EpochRecord {
+            epoch: 0,
+            train_loss: 0.5,
+            val_loss: 0.5,
+            val_accuracy: 0.8125,
+            epsilon: 2.25,
+            quantized_layers: vec![],
+            train_seconds: 0.0,
+            analysis_seconds: 0.0,
+        });
+        r.analysis_epsilon = 0.125;
+        assert_eq!(
+            r.final_line(),
+            "final: val_acc=0.8125 eps=2.250 (analysis eps alone: 0.125) epochs=1"
+        );
+        assert_eq!(
+            r.final_line(),
+            final_metrics_line(0.8125, 2.25, 0.125, 1),
+            "free function and method must agree"
         );
     }
 

@@ -1,0 +1,314 @@
+//! The versioned JSON API surface (`dpquant-serve-api` v1) routed over
+//! [`http`](super::http).
+//!
+//! | Method | Path                    | Body                | Reply |
+//! |--------|-------------------------|---------------------|-------|
+//! | POST   | `/v1/jobs`              | `{"config": {...}}` | 201 `{"id", "status"}` |
+//! | GET    | `/v1/jobs`              | —                   | 200 `{"jobs": [...]}` |
+//! | GET    | `/v1/jobs/{id}`         | —                   | 200 full status |
+//! | GET    | `/v1/jobs/{id}/events`  | —                   | 200 epoch-event ring |
+//! | POST   | `/v1/jobs/{id}/cancel`  | —                   | 200 `{"id", "status"}` |
+//! | GET    | `/v1/healthz`           | —                   | 200 counts + formats |
+//!
+//! Every response body is JSON; every error is `{"error": "..."}` with
+//! a 4xx status (404 unknown path/job, 405 wrong method, 400 bad id or
+//! body, 409 cancel on a finished job). The `config` object uses the
+//! `[train]`-section keys (see [`config_from_json`]); unknown keys are
+//! 400s with a did-you-mean, mirroring the CLI.
+//!
+//! `/v1/healthz` doubles as the compatibility probe: it reports the API
+//! format/version plus the on-disk format versions this daemon speaks,
+//! so `dpquant version` output can be checked against a live daemon.
+
+use std::fmt::Display;
+use std::sync::Arc;
+
+use super::http::{Handler, Request, Response};
+use super::jobs::{config_from_json, CancelOutcome, JobManager};
+use crate::coordinator::session::{CHECKPOINT_FORMAT, CHECKPOINT_VERSION};
+use crate::sweep::report::{REPORT_FORMAT, REPORT_VERSION};
+use crate::util::json::{self, Json};
+
+/// Wire-format tag of this API.
+pub const API_FORMAT: &str = "dpquant-serve-api";
+/// API version (the `/v1/` path prefix).
+pub const API_VERSION: u64 = 1;
+
+/// The daemon's request router. Shares the [`JobManager`] with whoever
+/// started it (the CLI keeps a handle for shutdown).
+pub struct Api {
+    manager: Arc<JobManager>,
+}
+
+impl Api {
+    pub fn new(manager: Arc<JobManager>) -> Self {
+        Self { manager }
+    }
+
+    /// Wrap into the boxed callback `http::serve` wants.
+    pub fn into_handler(self) -> Handler {
+        Arc::new(move |req: &Request| self.handle(req))
+    }
+
+    /// Route one request. Total: every (method, path) pair gets a
+    /// response, and nothing a client sends reaches a panic.
+    pub fn handle(&self, req: &Request) -> Response {
+        let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        let method = req.method.as_str();
+        match segments.as_slice() {
+            ["v1", "healthz"] => match method {
+                "GET" => self.healthz(),
+                _ => method_not_allowed(method, "GET /v1/healthz"),
+            },
+            ["v1", "jobs"] => match method {
+                "GET" => Response::ok(json::obj(vec![("jobs", self.manager.jobs_json())])),
+                "POST" => self.submit(req),
+                _ => method_not_allowed(method, "GET or POST /v1/jobs"),
+            },
+            ["v1", "jobs", id] => {
+                let Some(id) = parse_id(id) else {
+                    return bad_id(id);
+                };
+                match method {
+                    "GET" => match self.manager.job_json(id) {
+                        Some(j) => Response::ok(j),
+                        None => no_such_job(id),
+                    },
+                    _ => method_not_allowed(method, "GET /v1/jobs/{id}"),
+                }
+            }
+            ["v1", "jobs", id, "events"] => {
+                let Some(id) = parse_id(id) else {
+                    return bad_id(id);
+                };
+                match method {
+                    "GET" => match self.manager.events_json(id) {
+                        Some(mut j) => {
+                            if let Json::Obj(o) = &mut j {
+                                o.insert("id".into(), json::num(id as f64));
+                            }
+                            Response::ok(j)
+                        }
+                        None => no_such_job(id),
+                    },
+                    _ => method_not_allowed(method, "GET /v1/jobs/{id}/events"),
+                }
+            }
+            ["v1", "jobs", id, "cancel"] => {
+                let Some(id) = parse_id(id) else {
+                    return bad_id(id);
+                };
+                match method {
+                    "POST" => match self.manager.cancel(id) {
+                        CancelOutcome::NotFound => no_such_job(id),
+                        CancelOutcome::AlreadyOver(status) => Response::error(
+                            409,
+                            format!("job {id} already finished (status '{status}')"),
+                        ),
+                        CancelOutcome::CancelledQueued => id_status(id, "cancelled"),
+                        CancelOutcome::Cancelling => id_status(id, "cancelling"),
+                    },
+                    _ => method_not_allowed(method, "POST /v1/jobs/{id}/cancel"),
+                }
+            }
+            _ => Response::error(
+                404,
+                format!(
+                    "no such endpoint '{} {}' (API {API_FORMAT} v{API_VERSION}; \
+                     see GET /v1/healthz)",
+                    req.method, req.path
+                ),
+            ),
+        }
+    }
+
+    fn submit(&self, req: &Request) -> Response {
+        let body = match req.body_json() {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, format!("malformed JSON body: {e}")),
+        };
+        let Some(cfg_json) = body.get("config") else {
+            return Response::error(
+                400,
+                "body must be {\"config\": {...}} with [train]-section keys",
+            );
+        };
+        let cfg = match config_from_json(cfg_json) {
+            Ok(c) => c,
+            Err(e) => return Response::error(400, format!("bad config: {e:#}")),
+        };
+        match self.manager.submit(cfg) {
+            Ok(id) => Response {
+                status: 201,
+                body: json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("status", json::s("queued")),
+                ]),
+            },
+            Err(e) => Response::error(400, format!("rejected: {e:#}")),
+        }
+    }
+
+    fn healthz(&self) -> Response {
+        let c = self.manager.counts();
+        Response::ok(json::obj(vec![
+            ("status", json::s("ok")),
+            ("format", json::s(API_FORMAT)),
+            ("version", json::num(API_VERSION as f64)),
+            ("workers", json::num(self.manager.workers() as f64)),
+            ("queue_depth", json::num(c.queued as f64)),
+            (
+                "jobs",
+                json::obj(vec![
+                    ("queued", json::num(c.queued as f64)),
+                    ("running", json::num(c.running as f64)),
+                    ("done", json::num(c.done as f64)),
+                    ("failed", json::num(c.failed as f64)),
+                    ("cancelled", json::num(c.cancelled as f64)),
+                ]),
+            ),
+            (
+                "formats",
+                Json::Arr(vec![
+                    format_entry(CHECKPOINT_FORMAT, CHECKPOINT_VERSION),
+                    format_entry(REPORT_FORMAT, REPORT_VERSION),
+                    format_entry(API_FORMAT, API_VERSION),
+                ]),
+            ),
+        ]))
+    }
+}
+
+fn format_entry(name: &str, version: u64) -> Json {
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("version", json::num(version as f64)),
+    ])
+}
+
+fn parse_id(s: &str) -> Option<u64> {
+    s.parse().ok()
+}
+
+fn bad_id<M: Display>(id: M) -> Response {
+    Response::error(400, format!("'{id}' is not a job id (want a non-negative integer)"))
+}
+
+fn no_such_job(id: u64) -> Response {
+    Response::error(404, format!("no such job {id}"))
+}
+
+fn id_status(id: u64, status: &str) -> Response {
+    Response::ok(json::obj(vec![
+        ("id", json::num(id as f64)),
+        ("status", json::s(status)),
+    ]))
+}
+
+fn method_not_allowed(method: &str, allowed: &str) -> Response {
+    Response::error(405, format!("method {method} not allowed here (use {allowed})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn api() -> Api {
+        Api::new(Arc::new(JobManager::new(1, None).unwrap()))
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: None,
+            headers: BTreeMap::new(),
+            body: body.as_bytes().to_vec(),
+            http11: true,
+        }
+    }
+
+    #[test]
+    fn routes_cover_errors_without_panics() {
+        let api = api();
+        // Unknown path.
+        assert_eq!(api.handle(&req("GET", "/nope", "")).status, 404);
+        assert_eq!(api.handle(&req("GET", "/v1", "")).status, 404);
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/1/extra/deep", "")).status, 404);
+        // Wrong method.
+        assert_eq!(api.handle(&req("DELETE", "/v1/jobs", "")).status, 405);
+        assert_eq!(api.handle(&req("POST", "/v1/healthz", "")).status, 405);
+        assert_eq!(api.handle(&req("POST", "/v1/jobs/1", "")).status, 405);
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/1/cancel", "")).status, 405);
+        // Bad ids.
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/banana", "")).status, 400);
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/-3", "")).status, 400);
+        // Unknown job ids.
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/42", "")).status, 404);
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/42/events", "")).status, 404);
+        assert_eq!(api.handle(&req("POST", "/v1/jobs/42/cancel", "")).status, 404);
+        // Bad submit bodies.
+        assert_eq!(api.handle(&req("POST", "/v1/jobs", "not json")).status, 400);
+        assert_eq!(api.handle(&req("POST", "/v1/jobs", "{}")).status, 400);
+        let e = api.handle(&req("POST", "/v1/jobs", r#"{"config": {"epochs": -1}}"#));
+        assert_eq!(e.status, 400);
+        let e = api.handle(&req("POST", "/v1/jobs", r#"{"config": {"epcohs": 2}}"#));
+        assert_eq!(e.status, 400);
+        assert!(e.body.get("error").unwrap().as_str().unwrap().contains("did you mean"));
+    }
+
+    #[test]
+    fn healthz_reports_formats_and_counts() {
+        let api = api();
+        let resp = api.handle(&req("GET", "/v1/healthz", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body.get("format").unwrap().as_str(), Some(API_FORMAT));
+        assert_eq!(resp.body.get("workers").unwrap().as_usize(), Some(1));
+        let formats = resp.body.get("formats").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = formats
+            .iter()
+            .map(|f| f.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names.contains(&"dpquant-trainsession"), "{names:?}");
+        assert!(names.contains(&"dpquant-sweep-report"), "{names:?}");
+        assert!(names.contains(&"dpquant-serve-api"), "{names:?}");
+        let jobs = resp.body.get("jobs").unwrap();
+        assert_eq!(jobs.get("queued").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn submit_status_events_cancel_through_the_router() {
+        let api = api();
+        let submit_body = r#"{"config": {"backend": "mock", "dataset_size": 96,
+            "val_size": 32, "batch_size": 16, "physical_batch": 32, "epochs": 2}}"#;
+        let resp = api.handle(&req("POST", "/v1/jobs", submit_body));
+        assert_eq!(resp.status, 201, "{:?}", resp.body.to_string());
+        let id = resp.body.get("id").unwrap().as_usize().unwrap();
+        assert_eq!(id, 1);
+
+        // Poll through the router until done.
+        let mut status = String::new();
+        for _ in 0..2000 {
+            let s = api.handle(&req("GET", "/v1/jobs/1", ""));
+            assert_eq!(s.status, 200);
+            status = s.body.get("status").unwrap().as_str().unwrap().to_string();
+            if status == "done" || status == "failed" {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(status, "done");
+
+        let list = api.handle(&req("GET", "/v1/jobs", ""));
+        assert_eq!(list.body.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+        let events = api.handle(&req("GET", "/v1/jobs/1/events", ""));
+        assert_eq!(events.status, 200);
+        assert_eq!(events.body.get("id").unwrap().as_usize(), Some(1));
+        assert_eq!(events.body.get("total").unwrap().as_usize(), Some(2));
+
+        // Cancelling a finished job is a 409, not a crash.
+        let c = api.handle(&req("POST", "/v1/jobs/1/cancel", ""));
+        assert_eq!(c.status, 409);
+    }
+}

@@ -1,0 +1,364 @@
+//! Client half of the serving story: a typed [`Client`] over
+//! [`http::http_call`](super::http::http_call) plus the `dpquant job`
+//! CLI verbs (`submit | list | status | events | cancel | wait`), so CI
+//! and operators drive the daemon with the same binary — no curl.
+//!
+//! `job status`/`job wait` rebuild the daemon's summary into the exact
+//! `final:` line `dpquant train` prints (one shared formatter,
+//! [`final_metrics_line`]); plain JSON numbers round-trip f64
+//! bit-exactly, so the two lines diff byte-identical for the same
+//! config + seed — the contract CI's `serve-smoke` job checks.
+
+use std::time::{Duration, Instant};
+
+use super::http::http_call;
+use super::jobs::config_to_json;
+use crate::cli::{self, Args};
+use crate::config::{ServeConfig, TrainConfig, CONFIG_ARG_KEYS};
+use crate::metrics::{final_metrics_line, Table};
+use crate::util::error::{err, Result};
+use crate::util::json::{self, Json};
+
+/// Typed access to a running daemon.
+pub struct Client {
+    addr: String,
+}
+
+impl Client {
+    pub fn new(addr: &str) -> Self {
+        Self {
+            addr: addr.to_string(),
+        }
+    }
+
+    fn get(&self, path: &str) -> Result<Json> {
+        expect_2xx(http_call(&self.addr, "GET", path, None)?)
+    }
+
+    fn post(&self, path: &str, body: Option<&Json>) -> Result<Json> {
+        expect_2xx(http_call(&self.addr, "POST", path, body)?)
+    }
+
+    /// Submit a config; returns the assigned job id.
+    pub fn submit(&self, cfg: &TrainConfig) -> Result<u64> {
+        let body = json::obj(vec![("config", config_to_json(cfg))]);
+        let resp = self.post("/v1/jobs", Some(&body))?;
+        resp.get("id")
+            .and_then(Json::as_usize)
+            .map(|id| id as u64)
+            .ok_or_else(|| err!("daemon accepted the job but sent no id: {resp}"))
+    }
+
+    pub fn jobs(&self) -> Result<Json> {
+        self.get("/v1/jobs")
+    }
+
+    pub fn job_status(&self, id: u64) -> Result<Json> {
+        self.get(&format!("/v1/jobs/{id}"))
+    }
+
+    pub fn events(&self, id: u64) -> Result<Json> {
+        self.get(&format!("/v1/jobs/{id}/events"))
+    }
+
+    pub fn cancel(&self, id: u64) -> Result<Json> {
+        self.post(&format!("/v1/jobs/{id}/cancel"), None)
+    }
+
+    pub fn healthz(&self) -> Result<Json> {
+        self.get("/v1/healthz")
+    }
+
+    /// Poll until the job reaches a terminal status; returns its final
+    /// status document.
+    pub fn wait(&self, id: u64, timeout: Duration, poll: Duration) -> Result<Json> {
+        let t0 = Instant::now();
+        loop {
+            let status = self.job_status(id)?;
+            let s = status_str(&status);
+            if matches!(s, "done" | "failed" | "cancelled") {
+                return Ok(status);
+            }
+            if t0.elapsed() > timeout {
+                return Err(err!(
+                    "timed out after {:.0}s waiting for job {id} (status '{s}')",
+                    timeout.as_secs_f64()
+                ));
+            }
+            std::thread::sleep(poll);
+        }
+    }
+}
+
+fn expect_2xx((status, body): (u16, Json)) -> Result<Json> {
+    if (200..300).contains(&status) {
+        return Ok(body);
+    }
+    let msg = body
+        .get("error")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| body.to_string());
+    Err(err!("daemon returned {status}: {msg}"))
+}
+
+fn status_str(j: &Json) -> &str {
+    j.get("status").and_then(Json::as_str).unwrap_or("<unknown>")
+}
+
+/// The `final:` line for a finished job's status document — the SAME
+/// bytes `dpquant train` prints for that config (shared formatter, f64
+/// values bit-exact off the wire). None until the job is done.
+pub fn final_line_from_status(status: &Json) -> Option<String> {
+    let s = status.get("summary")?;
+    Some(final_metrics_line(
+        s.get("final_accuracy")?.as_f64()?,
+        s.get("final_epsilon")?.as_f64()?,
+        s.get("analysis_epsilon")?.as_f64()?,
+        s.get("epochs_run")?.as_usize()?,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// CLI verbs
+// ---------------------------------------------------------------------
+
+const JOB_SUBCOMMANDS: &[&str] = &["submit", "list", "status", "events", "cancel", "wait"];
+
+const USAGE: &str = "\
+usage: dpquant job <submit|list|status|events|cancel|wait> [--addr HOST:PORT]
+  submit [train flags / --config file]   validate + enqueue a job, print its id
+  list                                   all jobs, one row each
+  status <id>                            full status (+ final metrics when done)
+  events <id>                            the job's epoch-progress ring buffer
+  cancel <id>                            cancel a queued/running job
+  wait <id>... [--timeout-sec N] [--poll-ms N]   block until done, print final metrics";
+
+/// `dpquant job <verb>` entry point (dispatched from `main.rs`).
+pub fn run(args: &Args) -> Result<()> {
+    let Some(sub) = args.subcommand() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let addr = args
+        .get("addr")
+        .map(str::to_string)
+        .unwrap_or_else(|| ServeConfig::default().addr);
+    let client = Client::new(&addr);
+    match sub {
+        "submit" => {
+            let mut opts: Vec<&str> = CONFIG_ARG_KEYS.to_vec();
+            opts.push("addr");
+            args.require_known("job submit", &opts, &["no-ema"])?;
+            let cfg = TrainConfig::from_args(args)?;
+            let id = client.submit(&cfg)?;
+            println!("submitted job {id} (status queued)");
+            println!("  follow with: dpquant job status {id} --addr {addr}");
+            Ok(())
+        }
+        "list" => {
+            args.require_known("job list", &["addr"], &[])?;
+            let jobs = client.jobs()?;
+            let rows = jobs
+                .get("jobs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err!("daemon sent no job list: {jobs}"))?;
+            let mut t = Table::new(&[
+                "id", "status", "model", "dataset", "scheduler", "seed", "epochs",
+            ]);
+            for r in rows {
+                t.row(vec![
+                    fmt_num(r, "id"),
+                    fmt_str(r, "status"),
+                    fmt_str(r, "model"),
+                    fmt_str(r, "dataset"),
+                    fmt_str(r, "scheduler"),
+                    fmt_num(r, "seed"),
+                    format!("{}/{}", fmt_num(r, "epochs_completed"), fmt_num(r, "epochs_target")),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "status" => {
+            args.require_known("job status", &["addr"], &[])?;
+            let id = positional_id(args, "job status")?;
+            let status = client.job_status(id)?;
+            print_status(id, &status);
+            Ok(())
+        }
+        "events" => {
+            args.require_known("job events", &["addr"], &[])?;
+            let id = positional_id(args, "job events")?;
+            let events = client.events(id)?;
+            print_events(id, &events);
+            Ok(())
+        }
+        "cancel" => {
+            args.require_known("job cancel", &["addr"], &[])?;
+            let id = positional_id(args, "job cancel")?;
+            let resp = client.cancel(id)?;
+            println!("job {id}: {}", status_str(&resp));
+            Ok(())
+        }
+        "wait" => {
+            args.require_known("job wait", &["addr", "timeout-sec", "poll-ms"], &[])?;
+            let timeout = Duration::from_secs(args.u64_or("timeout-sec", 600)?);
+            let poll = Duration::from_millis(args.u64_or("poll-ms", 150)?.max(1));
+            let ids = positional_ids(args, "job wait")?;
+            for id in ids {
+                let status = client.wait(id, timeout, poll)?;
+                match status_str(&status) {
+                    "done" => {
+                        println!("job {id}: done");
+                        if let Some(line) = final_line_from_status(&status) {
+                            println!("{line}");
+                        }
+                    }
+                    "cancelled" => println!("job {id}: cancelled"),
+                    other => {
+                        let error = status
+                            .get("error")
+                            .and_then(Json::as_str)
+                            .unwrap_or("<no error recorded>");
+                        return Err(err!("job {id} {other}: {error}"));
+                    }
+                }
+            }
+            Ok(())
+        }
+        other => Err(cli::unknown_command_error("job subcommand", other, JOB_SUBCOMMANDS).into()),
+    }
+}
+
+fn positional_ids(args: &Args, what: &str) -> Result<Vec<u64>> {
+    let ids: Vec<&String> = args.positional.iter().skip(2).collect();
+    if ids.is_empty() {
+        return Err(err!("'{what}' needs at least one job id (see `dpquant job`)"));
+    }
+    ids.iter()
+        .map(|s| {
+            s.parse::<u64>()
+                .map_err(|_| err!("'{what}': '{s}' is not a job id"))
+        })
+        .collect()
+}
+
+fn positional_id(args: &Args, what: &str) -> Result<u64> {
+    let ids = positional_ids(args, what)?;
+    if ids.len() > 1 {
+        return Err(err!("'{what}' takes exactly one job id"));
+    }
+    Ok(ids[0])
+}
+
+fn print_status(id: u64, status: &Json) {
+    let s = status_str(status);
+    let cfg = status.get("config");
+    let describe = |key: &str| -> String {
+        cfg.and_then(|c| c.get(key))
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string()
+    };
+    let seed = cfg
+        .and_then(|c| c.get("seed"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    println!(
+        "job {id}: {s} (model={} dataset={} scheduler={} seed={seed}, epochs {}/{}{})",
+        describe("model"),
+        describe("dataset"),
+        describe("scheduler"),
+        status.get("epochs_completed").and_then(Json::as_usize).unwrap_or(0),
+        status.get("epochs_target").and_then(Json::as_usize).unwrap_or(0),
+        if status.get("recovered").and_then(Json::as_bool) == Some(true) {
+            ", recovered"
+        } else {
+            ""
+        }
+    );
+    if let Some(error) = status.get("error").and_then(Json::as_str) {
+        println!("error: {error}");
+    }
+    if let Some(line) = final_line_from_status(status) {
+        println!("{line}");
+    }
+}
+
+fn print_events(id: u64, events: &Json) {
+    let total = events.get("total").and_then(Json::as_usize).unwrap_or(0);
+    let dropped = events.get("dropped").and_then(Json::as_usize).unwrap_or(0);
+    let list = events.get("events").and_then(Json::as_arr).unwrap_or(&[]);
+    println!(
+        "job {id}: {total} events ({} shown, {dropped} dropped off the ring)",
+        list.len()
+    );
+    for e in list {
+        let epoch = e.get("epoch").and_then(Json::as_usize).unwrap_or(0);
+        match e.get("kind").and_then(Json::as_str) {
+            Some("truncated") => println!(
+                "  epoch {epoch:>3}  TRUNCATED at eps {:.3}",
+                e.get("epsilon").and_then(Json::as_f64).unwrap_or(0.0)
+            ),
+            _ => println!(
+                "  epoch {epoch:>3}  loss {:.4}  val_acc {:.3}  eps {:.3}",
+                e.get("train_loss").and_then(Json::as_f64).unwrap_or(0.0),
+                e.get("val_accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+                e.get("epsilon").and_then(Json::as_f64).unwrap_or(0.0)
+            ),
+        }
+    }
+}
+
+fn fmt_str(j: &Json, key: &str) -> String {
+    j.get(key).and_then(Json::as_str).unwrap_or("?").to_string()
+}
+
+fn fmt_num(j: &Json, key: &str) -> String {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .map(|v| v.to_string())
+        .unwrap_or_else(|| "?".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_line_roundtrips_through_wire_json() {
+        // A summary as the daemon would serialize it, through text and
+        // back: the rebuilt line must match the direct formatting.
+        let summary = json::obj(vec![
+            ("final_accuracy", json::num(0.40625)),
+            ("final_epsilon", json::num(1.0 / 3.0)),
+            ("analysis_epsilon", json::num(0.1 + 0.2)),
+            ("epochs_run", json::num(4.0)),
+        ]);
+        let status = json::obj(vec![("summary", summary)]);
+        let wire = status.to_string();
+        let parsed = json::parse(&wire).unwrap();
+        assert_eq!(
+            final_line_from_status(&parsed).unwrap(),
+            final_metrics_line(0.40625, 1.0 / 3.0, 0.1 + 0.2, 4)
+        );
+        // No summary (job not done yet) -> no line.
+        assert!(final_line_from_status(&json::obj(vec![])).is_none());
+    }
+
+    #[test]
+    fn positional_ids_parse_and_reject() {
+        let args = Args::parse(
+            "job wait 3 7 --timeout-sec 5".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert_eq!(positional_ids(&args, "job wait").unwrap(), vec![3, 7]);
+        let args = Args::parse("job status".split_whitespace().map(String::from)).unwrap();
+        assert!(positional_id(&args, "job status").is_err());
+        let args = Args::parse("job status x".split_whitespace().map(String::from)).unwrap();
+        assert!(positional_id(&args, "job status").is_err());
+        let args = Args::parse("job status 1 2".split_whitespace().map(String::from)).unwrap();
+        assert!(positional_id(&args, "job status").is_err());
+    }
+}

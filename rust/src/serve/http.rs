@@ -1,0 +1,672 @@
+//! Minimal threaded HTTP/1.1 on `std::net` — both halves of the wire.
+//!
+//! Server: [`serve`] binds a `TcpListener`, accepts on a dedicated
+//! thread, and runs one thread per connection (bounded by
+//! [`MAX_CONCURRENT_CONNS`]; excess connections get an immediate 503).
+//! Requests are parsed with **hard size caps** at every layer — request
+//! line, header section, and `Content-Length` body — and every parse
+//! failure becomes a 4xx JSON error response on a connection that then
+//! closes; nothing a client sends can panic the daemon (handler panics
+//! are caught and answered with a 500). Keep-alive is honored for
+//! well-formed HTTP/1.1 exchanges, up to [`MAX_REQUESTS_PER_CONN`] per
+//! connection; HTTP/1.0 and `Connection: close` close after one
+//! response. Chunked request bodies are not supported (501) — the API's
+//! bodies are small JSON documents with explicit lengths.
+//!
+//! Client: [`http_call`] speaks just enough HTTP/1.1 over one
+//! `TcpStream` (one connection per call, `Connection: close`) for the
+//! `dpquant job` verbs and CI — no `curl` dependency.
+//!
+//! Bodies are JSON in both directions (`util/json`), which the parser
+//! hardening in that module makes safe against hostile payloads
+//! (bounded nesting, no overflow-to-inf, positioned errors).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::error::{err, Context, Result};
+use crate::util::json::{self, Json};
+
+/// Cap on the request line and on any single header line, in bytes.
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Cap on the whole header section, in bytes.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (`Content-Length`), in bytes. API bodies are
+/// sub-kilobyte config documents; 1 MiB is already generous.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Keep-alive budget: requests served on one connection before closing.
+pub const MAX_REQUESTS_PER_CONN: usize = 1000;
+/// Connection-thread cap; excess connections are answered 503 inline.
+pub const MAX_CONCURRENT_CONNS: usize = 64;
+
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------
+// Request / Response
+// ---------------------------------------------------------------------
+
+/// A parsed request. Header names are lowercased; the target is split
+/// into `path` and the (unparsed) `query` at the first `?`.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    /// Lowercased name -> trimmed value.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// False for HTTP/1.0 (which never keeps alive).
+    pub http11: bool,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+
+    /// Should the server close the connection after responding?
+    pub fn wants_close(&self) -> bool {
+        !self.http11
+            || matches!(self.header("connection"), Some(c) if c.eq_ignore_ascii_case("close"))
+    }
+
+    /// Parse the body as JSON (the only body type the API accepts).
+    pub fn body_json(&self) -> std::result::Result<Json, String> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|e| format!("body is not UTF-8: {e}"))?;
+        json::parse(text)
+    }
+}
+
+/// An outgoing response: a status code plus a JSON body.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Json,
+}
+
+impl Response {
+    pub fn ok(body: Json) -> Self {
+        Self { status: 200, body }
+    }
+
+    /// An error response with the daemon's uniform `{"error": ...}`
+    /// body.
+    pub fn error<M: fmt::Display>(status: u16, message: M) -> Self {
+        Self {
+            status,
+            body: json::obj(vec![("error", json::s(&message.to_string()))]),
+        }
+    }
+}
+
+/// A request-parsing failure, carrying the status the server answers
+/// with (always 4xx/5xx; never a panic).
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    fn new<M: fmt::Display>(status: u16, message: M) -> Self {
+        Self {
+            status,
+            message: message.to_string(),
+        }
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request parsing (pure over any BufRead, so tests need no sockets)
+// ---------------------------------------------------------------------
+
+/// Read one `\n`-terminated line of at most `cap` bytes, trimming the
+/// `\r\n`. `Ok(None)` is clean EOF before any byte.
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+) -> std::result::Result<Option<Vec<u8>>, HttpError> {
+    let mut buf = Vec::new();
+    let n = r
+        .by_ref()
+        .take(cap as u64)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::new(408, format!("read failed: {e}")))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        if buf.len() >= cap {
+            return Err(HttpError::new(400, format!("line exceeds {cap} bytes")));
+        }
+        return Err(HttpError::new(400, "truncated request"));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    Ok(Some(buf))
+}
+
+/// Parse one request off the stream. `Ok(None)` means the peer closed
+/// cleanly between requests (the keep-alive exit).
+pub fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<Request>, HttpError> {
+    // Tolerate a stray blank line between pipelined requests (RFC 9112
+    // §2.2 says servers SHOULD ignore at least one).
+    let mut line = Vec::new();
+    for _ in 0..3 {
+        match read_line_capped(r, MAX_LINE_BYTES)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => {
+                line = l;
+                break;
+            }
+        }
+    }
+    if line.is_empty() {
+        return Err(HttpError::new(400, "expected a request line"));
+    }
+    let text = String::from_utf8(line)
+        .map_err(|_| HttpError::new(400, "request line is not UTF-8"))?;
+    let mut parts = text.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(HttpError::new(
+                400,
+                format!("malformed request line '{text}'"),
+            ))
+        }
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(HttpError::new(
+                505,
+                format!("unsupported protocol version '{other}'"),
+            ))
+        }
+    };
+
+    let mut headers = BTreeMap::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let line = read_line_capped(r, MAX_LINE_BYTES)?
+            .ok_or_else(|| HttpError::new(400, "connection closed inside headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        header_bytes += line.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::new(
+                400,
+                format!("header section exceeds {MAX_HEADER_BYTES} bytes"),
+            ));
+        }
+        let text = String::from_utf8(line)
+            .map_err(|_| HttpError::new(400, "header line is not UTF-8"))?;
+        let (name, value) = text
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("malformed header '{text}'")))?;
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+
+    if let Some(te) = headers.get("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::new(
+                501,
+                "chunked request bodies are not supported; send Content-Length",
+            ));
+        }
+    }
+    let len = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::new(400, format!("bad Content-Length '{v}'")))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(HttpError::new(
+            413,
+            format!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|_| HttpError::new(400, "body shorter than Content-Length"))?;
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Ok(Some(Request {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body,
+        http11,
+    }))
+}
+
+/// Serialize a response (status line, JSON headers, body) onto `w`.
+pub fn write_response<W: Write>(w: &mut W, resp: &Response, close: bool) -> std::io::Result<()> {
+    let body = resp.body.to_string();
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        body.len(),
+        if close { "close" } else { "keep-alive" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// The routing callback: pure request -> response (the API layer).
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A running HTTP server: an accept thread plus per-connection threads.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Bind `addr` (`host:port`; port 0 picks an ephemeral port) and serve
+/// `handler` until [`Server::stop`] — or forever under
+/// [`Server::join`].
+pub fn serve(addr: &str, handler: Handler) -> Result<Server> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let addr = listener.local_addr().context("reading the bound address")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || accept_loop(&listener, &handler, &shutdown))
+    };
+    Ok(Server {
+        addr,
+        shutdown,
+        accept: Some(accept),
+    })
+}
+
+impl Server {
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block on the accept thread forever — the CLI daemon path.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting and join the accept thread. In-flight connection
+    /// threads finish their current request and exit on their own.
+    pub fn stop(mut self) {
+        self.request_stop();
+    }
+
+    fn request_stop(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.shutdown.store(true, Ordering::SeqCst);
+            // Unblock the accept() call with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.request_stop();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, handler: &Handler, shutdown: &Arc<AtomicBool>) {
+    let live = Arc::new(AtomicUsize::new(0));
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if live.load(Ordering::SeqCst) >= MAX_CONCURRENT_CONNS {
+            let _ = write_response(
+                &mut stream,
+                &Response::error(503, "too many concurrent connections"),
+                true,
+            );
+            continue;
+        }
+        live.fetch_add(1, Ordering::SeqCst);
+        let handler = Arc::clone(handler);
+        let live = Arc::clone(&live);
+        std::thread::spawn(move || {
+            // The connection loop already catches handler panics; this
+            // outer catch keeps the live-connection count honest even
+            // if the loop machinery itself panics.
+            let r = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, &handler)));
+            live.fetch_sub(1, Ordering::SeqCst);
+            if r.is_err() {
+                eprintln!("serve: connection thread panicked (connection dropped)");
+            }
+        });
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: &Handler) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(READ_TIMEOUT));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    for _ in 0..MAX_REQUESTS_PER_CONN {
+        match read_request(&mut reader) {
+            Ok(None) => return, // peer closed between requests
+            Ok(Some(req)) => {
+                let close = req.wants_close();
+                let resp = catch_unwind(AssertUnwindSafe(|| handler(&req))).unwrap_or_else(|_| {
+                    Response::error(500, "internal error: request handler panicked")
+                });
+                if write_response(&mut writer, &resp, close).is_err() || close {
+                    return;
+                }
+            }
+            Err(e) => {
+                // Malformed input: answer with its 4xx/5xx and close.
+                let _ = write_response(&mut writer, &Response::error(e.status, &e.message), true);
+                return;
+            }
+        }
+    }
+    // Keep-alive budget spent; the last response already said
+    // keep-alive, but closing here is legal and bounds resource use.
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// One HTTP exchange with the daemon: connect, send `method path` with
+/// an optional JSON body, return `(status, parsed JSON body)`. Uses
+/// `Connection: close` — one TCP connection per call keeps the client
+/// trivially correct, and the CLI's call rate is human-scale.
+pub fn http_call(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| {
+        format!("connecting to the dpquant daemon at {addr} (is `dpquant serve` running?)")
+    })?;
+    stream
+        .set_read_timeout(Some(CLIENT_TIMEOUT))
+        .context("setting read timeout")?;
+    stream
+        .set_write_timeout(Some(CLIENT_TIMEOUT))
+        .context("setting write timeout")?;
+
+    let body_text = body.map(Json::to_string).unwrap_or_default();
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body_text}",
+        body_text.len()
+    );
+    stream
+        .write_all(request.as_bytes())
+        .context("sending request")?;
+
+    let mut reader = BufReader::new(stream);
+    let status_line = read_line_capped(&mut reader, MAX_LINE_BYTES)
+        .map_err(|e| err!("malformed response: {}", e.message))?
+        .ok_or_else(|| err!("daemon closed the connection without responding"))?;
+    let status_line = String::from_utf8(status_line)
+        .map_err(|_| err!("daemon status line is not UTF-8"))?;
+    let mut parts = status_line.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    ensure_http(version, &status_line)?;
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| err!("daemon status line '{status_line}' has no code"))?
+        .parse()
+        .map_err(|_| err!("daemon status line '{status_line}' has a bad code"))?;
+
+    let mut content_length: Option<usize> = None;
+    loop {
+        let line = read_line_capped(&mut reader, MAX_LINE_BYTES)
+            .map_err(|e| err!("malformed response header: {}", e.message))?
+            .ok_or_else(|| err!("daemon closed the connection inside response headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        let text = String::from_utf8(line).map_err(|_| err!("response header is not UTF-8"))?;
+        if let Some((name, value)) = text.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(
+                    value
+                        .trim()
+                        .parse()
+                        .map_err(|_| err!("daemon sent a bad Content-Length"))?,
+                );
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            if n > MAX_BODY_BYTES {
+                return Err(err!("daemon response of {n} bytes exceeds the client cap"));
+            }
+            body.resize(n, 0);
+            reader
+                .read_exact(&mut body)
+                .context("reading response body")?;
+        }
+        None => {
+            // Connection: close, so EOF delimits the body.
+            reader
+                .take(MAX_BODY_BYTES as u64)
+                .read_to_end(&mut body)
+                .context("reading response body")?;
+        }
+    }
+    let text = std::str::from_utf8(&body).map_err(|_| err!("daemon body is not UTF-8"))?;
+    let parsed = if text.trim().is_empty() {
+        Json::Null
+    } else {
+        json::parse(text).map_err(|e| err!("daemon sent malformed JSON: {e}"))?
+    };
+    Ok((status, parsed))
+}
+
+fn ensure_http(version: &str, line: &str) -> Result<()> {
+    if version.starts_with("HTTP/1.") {
+        Ok(())
+    } else {
+        Err(err!("'{line}' is not an HTTP response (wrong port?)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse_bytes(input: &[u8]) -> std::result::Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(input.to_vec()))
+    }
+
+    #[test]
+    fn parses_get_with_headers_and_query() {
+        let req = parse_bytes(
+            b"GET /v1/jobs/3/events?since=5 HTTP/1.1\r\nHost: x\r\nAccept: application/json\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/jobs/3/events");
+        assert_eq!(req.query.as_deref(), Some("since=5"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("ACCEPT"), Some("application/json"));
+        assert!(req.http11);
+        assert!(!req.wants_close());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let req = parse_bytes(
+            b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 15\r\n\r\n{\"config\": {}}\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body.len(), 15);
+        assert!(req.body_json().is_ok());
+    }
+
+    #[test]
+    fn connection_close_and_http10_want_close() {
+        let req = parse_bytes(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.wants_close());
+        let req = parse_bytes(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.http11);
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse_bytes(b"").unwrap().is_none());
+        // A single stray CRLF then EOF is also a clean close.
+        assert!(parse_bytes(b"\r\n").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_get_4xx_not_panics() {
+        for (input, want) in [
+            (b"NONSENSE\r\n\r\n" as &[u8], 400u16),
+            (b"GET /\r\n\r\n", 400),
+            (b"GET / HTTP/2\r\n\r\n", 505),
+            (b"GET / SPAM HTTP/1.1\r\n\r\n", 400),
+            (b"GET / HTTP/1.1\r\nbroken header\r\n\r\n", 400),
+            (b"POST / HTTP/1.1\r\nContent-Length: oops\r\n\r\n", 400),
+            (b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort", 400),
+            (b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+            (b"GET / HTTP/1.1\r\nAbrupt", 400),
+        ] {
+            let e = parse_bytes(input).unwrap_err();
+            assert_eq!(e.status, want, "input {:?} -> {}", input, e.message);
+        }
+    }
+
+    #[test]
+    fn size_caps_enforced() {
+        // Request line over the cap.
+        let mut line = b"GET /".to_vec();
+        line.extend(vec![b'x'; MAX_LINE_BYTES]);
+        line.extend(b" HTTP/1.1\r\n\r\n");
+        assert_eq!(parse_bytes(&line).unwrap_err().status, 400);
+
+        // Header section over the cap (each line legal on its own).
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..8 {
+            req.extend(format!("X-Pad-{i}: {}\r\n", "y".repeat(4000)).into_bytes());
+        }
+        req.extend(b"\r\n");
+        let e = parse_bytes(&req).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.message.contains("header section"), "{}", e.message);
+
+        // Declared body over the cap: rejected before allocation.
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert_eq!(parse_bytes(huge.as_bytes()).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::ok(json::obj(vec![("a", json::num(1.0))])), false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"a\":1}"), "{text}");
+
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::error(404, "no such job"), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"error\":\"no such job\"}"), "{text}");
+    }
+
+    #[test]
+    fn loopback_server_roundtrip_and_keepalive() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            Response::ok(json::obj(vec![
+                ("path", json::s(&req.path)),
+                ("method", json::s(&req.method)),
+            ]))
+        });
+        let server = serve("127.0.0.1:0", handler).unwrap();
+        let addr = server.local_addr().to_string();
+
+        // Client helper sees a well-formed exchange.
+        let (status, body) = http_call(&addr, "GET", "/v1/ping", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("path").unwrap().as_str(), Some("/v1/ping"));
+
+        // Two requests on ONE raw connection: keep-alive works.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .write_all(b"GET /first HTTP/1.1\r\nHost: t\r\n\r\nGET /second HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        assert!(text.contains("\"path\":\"/first\""), "{text}");
+        assert!(text.contains("\"path\":\"/second\""), "{text}");
+
+        server.stop();
+    }
+}

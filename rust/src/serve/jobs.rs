@@ -1,0 +1,1136 @@
+//! The job manager: concurrent, durable training jobs over
+//! [`TrainSession`].
+//!
+//! **Lifecycle.** `submit` validates the config through
+//! `session::validate_config` (same gate as the CLI and the sweep),
+//! assigns a monotonically increasing id, and enqueues the job on a
+//! long-lived [`WorkerPool`](crate::sweep::pool::WorkerPool) of
+//! `--jobs N` workers — a *stream* pool, so jobs keep arriving while
+//! earlier ones run. Status advances `queued → running → done`
+//! (or `failed` / `cancelled`). Each worker owns its executor, session,
+//! and datasets; like sweep workers it opens the backend through
+//! `backend::open_sweep_executor`, which pins the native engine to one
+//! internal thread — so a job's result is a pure function of its
+//! config, byte-identical to `DPQUANT_THREADS=1 dpquant train` with the
+//! same flags and independent of how many jobs run concurrently.
+//!
+//! **Observability.** The session's [`TrainEvent`] stream drains into a
+//! per-job ring buffer of epoch progress ([`EVENT_RING_CAP`] entries;
+//! older entries drop off, the `dropped` counter says how many). The
+//! ring is in-memory only — progress history does not survive a
+//! restart, results do.
+//!
+//! **Durability.** With a `--state-dir`, every state transition writes
+//! the job's *manifest* (`job-<id>.json`, atomic temp+rename) and every
+//! completed epoch writes a full `dpquant-trainsession` checkpoint
+//! (`job-<id>.ck.json`). A daemon killed at any instant — `kill -9`
+//! mid-epoch included — restarts with the same `--state-dir` and
+//! recovers every job: terminal jobs keep their recorded outcome;
+//! queued and in-flight jobs are re-enqueued, resuming from their last
+//! checkpoint (or from scratch if none was written yet). Because
+//! checkpoints are bit-exact and training is deterministic, the
+//! recovered job finishes with results byte-identical to an
+//! uninterrupted run — `tests/serve.rs` proves this.
+//!
+//! **Locking.** One mutex guards the job table; workers take it only
+//! for claim/transition/event pushes (all O(epoch), never O(step)), so
+//! the HTTP threads' reads never wait on training compute.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::backend;
+use crate::cli;
+use crate::config::{OptimizerKind, TrainConfig, KNOWN_TRAIN_KEYS};
+use crate::coordinator::session::validate_config;
+use crate::coordinator::{Checkpoint, EpochOutcome, EventSink, TrainEvent, TrainSession};
+use crate::data;
+use crate::metrics::RunRecord;
+use crate::sweep::pool::{panic_text, WorkerPool};
+use crate::util::error::{ensure, err, Context, Result};
+use crate::util::json::{self, Json};
+
+/// On-disk job-manifest format tag (`job-<id>.json` in the state dir).
+pub const MANIFEST_FORMAT: &str = "dpquant-serve-job";
+/// Manifest version this build reads and writes.
+pub const MANIFEST_VERSION: u64 = 1;
+/// Epoch-progress entries kept per job before the oldest drop off.
+pub const EVENT_RING_CAP: usize = 256;
+
+// ---------------------------------------------------------------------
+// Job state
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "queued" => Ok(JobStatus::Queued),
+            "running" => Ok(JobStatus::Running),
+            "done" => Ok(JobStatus::Done),
+            "failed" => Ok(JobStatus::Failed),
+            "cancelled" => Ok(JobStatus::Cancelled),
+            other => Err(err!("unknown job status '{other}'")),
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
+    }
+}
+
+/// Final metrics of a finished job — what `job status`/`job wait`
+/// render as the `final:` line. Plain JSON numbers round-trip f64
+/// bit-exactly (shortest-round-trip formatting), so a line rebuilt from
+/// the wire diffs byte-identical against `dpquant train`'s.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_epsilon: f64,
+    pub analysis_epsilon: f64,
+    pub epochs_run: usize,
+    pub truncated: bool,
+}
+
+impl JobSummary {
+    fn from_record(record: &RunRecord, truncated: bool) -> Self {
+        Self {
+            final_accuracy: record.final_accuracy,
+            best_accuracy: record.best_accuracy,
+            final_epsilon: record.final_epsilon,
+            analysis_epsilon: record.analysis_epsilon,
+            epochs_run: record.epochs.len(),
+            truncated,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("final_accuracy", json::num(self.final_accuracy)),
+            ("best_accuracy", json::num(self.best_accuracy)),
+            ("final_epsilon", json::num(self.final_epsilon)),
+            ("analysis_epsilon", json::num(self.analysis_epsilon)),
+            ("epochs_run", json::num(self.epochs_run as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            final_accuracy: jf64(j, "final_accuracy")?,
+            best_accuracy: jf64(j, "best_accuracy")?,
+            final_epsilon: jf64(j, "final_epsilon")?,
+            analysis_epsilon: jf64(j, "analysis_epsilon")?,
+            epochs_run: jusize(j, "epochs_run")?,
+            truncated: jbool(j, "truncated")?,
+        })
+    }
+}
+
+/// One epoch-progress entry in a job's ring buffer.
+#[derive(Clone, Debug)]
+struct JobEvent {
+    seq: u64,
+    kind: &'static str,
+    epoch: usize,
+    train_loss: f64,
+    val_loss: f64,
+    val_accuracy: f64,
+    epsilon: f64,
+}
+
+/// Fixed-capacity ring of the most recent [`JobEvent`]s.
+struct EventRing {
+    cap: usize,
+    /// Sequence number of `items[0]` (== how many were dropped).
+    start: u64,
+    items: VecDeque<JobEvent>,
+}
+
+impl EventRing {
+    fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            start: 0,
+            items: VecDeque::new(),
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.start + self.items.len() as u64
+    }
+
+    fn push(&mut self, mut ev: JobEvent) {
+        ev.seq = self.total();
+        if self.items.len() == self.cap {
+            self.items.pop_front();
+            self.start += 1;
+        }
+        self.items.push_back(ev);
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("total", json::num(self.total() as f64)),
+            ("dropped", json::num(self.start as f64)),
+            (
+                "events",
+                Json::Arr(
+                    self.items
+                        .iter()
+                        .map(|e| {
+                            json::obj(vec![
+                                ("seq", json::num(e.seq as f64)),
+                                ("kind", json::s(e.kind)),
+                                ("epoch", json::num(e.epoch as f64)),
+                                ("train_loss", json::num(e.train_loss)),
+                                ("val_loss", json::num(e.val_loss)),
+                                ("val_accuracy", json::num(e.val_accuracy)),
+                                ("epsilon", json::num(e.epsilon)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+struct Job {
+    id: u64,
+    cfg: TrainConfig,
+    status: JobStatus,
+    epochs_completed: usize,
+    error: Option<String>,
+    summary: Option<JobSummary>,
+    events: EventRing,
+    cancel: Arc<AtomicBool>,
+    /// True when this entry was rebuilt from a state-dir manifest.
+    recovered: bool,
+}
+
+impl Job {
+    fn new(id: u64, cfg: TrainConfig) -> Self {
+        Self {
+            id,
+            cfg,
+            status: JobStatus::Queued,
+            epochs_completed: 0,
+            error: None,
+            summary: None,
+            events: EventRing::new(EVENT_RING_CAP),
+            cancel: Arc::new(AtomicBool::new(false)),
+            recovered: false,
+        }
+    }
+
+    /// Full status view (`GET /v1/jobs/{id}`).
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("status", json::s(self.status.name())),
+            ("recovered", Json::Bool(self.recovered)),
+            ("epochs_completed", json::num(self.epochs_completed as f64)),
+            ("epochs_target", json::num(self.cfg.epochs as f64)),
+            ("config", config_to_json(&self.cfg)),
+            (
+                "error",
+                self.error.as_deref().map(json::s).unwrap_or(Json::Null),
+            ),
+            (
+                "summary",
+                self.summary.as_ref().map(JobSummary::to_json).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Compact row (`GET /v1/jobs`).
+    fn to_row_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("status", json::s(self.status.name())),
+            ("model", json::s(&self.cfg.model)),
+            ("dataset", json::s(&self.cfg.dataset)),
+            ("scheduler", json::s(&self.cfg.scheduler)),
+            ("seed", json::num(self.cfg.seed as f64)),
+            ("epochs_completed", json::num(self.epochs_completed as f64)),
+            ("epochs_target", json::num(self.cfg.epochs as f64)),
+        ])
+    }
+
+    /// Durable manifest (`job-<id>.json`). Events are deliberately not
+    /// persisted; outcomes, configs, and cancel intent are — an
+    /// acknowledged cancel must survive a crash, or a restarted daemon
+    /// would resurrect a job the user was told is stopping.
+    fn to_manifest_json(&self) -> Json {
+        json::obj(vec![
+            ("format", json::s(MANIFEST_FORMAT)),
+            ("version", json::num(MANIFEST_VERSION as f64)),
+            ("id", json::num(self.id as f64)),
+            ("status", json::s(self.status.name())),
+            (
+                "cancel_requested",
+                Json::Bool(self.cancel.load(Ordering::SeqCst)),
+            ),
+            ("epochs_completed", json::num(self.epochs_completed as f64)),
+            ("config", config_to_json(&self.cfg)),
+            (
+                "error",
+                self.error.as_deref().map(json::s).unwrap_or(Json::Null),
+            ),
+            (
+                "summary",
+                self.summary.as_ref().map(JobSummary::to_json).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    fn from_manifest_text(text: &str) -> Result<Self> {
+        let j = json::parse(text).map_err(|e| err!("malformed JSON: {e}"))?;
+        let format = j.get("format").and_then(Json::as_str).unwrap_or("<missing>");
+        ensure!(
+            format == MANIFEST_FORMAT,
+            "not a serve job manifest (format '{format}', want '{MANIFEST_FORMAT}')"
+        );
+        let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        ensure!(
+            version == MANIFEST_VERSION,
+            "job manifest version {version} is not readable by this build (which reads \
+             version {MANIFEST_VERSION})"
+        );
+        let cfg = config_from_json(
+            j.get("config").ok_or_else(|| err!("missing field 'config'"))?,
+        )?;
+        let mut job = Job::new(jusize(&j, "id")? as u64, cfg);
+        job.status = JobStatus::parse(
+            j.get("status")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err!("missing field 'status'"))?,
+        )?;
+        job.epochs_completed = jusize(&j, "epochs_completed")?;
+        if j.get("cancel_requested").and_then(Json::as_bool) == Some(true) {
+            job.cancel.store(true, Ordering::SeqCst);
+        }
+        job.error = match j.get("error") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| err!("'error' must be null or a string"))?
+                    .to_string(),
+            ),
+        };
+        job.summary = match j.get("summary") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(JobSummary::from_json(v)?),
+        };
+        job.recovered = true;
+        Ok(job)
+    }
+}
+
+/// Status counts for `GET /v1/healthz`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobCounts {
+    pub queued: usize,
+    pub running: usize,
+    pub done: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+}
+
+/// Outcome of a cancel request, mapped by the API onto 200/404/409.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    NotFound,
+    /// Job already reached `status` — nothing to cancel.
+    AlreadyOver(&'static str),
+    /// Cancelled while still queued: it will never run.
+    CancelledQueued,
+    /// Flagged while running: the job stops at the next epoch boundary.
+    Cancelling,
+}
+
+// ---------------------------------------------------------------------
+// Manager
+// ---------------------------------------------------------------------
+
+struct Shared {
+    state_dir: Option<String>,
+    jobs: Mutex<BTreeMap<u64, Job>>,
+    next_id: AtomicU64,
+    workers: usize,
+}
+
+impl Shared {
+    fn manifest_path(&self, id: u64) -> Option<String> {
+        self.state_dir.as_ref().map(|d| format!("{d}/job-{id}.json"))
+    }
+
+    fn ck_path(&self, id: u64) -> Option<String> {
+        self.state_dir.as_ref().map(|d| format!("{d}/job-{id}.ck.json"))
+    }
+
+    /// Write the job's manifest atomically (temp + rename). Persistence
+    /// failures are reported on stderr, never panicked on — an
+    /// unwritable state dir degrades durability, not service.
+    fn persist(&self, job: &Job) {
+        let Some(path) = self.manifest_path(job.id) else {
+            return;
+        };
+        let tmp = format!("{path}.tmp");
+        let result = std::fs::write(&tmp, job.to_manifest_json().to_string())
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        if let Err(e) = result {
+            eprintln!("serve: failed to persist manifest for job {}: {e}", job.id);
+        }
+    }
+}
+
+/// The daemon's job table + worker pool. All methods take `&self`; the
+/// HTTP handler shares the manager behind an `Arc`.
+pub struct JobManager {
+    shared: Arc<Shared>,
+    pool: WorkerPool,
+}
+
+impl JobManager {
+    /// Start `workers` long-lived workers. With a state dir, recover
+    /// every previously known job first: terminal jobs keep their
+    /// outcome, queued/running jobs are re-enqueued (in id order) and
+    /// resume from their checkpoints.
+    pub fn new(workers: usize, state_dir: Option<&str>) -> Result<Self> {
+        let state_dir = match state_dir {
+            Some(d) => {
+                std::fs::create_dir_all(d)
+                    .with_context(|| format!("creating state dir {d}"))?;
+                Some(d.to_string())
+            }
+            None => None,
+        };
+        let shared = Arc::new(Shared {
+            state_dir,
+            jobs: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            workers: workers.max(1),
+        });
+        let manager = Self {
+            shared,
+            pool: WorkerPool::new(workers.max(1)),
+        };
+        manager.recover()?;
+        Ok(manager)
+    }
+
+    /// Scan the state dir and rebuild the job table. Fails loudly on an
+    /// unreadable manifest — silently dropping a job would violate the
+    /// durability contract.
+    fn recover(&self) -> Result<()> {
+        let Some(dir) = self.shared.state_dir.clone() else {
+            return Ok(());
+        };
+        let mut recovered: Vec<Job> = Vec::new();
+        for entry in std::fs::read_dir(&dir).with_context(|| format!("reading state dir {dir}"))? {
+            let entry = entry.with_context(|| format!("reading state dir {dir}"))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(stem) = name.strip_prefix("job-").and_then(|s| s.strip_suffix(".json"))
+            else {
+                continue;
+            };
+            // Checkpoints (`job-<id>.ck.json`) and torn temp files are
+            // not manifests.
+            if stem.ends_with(".ck") || stem.contains('.') {
+                continue;
+            }
+            let id: u64 = stem
+                .parse()
+                .map_err(|_| err!("state dir entry '{name}' has a non-numeric job id"))?;
+            let text = std::fs::read_to_string(entry.path())
+                .with_context(|| format!("reading job manifest {name}"))?;
+            let mut job = Job::from_manifest_text(&text)
+                .with_context(|| format!("job manifest {name}"))?;
+            ensure!(
+                job.id == id,
+                "job manifest {name} claims id {} (file name says {id})",
+                job.id
+            );
+            // A job that was queued or mid-flight when the daemon died
+            // goes back on the queue; its checkpoint (if any) carries
+            // the progress. A cancel acknowledged before the crash is
+            // honored here — the job becomes cancelled, not re-run.
+            if !job.status.is_terminal() {
+                job.status = if job.cancel.load(Ordering::SeqCst) {
+                    JobStatus::Cancelled
+                } else {
+                    JobStatus::Queued
+                };
+            }
+            recovered.push(job);
+        }
+        recovered.sort_by_key(|j| j.id);
+        let mut max_id = 0;
+        let mut to_enqueue = Vec::new();
+        {
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            for job in recovered {
+                max_id = max_id.max(job.id);
+                if job.status == JobStatus::Queued {
+                    to_enqueue.push(job.id);
+                }
+                self.shared.persist(&job);
+                jobs.insert(job.id, job);
+            }
+        }
+        self.shared.next_id.store(max_id + 1, Ordering::SeqCst);
+        for id in to_enqueue {
+            self.enqueue(id);
+        }
+        Ok(())
+    }
+
+    /// Validate and enqueue a new job; returns its id. Rejects configs
+    /// the session builder would reject (same messages) plus backends a
+    /// self-contained worker cannot run.
+    pub fn submit(&self, cfg: TrainConfig) -> Result<u64> {
+        ensure!(
+            matches!(cfg.backend.as_str(), "native" | "mock"),
+            "backend '{}' is not servable: daemon workers are self-contained; \
+             use backend \"native\" or \"mock\"",
+            cfg.backend
+        );
+        // |D_train| equals dataset_size by construction (data::train_val
+        // draws dataset_size + val_size and splits val off the tail).
+        validate_config(&cfg, cfg.dataset_size)?;
+        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            let job = Job::new(id, cfg);
+            self.shared.persist(&job);
+            jobs.insert(id, job);
+        }
+        self.enqueue(id);
+        Ok(id)
+    }
+
+    fn enqueue(&self, id: u64) {
+        let shared = Arc::clone(&self.shared);
+        self.pool.submit(move || run_job(&shared, id));
+    }
+
+    /// Cancel a job: a queued job never runs, a running job stops at
+    /// the next epoch boundary.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(&id) else {
+            return CancelOutcome::NotFound;
+        };
+        match job.status {
+            JobStatus::Queued => {
+                job.cancel.store(true, Ordering::SeqCst);
+                job.status = JobStatus::Cancelled;
+                self.shared.persist(job);
+                CancelOutcome::CancelledQueued
+            }
+            JobStatus::Running => {
+                job.cancel.store(true, Ordering::SeqCst);
+                // Persist the intent: a daemon crash between this ack
+                // and the next epoch boundary must not resurrect the
+                // job on restart.
+                self.shared.persist(job);
+                CancelOutcome::Cancelling
+            }
+            s => CancelOutcome::AlreadyOver(s.name()),
+        }
+    }
+
+    pub fn job_json(&self, id: u64) -> Option<Json> {
+        self.shared.jobs.lock().unwrap().get(&id).map(Job::to_json)
+    }
+
+    pub fn jobs_json(&self) -> Json {
+        Json::Arr(
+            self.shared
+                .jobs
+                .lock()
+                .unwrap()
+                .values()
+                .map(Job::to_row_json)
+                .collect(),
+        )
+    }
+
+    pub fn events_json(&self, id: u64) -> Option<Json> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|j| j.events.to_json())
+    }
+
+    pub fn counts(&self) -> JobCounts {
+        let jobs = self.shared.jobs.lock().unwrap();
+        let mut c = JobCounts::default();
+        for job in jobs.values() {
+            match job.status {
+                JobStatus::Queued => c.queued += 1,
+                JobStatus::Running => c.running += 1,
+                JobStatus::Done => c.done += 1,
+                JobStatus::Failed => c.failed += 1,
+                JobStatus::Cancelled => c.cancelled += 1,
+            }
+        }
+        c
+    }
+
+    /// Worker-thread count (`--jobs N`).
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Convenience for tests/embedders: the status name of one job.
+    pub fn status_of(&self, id: u64) -> Option<&'static str> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|j| j.status.name())
+    }
+
+    /// Drain the queue (cancelled jobs are skipped, not run) and join
+    /// every worker. In-flight jobs finish first — cancel them before
+    /// shutdown for a fast exit.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker body
+// ---------------------------------------------------------------------
+
+enum JobEnd {
+    Finished(JobSummary),
+    Cancelled,
+}
+
+/// One job, start (or resume) to finish. Runs on a pool worker.
+fn run_job(shared: &Arc<Shared>, id: u64) {
+    // Claim: only a still-queued job runs (cancel-while-queued skips).
+    let (cfg, cancel) = {
+        let mut jobs = shared.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(&id) else { return };
+        if job.status != JobStatus::Queued {
+            return;
+        }
+        job.status = JobStatus::Running;
+        shared.persist(job);
+        (job.cfg.clone(), Arc::clone(&job.cancel))
+    };
+
+    // A panicking executor/session must fail THIS job, not the worker.
+    let result = catch_unwind(AssertUnwindSafe(|| train_job(shared, id, &cfg, &cancel)));
+
+    let mut jobs = shared.jobs.lock().unwrap();
+    let Some(job) = jobs.get_mut(&id) else { return };
+    match result {
+        Ok(Ok(JobEnd::Finished(summary))) => {
+            job.summary = Some(summary);
+            job.status = JobStatus::Done;
+        }
+        Ok(Ok(JobEnd::Cancelled)) => {
+            job.status = JobStatus::Cancelled;
+        }
+        Ok(Err(e)) => {
+            job.error = Some(format!("{e:#}"));
+            job.status = JobStatus::Failed;
+        }
+        Err(payload) => {
+            job.error = Some(format!("job panicked: {}", panic_text(payload)));
+            job.status = JobStatus::Failed;
+        }
+    }
+    shared.persist(job);
+}
+
+fn train_job(
+    shared: &Arc<Shared>,
+    id: u64,
+    cfg: &TrainConfig,
+    cancel: &AtomicBool,
+) -> Result<JobEnd> {
+    let ck_path = shared.ck_path(id);
+    let resume_ck = match ck_path.as_deref().filter(|p| std::path::Path::new(p).exists()) {
+        Some(p) => Some(Checkpoint::load(p)?),
+        None => None,
+    };
+    // On resume the checkpoint's config is authoritative (it equals the
+    // manifest's by construction; trusting it keeps resume bit-exact).
+    let cfg = match &resume_ck {
+        Some(ck) => ck.config().clone(),
+        None => cfg.clone(),
+    };
+    let (train_ds, val_ds) =
+        data::train_val(&cfg.dataset, cfg.dataset_size, cfg.val_size, cfg.seed)?;
+    let exec = backend::open_sweep_executor(&cfg, train_ds.example_numel, train_ds.n_classes)?;
+    let mut session = match resume_ck {
+        Some(ck) => TrainSession::resume_from(ck, exec.as_ref())?,
+        None => TrainSession::builder(cfg.clone()).build(exec.as_ref(), &train_ds)?,
+    };
+    if session.epochs_completed() > 0 {
+        let mut jobs = shared.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&id) {
+            job.epochs_completed = session.epochs_completed();
+        }
+    }
+
+    let mut sink = RingSink {
+        shared: shared.as_ref(),
+        id,
+    };
+    loop {
+        match session.step_epoch(exec.as_ref(), &train_ds, &val_ds, &mut sink)? {
+            EpochOutcome::Finished => break,
+            EpochOutcome::Completed { .. } | EpochOutcome::Truncated { .. } => {
+                // Checkpoint cadence: every epoch. A kill at ANY point
+                // loses at most the epoch in flight, which the resumed
+                // session re-runs deterministically.
+                if let Some(p) = &ck_path {
+                    session.checkpoint(p)?;
+                }
+                if cancel.load(Ordering::SeqCst) {
+                    return Ok(JobEnd::Cancelled);
+                }
+            }
+        }
+    }
+    let truncated = session.is_truncated();
+    let (record, _weights, _accountant) = session.finish();
+    Ok(JobEnd::Finished(JobSummary::from_record(&record, truncated)))
+}
+
+/// Streams a session's epoch-level events into the job's ring buffer
+/// (steps are too fine-grained for a remote observer; epochs are the
+/// unit of progress the API reports).
+struct RingSink<'a> {
+    shared: &'a Shared,
+    id: u64,
+}
+
+impl EventSink for RingSink<'_> {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        let ev = match event {
+            TrainEvent::EpochCompleted { record } => JobEvent {
+                seq: 0,
+                kind: "epoch",
+                epoch: record.epoch,
+                train_loss: record.train_loss,
+                val_loss: record.val_loss,
+                val_accuracy: record.val_accuracy,
+                epsilon: record.epsilon,
+            },
+            TrainEvent::Truncated { epoch, epsilon, .. } => JobEvent {
+                seq: 0,
+                kind: "truncated",
+                epoch: *epoch,
+                train_loss: 0.0,
+                val_loss: 0.0,
+                val_accuracy: 0.0,
+                epsilon: *epsilon,
+            },
+            _ => return,
+        };
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&self.id) {
+            if ev.kind == "epoch" {
+                job.epochs_completed = ev.epoch + 1;
+            }
+            job.events.push(ev);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Config wire/manifest schema (shared by POST /v1/jobs and manifests)
+// ---------------------------------------------------------------------
+
+/// Serialize a config with the `[train]`-section key names and plain
+/// JSON values — the schema `POST /v1/jobs` accepts and manifests
+/// store. Plain numbers are lossless here: Rust prints floats in
+/// shortest-round-trip form and our parser reads them back bit-exactly.
+pub fn config_to_json(cfg: &TrainConfig) -> Json {
+    json::obj(vec![
+        ("model", json::s(&cfg.model)),
+        ("dataset", json::s(&cfg.dataset)),
+        ("quantizer", json::s(&cfg.quantizer)),
+        ("epochs", json::num(cfg.epochs as f64)),
+        ("batch_size", json::num(cfg.batch_size as f64)),
+        ("noise_multiplier", json::num(cfg.noise_multiplier)),
+        ("clip_norm", json::num(cfg.clip_norm)),
+        ("lr", json::num(cfg.lr)),
+        ("optimizer", json::s(cfg.optimizer.name())),
+        (
+            "target_epsilon",
+            cfg.target_epsilon.map(json::num).unwrap_or(Json::Null),
+        ),
+        ("delta", json::num(cfg.delta)),
+        ("quant_fraction", json::num(cfg.quant_fraction)),
+        ("scheduler", json::s(&cfg.scheduler)),
+        ("beta", json::num(cfg.beta)),
+        ("analysis_interval", json::num(cfg.analysis_interval as f64)),
+        ("analysis_reps", json::num(cfg.analysis_reps as f64)),
+        ("analysis_samples", json::num(cfg.analysis_samples as f64)),
+        ("sigma_measure", json::num(cfg.sigma_measure)),
+        ("clip_measure", json::num(cfg.clip_measure)),
+        ("ema_alpha", json::num(cfg.ema_alpha)),
+        ("ema_enabled", Json::Bool(cfg.ema_enabled)),
+        ("dataset_size", json::num(cfg.dataset_size as f64)),
+        ("val_size", json::num(cfg.val_size as f64)),
+        ("seed", json::num(cfg.seed as f64)),
+        ("physical_batch", json::num(cfg.physical_batch as f64)),
+        ("backend", json::s(&cfg.backend)),
+    ])
+}
+
+/// Parse a config object: `[train]`-section keys, defaults for missing
+/// ones, **hard errors** (with did-you-mean) for unknown keys — a typo
+/// in a submitted job must not silently train the wrong experiment.
+pub fn config_from_json(j: &Json) -> Result<TrainConfig> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| err!("'config' must be a JSON object of [train]-section keys"))?;
+    for key in obj.keys() {
+        if !KNOWN_TRAIN_KEYS.contains(&key.as_str()) {
+            let mut msg = format!("unknown config key '{key}'");
+            if let Some(near) = cli::nearest(key, KNOWN_TRAIN_KEYS.iter().copied()) {
+                msg.push_str(&format!(" (did you mean '{near}'?)"));
+            }
+            return Err(err!("{msg}"));
+        }
+    }
+    let d = TrainConfig::default();
+    Ok(TrainConfig {
+        model: jstr_or(j, "model", &d.model)?,
+        dataset: jstr_or(j, "dataset", &d.dataset)?,
+        quantizer: jstr_or(j, "quantizer", &d.quantizer)?,
+        epochs: jusize_or(j, "epochs", d.epochs)?,
+        batch_size: jusize_or(j, "batch_size", d.batch_size)?,
+        noise_multiplier: jf64_or(j, "noise_multiplier", d.noise_multiplier)?,
+        clip_norm: jf64_or(j, "clip_norm", d.clip_norm)?,
+        lr: jf64_or(j, "lr", d.lr)?,
+        optimizer: match j.get("optimizer") {
+            None | Some(Json::Null) => d.optimizer,
+            Some(v) => OptimizerKind::parse(
+                v.as_str().ok_or_else(|| err!("'optimizer' must be a string"))?,
+            )?,
+        },
+        target_epsilon: match j.get("target_epsilon") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| err!("'target_epsilon' must be a number or null"))?,
+            ),
+        },
+        delta: jf64_or(j, "delta", d.delta)?,
+        quant_fraction: jf64_or(j, "quant_fraction", d.quant_fraction)?,
+        scheduler: jstr_or(j, "scheduler", &d.scheduler)?,
+        beta: jf64_or(j, "beta", d.beta)?,
+        analysis_interval: jusize_or(j, "analysis_interval", d.analysis_interval)?,
+        analysis_reps: jusize_or(j, "analysis_reps", d.analysis_reps)?,
+        analysis_samples: jusize_or(j, "analysis_samples", d.analysis_samples)?,
+        sigma_measure: jf64_or(j, "sigma_measure", d.sigma_measure)?,
+        clip_measure: jf64_or(j, "clip_measure", d.clip_measure)?,
+        ema_alpha: jf64_or(j, "ema_alpha", d.ema_alpha)?,
+        ema_enabled: match j.get("ema_enabled") {
+            None | Some(Json::Null) => d.ema_enabled,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| err!("'ema_enabled' must be a bool"))?,
+        },
+        dataset_size: jusize_or(j, "dataset_size", d.dataset_size)?,
+        val_size: jusize_or(j, "val_size", d.val_size)?,
+        // Seeds travel as JSON numbers: exact up to 2^53 (the CLI's u64
+        // range narrows on this wire; real seeds are small).
+        seed: jusize_or(j, "seed", d.seed as usize)? as u64,
+        physical_batch: jusize_or(j, "physical_batch", d.physical_batch)?,
+        backend: jstr_or(j, "backend", &d.backend)?,
+    })
+}
+
+// -- tiny JSON field readers ------------------------------------------
+
+fn jf64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| err!("'{key}' must be a number"))
+}
+
+fn jusize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as usize)
+        .ok_or_else(|| err!("'{key}' must be a non-negative integer"))
+}
+
+fn jbool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| err!("'{key}' must be a bool"))
+}
+
+fn jstr_or(j: &Json, key: &str, default: &str) -> Result<String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| err!("'{key}' must be a string")),
+    }
+}
+
+fn jf64_or(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| err!("'{key}' must be a number")),
+    }
+}
+
+fn jusize_or(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| err!("'{key}' must be a non-negative integer")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mock_cfg(seed: u64, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            backend: "mock".into(),
+            dataset_size: 96,
+            val_size: 32,
+            batch_size: 16,
+            physical_batch: 32,
+            epochs,
+            seed,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn wait_terminal(m: &JobManager, id: u64) -> &'static str {
+        for _ in 0..2000 {
+            let s = m.status_of(id).unwrap();
+            if matches!(s, "done" | "failed" | "cancelled") {
+                return s;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        panic!("job {id} never reached a terminal status");
+    }
+
+    #[test]
+    fn event_ring_drops_oldest_and_counts() {
+        let mut ring = EventRing::new(3);
+        for epoch in 0..5 {
+            ring.push(JobEvent {
+                seq: 0,
+                kind: "epoch",
+                epoch,
+                train_loss: 0.0,
+                val_loss: 0.0,
+                val_accuracy: 0.0,
+                epsilon: 0.0,
+            });
+        }
+        assert_eq!(ring.total(), 5);
+        assert_eq!(ring.start, 2);
+        let j = ring.to_json();
+        assert_eq!(j.get("total").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("dropped").unwrap().as_usize(), Some(2));
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("seq").unwrap().as_usize(), Some(2));
+        assert_eq!(events[0].get("epoch").unwrap().as_usize(), Some(2));
+        assert_eq!(events[2].get("seq").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn config_json_roundtrip_is_exact() {
+        let cfg = TrainConfig {
+            lr: 0.1 + 0.2, // a value with no short decimal form
+            noise_multiplier: 1.0 / 3.0,
+            target_epsilon: Some(7.77),
+            quantizer: "fp8".into(),
+            seed: 12345,
+            ..TrainConfig::default()
+        };
+        let j = config_to_json(&cfg);
+        let text = j.to_string();
+        let back = config_from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.lr.to_bits(), cfg.lr.to_bits());
+        assert_eq!(back.noise_multiplier.to_bits(), cfg.noise_multiplier.to_bits());
+        assert_eq!(back.target_epsilon.unwrap().to_bits(), 7.77f64.to_bits());
+        assert_eq!(back.quantizer, "fp8");
+        assert_eq!(back.seed, 12345);
+        assert_eq!(back.epochs, cfg.epochs);
+    }
+
+    #[test]
+    fn config_from_json_rejects_unknown_keys_with_suggestion() {
+        let j = crate::util::json::parse(r#"{"quant_fracton": 0.9}"#).unwrap();
+        let e = config_from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("quant_fracton"), "{e}");
+        assert!(e.contains("did you mean 'quant_fraction'?"), "{e}");
+        // Wrong types are named too.
+        let j = crate::util::json::parse(r#"{"epochs": "three"}"#).unwrap();
+        let e = config_from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("epochs"), "{e}");
+        // Not an object at all.
+        assert!(config_from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip_preserves_outcome() {
+        let mut job = Job::new(7, tiny_mock_cfg(3, 2));
+        job.status = JobStatus::Done;
+        job.epochs_completed = 2;
+        job.summary = Some(JobSummary {
+            final_accuracy: 0.40625,
+            best_accuracy: 0.46875,
+            final_epsilon: 1.0 / 3.0,
+            analysis_epsilon: 0.125,
+            epochs_run: 2,
+            truncated: false,
+        });
+        let text = job.to_manifest_json().to_string();
+        let back = Job::from_manifest_text(&text).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.status, JobStatus::Done);
+        assert_eq!(back.epochs_completed, 2);
+        assert!(back.recovered);
+        let s = back.summary.unwrap();
+        assert_eq!(s.final_epsilon.to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(s.final_accuracy.to_bits(), 0.40625f64.to_bits());
+
+        // Cancel intent survives the round-trip (crash-proof cancel).
+        let cancelling = Job::new(8, tiny_mock_cfg(0, 3));
+        cancelling.cancel.store(true, Ordering::SeqCst);
+        let back =
+            Job::from_manifest_text(&cancelling.to_manifest_json().to_string()).unwrap();
+        assert!(back.cancel.load(Ordering::SeqCst));
+
+        // Wrong format/version fail loudly.
+        assert!(Job::from_manifest_text("{}").is_err());
+        let wrong = text.replace("\"version\":1", "\"version\":99");
+        assert!(Job::from_manifest_text(&wrong).is_err());
+    }
+
+    #[test]
+    fn submit_validates_config_and_backend() {
+        let m = JobManager::new(1, None).unwrap();
+        // batch_size 0 is the session builder's canonical rejection.
+        let mut bad = tiny_mock_cfg(0, 1);
+        bad.batch_size = 0;
+        let e = m.submit(bad).unwrap_err().to_string();
+        assert!(e.contains("batch_size"), "{e}");
+        // pjrt cannot run in a self-contained worker.
+        let mut pjrt = tiny_mock_cfg(0, 1);
+        pjrt.backend = "pjrt".into();
+        let e = m.submit(pjrt).unwrap_err().to_string();
+        assert!(e.contains("not servable"), "{e}");
+        assert_eq!(m.counts(), JobCounts::default());
+        m.shutdown();
+    }
+
+    #[test]
+    fn submit_runs_to_done_with_events() {
+        let m = JobManager::new(2, None).unwrap();
+        let id = m.submit(tiny_mock_cfg(5, 2)).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(wait_terminal(&m, id), "done");
+        let j = m.job_json(id).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("epochs_completed").unwrap().as_usize(), Some(2));
+        let summary = j.get("summary").unwrap();
+        assert_eq!(summary.get("epochs_run").unwrap().as_usize(), Some(2));
+        let events = m.events_json(id).unwrap();
+        assert_eq!(events.get("total").unwrap().as_usize(), Some(2));
+        let c = m.counts();
+        assert_eq!(c.done, 1);
+        m.shutdown();
+    }
+
+    #[test]
+    fn failing_job_is_marked_failed_not_fatal() {
+        let m = JobManager::new(1, None).unwrap();
+        // An unknown dataset passes config validation (datasets resolve
+        // at run time) and then fails in the worker.
+        let mut cfg = tiny_mock_cfg(0, 1);
+        cfg.dataset = "imagenet".into();
+        let id = m.submit(cfg).unwrap();
+        assert_eq!(wait_terminal(&m, id), "failed");
+        let j = m.job_json(id).unwrap();
+        let error = j.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(error.contains("unknown dataset"), "{error}");
+        // The worker survives: the next job still runs.
+        let id2 = m.submit(tiny_mock_cfg(1, 1)).unwrap();
+        assert_eq!(wait_terminal(&m, id2), "done");
+        m.shutdown();
+    }
+
+    #[test]
+    fn cancel_queued_job_never_runs() {
+        let m = JobManager::new(1, None).unwrap();
+        // Head-of-line job long enough to keep the single worker busy.
+        let head = m.submit(tiny_mock_cfg(0, 50)).unwrap();
+        let queued = m.submit(tiny_mock_cfg(1, 1)).unwrap();
+        // The cancel may land while the job is still queued (the usual
+        // case: the lone worker is busy with `head`) or, in a slow-start
+        // race, after it was claimed — both end in "cancelled".
+        let outcome = m.cancel(queued);
+        assert!(
+            matches!(outcome, CancelOutcome::CancelledQueued | CancelOutcome::Cancelling),
+            "{outcome:?}"
+        );
+        // Cancel the head too so the drain below is fast.
+        m.cancel(head);
+        assert_eq!(m.cancel(999), CancelOutcome::NotFound);
+        assert_eq!(wait_terminal(&m, head), "cancelled");
+        assert_eq!(wait_terminal(&m, queued), "cancelled");
+        // Drained worker must NOT have run the queued-then-cancelled
+        // job: a run would have flipped it to done or pushed events.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(m.status_of(queued), Some("cancelled"));
+        let events = m.events_json(queued).unwrap();
+        assert_eq!(events.get("total").unwrap().as_usize(), Some(0));
+        m.shutdown();
+    }
+}

@@ -1,0 +1,105 @@
+//! The DP-training job server: submit, queue, observe, cancel, and
+//! recover training work as a **service** instead of babysitting
+//! one-shot CLI processes.
+//!
+//! * [`http`]   — zero-dependency threaded HTTP/1.1 on `std::net`
+//!   (hard request-size caps, malformed input → 4xx, never a panic),
+//!   plus the `TcpStream` client the CLI verbs use;
+//! * [`jobs`]   — the job manager: `session::validate_config`-gated
+//!   submission, monotonically increasing ids, a long-lived
+//!   [`WorkerPool`](crate::sweep::pool::WorkerPool) of `--jobs N`
+//!   concurrent `TrainSession`s, per-job epoch-event ring buffers, and
+//!   checkpoint-backed durability (`--state-dir`: manifest + a
+//!   `dpquant-trainsession` checkpoint per epoch — a `kill -9`'d daemon
+//!   restarts and finishes every job bit-exactly);
+//! * [`api`]    — the versioned JSON endpoints (`dpquant-serve-api`
+//!   v1: `POST /v1/jobs`, `GET /v1/jobs[/{id}[/events]]`,
+//!   `POST /v1/jobs/{id}/cancel`, `GET /v1/healthz`);
+//! * [`client`] — the typed client + the `dpquant job
+//!   submit|list|status|events|cancel|wait` CLI verbs.
+//!
+//! **Thread ownership** (DESIGN.md §12): the accept thread owns the
+//! listener; each connection gets a short-lived handler thread that
+//! only ever touches the job table through the manager's mutex; each
+//! pool worker owns its executor/session/datasets outright. Training
+//! state is never shared across threads — only observed through the
+//! table.
+//!
+//! **Determinism contract**: workers open backends through
+//! `backend::open_sweep_executor` (native pinned to one internal
+//! thread), so a job's final metrics are a pure function of its config —
+//! byte-identical to `DPQUANT_THREADS=1 dpquant train` with the same
+//! config, regardless of how many jobs run concurrently. `tests/serve.rs`
+//! and CI's `serve-smoke` enforce this end to end.
+
+pub mod api;
+pub mod client;
+pub mod http;
+pub mod jobs;
+
+use std::sync::Arc;
+
+use crate::cli::Args;
+use crate::config::ServeConfig;
+use crate::util::error::Result;
+use self::api::{Api, API_FORMAT, API_VERSION};
+use self::jobs::JobManager;
+
+/// A running daemon: HTTP server + job manager. Embeddable (tests start
+/// one on `127.0.0.1:0`); the CLI wraps it in [`run_serve`].
+pub struct Daemon {
+    /// Shared with the HTTP handler; kept public so embedders can
+    /// observe jobs without going over the wire.
+    pub manager: Arc<JobManager>,
+    server: http::Server,
+}
+
+impl Daemon {
+    /// Bind `addr`, recover state from `state_dir` (if any), start
+    /// `workers` job workers, and begin serving.
+    pub fn start(addr: &str, workers: usize, state_dir: Option<&str>) -> Result<Daemon> {
+        let manager = Arc::new(JobManager::new(workers, state_dir)?);
+        let server = http::serve(addr, Api::new(Arc::clone(&manager)).into_handler())?;
+        Ok(Daemon { manager, server })
+    }
+
+    /// The actually-bound `host:port` (resolves port 0).
+    pub fn addr(&self) -> String {
+        self.server.local_addr().to_string()
+    }
+
+    /// Stop accepting connections and drop the daemon. Worker threads
+    /// drain outstanding jobs when the last manager handle drops
+    /// (cancel jobs first for a fast exit).
+    pub fn stop(self) {
+        self.server.stop();
+    }
+}
+
+/// `dpquant serve --addr H:P --jobs N --state-dir DIR` — run the daemon
+/// until killed.
+pub fn run_serve(args: &Args) -> Result<()> {
+    let sc = ServeConfig::from_args(args)?;
+    let daemon = Daemon::start(&sc.addr, sc.jobs, sc.state_dir.as_deref())?;
+    let counts = daemon.manager.counts();
+    let recovered = counts.queued + counts.running + counts.done + counts.failed + counts.cancelled;
+    println!(
+        "dpquant serve: listening on http://{} ({} workers, state dir: {})",
+        daemon.addr(),
+        sc.jobs,
+        sc.state_dir.as_deref().unwrap_or("<none — jobs die with the process>")
+    );
+    if recovered > 0 {
+        println!(
+            "recovered {recovered} jobs from the state dir ({} re-queued)",
+            counts.queued
+        );
+    }
+    println!(
+        "API {API_FORMAT} v{API_VERSION}: POST /v1/jobs  GET /v1/jobs[/ID[/events]]  \
+         POST /v1/jobs/ID/cancel  GET /v1/healthz"
+    );
+    println!("submit with: dpquant job submit --addr {} [train flags]", daemon.addr());
+    daemon.server.join();
+    Ok(())
+}

@@ -1,24 +1,38 @@
-//! Work-stealing job pool for sweep workers.
+//! Work pools for coarse-grained jobs (whole training runs).
 //!
-//! This generalizes `backend/parallel.rs`: where `map_chunks` statically
-//! partitions the rows of one physical batch (microsecond-scale work,
-//! deterministic per thread count), sweep jobs are whole training runs
-//! with wildly different durations — so workers *steal* the next grid
-//! index from a shared atomic counter instead of owning a fixed slice.
-//! Determinism still holds because every job is self-contained (its own
-//! executor, session, and RNG streams seeded from its config) and
-//! results land in the slot of their **job index**, never in completion
-//! order.
+//! Two pools live here, one per job-arrival shape:
 //!
-//! Failure contract: the first job that returns an error **or panics**
-//! aborts the pool — no new jobs are issued, in-flight jobs finish, and
-//! the caller gets a [`PoolError`] naming the offending job index. A
-//! sweep must fail loudly, not return a report with silent holes.
+//! * [`run_ordered`] — a **fixed batch**: all `jobs` indices are known up
+//!   front, scoped worker threads steal the next index from a shared
+//!   atomic counter, and the call returns when the batch drains. This is
+//!   what `sweep/` uses; it generalizes `backend/parallel.rs` from
+//!   statically-chunked microbatch rows to work-stolen whole runs.
+//! * [`WorkerPool`] — the **long-lived** generalization of `run_ordered`
+//!   for job *streams*: `threads` workers outlive any one batch, jobs
+//!   are submitted after the pool starts (and keep arriving while it
+//!   runs), and each job owns its error reporting. This is what the
+//!   serving daemon's job manager (`serve/jobs.rs`) schedules training
+//!   sessions on.
+//!
+//! Determinism holds in both because every job is self-contained (its
+//! own executor, session, and RNG streams seeded from its config);
+//! `run_ordered` additionally lands results in the slot of their **job
+//! index**, never in completion order.
+//!
+//! Failure contracts differ with the shape. A fixed batch is all-or-
+//! nothing: the first job that returns an error **or panics** aborts
+//! `run_ordered` — no new jobs are issued, in-flight jobs finish, and
+//! the caller gets a [`PoolError`] naming the offending job index (a
+//! sweep must fail loudly, not return a report with silent holes). A
+//! long-lived pool must *survive* bad jobs: [`WorkerPool`] catches each
+//! job's panic, keeps the worker alive, and leaves failure bookkeeping
+//! to the submitter (the job manager marks the job failed).
 
+use std::collections::VecDeque;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::util::error::Result;
 
@@ -114,7 +128,135 @@ fn record_failure(failure: &Mutex<Option<PoolError>>, index: usize, message: Str
     }
 }
 
-fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+// ---------------------------------------------------------------------
+// Long-lived worker pool
+// ---------------------------------------------------------------------
+
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed set of long-lived worker threads draining an unbounded job
+/// queue — the submit-after-start generalization of [`run_ordered`].
+///
+/// * Jobs run in submission order (FIFO pop), up to `threads` at a time.
+/// * A panicking job is caught and logged; the worker thread survives
+///   and moves on to the next job. Result/error delivery is the job's
+///   own business (e.g. via state the closure captures) — a stream has
+///   no single return value to abort.
+/// * [`WorkerPool::shutdown`] (and `Drop`) stops accepting the question
+///   of new work, lets workers **drain the queue**, then joins them.
+///   Callers that want to abandon queued work cancel it at their own
+///   layer first (the job manager's cancel flag) — the pool never drops
+///   a job on the floor silently.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    wake: Condvar,
+}
+
+struct PoolQueue {
+    jobs: VecDeque<PoolJob>,
+    shutting_down: bool,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` (min 1) workers, all idle until the first
+    /// [`WorkerPool::submit`].
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue {
+                jobs: VecDeque::new(),
+                shutting_down: false,
+            }),
+            wake: Condvar::new(),
+        });
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job; returns immediately. Jobs submitted after
+    /// shutdown began are impossible by construction (`shutdown`
+    /// consumes the pool).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push_back(Box::new(job));
+        }
+        self.shared.wake.notify_one();
+    }
+
+    /// Jobs waiting in the queue (excludes jobs currently running).
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Drain the queue, then stop and join every worker.
+    pub fn shutdown(mut self) {
+        self.join_workers();
+    }
+
+    fn join_workers(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutting_down {
+                return;
+            }
+            q.shutting_down = true;
+        }
+        self.shared.wake.notify_all();
+        for h in self.workers.drain(..) {
+            // Workers catch job panics; a join error means the pool
+            // machinery itself panicked.
+            h.join().expect("worker pool infrastructure panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.join_workers();
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutting_down {
+                    return;
+                }
+                q = shared.wake.wait(q).unwrap();
+            }
+        };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+            // The job's own error channel is responsible for marking it
+            // failed; this line is the backstop so a panic is never
+            // fully silent.
+            eprintln!("worker pool: job panicked: {}", panic_text(payload));
+        }
+    }
+}
+
+/// Best-effort text of a caught panic payload (shared with the serve
+/// job manager, which converts job panics into failed-job records).
+pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -187,5 +329,109 @@ mod tests {
             assert!(e.message.contains("panicked"), "{e}");
             assert!(e.message.contains("boom at six"), "{e}");
         }
+    }
+
+    // -- WorkerPool (the long-lived stream pool) ----------------------
+
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc as StdArc;
+    use std::time::Duration;
+
+    #[test]
+    fn worker_pool_runs_jobs_submitted_after_start() {
+        let pool = WorkerPool::new(4);
+        let count = StdArc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let count = count.clone();
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // Let the first wave start (and likely finish), then keep
+        // submitting — the long-lived contract run_ordered cannot offer.
+        std::thread::sleep(Duration::from_millis(20));
+        for _ in 0..8 {
+            let count = count.clone();
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn worker_pool_shutdown_drains_the_queue() {
+        // One worker, a slow head-of-line job, then a burst: shutdown
+        // must still run everything before joining.
+        let pool = WorkerPool::new(1);
+        let count = StdArc::new(AtomicUsize::new(0));
+        {
+            let count = count.clone();
+            pool.submit(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for _ in 0..10 {
+            let count = count.clone();
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 11);
+    }
+
+    #[test]
+    fn worker_pool_concurrency_is_bounded_by_threads() {
+        let pool = WorkerPool::new(2);
+        let running = StdArc::new(AtomicUsize::new(0));
+        let peak = StdArc::new(AtomicUsize::new(0));
+        for _ in 0..12 {
+            let running = running.clone();
+            let peak = peak.clone();
+            pool.submit(move || {
+                let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(5));
+                running.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        let peak = peak.load(Ordering::SeqCst);
+        assert!((1..=2).contains(&peak), "peak concurrency {peak}");
+    }
+
+    #[test]
+    fn worker_pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(1);
+        let ran_after = StdArc::new(AtomicBool::new(false));
+        pool.submit(|| panic!("job goes boom"));
+        {
+            let ran_after = ran_after.clone();
+            pool.submit(move || ran_after.store(true, Ordering::SeqCst));
+        }
+        pool.shutdown();
+        assert!(
+            ran_after.load(Ordering::SeqCst),
+            "the worker must survive a panicking job and run the next one"
+        );
+    }
+
+    #[test]
+    fn worker_pool_drop_without_shutdown_joins() {
+        let count = StdArc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(3);
+            for _ in 0..6 {
+                let count = count.clone();
+                pool.submit(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Dropped here: Drop must drain + join, not leak workers.
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 6);
     }
 }

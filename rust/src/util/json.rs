@@ -1,9 +1,28 @@
 //! Minimal JSON reader/writer (offline crate set has no serde facade).
 //!
 //! Used for the artifact manifest (`artifacts/manifest.json`, produced by
-//! `python/compile/aot.py`) and for metrics output. Supports the full JSON
-//! grammar minus exotic number forms; good enough because both producers
-//! are under our control.
+//! `python/compile/aot.py`), for metrics output, for the versioned
+//! checkpoint/report formats, and — since the serving daemon — as the
+//! **wire format** of the `dpquant-serve-api` HTTP protocol. That last
+//! role means the parser must assume *hostile* input, not just our own
+//! emitters:
+//!
+//! * nesting depth is capped at [`MAX_DEPTH`] (bounded recursion — a
+//!   `[[[[...` bomb errors out instead of overflowing the stack);
+//! * numbers that overflow `f64` (`1e999`) are rejected rather than
+//!   silently becoming `inf` (which the writer could not re-emit as
+//!   valid JSON);
+//! * truncated documents, bad escapes, and bad `\u` hex all return
+//!   positioned errors, never panic (note the input is `&str`, so it is
+//!   valid UTF-8 by construction; multi-byte slicing is still
+//!   bounds-checked defensively);
+//! * duplicate object keys resolve **last-wins** (documented, tested).
+//!
+//! Floats that must survive bit-exactly (checkpoints, summaries) travel
+//! as IEEE-754 bit patterns in hex strings, not as numbers — see
+//! `coordinator/session.rs`. Plain `Json::Num` round-trips exactly too
+//! (Rust's shortest-round-trip float formatting), but hex is immune to
+//! foreign re-serializers.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -122,15 +141,20 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser accepts. Deep enough for every
+/// document we emit (checkpoints nest ~4 levels), shallow enough that
+/// recursion can never overflow the stack on adversarial input.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document. Returns an error string with byte position on
-/// malformed input.
+/// malformed input; never panics.
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser {
         bytes: input.as_bytes(),
         pos: 0,
     };
     p.skip_ws();
-    let v = p.value()?;
+    let v = p.value(0)?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
         return Err(format!("trailing data at byte {}", p.pos));
@@ -175,15 +199,15 @@ impl Parser<'_> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
         self.skip_ws();
         match self.peek() {
             Some(b'n') => self.lit("null", Json::Null),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'"') => self.string().map(Json::Str),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(format!("unexpected byte at {}", self.pos)),
         }
@@ -217,7 +241,11 @@ impl Parser<'_> {
                     _ => return Err(format!("bad escape at byte {}", self.pos)),
                 },
                 Some(c) => {
-                    // Collect UTF-8 continuation bytes verbatim.
+                    // Collect UTF-8 continuation bytes verbatim. The
+                    // input is a `&str`, so sequences are well-formed by
+                    // construction — but bounds-check anyway so a future
+                    // bytes-based entry point cannot turn a truncated
+                    // sequence into a slice panic.
                     if c < 0x80 {
                         s.push(c as char);
                     } else {
@@ -229,10 +257,14 @@ impl Parser<'_> {
                         } else {
                             2
                         };
-                        self.pos = start + len;
+                        let end = start + len;
+                        if end > self.bytes.len() {
+                            return Err(format!("truncated UTF-8 sequence at byte {start}"));
+                        }
+                        self.pos = end;
                         s.push_str(
-                            std::str::from_utf8(&self.bytes[start..start + len])
-                                .map_err(|e| e.to_string())?,
+                            std::str::from_utf8(&self.bytes[start..end])
+                                .map_err(|e| format!("invalid UTF-8 at byte {start}: {e}"))?,
                         );
                     }
                 }
@@ -265,12 +297,31 @@ impl Parser<'_> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|e| format!("bad number '{text}': {e}"))
+        let v: f64 = text
+            .parse()
+            .map_err(|e| format!("bad number '{text}': {e}"))?;
+        // `str::parse` maps overflow to ±inf; as a wire format we must
+        // reject it (the writer could never re-emit it as valid JSON).
+        if !v.is_finite() {
+            return Err(format!("number '{text}' overflows f64"));
+        }
+        Ok(Json::Num(v))
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    /// Containers (not scalar leaves) count toward [`MAX_DEPTH`]: a
+    /// scalar at the bottom of exactly `MAX_DEPTH` containers is legal.
+    fn check_depth(&self, depth: usize) -> Result<(), String> {
+        if depth >= MAX_DEPTH {
+            return Err(format!(
+                "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                self.pos
+            ));
+        }
+        Ok(())
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.check_depth(depth)?;
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -279,7 +330,7 @@ impl Parser<'_> {
             return Ok(Json::Arr(items));
         }
         loop {
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -289,7 +340,8 @@ impl Parser<'_> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.check_depth(depth)?;
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -302,7 +354,10 @@ impl Parser<'_> {
             let key = self.string()?;
             self.skip_ws();
             self.expect(b':')?;
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
+            // Duplicate keys: last one wins (RFC 8259 leaves this
+            // implementation-defined; we pick the common behavior and
+            // pin it with a test).
             map.insert(key, val);
             self.skip_ws();
             match self.bump() {
@@ -371,5 +426,31 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(num(3.0).to_string(), "3");
         assert_eq!(num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn depth_is_bounded_not_a_stack_overflow() {
+        // Within the cap: fine.
+        let mut ok = String::new();
+        for _ in 0..MAX_DEPTH {
+            ok.push('[');
+        }
+        for _ in 0..MAX_DEPTH {
+            ok.push(']');
+        }
+        assert!(parse(&ok).is_ok());
+        // One past the cap: a positioned error, not a crash. (The
+        // 100k-bracket bomb lives in tests/json_wire.rs.)
+        let deep = format!("[{ok}]");
+        let err = parse(&deep).unwrap_err();
+        assert!(err.contains("nesting deeper"), "{err}");
+    }
+
+    #[test]
+    fn overflowing_numbers_rejected() {
+        assert!(parse("1e999").unwrap_err().contains("overflows"));
+        assert!(parse("-1e999").unwrap_err().contains("overflows"));
+        // Large but representable is fine.
+        assert_eq!(parse("1e308").unwrap(), Json::Num(1e308));
     }
 }

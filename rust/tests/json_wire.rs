@@ -1,0 +1,208 @@
+//! `util/json` as a **wire format** (satellite of the serve PR).
+//!
+//! Since the serving daemon, this parser reads bytes from the network,
+//! not just files we wrote ourselves. These tests pin the hostile-input
+//! contract: truncated documents, nesting bombs (bounded recursion — no
+//! stack overflow), bad escapes, overflowing numbers, duplicate keys,
+//! and the IEEE-754 hex-bits float convention the checkpoint formats
+//! ride on. Note `parse` takes `&str`, so invalid UTF-8 is excluded at
+//! the type level — the HTTP layer rejects non-UTF-8 bodies before
+//! parsing.
+
+use dpquant::util::json::{self, Json, MAX_DEPTH};
+
+#[test]
+fn truncated_documents_error_cleanly() {
+    for doc in [
+        "{",
+        "}",
+        "[",
+        "[1,",
+        "[1, 2",
+        "{\"a\":",
+        "{\"a\": 1,",
+        "{\"a\"",
+        "\"abc",
+        "\"abc\\",
+        "tru",
+        "nul",
+        "fals",
+        "-",
+        "1e",
+        "\"\\u00",
+        "",
+        "   ",
+        "{\"a\": 1} trailing",
+        "[1] [2]",
+    ] {
+        assert!(json::parse(doc).is_err(), "must reject {doc:?}");
+    }
+}
+
+#[test]
+fn nesting_bombs_error_instead_of_overflowing_the_stack() {
+    // 100k unclosed arrays: without bounded recursion this is a stack
+    // overflow (an abort, not a catchable panic) — the bug class this
+    // test exists to keep dead.
+    let bomb = "[".repeat(100_000);
+    let e = json::parse(&bomb).unwrap_err();
+    assert!(e.contains("nesting"), "{e}");
+
+    // Same through objects and mixed containers.
+    let obj_bomb = "{\"k\":".repeat(100_000);
+    let e = json::parse(&obj_bomb).unwrap_err();
+    assert!(e.contains("nesting"), "{e}");
+    let mixed = "[{\"k\":".repeat(50_000);
+    let e = json::parse(&mixed).unwrap_err();
+    assert!(e.contains("nesting"), "{e}");
+
+    // A *closed* document right at the cap parses; one level deeper
+    // does not. Only containers count: a scalar leaf at the bottom of
+    // exactly MAX_DEPTH containers is still legal.
+    let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+    assert!(json::parse(&ok).is_ok());
+    let ok_scalar = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+    assert!(json::parse(&ok_scalar).is_ok());
+    let too_deep = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+    assert!(json::parse(&too_deep).is_err());
+}
+
+#[test]
+fn bad_escapes_and_lone_surrogates_never_panic() {
+    assert!(json::parse(r#""\q""#).is_err());
+    assert!(json::parse(r#""\x41""#).is_err());
+    assert!(json::parse(r#""\u12g4""#).is_err());
+    assert!(json::parse(r#""\u""#).is_err());
+    // A lone surrogate is not a scalar value; the parser substitutes
+    // U+FFFD rather than panicking or fabricating invalid UTF-8.
+    let v = json::parse(r#""\ud800""#).unwrap();
+    assert_eq!(v.as_str().unwrap(), "\u{fffd}");
+    // Escapes that ARE valid round-trip through our writer.
+    let v = json::parse(r#""line\nbreak \"quoted\" tab\there A""#).unwrap();
+    assert_eq!(v.as_str().unwrap(), "line\nbreak \"quoted\" tab\there A");
+    let rewritten = v.to_string();
+    assert_eq!(json::parse(&rewritten).unwrap(), v);
+}
+
+#[test]
+fn numbers_that_overflow_f64_are_rejected() {
+    for doc in ["1e999", "-1e999", "1e400", "123456789e999999"] {
+        let e = json::parse(doc).unwrap_err();
+        assert!(e.contains("overflow"), "{doc:?} -> {e}");
+    }
+    // The extremes that DO fit stay exact.
+    assert_eq!(json::parse("1e308").unwrap().as_f64(), Some(1e308));
+    assert_eq!(json::parse("-1e308").unwrap().as_f64(), Some(-1e308));
+    // Underflow to zero is fine (it is a representable value).
+    assert_eq!(json::parse("1e-999").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn duplicate_keys_resolve_last_wins() {
+    let v = json::parse(r#"{"a": 1, "b": 0, "a": 2}"#).unwrap();
+    assert_eq!(v.get("a").unwrap().as_f64(), Some(2.0));
+    assert_eq!(v.get("b").unwrap().as_f64(), Some(0.0));
+    assert_eq!(v.as_obj().unwrap().len(), 2);
+}
+
+#[test]
+fn hex_bits_float_convention_roundtrips_bit_exactly() {
+    // The checkpoint formats ship every float as its IEEE-754 bit
+    // pattern in a hex string. The wire must carry those strings
+    // verbatim — including patterns for -0.0, subnormals, and NaN,
+    // which decimal text could corrupt.
+    let patterns: [u64; 7] = [
+        0.0f64.to_bits(),
+        (-0.0f64).to_bits(),
+        1.5f64.to_bits(),
+        f64::MIN_POSITIVE.to_bits(),
+        4.9e-324f64.to_bits(), // smallest subnormal
+        f64::NAN.to_bits(),
+        0xdead_beef_cafe_f00d,
+    ];
+    for bits in patterns {
+        let doc = Json::Str(format!("{bits:016x}")).to_string();
+        let back = json::parse(&doc).unwrap();
+        let recovered = u64::from_str_radix(back.as_str().unwrap(), 16).unwrap();
+        assert_eq!(recovered, bits, "bit pattern {bits:016x} must survive the wire");
+    }
+
+    // The f32-blob convention (weights: concatenated 8-hex-char words).
+    let weights: [f32; 5] = [0.0, -0.0, 1.0 / 3.0, f32::MIN_POSITIVE, -1.5e-40];
+    let blob: String = weights.iter().map(|w| format!("{:08x}", w.to_bits())).collect();
+    let doc = json::obj(vec![("w", Json::Str(blob.clone()))]).to_string();
+    let back = json::parse(&doc).unwrap();
+    let blob_back = back.get("w").unwrap().as_str().unwrap();
+    assert_eq!(blob_back, blob);
+    for (i, w) in weights.iter().enumerate() {
+        let bits = u32::from_str_radix(&blob_back[i * 8..i * 8 + 8], 16).unwrap();
+        assert_eq!(bits, w.to_bits());
+    }
+}
+
+#[test]
+fn plain_numbers_roundtrip_exactly_through_text() {
+    // The serve API sends summaries as plain JSON numbers; Rust's
+    // shortest-round-trip float formatting plus our parser must be
+    // lossless (this is what makes `job status` lines byte-identical
+    // to `train`'s).
+    for x in [
+        0.1 + 0.2,
+        1.0 / 3.0,
+        -7.77,
+        1e-12,
+        123456789.123456,
+        f64::MAX,
+        -f64::MIN_POSITIVE,
+        42.0,
+    ] {
+        let doc = Json::Num(x).to_string();
+        let back = json::parse(&doc).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), x.to_bits(), "{x} reread as {back}");
+    }
+    // The one documented exception: -0.0 serializes through the integer
+    // path as "0" and loses its sign — which is exactly why the
+    // checkpoint formats carry floats as hex bit patterns instead.
+    assert_eq!(Json::Num(-0.0).to_string(), "0");
+}
+
+#[test]
+fn large_flat_payloads_parse_fine() {
+    // Bounded DEPTH must not mean bounded SIZE: wide documents are
+    // legal wire traffic (a sweep report, a long event ring).
+    let wide = format!(
+        "[{}]",
+        (0..20_000).map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let v = json::parse(&wide).unwrap();
+    assert_eq!(v.as_arr().unwrap().len(), 20_000);
+    assert_eq!(v.as_arr().unwrap()[19_999].as_usize(), Some(19_999));
+
+    let long_string = "x".repeat(300_000);
+    let doc = Json::Str(long_string.clone()).to_string();
+    assert_eq!(json::parse(&doc).unwrap().as_str().unwrap().len(), 300_000);
+
+    // Many sibling keys, each shallow.
+    let many = format!(
+        "{{{}}}",
+        (0..5_000)
+            .map(|i| format!("\"k{i}\": {i}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let v = json::parse(&many).unwrap();
+    assert_eq!(v.as_obj().unwrap().len(), 5_000);
+}
+
+#[test]
+fn scalar_roots_and_unicode_bodies() {
+    assert_eq!(json::parse("3").unwrap(), Json::Num(3.0));
+    assert_eq!(json::parse("true").unwrap(), Json::Bool(true));
+    assert_eq!(json::parse("null").unwrap(), Json::Null);
+    assert_eq!(json::parse("\"s\"").unwrap().as_str(), Some("s"));
+    // Multi-byte UTF-8 passes through unharmed (2-, 3-, 4-byte forms).
+    let v = json::parse("\"é ⚡ 🚀 end\"").unwrap();
+    assert_eq!(v.as_str().unwrap(), "é ⚡ 🚀 end");
+    let rewritten = v.to_string();
+    assert_eq!(json::parse(&rewritten).unwrap(), v);
+}

@@ -1,0 +1,390 @@
+//! Tier-1 serving tests: the acceptance contract of `rust/src/serve/`.
+//!
+//! (a) **Determinism through the API**: a config submitted to the
+//!     daemon — with THREE jobs running concurrently — finishes with a
+//!     `final:` metrics line byte-identical to a direct in-process run
+//!     of the same config (the `DPQUANT_THREADS=1 dpquant train`
+//!     semantics; daemon workers pin the native backend to one internal
+//!     thread exactly like sweep workers).
+//! (b) **Durability**: a daemon killed mid-job leaves exactly a
+//!     `running` manifest plus the last epoch-boundary checkpoint in
+//!     its state dir. We fabricate that precise disk state, start a
+//!     daemon over it, and require the recovered job to finish
+//!     byte-identical to an uninterrupted run. Terminal jobs must keep
+//!     their recorded outcome and ids must keep increasing.
+//! (c) **Robustness**: a barrage of malformed HTTP/JSON gets 4xx/5xx
+//!     answers (or a clean close) and the daemon keeps serving — it
+//!     never panics, and a real job still runs afterwards.
+//!
+//! Everything runs on `127.0.0.1:0` (ephemeral ports), in-process, with
+//! no artifacts — tier-1 like the rest of the native suite.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use dpquant::backend;
+use dpquant::config::TrainConfig;
+use dpquant::coordinator::{train_with_sink, NullSink, TrainSession};
+use dpquant::data;
+use dpquant::serve::client::{final_line_from_status, Client};
+use dpquant::serve::jobs::config_to_json;
+use dpquant::serve::Daemon;
+use dpquant::util::json::{self, Json};
+
+const WAIT: Duration = Duration::from_secs(120);
+const POLL: Duration = Duration::from_millis(20);
+
+/// A fast real-training config for the native backend (the model/sizes
+/// CI's resume-smoke uses).
+fn native_cfg(seed: u64, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        model: "logreg".into(),
+        backend: "native".into(),
+        dataset_size: 192,
+        val_size: 64,
+        batch_size: 16,
+        physical_batch: 64,
+        epochs,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+fn mock_cfg(seed: u64, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        backend: "mock".into(),
+        dataset_size: 96,
+        val_size: 32,
+        batch_size: 16,
+        physical_batch: 32,
+        epochs,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// The reference: run the config directly, exactly as a daemon worker
+/// would (same executor factory, hence the same 1-thread native
+/// pinning), and format the canonical final line.
+fn direct_final_line(cfg: &TrainConfig) -> String {
+    let (train_ds, val_ds) =
+        data::train_val(&cfg.dataset, cfg.dataset_size, cfg.val_size, cfg.seed).unwrap();
+    let exec =
+        backend::open_sweep_executor(cfg, train_ds.example_numel, train_ds.n_classes).unwrap();
+    let (record, _weights, _accountant) =
+        train_with_sink(exec.as_ref(), cfg, &train_ds, &val_ds, &mut NullSink).unwrap();
+    record.final_line()
+}
+
+fn temp_state_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("dpquant_serve_{tag}_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+// ---------------------------------------------------------------------
+// (a) API-submitted jobs == direct runs, 3x concurrent
+// ---------------------------------------------------------------------
+
+#[test]
+fn api_jobs_match_direct_runs_with_three_concurrent() {
+    let daemon = Daemon::start("127.0.0.1:0", 3, None).unwrap();
+    let client = Client::new(&daemon.addr());
+
+    // Three distinct configs in flight at once on three workers.
+    let cfgs: Vec<TrainConfig> = (0..3).map(|i| native_cfg(i, 2)).collect();
+    let ids: Vec<u64> = cfgs.iter().map(|c| client.submit(c).unwrap()).collect();
+    assert_eq!(ids, vec![1, 2, 3], "ids are monotonically increasing from 1");
+
+    for (id, cfg) in ids.iter().zip(&cfgs) {
+        let status = client.wait(*id, WAIT, POLL).unwrap();
+        assert_eq!(
+            status.get("status").unwrap().as_str(),
+            Some("done"),
+            "{status}"
+        );
+        let wire_line = final_line_from_status(&status).unwrap();
+        assert_eq!(
+            wire_line,
+            direct_final_line(cfg),
+            "job {id}: the daemon's final metrics must be byte-identical to a direct run"
+        );
+    }
+
+    // Same config resubmitted -> same bytes again (pure function).
+    let again = client.submit(&cfgs[0]).unwrap();
+    let status = client.wait(again, WAIT, POLL).unwrap();
+    assert_eq!(
+        final_line_from_status(&status).unwrap(),
+        direct_final_line(&cfgs[0])
+    );
+
+    let health = client.healthz().unwrap();
+    assert_eq!(health.get("jobs").unwrap().get("done").unwrap().as_usize(), Some(4));
+    assert_eq!(health.get("workers").unwrap().as_usize(), Some(3));
+    daemon.stop();
+}
+
+// ---------------------------------------------------------------------
+// (b) kill -9 durability: recover + finish bit-exactly
+// ---------------------------------------------------------------------
+
+#[test]
+fn restarted_daemon_resumes_killed_job_bit_exact() {
+    let dir = temp_state_dir("recover");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = native_cfg(7, 4);
+
+    // Fabricate the exact disk state a daemon killed mid-job leaves
+    // behind: the job's manifest still saying "running", and the
+    // checkpoint written at the last completed epoch boundary (2 of 4).
+    let (train_ds, val_ds) =
+        data::train_val(&cfg.dataset, cfg.dataset_size, cfg.val_size, cfg.seed).unwrap();
+    let exec =
+        backend::open_sweep_executor(&cfg, train_ds.example_numel, train_ds.n_classes).unwrap();
+    let mut session = TrainSession::builder(cfg.clone()).build(exec.as_ref(), &train_ds).unwrap();
+    for _ in 0..2 {
+        session.step_epoch(exec.as_ref(), &train_ds, &val_ds, &mut NullSink).unwrap();
+    }
+    session.checkpoint(&format!("{dir}/job-1.ck.json")).unwrap();
+    let manifest = json::obj(vec![
+        ("format", json::s("dpquant-serve-job")),
+        ("version", json::num(1.0)),
+        ("id", json::num(1.0)),
+        ("status", json::s("running")),
+        ("epochs_completed", json::num(2.0)),
+        ("config", config_to_json(&cfg)),
+        ("error", Json::Null),
+        ("summary", Json::Null),
+    ]);
+    std::fs::write(format!("{dir}/job-1.json"), manifest.to_string()).unwrap();
+
+    // A job that already finished before the crash: its outcome must
+    // survive untouched (and must NOT be re-run).
+    let done_manifest = json::obj(vec![
+        ("format", json::s("dpquant-serve-job")),
+        ("version", json::num(1.0)),
+        ("id", json::num(2.0)),
+        ("status", json::s("done")),
+        ("epochs_completed", json::num(1.0)),
+        ("config", config_to_json(&mock_cfg(1, 1))),
+        ("error", Json::Null),
+        (
+            "summary",
+            json::obj(vec![
+                ("final_accuracy", json::num(0.25)),
+                ("best_accuracy", json::num(0.25)),
+                ("final_epsilon", json::num(1.5)),
+                ("analysis_epsilon", json::num(0.0)),
+                ("epochs_run", json::num(1.0)),
+                ("truncated", Json::Bool(false)),
+            ]),
+        ),
+    ]);
+    std::fs::write(format!("{dir}/job-2.json"), done_manifest.to_string()).unwrap();
+
+    // A running job whose cancel was acknowledged just before the
+    // crash: recovery must honor the intent (cancelled), not re-run it.
+    let cancel_manifest = json::obj(vec![
+        ("format", json::s("dpquant-serve-job")),
+        ("version", json::num(1.0)),
+        ("id", json::num(3.0)),
+        ("status", json::s("running")),
+        ("cancel_requested", Json::Bool(true)),
+        ("epochs_completed", json::num(1.0)),
+        ("config", config_to_json(&native_cfg(2, 4))),
+        ("error", Json::Null),
+        ("summary", Json::Null),
+    ]);
+    std::fs::write(format!("{dir}/job-3.json"), cancel_manifest.to_string()).unwrap();
+
+    // "Restart" the daemon over that state dir.
+    let daemon = Daemon::start("127.0.0.1:0", 2, Some(&dir)).unwrap();
+    let client = Client::new(&daemon.addr());
+
+    // The killed job resumes from its checkpoint and finishes with the
+    // SAME bytes as an uninterrupted 4-epoch run.
+    let status = client.wait(1, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+    assert_eq!(status.get("recovered").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        final_line_from_status(&status).unwrap(),
+        direct_final_line(&cfg),
+        "recovery must be bit-exact vs an uninterrupted run"
+    );
+
+    // The pre-crash outcome of job 2 is intact, not re-run.
+    let done = client.job_status(2).unwrap();
+    assert_eq!(done.get("status").unwrap().as_str(), Some("done"));
+    let summary = done.get("summary").unwrap();
+    assert_eq!(summary.get("final_epsilon").unwrap().as_f64(), Some(1.5));
+
+    // The acknowledged cancel survived the crash: job 3 is cancelled,
+    // never resurrected.
+    let cancelled = client.job_status(3).unwrap();
+    assert_eq!(cancelled.get("status").unwrap().as_str(), Some("cancelled"));
+
+    // Ids keep increasing past everything recovered.
+    let new_id = client.submit(&mock_cfg(9, 1)).unwrap();
+    assert_eq!(new_id, 4);
+    client.wait(new_id, WAIT, POLL).unwrap();
+
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recovery_from_manifest_without_checkpoint_reruns_from_scratch() {
+    // Killed after submit but before the first epoch's checkpoint: the
+    // manifest exists, no .ck.json does. Recovery re-runs the whole job
+    // deterministically.
+    let dir = temp_state_dir("fresh");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = native_cfg(11, 2);
+    let manifest = json::obj(vec![
+        ("format", json::s("dpquant-serve-job")),
+        ("version", json::num(1.0)),
+        ("id", json::num(5.0)),
+        ("status", json::s("queued")),
+        ("epochs_completed", json::num(0.0)),
+        ("config", config_to_json(&cfg)),
+        ("error", Json::Null),
+        ("summary", Json::Null),
+    ]);
+    std::fs::write(format!("{dir}/job-5.json"), manifest.to_string()).unwrap();
+
+    let daemon = Daemon::start("127.0.0.1:0", 1, Some(&dir)).unwrap();
+    let client = Client::new(&daemon.addr());
+    let status = client.wait(5, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+    assert_eq!(final_line_from_status(&status).unwrap(), direct_final_line(&cfg));
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// (c) hostile input never takes the daemon down
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_requests_get_4xx_and_daemon_keeps_serving() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let addr = daemon.addr();
+    let client = Client::new(&addr);
+
+    let barrage: &[&[u8]] = &[
+        b"NOT-HTTP-AT-ALL",
+        b"GET / HTTP/9.9\r\n\r\n",
+        b"GET\r\n\r\n",
+        b"GET / HTTP/1.1\r\nthis header has no colon\r\n\r\n",
+        b"POST /v1/jobs HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+        b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n",
+        b"POST /v1/jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        // Body shorter than Content-Length (we half-close so the server
+        // sees EOF instead of hanging on read_exact).
+        b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 50\r\n\r\n{\"co",
+        // Well-formed HTTP, hostile JSON.
+        b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 7\r\n\r\nnotjson",
+        b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 2\r\n\r\n[[",
+        b"GET /v1/jobs/99999 HTTP/1.1\r\n\r\n",
+        b"GET /v1/jobs/banana/events HTTP/1.1\r\n\r\n",
+        b"PUT /v1/healthz HTTP/1.1\r\n\r\n",
+        b"POST /totally/elsewhere HTTP/1.1\r\n\r\n",
+    ];
+    for (i, garbage) in barrage.iter().enumerate() {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(garbage).unwrap();
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let mut reply = String::new();
+        let _ = stream.read_to_string(&mut reply);
+        if !reply.is_empty() {
+            assert!(
+                reply.starts_with("HTTP/1.1 4") || reply.starts_with("HTTP/1.1 5"),
+                "barrage #{i}: expected an error status, got: {reply}"
+            );
+            assert!(
+                reply.contains("\"error\""),
+                "barrage #{i}: error body must be JSON: {reply}"
+            );
+        }
+        // The daemon is still alive and serving after every volley.
+        let health = client.healthz().unwrap();
+        assert_eq!(
+            health.get("status").unwrap().as_str(),
+            Some("ok"),
+            "daemon died after barrage #{i}"
+        );
+    }
+
+    // A nesting bomb inside a well-formed request: 400, not a stack
+    // overflow (the json parser's bounded recursion, end to end).
+    let bomb_body = "[".repeat(10_000);
+    let mut req = format!(
+        "POST /v1/jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        bomb_body.len()
+    )
+    .into_bytes();
+    req.extend(bomb_body.into_bytes());
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(&req).unwrap();
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut reply = String::new();
+    let _ = stream.read_to_string(&mut reply);
+    assert!(reply.starts_with("HTTP/1.1 400"), "{reply}");
+
+    // And real work still runs to completion afterwards.
+    let id = client.submit(&mock_cfg(3, 1)).unwrap();
+    let status = client.wait(id, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"));
+    daemon.stop();
+}
+
+// ---------------------------------------------------------------------
+// Cancel + events over the full stack
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_and_events_over_the_wire() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let client = Client::new(&daemon.addr());
+
+    // A job far too long to finish: cancel stops it at an epoch
+    // boundary.
+    let long = client.submit(&mock_cfg(0, 100_000)).unwrap();
+    // Wait until it has made observable progress (>= 1 epoch event).
+    let mut made_progress = false;
+    for _ in 0..2500 {
+        let ev = client.events(long).unwrap();
+        if ev.get("total").unwrap().as_usize().unwrap_or(0) >= 1 {
+            made_progress = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(4));
+    }
+    assert!(made_progress, "job produced no epoch events");
+    client.cancel(long).unwrap();
+    let status = client.wait(long, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("cancelled"));
+
+    // Events carry epoch telemetry with consecutive sequence numbers.
+    let ev = client.events(long).unwrap();
+    let events = ev.get("events").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    for (i, e) in events.iter().enumerate() {
+        let base = ev.get("dropped").unwrap().as_usize().unwrap();
+        assert_eq!(e.get("seq").unwrap().as_usize(), Some(base + i));
+        assert!(e.get("val_accuracy").unwrap().as_f64().is_some());
+    }
+
+    // Cancelling again is a clean 409, and a fresh job still runs.
+    assert!(client.cancel(long).is_err());
+    let id = client.submit(&mock_cfg(1, 2)).unwrap();
+    let status = client.wait(id, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"));
+    daemon.stop();
+}
