@@ -2,6 +2,9 @@
 //! this is a hand-rolled timing harness with criterion-like output).
 //!
 //! Benches, one per perf-relevant layer of the stack:
+//!   kernels/*         — naive reference vs cache-blocked matmul/conv/
+//!                       dense (the DESIGN.md §13 rewrite; same shapes
+//!                       as `dpquant bench`)
 //!   quantizers/*      — Rust mirrors of LUQ4/uniform4/FP8 (ns/elem)
 //!   gaussian          — DP noise generation (the mechanism hot path)
 //!   accountant        — RDP curve + ε conversion (per-step budget check)
@@ -87,6 +90,80 @@ fn main() {
     let quick = std::env::var_os("DPQUANT_BENCH_QUICK").is_some();
     let b = Bench { filter, quick };
     println!("dpquant bench harness (criterion-style, offline)\n");
+
+    // --- L0: the blocked kernels vs their retained naive references ------
+    // Same shapes as `dpquant bench --json` so the two surfaces stay
+    // comparable; the committed BENCH_native.json tracks these numbers
+    // PR over PR.
+    {
+        use dpquant::backend::tensor;
+        let mut krng = Xoshiro256::seed_from_u64(42);
+        let mut fill = |buf: &mut [f32]| {
+            for v in buf.iter_mut() {
+                *v = krng.next_f32() - 0.5;
+            }
+        };
+        for (m, k, n) in [(96usize, 256usize, 96usize), (256, 256, 256)] {
+            let mut a = vec![0f32; m * k];
+            let mut bm = vec![0f32; k * n];
+            fill(&mut a);
+            fill(&mut bm);
+            let mut out = vec![0f32; m * n];
+            b.run(&format!("kernels/matmul-naive/{m}x{k}x{n}"), 30, || {
+                tensor::matmul(&a, &bm, m, k, n, &mut out);
+            });
+            b.run(&format!("kernels/matmul-blocked/{m}x{k}x{n}"), 30, || {
+                tensor::matmul_blocked(&a, &bm, m, k, n, &mut out);
+            });
+        }
+        let (h, wd, cin, cout) = (16usize, 16usize, 8usize, 16usize);
+        let mut cw = vec![0f32; cout * cin * 9];
+        let mut cb = vec![0f32; cout];
+        let mut ca = vec![0f32; h * wd * cin];
+        let mut cdy = vec![0f32; h * wd * cout];
+        fill(&mut cw);
+        fill(&mut cb);
+        fill(&mut ca);
+        fill(&mut cdy);
+        let mut cout_buf = vec![0f32; h * wd * cout];
+        b.run("kernels/conv3x3-forward-naive/16x16x8x16", 100, || {
+            tensor::conv3x3_forward_ref(&cw, &cb, &ca, &mut cout_buf, h, wd, cin, cout);
+        });
+        b.run("kernels/conv3x3-forward-blocked/16x16x8x16", 100, || {
+            tensor::conv3x3_forward(&cw, &cb, &ca, &mut cout_buf, h, wd, cin, cout);
+        });
+        let mut gw = vec![0f32; cw.len()];
+        let mut gb = vec![0f32; cout];
+        let mut da = vec![0f32; ca.len()];
+        b.run("kernels/conv3x3-backward-naive/16x16x8x16", 100, || {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            tensor::conv3x3_backward_ref(
+                &cw, &ca, &cdy, &mut gw, &mut gb, Some(&mut da), h, wd, cin, cout,
+            );
+        });
+        b.run("kernels/conv3x3-backward-blocked/16x16x8x16", 100, || {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            tensor::conv3x3_backward(
+                &cw, &ca, &cdy, &mut gw, &mut gb, Some(&mut da), h, wd, cin, cout,
+            );
+        });
+        let (di, dm) = (1024usize, 96usize);
+        let mut dw = vec![0f32; dm * di];
+        let mut db = vec![0f32; dm];
+        let mut dx = vec![0f32; di];
+        fill(&mut dw);
+        fill(&mut db);
+        fill(&mut dx);
+        let mut dout = vec![0f32; dm];
+        b.run("kernels/dense-forward-naive/1024x96", 500, || {
+            tensor::dense_forward_ref(&dw, Some(&db), &dx, &mut dout);
+        });
+        b.run("kernels/dense-forward-blocked/1024x96", 500, || {
+            tensor::dense_forward(&dw, Some(&db), &dx, &mut dout);
+        });
+    }
 
     // --- L1 mirrors: quantizer throughput -------------------------------
     let mut rng = Xoshiro256::seed_from_u64(2);

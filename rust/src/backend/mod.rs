@@ -2,8 +2,9 @@
 //! the [`StepExecutor`] trait, with **zero artifacts and zero external
 //! dependencies**.
 //!
-//! * [`tensor`]   — contiguous-f32 kernels (matmul, conv-lite, pooling,
-//!   ReLU, softmax-xent) with hand-derived backward passes;
+//! * [`tensor`]   — blocked contiguous-f32 kernels (tiled matmul,
+//!   conv-lite, pooling, ReLU, softmax-xent) with hand-derived backward
+//!   passes and retained straight-line references;
 //! * [`model`]    — the model zoo (logreg, MLP, mini-CNN) over the
 //!   `data/synth.rs` shapes, per-sample forward/backward;
 //! * [`parallel`] — scoped-thread microbatch parallelism.
@@ -11,11 +12,15 @@
 //! [`NativeExecutor`] computes **exact per-sample gradients** and clips
 //! them (Σ of clipped per-sample grads — the same contract the compiled
 //! PJRT graphs and `MockExecutor` expose), and runs the `quant/` kernels
-//! **on the actual compute path**: a masked layer's weight tensor is
-//! quantize-dequantized once per call and the gradient tensor entering
-//! its backward pass is quantize-dequantized per sample. With an
-//! all-zero `quant_mask` the step is exact fp32 — the parity tests pin
-//! this against hand-computed gradients and against `MockExecutor`.
+//! **fused into the compute path** through a [`QuantEpilogue`]: a masked
+//! layer's weight tensor is quantize-dequantized once per step as the
+//! GEMM *prologue* (unmasked tensors are borrowed, never copied), and
+//! the gradient tensor a masked layer consumes is quantize-dequantized
+//! per sample at the point its producing GEMM emits it (the *epilogue*).
+//! With an all-zero `quant_mask` the step is exact fp32 — the parity
+//! tests pin this against hand-computed gradients and against
+//! `MockExecutor`, and `tests/kernel_blocking.rs` pins the fused path
+//! against separate whole-tensor quantize passes.
 //!
 //! Backend selection (`--backend native|pjrt|mock`) lives here too, so
 //! `cli.rs`/`exp/` pick an executor through one entry point.
@@ -95,17 +100,21 @@ impl NativeExecutor {
         self
     }
 
+    /// The resolved model (layer specs + parameter layout).
     pub fn model(&self) -> &Model {
         &self.model
     }
 
+    /// The quantizer this executor fuses into masked layers.
     pub fn quantizer(&self) -> &dyn Quantizer {
         self.quantizer.as_ref()
     }
 
     /// Per-sample RNG stream: keyed by (step seed, sample index) so the
-    /// result is independent of the thread partition.
-    fn sample_rng(seed: f32, i: usize) -> Xoshiro256 {
+    /// result is independent of the thread partition. Public so the
+    /// fused-vs-separate parity tests can replay the exact stochastic
+    /// rounding stream of a step.
+    pub fn sample_rng(seed: f32, i: usize) -> Xoshiro256 {
         Xoshiro256::seed_from_u64(
             (seed.to_bits() as u64 ^ 0x51E9_D5A1_0000_0000)
                 ^ (i as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F),
@@ -113,9 +122,112 @@ impl NativeExecutor {
     }
 }
 
+/// Fused quantization hooks for a native train step: the per-layer
+/// quantize-dequantize decisions (`quant_mask`), the quantizer, and the
+/// step seed, bundled so the model's per-sample backward can apply
+/// gradient quantization **at the GEMM that produces the tensor**
+/// instead of as a separate whole-tensor pass.
+///
+/// Two hooks:
+/// * **weight prologue** ([`QuantEpilogue::quantize_weight`] /
+///   [`QuantEpilogue::quantized_weight_store`]) — once per step, build a
+///   quantize-dequantized copy of each *masked* layer's weight tensor
+///   (biases and unmasked tensors are borrowed untouched — the old path
+///   cloned the full weight set);
+/// * **grad epilogue** ([`QuantEpilogue::grad_epilogue`]) — per sample,
+///   quantize-dequantize the gradient tensor entering a masked layer's
+///   backward, applied where the producing kernel emits it.
+///
+/// RNG streams are pinned: the weight prologue draws from the same
+/// per-layer stream `quantize_masked_weights` has always derived from
+/// the step seed, and the grad epilogue consumes the caller's per-sample
+/// RNG in the same order as the old separate pass — so the fusion is
+/// bit-identical to the pre-fusion pipeline (pinned by
+/// `tests/kernel_blocking.rs`).
+pub struct QuantEpilogue<'a> {
+    quantizer: &'a dyn Quantizer,
+    quant_mask: &'a [f32],
+    seed: f32,
+}
+
+impl<'a> QuantEpilogue<'a> {
+    /// Bundle a quantizer + per-layer mask + step seed.
+    pub fn new(quantizer: &'a dyn Quantizer, quant_mask: &'a [f32], seed: f32) -> Self {
+        Self {
+            quantizer,
+            quant_mask,
+            seed,
+        }
+    }
+
+    /// Number of schedulable layers the mask covers.
+    pub fn n_layers(&self) -> usize {
+        self.quant_mask.len()
+    }
+
+    /// Does layer `l` run low-precision this step?
+    pub fn is_masked(&self, l: usize) -> bool {
+        self.quant_mask[l] > 0.0
+    }
+
+    /// Is any layer masked? (All-zero masks make the whole step exact
+    /// fp32; the executor skips the hooks entirely.)
+    pub fn any_masked(&self) -> bool {
+        self.quant_mask.iter().any(|&m| m > 0.0)
+    }
+
+    /// The pinned per-layer weight-quantization stream (keyed by step
+    /// seed and layer index; independent of batch content and threads).
+    fn weight_rng(&self, l: usize) -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(
+            (self.seed.to_bits() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ ((l as u64 + 1) << 32),
+        )
+    }
+
+    /// GEMM weight prologue for masked layer `l`: quantize-dequantized
+    /// copy of `w` under the pinned per-layer stream.
+    pub fn quantize_weight(&self, l: usize, w: &[f32]) -> Vec<f32> {
+        let mut qw = w.to_vec();
+        self.quantizer.quantize(&mut qw, &mut self.weight_rng(l));
+        qw
+    }
+
+    /// Run the weight prologue over a whole model: `Some(quantized)` for
+    /// each masked layer's weight tensor, `None` (borrow the fp32
+    /// original) everywhere else.
+    pub fn quantized_weight_store(
+        &self,
+        model: &Model,
+        weights: &[Vec<f32>],
+    ) -> Vec<Option<Vec<f32>>> {
+        let mut store: Vec<Option<Vec<f32>>> = vec![None; weights.len()];
+        for (l, &m) in self.quant_mask.iter().enumerate() {
+            if m > 0.0 {
+                let wi = model.weight_index(l);
+                store[wi] = Some(self.quantize_weight(l, &weights[wi]));
+            }
+        }
+        store
+    }
+
+    /// GEMM gradient epilogue: quantize-dequantize the gradient tensor
+    /// just produced for (i.e. about to be consumed by) layer `l`, iff
+    /// `l` is masked. `rng` is the per-sample stream
+    /// ([`NativeExecutor::sample_rng`]); unmasked layers draw nothing,
+    /// keeping the stream position identical to the pre-fusion pipeline.
+    pub fn grad_epilogue(&self, l: usize, grad: &mut [f32], rng: &mut Xoshiro256) {
+        if self.quant_mask[l] > 0.0 {
+            self.quantizer.quantize(grad, rng);
+        }
+    }
+}
+
 /// Quantize-dequantize the weight tensor of every masked layer exactly
-/// as the hot path does before a train step (biases stay fp32). Public
-/// so the quant-on-live-path property tests exercise the real code.
+/// as the hot path's [`QuantEpilogue`] prologue does before a train step
+/// (biases stay fp32). Public so the quant-on-live-path property tests
+/// exercise the real code; returns a full owned weight set (the executor
+/// itself borrows unmasked tensors instead).
 pub fn quantize_masked_weights(
     model: &Model,
     weights: &[Vec<f32>],
@@ -123,18 +235,13 @@ pub fn quantize_masked_weights(
     quantizer: &dyn Quantizer,
     seed: f32,
 ) -> Vec<Vec<f32>> {
-    let mut out = weights.to_vec();
-    for (l, &m) in quant_mask.iter().enumerate() {
-        if m <= 0.0 {
-            continue;
-        }
-        let wi = model.weight_index(l);
-        let mut rng = Xoshiro256::seed_from_u64(
-            (seed.to_bits() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((l as u64 + 1) << 32),
-        );
-        quantizer.quantize(&mut out[wi], &mut rng);
-    }
-    out
+    let epi = QuantEpilogue::new(quantizer, quant_mask, seed);
+    let store = epi.quantized_weight_store(model, weights);
+    weights
+        .iter()
+        .zip(store)
+        .map(|(w, q)| q.unwrap_or_else(|| w.clone()))
+        .collect()
 }
 
 impl StepExecutor for NativeExecutor {
@@ -183,19 +290,26 @@ impl StepExecutor for NativeExecutor {
             self.model.n_layers()
         );
 
-        let any_q = quant_mask.iter().any(|&m| m > 0.0);
-        let qweights = if any_q {
-            Some(quantize_masked_weights(
-                &self.model,
-                weights,
-                quant_mask,
-                self.quantizer.as_ref(),
-                seed,
-            ))
+        let epi = QuantEpilogue::new(self.quantizer.as_ref(), quant_mask, seed);
+        let any_q = epi.any_masked();
+        // Weight prologue: quantized copies for masked layers only;
+        // every other tensor is borrowed straight from `weights`.
+        let qstore = if any_q {
+            epi.quantized_weight_store(&self.model, weights)
         } else {
-            None
+            Vec::new()
         };
-        let wref: &[Vec<f32>] = qweights.as_deref().unwrap_or(weights);
+        let wviews: Vec<&[f32]> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                qstore
+                    .get(i)
+                    .and_then(|q| q.as_deref())
+                    .unwrap_or(w.as_slice())
+            })
+            .collect();
+        let epi_ref = if any_q { Some(&epi) } else { None };
 
         let chunks = parallel::map_chunks(self.batch, self.threads, |rows| {
             let mut grad_sums = self.model.zero_grads();
@@ -213,16 +327,11 @@ impl StepExecutor for NativeExecutor {
                 }
                 let mut rng = Self::sample_rng(seed, i);
                 let (loss, correct) = self.model.forward_backward(
-                    wref,
+                    &wviews,
                     &x[i * en..(i + 1) * en],
                     y[i] as usize,
                     &mut gbuf,
-                    quant_mask,
-                    if any_q {
-                        Some(self.quantizer.as_ref())
-                    } else {
-                        None
-                    },
+                    epi_ref,
                     &mut rng,
                 );
                 loss_sum += loss;
@@ -475,6 +584,31 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .sum();
         assert!(diff > 0.0, "quantization must perturb the step");
+    }
+
+    #[test]
+    fn epilogue_weight_store_matches_public_pass() {
+        // The borrow-based store and the owned public helper must agree
+        // tensor for tensor.
+        let exec = small_exec("luq4", 1.0, 4);
+        let model = exec.model();
+        let w = exec.initial_weights();
+        let mut mask = vec![0f32; exec.n_quant_layers()];
+        mask[0] = 1.0;
+        mask[2] = 1.0;
+        let epi = QuantEpilogue::new(exec.quantizer(), &mask, 1.5);
+        let store = epi.quantized_weight_store(model, &w);
+        let owned = quantize_masked_weights(model, &w, &mask, exec.quantizer(), 1.5);
+        for (i, (orig, got)) in w.iter().zip(&owned).enumerate() {
+            match &store[i] {
+                Some(q) => assert_eq!(q, got, "tensor {i}: store vs owned pass"),
+                None => assert_eq!(orig, got, "tensor {i}: unmasked must be untouched"),
+            }
+        }
+        // Masked weight tensors are Some, everything else None.
+        for l in 0..exec.n_quant_layers() {
+            assert_eq!(store[model.weight_index(l)].is_some(), mask[l] > 0.0);
+        }
     }
 
     #[test]

@@ -4,15 +4,22 @@
 //!
 //! A model is a chain of [`LayerSpec`]s ending in a logits layer; loss
 //! is softmax cross-entropy. Every spec is **one quantizable layer** (the
-//! unit Algorithms 1–2 schedule over): when `quant_mask[l] > 0` the
-//! executor runs layer `l` low-precision — its weight tensor is
-//! quantize-dequantized before the step and the gradient tensor entering
-//! its backward computation is quantize-dequantized per sample. Biases
-//! stay fp32 (they are O(width) of the O(width²) weights and the paper's
-//! kernels likewise keep accumulators high-precision).
+//! unit Algorithms 1–2 schedule over): when a layer is masked in the
+//! step's [`QuantEpilogue`] it runs low-precision — its weight tensor is
+//! quantize-dequantized by the epilogue's prologue hook (the executor
+//! passes a borrowed view mixing quantized and fp32 tensors) and the
+//! gradient tensor entering its backward computation is
+//! quantize-dequantized per sample at the point the producing kernel
+//! emits it. Biases stay fp32 (they are O(width) of the O(width²)
+//! weights and the paper's kernels likewise keep accumulators
+//! high-precision).
+//!
+//! Weight arguments are generic over `W: AsRef<[f32]>` so callers can
+//! pass owned tensors (`&[Vec<f32>]`) or the executor's borrowed views
+//! (`&[&[f32]]`) without copying.
 
 use super::tensor;
-use crate::quant::Quantizer;
+use super::QuantEpilogue;
 use crate::util::rng::Xoshiro256;
 
 /// One quantizable layer of the native zoo.
@@ -37,6 +44,7 @@ pub enum LayerSpec {
 }
 
 impl LayerSpec {
+    /// Number of input activations this layer consumes.
     pub fn in_numel(&self) -> usize {
         match self {
             LayerSpec::Conv3x3 { h, w, cin, .. } => h * w * cin,
@@ -44,6 +52,7 @@ impl LayerSpec {
         }
     }
 
+    /// Number of output activations this layer produces.
     pub fn out_numel(&self) -> usize {
         match self {
             LayerSpec::Conv3x3 { h, w, cout, pool } => {
@@ -79,6 +88,7 @@ impl LayerSpec {
         }
     }
 
+    /// Fan-in used for He-uniform initialization.
     pub fn fan_in(&self) -> usize {
         match self {
             LayerSpec::Conv3x3 { cin, .. } => cin * 9,
@@ -107,7 +117,9 @@ impl LayerSpec {
 #[derive(Clone, Debug)]
 pub struct Model {
     specs: Vec<LayerSpec>,
+    /// Output dimension of the final (logits) layer.
     pub n_classes: usize,
+    /// Flattened input feature count the first layer expects.
     pub input_numel: usize,
     /// Multiplier applied to raw features at the model input (1.0 for
     /// images; `1/VOCAB` for token-id sequences so logits start sane).
@@ -252,18 +264,22 @@ impl Model {
         Self::new(specs, H * W * C, 1.0)
     }
 
+    /// The validated layer chain.
     pub fn specs(&self) -> &[LayerSpec] {
         &self.specs
     }
 
+    /// Number of quantizable layers (the scheduling unit).
     pub fn n_layers(&self) -> usize {
         self.specs.len()
     }
 
+    /// Shapes of every parameter tensor, in flat-list order.
     pub fn param_shapes(&self) -> &[Vec<usize>] {
         &self.param_shapes
     }
 
+    /// Element counts of every parameter tensor, in flat-list order.
     pub fn param_numels(&self) -> Vec<usize> {
         self.param_shapes
             .iter()
@@ -271,6 +287,7 @@ impl Model {
             .collect()
     }
 
+    /// Total trainable parameter count.
     pub fn total_params(&self) -> usize {
         self.param_numels().iter().sum()
     }
@@ -304,10 +321,10 @@ impl Model {
     /// One layer's forward for one sample. Returns `(output, pre_pool)`
     /// where `pre_pool` is the post-ReLU pre-pooling activation a
     /// pooled conv layer's backward needs.
-    fn layer_forward(
+    fn layer_forward<W: AsRef<[f32]>>(
         &self,
         l: usize,
-        weights: &[Vec<f32>],
+        weights: &[W],
         a: &[f32],
     ) -> (Vec<f32>, Option<Vec<f32>>) {
         let p0 = self.param_start[l];
@@ -321,8 +338,8 @@ impl Model {
             } => {
                 let mut y = vec![0.0; h * w * cout];
                 tensor::conv3x3_forward(
-                    &weights[p0],
-                    &weights[p0 + 1],
+                    weights[p0].as_ref(),
+                    weights[p0 + 1].as_ref(),
                     a,
                     &mut y,
                     *h,
@@ -347,12 +364,12 @@ impl Model {
             } => {
                 assert_eq!(a.len(), *input, "dense input numel");
                 let b = if *bias {
-                    Some(&weights[p0 + 1][..])
+                    Some(weights[p0 + 1].as_ref())
                 } else {
                     None
                 };
                 let mut y = vec![0.0; *output];
-                tensor::dense_forward(&weights[p0], b, a, &mut y);
+                tensor::dense_forward(weights[p0].as_ref(), b, a, &mut y);
                 if *relu {
                     tensor::relu_inplace(&mut y);
                 }
@@ -362,7 +379,7 @@ impl Model {
     }
 
     /// Full-precision forward for one sample; returns the logits.
-    pub fn forward(&self, weights: &[Vec<f32>], x: &[f32]) -> Vec<f32> {
+    pub fn forward<W: AsRef<[f32]>>(&self, weights: &[W], x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.input_numel, "input numel");
         let mut a: Vec<f32> = x.iter().map(|&v| v * self.input_scale).collect();
         for l in 0..self.specs.len() {
@@ -375,23 +392,29 @@ impl Model {
     /// into `grads` (zeroed by the caller); returns `(loss, correct)`.
     ///
     /// `weights` should already hold quantized tensors for masked layers
-    /// (the executor pre-quantizes once per call); per sample, the
-    /// gradient entering a masked layer's backward is additionally
-    /// quantize-dequantized, injecting the backward-path quantization
-    /// error the scheduler's loss-impact analysis measures.
-    #[allow(clippy::too_many_arguments)]
-    pub fn forward_backward(
+    /// (the executor runs the [`QuantEpilogue`] weight prologue once per
+    /// call and passes borrowed views). When `epilogue` is `Some`, the
+    /// gradient tensor a masked layer consumes is additionally
+    /// quantize-dequantized **where its producing kernel emits it** —
+    /// after the softmax for the last layer, after the upstream layer's
+    /// input-gradient GEMM otherwise. That is the same tensor, the same
+    /// values and the same RNG draw order as the old separate
+    /// whole-tensor pass at the consumer's loop top, so the fusion is
+    /// bit-identical; it injects the backward-path quantization error
+    /// the scheduler's loss-impact analysis measures.
+    pub fn forward_backward<W: AsRef<[f32]>>(
         &self,
-        weights: &[Vec<f32>],
+        weights: &[W],
         x: &[f32],
         label: usize,
         grads: &mut [Vec<f32>],
-        quant_mask: &[f32],
-        quantizer: Option<&dyn Quantizer>,
+        epilogue: Option<&QuantEpilogue>,
         rng: &mut Xoshiro256,
     ) -> (f32, bool) {
         let n = self.specs.len();
-        assert_eq!(quant_mask.len(), n, "quant mask len");
+        if let Some(epi) = epilogue {
+            assert_eq!(epi.n_layers(), n, "quant mask len");
+        }
         assert_eq!(grads.len(), self.param_shapes.len(), "grad tensor count");
         let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n + 1);
         acts.push(x.iter().map(|&v| v * self.input_scale).collect());
@@ -402,12 +425,12 @@ impl Model {
             prepool.push(pp);
         }
         let (loss, correct, mut dy) = tensor::softmax_xent(&acts[n], label);
+        // Epilogue at the producer: the softmax emits the gradient the
+        // last layer consumes.
+        if let Some(epi) = epilogue {
+            epi.grad_epilogue(n - 1, &mut dy, rng);
+        }
         for l in (0..n).rev() {
-            if quant_mask[l] > 0.0 {
-                if let Some(q) = quantizer {
-                    q.quantize(&mut dy, rng);
-                }
-            }
             let p0 = self.param_start[l];
             let need_da = l > 0;
             match &self.specs[l] {
@@ -422,7 +445,7 @@ impl Model {
                     let gb = if *bias { Some(&mut tail[0][..]) } else { None };
                     let mut da = if need_da { vec![0.0; *input] } else { Vec::new() };
                     tensor::dense_backward(
-                        &weights[p0],
+                        weights[p0].as_ref(),
                         &acts[l],
                         &dy,
                         gw,
@@ -458,7 +481,7 @@ impl Model {
                         Vec::new()
                     };
                     tensor::conv3x3_backward(
-                        &weights[p0],
+                        weights[p0].as_ref(),
                         &acts[l],
                         &d,
                         gw,
@@ -472,6 +495,13 @@ impl Model {
                     if need_da {
                         dy = da;
                     }
+                }
+            }
+            // Epilogue at the producer: this layer's input-gradient GEMM
+            // just emitted the tensor layer l-1 consumes.
+            if need_da {
+                if let Some(epi) = epilogue {
+                    epi.grad_epilogue(l - 1, &mut dy, rng);
                 }
             }
         }
@@ -592,10 +622,8 @@ mod tests {
         let x: Vec<f32> = vec![0.4, -0.3, 0.8, 0.1, -0.6, 0.5];
         let label = 1usize;
         let mut grads = m.zero_grads();
-        let zero_mask = vec![0f32; m.n_layers()];
         let mut rng = Xoshiro256::seed_from_u64(1);
-        let (loss, _correct) =
-            m.forward_backward(&w, &x, label, &mut grads, &zero_mask, None, &mut rng);
+        let (loss, _correct) = m.forward_backward(&w, &x, label, &mut grads, None, &mut rng);
         assert!(loss > 0.0);
         let eps = 1e-2f32;
         for t in 0..w.len() {
@@ -643,9 +671,8 @@ mod tests {
         let x: Vec<f32> = (0..32).map(|i| ((i * 13 % 11) as f32 / 11.0) - 0.4).collect();
         let label = 2usize;
         let mut grads = m.zero_grads();
-        let zero_mask = vec![0f32; m.n_layers()];
         let mut rng = Xoshiro256::seed_from_u64(2);
-        m.forward_backward(&w, &x, label, &mut grads, &zero_mask, None, &mut rng);
+        m.forward_backward(&w, &x, label, &mut grads, None, &mut rng);
         let eps = 1e-2f32;
         // Check the conv weight tensor (index 0) and conv bias (1).
         for t in [0usize, 1] {
@@ -674,12 +701,12 @@ mod tests {
         let q = quant::by_name("luq4").unwrap();
         let mut base = m.zero_grads();
         let mut rng = Xoshiro256::seed_from_u64(4);
-        let zero_mask = vec![0f32; m.n_layers()];
-        m.forward_backward(&w, &x, 0, &mut base, &zero_mask, None, &mut rng);
+        m.forward_backward(&w, &x, 0, &mut base, None, &mut rng);
         let mut qg = m.zero_grads();
         let ones = vec![1f32; m.n_layers()];
+        let epi = QuantEpilogue::new(q.as_ref(), &ones, 0.0);
         let mut rng2 = Xoshiro256::seed_from_u64(4);
-        m.forward_backward(&w, &x, 0, &mut qg, &ones, Some(q.as_ref()), &mut rng2);
+        m.forward_backward(&w, &x, 0, &mut qg, Some(&epi), &mut rng2);
         let diff: f32 = base
             .iter()
             .flatten()

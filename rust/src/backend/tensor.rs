@@ -1,11 +1,25 @@
-//! Tiny tensor kernels for the native backend: contiguous `f32` buffers
-//! plus the dense / conv-lite / pooling / activation / loss primitives
-//! the model zoo composes into real forward and backward passes.
+//! Tensor kernels for the native backend: contiguous `f32` buffers plus
+//! the dense / conv-lite / pooling / activation / loss primitives the
+//! model zoo composes into real forward and backward passes.
 //!
-//! Everything is scalar Rust (no SIMD intrinsics, no allocation inside
-//! the inner loops beyond caller-owned buffers), written for exactness:
-//! the backward functions are the hand-derived adjoints of the forwards,
-//! and the unit tests check them against central finite differences.
+//! The hot-path kernels (`matmul_blocked`, `dense_forward`,
+//! `dense_backward`, `conv3x3_forward`, `conv3x3_backward`) are
+//! **cache-blocked and autovectorizer-friendly**: MC/KC/NC macro-blocking
+//! with an MR x NR register micro-kernel for the GEMM, tap-range clamping
+//! plus per-call weight repacking for the convolutions. Every blocked
+//! kernel preserves the *per-output-element accumulation order* of its
+//! retained straight-line reference (`matmul`, `*_ref`), so results are
+//! bit-identical for finite inputs wherever the determinism contract
+//! pins them (DESIGN.md §13 spells out which paths are bit-pinned vs
+//! tolerance-pinned). No SIMD intrinsics, no unsafe: speed comes from
+//! independent accumulator chains, contiguous inner loops the
+//! autovectorizer can widen without reassociating, and reduced memory
+//! traffic.
+//!
+//! The backward functions are the hand-derived adjoints of the forwards;
+//! unit tests check them against central finite differences, and
+//! `tests/kernel_blocking.rs` checks blocked-vs-reference parity over
+//! randomized shapes.
 //!
 //! Layout conventions:
 //! * images are HWC (`[(y*W + x)*C + c]`), matching `data/synth.rs`;
@@ -20,11 +34,14 @@ use crate::util::rng::Xoshiro256;
 /// initialization, parameter bookkeeping and the property tests.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Flat row-major storage (`shape.iter().product()` elements).
     pub data: Vec<f32>,
+    /// Row-major dimensions, outermost first.
     pub shape: Vec<usize>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Self {
             data: vec![0.0; shape.iter().product()],
@@ -32,6 +49,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap an existing buffer; panics if `data.len()` mismatches `shape`.
     pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
         assert_eq!(
             data.len(),
@@ -44,6 +62,7 @@ impl Tensor {
         }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -61,7 +80,29 @@ impl Tensor {
     }
 }
 
-/// `out[m×n] = a[m×k] · b[k×n]` (row-major, accumulate-free overwrite).
+// ---------------------------------------------------------------------
+// Blocked GEMM
+// ---------------------------------------------------------------------
+
+/// Row-block of the LHS kept hot across one K-block (MC x KC f32 = 64 KiB).
+pub const MC: usize = 64;
+/// K-dimension block: the span each register tile accumulates between a
+/// load and a store of its `out` entries. Larger KC amortizes the
+/// load/store of the accumulator tile; KC x NC f32 = 128 KiB of `b`
+/// panel stays L2-resident.
+pub const KC: usize = 256;
+/// Column-block of the RHS reused across every row block.
+pub const NC: usize = 128;
+/// Register-tile rows: independent accumulator chains per column, hiding
+/// FMA latency without reassociating any single chain.
+const MR: usize = 4;
+/// Register-tile columns: one 8-wide SIMD vector per row chain.
+const NR: usize = 8;
+
+/// `out[m×n] = a[m×k] · b[k×n]` — the straight-line **reference** GEMM
+/// (row-update form, `j` innermost). Retained as the parity baseline for
+/// [`matmul_blocked`] and as the "naive" side of `dpquant bench`; the
+/// hot path routes through the blocked kernels instead.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "matmul lhs shape");
     assert_eq!(b.len(), k * n, "matmul rhs shape");
@@ -82,9 +123,163 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
     }
 }
 
+/// `out[m×n] = a[m×k] · b[k×n]`, cache-blocked (overwrite form). See
+/// [`matmul_blocked_into`] for the accumulate form and the exactness
+/// contract.
+pub fn matmul_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), m * n, "matmul out shape");
+    out.fill(0.0);
+    matmul_blocked_into(a, b, m, k, n, out);
+}
+
+/// `out[m×n] += a[m×k] · b[k×n]`, cache-blocked: [`MC`]/[`KC`]/[`NC`]
+/// macro-blocking around an `MR x NR` register micro-kernel.
+///
+/// Bit-exactness: each output element's contributions are added in
+/// ascending-`p` order onto the existing `out` value — the identical
+/// chain the reference [`matmul`] builds (including its skip of
+/// zero-valued `a` entries) — so for finite inputs the result is
+/// bit-identical to `out + matmul(a, b)`. The speedup comes from the
+/// accumulator tile living in registers across a whole K-block (the
+/// reference stores and reloads the output row once per `p`) and from
+/// `a`-panel/`b`-panel reuse, not from reassociation.
+pub fn matmul_blocked_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul lhs shape");
+    assert_eq!(b.len(), k * n, "matmul rhs shape");
+    assert_eq!(out.len(), m * n, "matmul out shape");
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let (i0, j0) = (ic + ir, jc + jr);
+                        if mr == MR && nr == NR {
+                            micro_full(a, b, k, n, i0, j0, pc, kc, out);
+                        } else {
+                            micro_edge(a, b, k, n, i0, j0, pc, kc, mr, nr, out);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full `MR x NR` register tile over one K-block. The accumulator array
+/// stays in registers; each of the MR row chains is strictly sequential
+/// in `p` (no reassociation — the bit-exactness contract) while the NR
+/// columns are independent lanes the autovectorizer widens.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_full(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    pc: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let base = (i0 + r) * n + j0;
+        accr.copy_from_slice(&out[base..base + NR]);
+    }
+    for p in pc..pc + kc {
+        let bbase = p * n + j0;
+        let brow: &[f32; NR] = b[bbase..bbase + NR].try_into().unwrap();
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + p];
+            if av == 0.0 {
+                // Matches the reference kernel's sparse-row skip (big for
+                // post-ReLU gradients); identity on the add chain anyway.
+                continue;
+            }
+            for (s, &bv) in accr.iter_mut().zip(brow) {
+                *s += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let base = (i0 + r) * n + j0;
+        out[base..base + NR].copy_from_slice(accr);
+    }
+}
+
+/// Remainder tile (`mr < MR` and/or `nr < NR`): same accumulation order
+/// as [`micro_full`], generic loop bounds.
+#[inline]
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn micro_edge(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    pc: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for r in 0..mr {
+        for c in 0..nr {
+            acc[r][c] = out[(i0 + r) * n + j0 + c];
+        }
+    }
+    for p in pc..pc + kc {
+        let bbase = p * n + j0;
+        for r in 0..mr {
+            let av = a[(i0 + r) * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for c in 0..nr {
+                acc[r][c] += av * b[bbase + c];
+            }
+        }
+    }
+    for r in 0..mr {
+        for c in 0..nr {
+            out[(i0 + r) * n + j0 + c] = acc[r][c];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense layer
+// ---------------------------------------------------------------------
+
 /// Dense forward for one sample: `out = W·a (+ b)` with `W` as
-/// `[out][in]` row-major.
+/// `[out][in]` row-major. Routed through the blocked GEMM
+/// ([`matmul_blocked_into`] with `n = 1`): the bias seeds the
+/// accumulator exactly like the reference, so the result is
+/// bit-identical to [`dense_forward_ref`] — but the micro-kernel runs
+/// [`MR`] independent accumulator chains where the reference's single
+/// chain is FMA-latency-bound.
 pub fn dense_forward(w: &[f32], b: Option<&[f32]>, a: &[f32], out: &mut [f32]) {
+    let input = a.len();
+    let output = out.len();
+    assert_eq!(w.len(), input * output, "dense weight shape");
+    match b {
+        Some(bb) => out.copy_from_slice(bb),
+        None => out.fill(0.0),
+    }
+    matmul_blocked_into(w, a, output, input, 1, out);
+}
+
+/// Straight-line reference for [`dense_forward`] (parity tests and
+/// `dpquant bench` baseline).
+pub fn dense_forward_ref(w: &[f32], b: Option<&[f32]>, a: &[f32], out: &mut [f32]) {
     let input = a.len();
     let output = out.len();
     assert_eq!(w.len(), input * output, "dense weight shape");
@@ -101,7 +296,47 @@ pub fn dense_forward(w: &[f32], b: Option<&[f32]>, a: &[f32], out: &mut [f32]) {
 /// Dense backward for one sample. `gw`/`gb` are *accumulated into*
 /// (callers zero per-sample buffers); `da`, when present, is overwritten
 /// with the gradient w.r.t. the layer input.
+///
+/// The input-gradient `da = dy · W` runs through the blocked GEMM
+/// (`1 x output x input`); its ascending-`k` accumulation is the
+/// reference's ascending-`o` loop, so all three outputs are
+/// bit-identical to [`dense_backward_ref`]. The weight-gradient update
+/// is a contiguous rank-1 AXPY per nonzero `dy` row, which the
+/// autovectorizer already widens.
 pub fn dense_backward(
+    w: &[f32],
+    a: &[f32],
+    dy: &[f32],
+    gw: &mut [f32],
+    mut gb: Option<&mut [f32]>,
+    da: Option<&mut [f32]>,
+) {
+    let input = a.len();
+    let output = dy.len();
+    assert_eq!(w.len(), input * output, "dense weight shape");
+    assert_eq!(gw.len(), input * output, "dense grad shape");
+    for (o, &d) in dy.iter().enumerate() {
+        if let Some(gb) = gb.as_deref_mut() {
+            gb[o] += d;
+        }
+        if d == 0.0 {
+            continue;
+        }
+        let grow = &mut gw[o * input..(o + 1) * input];
+        for (g, &ai) in grow.iter_mut().zip(a) {
+            *g += d * ai;
+        }
+    }
+    if let Some(da) = da {
+        assert_eq!(da.len(), input, "dense da shape");
+        da.fill(0.0);
+        matmul_blocked_into(dy, w, 1, output, input, da);
+    }
+}
+
+/// Straight-line reference for [`dense_backward`] (parity tests and
+/// `dpquant bench` baseline).
+pub fn dense_backward_ref(
     w: &[f32],
     a: &[f32],
     dy: &[f32],
@@ -140,9 +375,80 @@ pub fn dense_backward(
     }
 }
 
-/// 3x3 same-padding convolution over one HWC image (stride 1).
+// ---------------------------------------------------------------------
+// 3x3 convolution
+// ---------------------------------------------------------------------
+
+/// 3x3 same-padding convolution over one HWC image (stride 1), blocked:
+///
+/// * the valid tap range `(ky0..ky1, kx0..kx1)` is clamped per row /
+///   column, so interior pixels run the full 3x3 with **no per-pixel
+///   bounds checks** (the reference tests `sy < h` per tap per pixel);
+/// * weights are repacked per call from `[cout][cin][3][3]` to
+///   `[ky][kx][cin][cout]`, turning the reference's stride-9 scalar
+///   gather into a contiguous `cout`-long AXPY the autovectorizer
+///   widens;
+/// * the `cout` accumulators live in one hot row buffer seeded with the
+///   bias.
+///
+/// Per output element the tap contributions are added in the same
+/// `(ky, kx, ci)` order as [`conv3x3_forward_ref`], so results are
+/// bit-identical for finite inputs.
 #[allow(clippy::too_many_arguments)]
 pub fn conv3x3_forward(
+    w: &[f32],
+    b: &[f32],
+    a: &[f32],
+    out: &mut [f32],
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+) {
+    assert_eq!(a.len(), h * wd * cin, "conv input shape");
+    assert_eq!(out.len(), h * wd * cout, "conv output shape");
+    assert_eq!(w.len(), cout * cin * 9, "conv weight shape");
+    assert_eq!(b.len(), cout, "conv bias shape");
+    // Repack [cout][cin][3][3] -> [ky][kx][cin][cout].
+    let mut wp = vec![0f32; w.len()];
+    for co in 0..cout {
+        for ci in 0..cin {
+            for koff in 0..9 {
+                wp[(koff * cin + ci) * cout + co] = w[(co * cin + ci) * 9 + koff];
+            }
+        }
+    }
+    let mut acc = vec![0f32; cout];
+    for y in 0..h {
+        let (ky0, ky1) = (usize::from(y == 0), if y + 1 == h { 2 } else { 3 });
+        for x in 0..wd {
+            let (kx0, kx1) = (usize::from(x == 0), if x + 1 == wd { 2 } else { 3 });
+            acc.copy_from_slice(b);
+            for ky in ky0..ky1 {
+                let sy = y + ky - 1;
+                for kx in kx0..kx1 {
+                    let sx = x + kx - 1;
+                    let abase = (sy * wd + sx) * cin;
+                    let tap = (ky * 3 + kx) * cin;
+                    for ci in 0..cin {
+                        let av = a[abase + ci];
+                        let wrow = &wp[(tap + ci) * cout..(tap + ci + 1) * cout];
+                        for (s, &wv) in acc.iter_mut().zip(wrow) {
+                            *s += wv * av;
+                        }
+                    }
+                }
+            }
+            let obase = (y * wd + x) * cout;
+            out[obase..obase + cout].copy_from_slice(&acc);
+        }
+    }
+}
+
+/// Straight-line reference for [`conv3x3_forward`] (parity tests and
+/// `dpquant bench` baseline).
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_forward_ref(
     w: &[f32],
     b: &[f32],
     a: &[f32],
@@ -189,8 +495,101 @@ pub fn conv3x3_forward(
 
 /// Backward of [`conv3x3_forward`] for one sample: accumulates `gw`/`gb`
 /// and (when present) overwrites `da` with the input gradient.
+///
+/// Blocked form: tap-range clamping (no per-pixel bounds checks in the
+/// interior), weights repacked to `[cout][ky][kx][cin]` for a contiguous
+/// `cin`-long dual AXPY (`gw` and `da` updated in one pass), and the
+/// weight gradient accumulated into a packed scratch buffer unpacked
+/// once at the end. `gb` and `da` are bit-identical to
+/// [`conv3x3_backward_ref`]; `gw` is bit-identical when it enters zeroed
+/// (the executor's per-sample convention — a pre-accumulated `gw` lands
+/// within one rounding step of the reference, tolerance-pinned per
+/// DESIGN.md §13).
 #[allow(clippy::too_many_arguments)]
 pub fn conv3x3_backward(
+    w: &[f32],
+    a: &[f32],
+    dy: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    mut da: Option<&mut [f32]>,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+) {
+    assert_eq!(a.len(), h * wd * cin, "conv input shape");
+    assert_eq!(dy.len(), h * wd * cout, "conv dy shape");
+    assert_eq!(gw.len(), cout * cin * 9, "conv grad shape");
+    assert_eq!(gb.len(), cout, "conv bias grad shape");
+    let need_da = da.is_some();
+    if let Some(d) = da.as_deref_mut() {
+        assert_eq!(d.len(), h * wd * cin, "conv da shape");
+        d.fill(0.0);
+    }
+    // Repack [cout][cin][3][3] -> [cout][ky][kx][cin] (only needed for
+    // the input-gradient update).
+    let mut wp = vec![0f32; if need_da { w.len() } else { 0 }];
+    if need_da {
+        for co in 0..cout {
+            for ci in 0..cin {
+                for koff in 0..9 {
+                    wp[(co * 9 + koff) * cin + ci] = w[(co * cin + ci) * 9 + koff];
+                }
+            }
+        }
+    }
+    // Packed weight-gradient scratch, same [cout][ky][kx][cin] layout.
+    let mut gp = vec![0f32; gw.len()];
+    for y in 0..h {
+        let (ky0, ky1) = (usize::from(y == 0), if y + 1 == h { 2 } else { 3 });
+        for x in 0..wd {
+            let (kx0, kx1) = (usize::from(x == 0), if x + 1 == wd { 2 } else { 3 });
+            let obase = (y * wd + x) * cout;
+            for co in 0..cout {
+                let d = dy[obase + co];
+                if d == 0.0 {
+                    continue;
+                }
+                gb[co] += d;
+                for ky in ky0..ky1 {
+                    let sy = y + ky - 1;
+                    for kx in kx0..kx1 {
+                        let sx = x + kx - 1;
+                        let abase = (sy * wd + sx) * cin;
+                        let pbase = (co * 9 + ky * 3 + kx) * cin;
+                        let arow = &a[abase..abase + cin];
+                        let gprow = &mut gp[pbase..pbase + cin];
+                        if let Some(dd) = da.as_deref_mut() {
+                            let wrow = &wp[pbase..pbase + cin];
+                            let darow = &mut dd[abase..abase + cin];
+                            for ci in 0..cin {
+                                gprow[ci] += d * arow[ci];
+                                darow[ci] += d * wrow[ci];
+                            }
+                        } else {
+                            for (g, &av) in gprow.iter_mut().zip(arow) {
+                                *g += d * av;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for co in 0..cout {
+        for koff in 0..9 {
+            for ci in 0..cin {
+                gw[(co * cin + ci) * 9 + koff] += gp[(co * 9 + koff) * cin + ci];
+            }
+        }
+    }
+}
+
+/// Straight-line reference for [`conv3x3_backward`] (parity tests and
+/// `dpquant bench` baseline).
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_backward_ref(
     w: &[f32],
     a: &[f32],
     dy: &[f32],
@@ -244,6 +643,10 @@ pub fn conv3x3_backward(
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// Pooling / activation / loss
+// ---------------------------------------------------------------------
 
 /// 2x2 average pooling over an HWC image (`h`, `wd` must be even).
 pub fn avgpool2_forward(a: &[f32], out: &mut [f32], h: usize, wd: usize, c: usize) {
@@ -344,6 +747,38 @@ mod tests {
         let mut out = [0f32; 4];
         matmul(&a, &b, 2, 2, 2, &mut out);
         assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+        let mut blocked = [0f32; 4];
+        matmul_blocked(&a, &b, 2, 2, 2, &mut blocked);
+        assert_eq!(blocked, out);
+    }
+
+    #[test]
+    fn blocked_matmul_bit_identical_across_tile_remainders() {
+        // Shapes straddling every remainder case of the MR x NR tile and
+        // the KC block; the full randomized sweep lives in
+        // tests/kernel_blocking.rs.
+        let mut r = rng(11);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),
+            (5, 7, 9),
+            (3, KC + 5, 17),
+            (MR + 1, 31, NR + 3),
+            (32, 64, 40),
+        ] {
+            let a = rand_vec(m * k, 1.0, &mut r);
+            let b = rand_vec(k * n, 1.0, &mut r);
+            let mut naive = vec![0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut naive);
+            let mut blocked = vec![0f32; m * n];
+            matmul_blocked(&a, &b, m, k, n, &mut blocked);
+            for (i, (x, y)) in naive.iter().zip(&blocked).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "({m},{k},{n}) elem {i}: {x} vs {y}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -359,6 +794,10 @@ mod tests {
         for (x, y) in out.iter().zip(&mm) {
             assert!((x - y).abs() < 1e-6);
         }
+        // And bit-identical to the straight-line reference.
+        let mut rf = vec![0f32; output];
+        dense_forward_ref(&w, None, &a, &mut rf);
+        assert_eq!(out, rf);
     }
 
     /// Central finite differences of `f` at `xs[i]`.
@@ -401,6 +840,32 @@ mod tests {
             let num = fdiff(&a, i, eps, |av| loss(&w, &b, av));
             assert!((da[i] - num).abs() < 2e-2, "da[{i}]: {} vs {num}", da[i]);
         }
+    }
+
+    #[test]
+    fn conv_blocked_bit_identical_to_reference() {
+        // Odd spatial dims + channel counts off the SIMD width; the full
+        // randomized sweep lives in tests/kernel_blocking.rs.
+        let (h, wd, cin, cout) = (5usize, 3usize, 3usize, 5usize);
+        let mut r = rng(12);
+        let w = rand_vec(cout * cin * 9, 0.5, &mut r);
+        let b = rand_vec(cout, 0.2, &mut r);
+        let a = rand_vec(h * wd * cin, 1.0, &mut r);
+        let mut y = vec![0f32; h * wd * cout];
+        conv3x3_forward(&w, &b, &a, &mut y, h, wd, cin, cout);
+        let mut yr = vec![0f32; h * wd * cout];
+        conv3x3_forward_ref(&w, &b, &a, &mut yr, h, wd, cin, cout);
+        assert_eq!(y, yr);
+        let dy = rand_vec(h * wd * cout, 1.0, &mut r);
+        let (mut gw, mut gb, mut da) =
+            (vec![0f32; w.len()], vec![0f32; cout], vec![0f32; a.len()]);
+        conv3x3_backward(&w, &a, &dy, &mut gw, &mut gb, Some(&mut da), h, wd, cin, cout);
+        let (mut gwr, mut gbr, mut dar) =
+            (vec![0f32; w.len()], vec![0f32; cout], vec![0f32; a.len()]);
+        conv3x3_backward_ref(&w, &a, &dy, &mut gwr, &mut gbr, Some(&mut dar), h, wd, cin, cout);
+        assert_eq!(gw, gwr);
+        assert_eq!(gb, gbr);
+        assert_eq!(da, dar);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::fmt;
 pub struct ArgError(String);
 
 impl ArgError {
+    /// Ad-hoc argument error from anything printable.
     pub fn new<M: fmt::Display>(msg: M) -> Self {
         Self(msg.to_string())
     }
@@ -67,29 +68,36 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process's own command line (`std::env::args`).
     pub fn from_env() -> Result<Self, ArgError> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// The first positional argument — the top-level command.
     pub fn command(&self) -> Option<&str> {
         self.positional.first().map(String::as_str)
     }
+    /// The second positional argument (e.g. the `exp` id or `job` verb).
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.get(1).map(String::as_str)
     }
 
+    /// Was the bare flag `--name` passed?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The raw value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(String::as_str)
     }
 
+    /// `--name` as a string, or `default`.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// `--name` parsed as f64, or `default`; parse failures are errors.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
         match self.get(name) {
             None => Ok(default),
@@ -99,6 +107,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as usize, or `default`; parse failures are errors.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
         match self.get(name) {
             None => Ok(default),
@@ -108,6 +117,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as u64, or `default`; parse failures are errors.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgError> {
         match self.get(name) {
             None => Ok(default),
@@ -117,6 +127,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as f64, `None` if absent; parse failures are errors.
     pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, ArgError> {
         match self.get(name) {
             None => Ok(None),
@@ -127,6 +138,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as usize, `None` if absent; parse failures are errors.
     pub fn usize_opt(&self, name: &str) -> Result<Option<usize>, ArgError> {
         match self.get(name) {
             None => Ok(None),

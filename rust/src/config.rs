@@ -14,6 +14,7 @@ use std::fmt;
 pub struct ConfigError(String);
 
 impl ConfigError {
+    /// Ad-hoc config error from anything printable.
     pub fn new<M: fmt::Display>(msg: M) -> Self {
         Self(msg.to_string())
     }
@@ -30,26 +31,34 @@ impl std::error::Error for ConfigError {}
 /// A scalar or array value from a config file.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// `true` / `false`.
     Bool(bool),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// A homogeneous scalar array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string value, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean value, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The integer value, if this is a [`Value::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -64,6 +73,7 @@ impl Value {
             _ => None,
         }
     }
+    /// The element list, if this is a [`Value::Array`].
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -75,10 +85,12 @@ impl Value {
 /// Parsed config: `section.key -> Value` (top-level keys live under `""`).
 #[derive(Clone, Debug, Default)]
 pub struct ConfigFile {
+    /// `(section, key) -> value`; top-level keys use section `""`.
     pub entries: BTreeMap<(String, String), Value>,
 }
 
 impl ConfigFile {
+    /// Parse config text (the TOML subset described in the module docs).
     pub fn parse(text: &str) -> Result<Self, ConfigError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -105,28 +117,34 @@ impl ConfigFile {
         Ok(Self { entries })
     }
 
+    /// Read and parse a config file from disk.
     pub fn load(path: &str) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| ConfigError::new(format!("{path}: {e}")))?;
         Self::parse(&text)
     }
 
+    /// Look up `section.key` (`""` for top-level keys).
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.entries.get(&(section.to_string(), key.to_string()))
     }
 
+    /// `section.key` as f64 (ints coerce), or `default`.
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
     }
+    /// `section.key` as i64, or `default`.
     pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
         self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
     }
+    /// `section.key` as a string, or `default`.
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
         self.get(section, key)
             .and_then(Value::as_str)
             .unwrap_or(default)
             .to_string()
     }
+    /// `section.key` as a bool, or `default`.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
     }
@@ -181,12 +199,16 @@ fn parse_value(s: &str) -> Result<Value, String> {
 /// DP-AdamW for BERT/SNLI).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimizerKind {
+    /// Plain DP-SGD (the paper's main optimizer).
     Sgd,
+    /// DP-Adam (paper §A.5).
     Adam,
+    /// DP-AdamW (decoupled weight decay; BERT/SNLI runs).
     AdamW,
 }
 
 impl OptimizerKind {
+    /// Parse an optimizer name (accepts `sgd`/`dp-sgd`-style aliases).
     pub fn parse(s: &str) -> Result<Self, ConfigError> {
         match s.to_ascii_lowercase().as_str() {
             "sgd" | "dp-sgd" | "dpsgd" => Ok(Self::Sgd),
@@ -195,6 +217,7 @@ impl OptimizerKind {
             other => Err(ConfigError::new(format!("unknown optimizer '{other}'"))),
         }
     }
+    /// Canonical lowercase name (inverse of [`OptimizerKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Self::Sgd => "sgd",
@@ -225,10 +248,12 @@ pub struct TrainConfig {
     pub clip_norm: f64,
     /// Learning rate η.
     pub lr: f64,
+    /// Optimizer family (SGD / Adam / AdamW).
     pub optimizer: OptimizerKind,
     /// Target privacy budget; training truncates when exceeded (None = run
     /// all epochs).
     pub target_epsilon: Option<f64>,
+    /// Privacy parameter δ for (ε, δ)-DP reporting.
     pub delta: f64,
     /// Fraction of quantizable layers to quantize each epoch ("percent
     /// quantized" in Table 1).

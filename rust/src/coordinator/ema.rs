@@ -17,6 +17,7 @@ pub struct EmaScores {
 }
 
 impl EmaScores {
+    /// Scores for `n` layers, EMA coefficient `alpha` (Algorithm 1's β).
     pub fn new(n: usize, alpha: f64, enabled: bool) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         Self {
@@ -54,10 +55,12 @@ impl EmaScores {
         }
     }
 
+    /// Current per-layer scores.
     pub fn scores(&self) -> &[f64] {
         &self.scores
     }
 
+    /// Has the first measurement been folded in yet?
     pub fn is_initialized(&self) -> bool {
         self.initialized
     }

@@ -70,10 +70,15 @@ impl StepExecutor for LoadedGraph {
 /// clipping, differentiable by hand — used by unit/integration tests and
 /// by benches that must not depend on artifacts.
 pub struct MockExecutor {
+    /// Input feature count per example.
     pub n_features: usize,
+    /// Number of output classes.
     pub n_classes: usize,
+    /// How many (simulated) quantizable layers to expose.
     pub n_layers: usize,
+    /// Physical batch size the mock accepts.
     pub batch: usize,
+    /// Per-sample clipping norm C.
     pub clip_norm: f32,
     /// Per-layer quantization damage: scales the synthetic gradient noise
     /// injected when a layer is quantized (higher = more sensitive).
@@ -81,6 +86,7 @@ pub struct MockExecutor {
 }
 
 impl MockExecutor {
+    /// A mock with unit clip norm and mildly increasing layer sensitivity.
     pub fn new(n_features: usize, n_classes: usize, n_layers: usize, batch: usize) -> Self {
         Self {
             n_features,

@@ -42,6 +42,8 @@ pub struct DpOptimizer {
 }
 
 impl DpOptimizer {
+    /// Build the optimizer for `shapes`-sized parameters: `kind` selects
+    /// SGD/Adam/AdamW state, `sampler` provides the DP noise stream.
     pub fn new(
         kind: OptimizerKind,
         lr: f64,

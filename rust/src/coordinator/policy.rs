@@ -9,6 +9,7 @@
 /// A set of quantized layers out of `n_layers`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Policy {
+    /// Total quantizable layers in the model.
     pub n_layers: usize,
     /// Sorted, distinct layer indices that run quantized.
     pub layers: Vec<usize>,
@@ -62,6 +63,7 @@ impl Policy {
         m
     }
 
+    /// Is `layer` quantized under this policy?
     pub fn contains(&self, layer: usize) -> bool {
         self.layers.binary_search(&layer).is_ok()
     }

@@ -131,9 +131,11 @@ pub struct TraceSink {
 }
 
 impl TraceSink {
+    /// The trace collected so far.
     pub fn trace(&self) -> &StepTrace {
         &self.trace
     }
+    /// Consume the sink, yielding the collected trace.
     pub fn into_trace(self) -> StepTrace {
         self.trace
     }
@@ -161,6 +163,7 @@ pub struct MultiSink<'a> {
 }
 
 impl<'a> MultiSink<'a> {
+    /// Fan out to the given sinks, in order.
     pub fn new(sinks: Vec<&'a mut dyn EventSink>) -> Self {
         Self { sinks }
     }
@@ -206,6 +209,7 @@ pub struct SessionBuilder {
 }
 
 impl SessionBuilder {
+    /// Stage `cfg` for validation.
     pub fn new(cfg: TrainConfig) -> Self {
         Self { cfg }
     }
@@ -655,12 +659,15 @@ impl TrainSession {
 
     // -- observers ----------------------------------------------------
 
+    /// The config this session runs under.
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
     }
+    /// The run record accumulated so far.
     pub fn record(&self) -> &RunRecord {
         &self.record
     }
+    /// The current model weights.
     pub fn weights(&self) -> &[Vec<f32>] {
         &self.weights
     }
@@ -668,9 +675,11 @@ impl TrainSession {
     pub fn epochs_completed(&self) -> usize {
         self.epoch
     }
+    /// Has the session run to completion (or truncation)?
     pub fn is_finished(&self) -> bool {
         self.finished
     }
+    /// Did the privacy budget stop the session before its epoch target?
     pub fn is_truncated(&self) -> bool {
         self.truncated
     }
@@ -923,7 +932,9 @@ impl TrainSession {
 // Checkpoint format
 // ---------------------------------------------------------------------
 
+/// `format` tag every checkpoint JSON carries.
 pub const CHECKPOINT_FORMAT: &str = "dpquant-trainsession";
+/// Checkpoint schema version this build reads and writes.
 pub const CHECKPOINT_VERSION: u64 = 1;
 
 /// A parsed, structurally-validated checkpoint. Loading is split from
@@ -953,6 +964,7 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Read and validate a checkpoint file.
     pub fn load(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading checkpoint {path}"))?;
@@ -969,6 +981,8 @@ impl Checkpoint {
         self.epoch
     }
 
+    /// Parse and structurally validate checkpoint JSON (format/version
+    /// pins, required fields, shape checks).
     pub fn from_json_text(text: &str) -> Result<Self> {
         let j = json::parse(text).map_err(|e| err!("malformed JSON: {e}"))?;
         let format = j.get("format").and_then(Json::as_str).unwrap_or("<missing>");

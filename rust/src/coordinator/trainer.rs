@@ -41,6 +41,7 @@ pub enum Scheduler {
 }
 
 impl Scheduler {
+    /// Parse a scheduler name as it appears in configs/flags.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "dpquant" => Self::DpQuant,
@@ -58,6 +59,7 @@ impl Scheduler {
 /// Per-step gradient/noise statistics (drives Fig. 1b/1c, Table 2).
 #[derive(Clone, Debug, Default)]
 pub struct StepTrace {
+    /// Per-step noise statistics, one entry per optimizer step.
     pub stats: Vec<NoiseStats>,
     /// Mean pre-clip per-sample grad norm, one entry per step.
     pub raw_norm_mean: Vec<f64>,
@@ -82,9 +84,13 @@ pub struct TrainerOptions {
 
 /// Result of `train`.
 pub struct TrainResult {
+    /// Per-epoch metrics and final/best aggregates.
     pub record: RunRecord,
+    /// Per-step stats (empty unless `collect_step_stats`).
     pub trace: StepTrace,
+    /// Model weights after the last epoch.
     pub final_weights: Vec<Vec<f32>>,
+    /// The privacy accountant in its final state.
     pub accountant: RdpAccountant,
 }
 

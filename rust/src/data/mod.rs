@@ -23,18 +23,24 @@ pub struct Dataset {
     /// `n * example_numel` feature values (token ids stored as f32 for
     /// the sequence datasets; the runtime converts).
     pub xs: Vec<f32>,
+    /// Labels, one per example.
     pub ys: Vec<i32>,
+    /// Feature values per example.
     pub example_numel: usize,
+    /// Number of label classes.
     pub n_classes: usize,
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.ys.len()
     }
+    /// Is the dataset empty?
     pub fn is_empty(&self) -> bool {
         self.ys.is_empty()
     }
+    /// Example `i`'s feature slice.
     pub fn example(&self, i: usize) -> &[f32] {
         &self.xs[i * self.example_numel..(i + 1) * self.example_numel]
     }
@@ -83,8 +89,11 @@ pub fn poisson_sample(rng: &mut Xoshiro256, n: usize, q: f64) -> Vec<usize> {
 
 /// A fixed-size physical batch (padded with masked rows).
 pub struct Batch {
+    /// `batch x example_numel` features (masked rows zeroed).
     pub x: Vec<f32>,
+    /// Labels (masked rows carry class 0).
     pub y: Vec<i32>,
+    /// 1.0 for real rows, 0.0 for padding.
     pub mask: Vec<f32>,
     /// Number of real (unmasked) examples.
     pub real: usize,

@@ -6,10 +6,15 @@ use super::Dataset;
 use crate::util::gaussian::GaussianSampler;
 use crate::util::rng::Xoshiro256;
 
+/// Image height of the synthetic image datasets.
 pub const H: usize = 16;
+/// Image width of the synthetic image datasets.
 pub const W: usize = 16;
+/// Channels of the synthetic image datasets.
 pub const C: usize = 3;
+/// Token count per synthetic sequence example (SNLI stand-in).
 pub const SEQ_LEN: usize = 24;
+/// Vocabulary size of the synthetic sequence dataset.
 pub const VOCAB: usize = 64;
 
 /// What kind of prototypes to draw — purely cosmetic variation between

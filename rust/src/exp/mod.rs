@@ -22,6 +22,7 @@ use crate::coordinator::{train_with_sink, NullSink, StepExecutor, TraceSink, Tra
 use crate::data::{self, Dataset};
 use crate::util::error::{err, Result};
 
+/// Dispatch `dpquant exp <id>` to its figure/table generator.
 pub fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("fig1a") => figs::fig1a(args),
@@ -65,11 +66,17 @@ pub fn run(args: &Args) -> Result<()> {
 /// mock via `--backend`) + datasets, reused across the (many) runs of
 /// one experiment.
 pub struct ExpCtx {
+    /// The opened executor (native unless `--backend` says otherwise).
     pub exec: Box<dyn StepExecutor>,
+    /// Training split.
     pub train_ds: Dataset,
+    /// Validation split.
     pub val_ds: Dataset,
+    /// The base config experiment variants derive from.
     pub base: TrainConfig,
+    /// Replicates per baseline (`--seeds`).
     pub seeds: u64,
+    /// Dataset/epoch scale factor (`--scale`).
     pub scale: f64,
 }
 
@@ -159,6 +166,7 @@ impl ExpCtx {
         Ok((accs, eps))
     }
 
+    /// Quantizable layer count of the opened model.
     pub fn n_layers(&self) -> usize {
         self.exec.n_quant_layers()
     }

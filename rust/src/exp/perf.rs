@@ -3,11 +3,12 @@
 //! *our* stack feeding back into the same cost model.
 
 use super::{save_json, ExpCtx};
+use crate::backend::tensor;
 use crate::cli::Args;
 use crate::coordinator::StepExecutor;
 use crate::metrics::Table;
 use crate::perfmodel::{Decomposition, SpeedupModel, PAPER_TABLE14};
-use crate::util::error::Result;
+use crate::util::error::{err, Result};
 use crate::util::json::{self, Json};
 
 /// Fig 6: theoretical speedup at 90% quantization via the paper's linear
@@ -147,4 +148,309 @@ pub fn tab14(args: &Args) -> Result<()> {
             ("model_speedup_p09", json::num(m.speedup(0.9))),
         ]),
     )
+}
+
+/// Wire-format name of the bench snapshot (`"format"` field).
+pub const BENCH_FORMAT: &str = "dpquant-bench";
+/// Wire-format version this build emits and `--check` validates.
+pub const BENCH_VERSION: u32 = 1;
+
+/// Time `reps` calls of `f` (after one warmup call), in ns per call.
+///
+/// Floored at a millinanosecond so downstream ratios can never divide
+/// by zero even on a clock-resolution fluke.
+fn time_ns<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    (t0.elapsed().as_secs_f64() * 1e9 / reps as f64).max(1e-3)
+}
+
+/// Fill `buf` with deterministic pseudo-random values in [-0.5, 0.5).
+fn fill_rand(rng: &mut crate::util::rng::Xoshiro256, buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        *v = rng.next_f32() - 0.5;
+    }
+}
+
+/// `a / b` with a finite-value guard: any non-finite or non-positive
+/// input collapses to 0.0 (the `--check` validator rejects NaN/inf, so
+/// the emitter must never produce them).
+fn ratio(a: f64, b: f64) -> f64 {
+    if a.is_finite() && b.is_finite() && a > 0.0 && b > 0.0 {
+        a / b
+    } else {
+        0.0
+    }
+}
+
+/// `dpquant bench` — the per-PR native performance snapshot.
+///
+/// Times the retained naive reference kernels against their blocked
+/// rewrites (per-call ns + naive/blocked speedup), the quantizer
+/// kernels (ns per element), and the full native `train_step`
+/// (steps/sec for fp32 and each quantizer), then emits a
+/// `dpquant-bench` v1 JSON blob (schema: DESIGN.md §13.4) to the
+/// `--json PATH` file. With `--check FILE` it validates an existing
+/// blob against the schema instead of measuring — CI runs this over
+/// both a fresh quick emit and the committed `BENCH_native.json`.
+/// `DPQUANT_BENCH_QUICK=1` caps iteration counts so the harness
+/// smoke-tests in seconds (quick numbers are marked `"quick": true`
+/// and are not comparable across machines).
+pub fn bench(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("check") {
+        return bench_check(&path);
+    }
+    let quick = std::env::var_os("DPQUANT_BENCH_QUICK").is_some();
+    let reps = {
+        let r = args.usize_or("reps", 40)?.max(1);
+        if quick {
+            r.min(2)
+        } else {
+            r
+        }
+    };
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(42);
+    let mut kernels: Vec<(String, f64)> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+
+    // --- GEMM: naive row-update loop vs MC/KC/NC-blocked ------------------
+    for &(m, k, n) in &[(96usize, 256usize, 96usize), (256, 256, 256)] {
+        let mut a = vec![0f32; m * k];
+        let mut bm = vec![0f32; k * n];
+        fill_rand(&mut rng, &mut a);
+        fill_rand(&mut rng, &mut bm);
+        let mut out = vec![0f32; m * n];
+        let naive = time_ns(reps, || tensor::matmul(&a, &bm, m, k, n, &mut out));
+        let blocked = time_ns(reps, || tensor::matmul_blocked(&a, &bm, m, k, n, &mut out));
+        let tag = format!("matmul_{m}x{k}x{n}");
+        kernels.push((format!("{tag}_naive"), naive));
+        kernels.push((format!("{tag}_blocked"), blocked));
+        speedups.push((tag, ratio(naive, blocked)));
+    }
+
+    // --- conv3x3 fwd/bwd at the miniconvnet layer-1 shape ------------------
+    {
+        let (h, wd, cin, cout) = (16usize, 16usize, 8usize, 16usize);
+        let mut w = vec![0f32; cout * cin * 9];
+        let mut bias = vec![0f32; cout];
+        let mut a = vec![0f32; h * wd * cin];
+        let mut dy = vec![0f32; h * wd * cout];
+        fill_rand(&mut rng, &mut w);
+        fill_rand(&mut rng, &mut bias);
+        fill_rand(&mut rng, &mut a);
+        fill_rand(&mut rng, &mut dy);
+        let mut out = vec![0f32; h * wd * cout];
+        let tag = format!("conv3x3_{h}x{wd}x{cin}x{cout}");
+        let naive = time_ns(reps, || {
+            tensor::conv3x3_forward_ref(&w, &bias, &a, &mut out, h, wd, cin, cout)
+        });
+        let blocked = time_ns(reps, || {
+            tensor::conv3x3_forward(&w, &bias, &a, &mut out, h, wd, cin, cout)
+        });
+        kernels.push((format!("{tag}_forward_naive"), naive));
+        kernels.push((format!("{tag}_forward_blocked"), blocked));
+        speedups.push(("conv3x3_forward".into(), ratio(naive, blocked)));
+
+        let mut gw = vec![0f32; w.len()];
+        let mut gb = vec![0f32; cout];
+        let mut da = vec![0f32; a.len()];
+        let naive = time_ns(reps, || {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            tensor::conv3x3_backward_ref(
+                &w, &a, &dy, &mut gw, &mut gb, Some(&mut da), h, wd, cin, cout,
+            );
+        });
+        let blocked = time_ns(reps, || {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            tensor::conv3x3_backward(&w, &a, &dy, &mut gw, &mut gb, Some(&mut da), h, wd, cin, cout);
+        });
+        kernels.push((format!("{tag}_backward_naive"), naive));
+        kernels.push((format!("{tag}_backward_blocked"), blocked));
+        speedups.push(("conv3x3_backward".into(), ratio(naive, blocked)));
+    }
+
+    // --- dense matvec (the classifier-head shape) --------------------------
+    {
+        let (input, output) = (1024usize, 96usize);
+        let mut w = vec![0f32; output * input];
+        let mut bias = vec![0f32; output];
+        let mut a = vec![0f32; input];
+        fill_rand(&mut rng, &mut w);
+        fill_rand(&mut rng, &mut bias);
+        fill_rand(&mut rng, &mut a);
+        let mut out = vec![0f32; output];
+        let tag = format!("dense_forward_{input}x{output}");
+        let naive = time_ns(reps * 4, || {
+            tensor::dense_forward_ref(&w, Some(&bias), &a, &mut out)
+        });
+        let blocked = time_ns(reps * 4, || tensor::dense_forward(&w, Some(&bias), &a, &mut out));
+        kernels.push((format!("{tag}_naive"), naive));
+        kernels.push((format!("{tag}_blocked"), blocked));
+        speedups.push(("dense_forward".into(), ratio(naive, blocked)));
+    }
+
+    // --- Quantizer kernels (ns/elem over a 64k-element tensor) -------------
+    {
+        let mut g = crate::util::gaussian::GaussianSampler::seed_from_u64(9);
+        let base: Vec<f32> = (0..65_536).map(|_| g.standard() as f32).collect();
+        for name in ["luq4", "uniform4", "fp8"] {
+            let q = crate::quant::by_name(name)
+                .ok_or_else(|| err!("bench: unknown quantizer {name}"))?;
+            let mut buf = base.clone();
+            let per_call = time_ns(reps, || {
+                buf.copy_from_slice(&base);
+                q.quantize(&mut buf, &mut rng);
+            });
+            kernels.push((format!("quant_{name}_per_elem"), per_call / base.len() as f64));
+        }
+    }
+
+    // --- Native train_step: steps/sec, fp32 baseline vs each quantizer ----
+    let bsz = 32usize;
+    let step_reps = if quick { 2 } else { reps.clamp(5, 20) };
+    let nds = crate::data::generate("gtsrb", bsz, 7)?;
+    let batches = crate::data::eval_batches(&nds, bsz);
+    let batch = &batches[0];
+    let mk = |quantizer: &str| -> Result<crate::backend::NativeExecutor> {
+        let cfg = crate::config::TrainConfig {
+            model: "miniconvnet".into(),
+            dataset: "gtsrb".into(),
+            quantizer: quantizer.into(),
+            physical_batch: bsz,
+            ..crate::config::TrainConfig::default()
+        };
+        crate::backend::NativeExecutor::from_config(&cfg, nds.example_numel, nds.n_classes)
+    };
+    let time_steps = |exec: &crate::backend::NativeExecutor, mask: &[f32]| -> Result<f64> {
+        let w = exec.initial_weights();
+        exec.train_step(&w, &batch.x, &batch.y, &batch.mask, mask, 0.0)?;
+        let t0 = std::time::Instant::now();
+        for i in 0..step_reps {
+            exec.train_step(&w, &batch.x, &batch.y, &batch.mask, mask, i as f32 + 1.0)?;
+        }
+        Ok(step_reps as f64 / t0.elapsed().as_secs_f64().max(1e-12))
+    };
+    let mut steps: Vec<(String, f64)> = Vec::new();
+    let fp_exec = mk("luq4")?;
+    let nl = fp_exec.n_quant_layers();
+    let fp32_sps = time_steps(&fp_exec, &vec![0f32; nl])?;
+    steps.push(("fp32".into(), fp32_sps));
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    for name in ["luq4", "uniform4", "fp8"] {
+        let exec = mk(name)?;
+        let sps = time_steps(&exec, &vec![1f32; exec.n_quant_layers()])?;
+        // >1.0 means the quantized step is slower than fp32 (scalar
+        // quantizer overhead); a low-precision ALU would flip this.
+        ratios.push((name.into(), ratio(fp32_sps, sps)));
+        steps.push((name.into(), sps));
+    }
+
+    // --- Report ------------------------------------------------------------
+    let mut table = Table::new(&["kernel", "ns/call"]);
+    for (k, v) in &kernels {
+        table.row(vec![k.clone(), format!("{v:.1}")]);
+    }
+    println!("dpquant bench — native kernel snapshot (reps {reps}, quick {quick})");
+    table.print();
+    let mut table = Table::new(&["kernel", "naive/blocked speedup"]);
+    for (k, v) in &speedups {
+        table.row(vec![k.clone(), format!("{v:.2}x")]);
+    }
+    table.print();
+    let mut table = Table::new(&["config", "steps/sec", "fp32/quantized"]);
+    for (k, v) in &steps {
+        let r = ratios.iter().find(|(n, _)| n == k).map(|(_, r)| format!("{r:.2}"));
+        table.row(vec![k.clone(), format!("{v:.2}"), r.unwrap_or_else(|| "-".into())]);
+    }
+    table.print();
+
+    let to_obj = |pairs: &[(String, f64)]| {
+        Json::Obj(
+            pairs
+                .iter()
+                .map(|(k, v)| (k.clone(), json::num(if v.is_finite() { *v } else { 0.0 })))
+                .collect(),
+        )
+    };
+    let doc = json::obj(vec![
+        ("format", json::s(BENCH_FORMAT)),
+        ("version", json::num(BENCH_VERSION as f64)),
+        ("quick", Json::Bool(quick)),
+        ("provisional", Json::Bool(false)),
+        ("reps", json::num(reps as f64)),
+        ("batch", json::num(bsz as f64)),
+        ("kernels_ns", to_obj(&kernels)),
+        ("blocked_speedup", to_obj(&speedups)),
+        ("steps_per_sec", to_obj(&steps)),
+        ("fp32_vs_quantized", to_obj(&ratios)),
+    ]);
+    if let Some(path) = args.get("json") {
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("[bench json -> {path}]");
+    }
+    Ok(())
+}
+
+/// Validate a `dpquant-bench` v1 blob: format/version pins, the four
+/// numeric groups present and non-empty, the per-group required keys,
+/// and every number finite. Used by the CI `bench-json` job against
+/// both a fresh quick emit and the committed `BENCH_native.json`.
+fn bench_check(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| err!("bench --check: cannot read {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| err!("bench --check: {path}: invalid JSON: {e}"))?;
+    let fmt = doc.get("format").and_then(Json::as_str).unwrap_or("");
+    if fmt != BENCH_FORMAT {
+        return Err(err!("bench --check: {path}: format {fmt:?} != {BENCH_FORMAT:?}"));
+    }
+    let ver = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+    if ver != BENCH_VERSION as f64 {
+        return Err(err!("bench --check: {path}: version {ver} != {BENCH_VERSION}"));
+    }
+    let required: &[(&str, &[&str])] = &[
+        ("kernels_ns", &[]),
+        (
+            "blocked_speedup",
+            &[
+                "matmul_96x256x96",
+                "matmul_256x256x256",
+                "conv3x3_forward",
+                "conv3x3_backward",
+                "dense_forward",
+            ],
+        ),
+        ("steps_per_sec", &["fp32", "luq4", "uniform4", "fp8"]),
+        ("fp32_vs_quantized", &["luq4", "uniform4", "fp8"]),
+    ];
+    let mut n_values = 0usize;
+    for &(group, keys) in required {
+        let obj = doc
+            .get(group)
+            .and_then(Json::as_obj)
+            .ok_or_else(|| err!("bench --check: {path}: missing object {group:?}"))?;
+        if obj.is_empty() {
+            return Err(err!("bench --check: {path}: {group} is empty"));
+        }
+        for key in keys {
+            if !obj.contains_key(*key) {
+                return Err(err!("bench --check: {path}: {group} is missing key {key:?}"));
+            }
+        }
+        for (k, v) in obj {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| err!("bench --check: {path}: {group}.{k} is not a number"))?;
+            if !x.is_finite() {
+                return Err(err!("bench --check: {path}: {group}.{k} = {x} is not finite"));
+            }
+            n_values += 1;
+        }
+    }
+    println!("[bench check ok] {path}: {BENCH_FORMAT} v{BENCH_VERSION}, {n_values} finite metrics");
+    Ok(())
 }

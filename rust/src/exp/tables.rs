@@ -11,8 +11,11 @@ use crate::util::json::{self, Json};
 /// One sweep outcome for the Pareto view: higher accuracy and lower ε
 /// are both better.
 pub struct SweepRow {
+    /// Row label (config summary).
     pub label: String,
+    /// Best accuracy of the run (higher is better).
     pub accuracy: f64,
+    /// ε consumed by the run (lower is better).
     pub epsilon: f64,
 }
 

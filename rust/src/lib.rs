@@ -45,6 +45,8 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+#![warn(missing_docs)]
+
 pub mod backend;
 pub mod cli;
 pub mod config;

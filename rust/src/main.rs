@@ -34,8 +34,15 @@
 //!   version          — crate version + the on-disk/wire format versions
 //!                      this build speaks (also `--version`)
 //!   bench-step       — time one train step, fp32 vs fully quantized
+//!   bench            — the per-PR performance snapshot: naive-vs-blocked
+//!                      kernel timings, quantizer ns/elem, native
+//!                      steps/sec (fp32 vs each quantizer); `--json PATH`
+//!                      writes a `dpquant-bench` v1 blob (DESIGN.md §13),
+//!                      `--check FILE` validates one instead of measuring
 //!
-//! Every model-executing subcommand takes `--backend native|pjrt|mock`.
+//! Model-executing subcommands (train, eval-only, bench-step, exp,
+//! sweep) take `--backend native|pjrt|mock`; `serve` reads `backend`
+//! from its `--config` file, and `bench` always times the native engine.
 //! The default, `native`, is the pure-Rust engine in `backend/` — real
 //! forward/backward with per-sample clipping and on-path quantizers,
 //! needing **no artifacts**. `pjrt` targets the AOT artifacts + XLA
@@ -103,6 +110,7 @@ const COMMANDS: &[&str] = &[
     "job",
     "version",
     "bench-step",
+    "bench",
 ];
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -187,11 +195,15 @@ fn dispatch(args: &Args) -> Result<()> {
             args.require_known("bench-step", &opts, &["no-ema"])?;
             cmd_bench_step(args)
         }
+        Some("bench") => {
+            args.require_known("bench", &["json", "reps", "check"], &[])?;
+            exp::perf::bench(args)
+        }
         Some(other) => Err(dpquant::cli::unknown_command_error("command", other, COMMANDS).into()),
         None => {
             println!(
                 "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|version|\
-                 bench-step> [flags]\n\
+                 bench-step|bench> [flags]\n\
                  model-executing commands take --backend native|pjrt|mock (default: native)"
             );
             Ok(())

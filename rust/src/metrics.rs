@@ -11,9 +11,13 @@ use std::io::Write as _;
 /// One epoch's worth of telemetry.
 #[derive(Clone, Debug)]
 pub struct EpochRecord {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Mean training loss over the epoch's batches.
     pub train_loss: f64,
+    /// Mean validation loss after the epoch.
     pub val_loss: f64,
+    /// Validation accuracy after the epoch.
     pub val_accuracy: f64,
     /// ε consumed so far (training + analysis).
     pub epsilon: f64,
@@ -28,18 +32,24 @@ pub struct EpochRecord {
 /// A whole training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunRecord {
+    /// Run identifier (`model_dataset_quantizer_scheduler_k_seed`).
     pub name: String,
+    /// One-line summary of the config that produced the run.
     pub config_summary: String,
+    /// Per-epoch telemetry, in order.
     pub epochs: Vec<EpochRecord>,
     /// Final ε at the end of the run.
     pub final_epsilon: f64,
     /// ε attributable to analysis alone.
     pub analysis_epsilon: f64,
+    /// Validation accuracy after the last epoch.
     pub final_accuracy: f64,
+    /// Best validation accuracy over the run.
     pub best_accuracy: f64,
 }
 
 impl RunRecord {
+    /// Append an epoch and fold it into the final/best aggregates.
     pub fn push(&mut self, rec: EpochRecord) {
         self.best_accuracy = self.best_accuracy.max(rec.val_accuracy);
         self.final_accuracy = rec.val_accuracy;
@@ -47,6 +57,7 @@ impl RunRecord {
         self.epochs.push(rec);
     }
 
+    /// The run as a JSON object (what `results/*.json` stores).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("name", json::s(&self.name)),
@@ -140,16 +151,19 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers and no rows yet.
     pub fn new(headers: &[&str]) -> Self {
         Self {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
         }
     }
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
     }
+    /// Render as aligned plain text (headers, rule, rows).
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -176,6 +190,7 @@ impl Table {
         }
         out
     }
+    /// Print [`Table::render`] to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

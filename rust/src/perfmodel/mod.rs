@@ -16,16 +16,24 @@
 /// Fields mirror the paper's Table 13.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Decomposition {
+    /// Forward pass (benefits from low precision).
     pub forward: f64,        // ✓ benefits from low precision
+    /// Backward pass (benefits from low precision).
     pub backward: f64,       // ✓
+    /// Per-sample clipping (benefits from low precision).
     pub optimizer_clip: f64, // ✓
+    /// Gaussian noise draw (stays fp32).
     pub optimizer_noise: f64,
+    /// Gradient scaling/update arithmetic (benefits).
     pub optimizer_scale: f64, // ✓
+    /// Remaining optimizer bookkeeping (stays fp32).
     pub other_optimizer: f64,
+    /// Everything else: data movement, host logic.
     pub other: f64,
 }
 
 impl Decomposition {
+    /// Sum of every stage — one full iteration.
     pub fn total(&self) -> f64 {
         self.forward
             + self.backward

@@ -28,9 +28,13 @@ pub enum Mechanism {
 /// A homogeneous block of SGM steps.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
+    /// Training step or analysis probe.
     pub mechanism: Mechanism,
+    /// Poisson sampling rate q.
     pub sample_rate: f64,
+    /// Noise multiplier σ.
     pub noise_multiplier: f64,
+    /// How many identical steps this block covers.
     pub steps: u64,
 }
 
@@ -53,6 +57,7 @@ impl Default for RdpAccountant {
 }
 
 impl RdpAccountant {
+    /// An empty accountant over the default α grid.
     pub fn new() -> Self {
         Self {
             alphas: default_alphas(),
@@ -175,10 +180,12 @@ impl RdpAccountant {
             .sum()
     }
 
+    /// The Rényi orders the accountant tracks.
     pub fn alphas(&self) -> &[f64] {
         &self.alphas
     }
 
+    /// The coalesced step history, oldest first.
     pub fn history(&self) -> &[StepRecord] {
         &self.history
     }

@@ -7,11 +7,14 @@ use std::collections::BTreeMap;
 /// One parameter tensor's metadata.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamInfo {
+    /// Parameter name as the compiler emitted it.
     pub name: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 impl ParamInfo {
+    /// Scalar element count (min 1, so scalars count too).
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -26,19 +29,33 @@ impl ParamInfo {
 /// graph pair.
 #[derive(Clone, Debug)]
 pub struct GraphInfo {
+    /// Model family the graph was compiled for.
     pub model: String,
+    /// Dataset the graph was compiled for.
     pub dataset: String,
+    /// Quantizer baked into the train graph.
     pub quantizer: String,
+    /// Physical batch size baked into the executables.
     pub batch: usize,
+    /// Per-sample clipping norm C baked into the train graph.
     pub clip_norm: f64,
+    /// Number of output classes.
     pub n_classes: usize,
+    /// How many layers accept a quant-mask entry.
     pub n_quant_layers: usize,
+    /// Names of the quantizable layers, mask order.
     pub quant_layer_names: Vec<String>,
+    /// Shape of one input example.
     pub example_shape: Vec<usize>,
+    /// Input dtype (`f32` or a token-id integer type).
     pub example_dtype: String,
+    /// Parameter tensors, graph argument order.
     pub params: Vec<ParamInfo>,
+    /// Relative path of the train graph's HLO text.
     pub train_hlo: String,
+    /// Relative path of the eval graph's HLO text.
     pub eval_hlo: String,
+    /// Relative path of the initial-weights blob.
     pub weights: String,
 }
 
@@ -56,6 +73,7 @@ impl GraphInfo {
 /// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Graphs by tag (`model_dataset_quantizer`).
     pub graphs: BTreeMap<String, GraphInfo>,
 }
 
@@ -73,6 +91,7 @@ fn get_usize(o: &Json, key: &str) -> Result<usize, String> {
 }
 
 impl Manifest {
+    /// Parse manifest JSON, validating every graph entry.
     pub fn parse(text: &str) -> Result<Self, String> {
         let root = json::parse(text)?;
         let graphs_json = root

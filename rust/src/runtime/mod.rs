@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
 }
 
@@ -100,9 +101,11 @@ impl Runtime {
 
 /// A compiled (train, eval) pair plus its metadata and initial weights.
 pub struct LoadedGraph {
+    /// Manifest metadata for this graph pair.
     pub info: GraphInfo,
     train_exe: xla::PjRtLoadedExecutable,
     eval_exe: xla::PjRtLoadedExecutable,
+    /// Initial weights shipped with the artifact.
     pub init_weights: Vec<Vec<f32>>,
 }
 
@@ -111,7 +114,9 @@ pub struct LoadedGraph {
 pub struct TrainOutput {
     /// Σ over the batch of clipped per-sample grads, one per parameter.
     pub grad_sums: Vec<Vec<f32>>,
+    /// Σ of per-sample losses over the batch.
     pub loss_sum: f32,
+    /// Count of correct predictions in the batch.
     pub correct_sum: f32,
     /// Σ over the batch of pre-clip per-sample gradient L2 norms
     /// (Fig. 1c / Table 2 tap).
@@ -122,7 +127,9 @@ pub struct TrainOutput {
 
 /// Output of one eval call.
 pub struct EvalOutput {
+    /// Σ of per-sample losses over the batch.
     pub loss_sum: f32,
+    /// Count of correct predictions in the batch.
     pub correct_sum: f32,
 }
 

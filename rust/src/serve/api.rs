@@ -41,6 +41,7 @@ pub struct Api {
 }
 
 impl Api {
+    /// An API over the given job manager.
     pub fn new(manager: Arc<JobManager>) -> Self {
         Self { manager }
     }

@@ -25,6 +25,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// A client for the daemon at `addr` (`host:port`).
     pub fn new(addr: &str) -> Self {
         Self {
             addr: addr.to_string(),
@@ -49,22 +50,27 @@ impl Client {
             .ok_or_else(|| err!("daemon accepted the job but sent no id: {resp}"))
     }
 
+    /// `GET /v1/jobs` — every job, one summary row each.
     pub fn jobs(&self) -> Result<Json> {
         self.get("/v1/jobs")
     }
 
+    /// `GET /v1/jobs/{id}` — one job's full status document.
     pub fn job_status(&self, id: u64) -> Result<Json> {
         self.get(&format!("/v1/jobs/{id}"))
     }
 
+    /// `GET /v1/jobs/{id}/events` — the job's buffered event ring.
     pub fn events(&self, id: u64) -> Result<Json> {
         self.get(&format!("/v1/jobs/{id}/events"))
     }
 
+    /// `POST /v1/jobs/{id}/cancel` — request cancellation.
     pub fn cancel(&self, id: u64) -> Result<Json> {
         self.post(&format!("/v1/jobs/{id}/cancel"), None)
     }
 
+    /// `GET /v1/healthz` — daemon liveness + format versions + job counts.
     pub fn healthz(&self) -> Result<Json> {
         self.get("/v1/healthz")
     }

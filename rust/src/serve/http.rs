@@ -56,17 +56,22 @@ const CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
 /// into `path` and the (unparsed) `query` at the first `?`.
 #[derive(Debug)]
 pub struct Request {
+    /// Uppercase HTTP method.
     pub method: String,
+    /// Request path (before any `?`).
     pub path: String,
+    /// Raw query string after `?`, if any.
     pub query: Option<String>,
     /// Lowercased name -> trimmed value.
     pub headers: BTreeMap<String, String>,
+    /// Raw request body bytes.
     pub body: Vec<u8>,
     /// False for HTTP/1.0 (which never keeps alive).
     pub http11: bool,
 }
 
 impl Request {
+    /// Case-insensitive header lookup.
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
     }
@@ -88,11 +93,14 @@ impl Request {
 /// An outgoing response: a status code plus a JSON body.
 #[derive(Debug)]
 pub struct Response {
+    /// HTTP status code.
     pub status: u16,
+    /// JSON body (the API speaks nothing else).
     pub body: Json,
 }
 
 impl Response {
+    /// A 200 response with the given body.
     pub fn ok(body: Json) -> Self {
         Self { status: 200, body }
     }
@@ -111,7 +119,9 @@ impl Response {
 /// with (always 4xx/5xx; never a panic).
 #[derive(Debug)]
 pub struct HttpError {
+    /// Status code to answer with (4xx/5xx).
     pub status: u16,
+    /// Human-readable error detail.
     pub message: String,
 }
 

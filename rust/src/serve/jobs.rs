@@ -63,16 +63,23 @@ pub const EVENT_RING_CAP: usize = 256;
 // Job state
 // ---------------------------------------------------------------------
 
+/// Lifecycle state of a job (wire names via [`JobStatus::name`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobStatus {
+    /// Accepted, waiting for a worker.
     Queued,
+    /// A worker is training it.
     Running,
+    /// Finished successfully.
     Done,
+    /// Stopped on an error (message in the status document).
     Failed,
+    /// Cancelled before or during the run.
     Cancelled,
 }
 
 impl JobStatus {
+    /// Lowercase wire name (what the JSON API emits).
     pub fn name(self) -> &'static str {
         match self {
             JobStatus::Queued => "queued",
@@ -94,6 +101,7 @@ impl JobStatus {
         }
     }
 
+    /// Done, failed or cancelled — no further transitions.
     pub fn is_terminal(self) -> bool {
         matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
     }
@@ -105,11 +113,17 @@ impl JobStatus {
 /// the wire diffs byte-identical against `dpquant train`'s.
 #[derive(Clone, Debug)]
 pub struct JobSummary {
+    /// Validation accuracy after the last epoch.
     pub final_accuracy: f64,
+    /// Best validation accuracy over the run.
     pub best_accuracy: f64,
+    /// Total ε consumed (training + analysis).
     pub final_epsilon: f64,
+    /// ε attributable to analysis probes alone.
     pub analysis_epsilon: f64,
+    /// Epochs actually completed.
     pub epochs_run: usize,
+    /// Did the privacy budget stop the run early?
     pub truncated: bool,
 }
 
@@ -125,6 +139,7 @@ impl JobSummary {
         }
     }
 
+    /// The summary as the `summary` object of the status document.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("final_accuracy", json::num(self.final_accuracy)),
@@ -352,16 +367,22 @@ impl Job {
 /// Status counts for `GET /v1/healthz`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct JobCounts {
+    /// Jobs accepted but not started.
     pub queued: usize,
+    /// Jobs currently training.
     pub running: usize,
+    /// Jobs finished successfully.
     pub done: usize,
+    /// Jobs stopped on an error.
     pub failed: usize,
+    /// Jobs cancelled.
     pub cancelled: usize,
 }
 
 /// Outcome of a cancel request, mapped by the API onto 200/404/409.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum CancelOutcome {
+    /// No job with that id.
     NotFound,
     /// Job already reached `status` — nothing to cancel.
     AlreadyOver(&'static str),
@@ -563,10 +584,12 @@ impl JobManager {
         }
     }
 
+    /// One job's full status document, if it exists.
     pub fn job_json(&self, id: u64) -> Option<Json> {
         self.shared.jobs.lock().unwrap().get(&id).map(Job::to_json)
     }
 
+    /// Summary rows for every job, id order.
     pub fn jobs_json(&self) -> Json {
         Json::Arr(
             self.shared
@@ -579,6 +602,7 @@ impl JobManager {
         )
     }
 
+    /// A job's buffered event ring as JSON, if the job exists.
     pub fn events_json(&self, id: u64) -> Option<Json> {
         self.shared
             .jobs
@@ -588,6 +612,7 @@ impl JobManager {
             .map(|j| j.events.to_json())
     }
 
+    /// Per-status job counts (the healthz payload).
     pub fn counts(&self) -> JobCounts {
         let jobs = self.shared.jobs.lock().unwrap();
         let mut c = JobCounts::default();

@@ -30,12 +30,14 @@ pub const MAX_GRID_POINTS: usize = 10_000;
 pub struct Axis {
     /// Normalized key (hyphens folded to underscores).
     pub key: String,
+    /// Values this axis takes, in declaration order.
     pub values: Vec<String>,
 }
 
 /// An ordered list of axes; expansion is their cartesian product.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct GridSpec {
+    /// Axes in declaration order (outermost varies slowest).
     pub axes: Vec<Axis>,
 }
 
@@ -43,8 +45,11 @@ pub struct GridSpec {
 /// that produced it (in axis order), and the resulting config.
 #[derive(Clone, Debug)]
 pub struct GridPoint {
+    /// Flat index in expansion order.
     pub index: usize,
+    /// The `key=value` assignments that produced this point.
     pub params: Vec<(String, String)>,
+    /// The fully-resolved config for this point.
     pub cfg: TrainConfig,
 }
 
@@ -175,6 +180,7 @@ impl GridSpec {
         }
     }
 
+    /// Does the spec have no axes at all?
     pub fn is_empty(&self) -> bool {
         self.axes.is_empty()
     }

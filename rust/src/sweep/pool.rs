@@ -40,7 +40,9 @@ use crate::util::error::Result;
 /// (or panic) message.
 #[derive(Debug)]
 pub struct PoolError {
+    /// Index of the first failing job.
     pub index: usize,
+    /// Its error (or panic) message.
     pub message: String,
 }
 

@@ -15,29 +15,39 @@ use crate::exp::tables::{pareto_table, SweepRow};
 use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
 
+/// `format` tag every sweep report JSON carries.
 pub const REPORT_FORMAT: &str = "dpquant-sweep-report";
+/// Sweep-report schema version this build reads and writes.
 pub const REPORT_VERSION: u64 = 1;
 
 /// Outcome of one grid point's training run.
 #[derive(Clone, Debug)]
 pub struct PointResult {
+    /// Flat grid index of the point.
     pub index: usize,
     /// `key=value` assignments, in axis order.
     pub params: Vec<(String, String)>,
     /// The run record's name (`model_dataset_quantizer_scheduler_k_seed`).
     pub name: String,
+    /// Validation accuracy after the last epoch.
     pub final_accuracy: f64,
+    /// Best validation accuracy over the run.
     pub best_accuracy: f64,
+    /// Total ε consumed (training + analysis).
     pub final_epsilon: f64,
+    /// ε attributable to analysis probes alone.
     pub analysis_epsilon: f64,
     /// Epochs actually run (budget truncation can stop a run early).
     pub epochs_run: usize,
+    /// Did the privacy budget stop the run early?
     pub truncated: bool,
     /// Optimizer steps taken (non-empty Poisson batches only).
     pub steps: usize,
     /// Per-epoch quantized-layer schedule.
     pub schedule: Vec<Vec<usize>>,
+    /// Wall-clock seconds for the run (0 under `--no-timing`).
     pub wall_seconds: f64,
+    /// Optimizer steps per second (0 under `--no-timing`).
     pub steps_per_sec: f64,
 }
 

@@ -31,6 +31,7 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+/// Result alias for XLA-stub operations.
 pub type Result<T> = std::result::Result<T, Error>;
 
 fn unavailable(what: &str) -> Error {
@@ -45,10 +46,12 @@ fn unavailable(what: &str) -> Error {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Open the CPU PJRT client. Always fails in the offline stub.
     pub fn cpu() -> Result<PjRtClient> {
         Err(unavailable("PjRtClient::cpu"))
     }
 
+    /// Compile a computation. Always fails in the offline stub.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(unavailable("PjRtClient::compile"))
     }
@@ -58,6 +61,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the offline stub.
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         Err(unavailable(&format!("parsing {path}")))
     }
@@ -67,6 +71,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a parsed HLO module (carries no state in the stub).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -76,6 +81,7 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Run the executable. Always fails in the offline stub.
     pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(unavailable("PjRtLoadedExecutable::execute"))
     }
@@ -85,6 +91,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Copy device buffer to host. Always fails in the offline stub.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(unavailable("PjRtBuffer::to_literal_sync"))
     }
@@ -96,18 +103,22 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// A rank-1 literal from host data (pure data; succeeds).
     pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
         Literal
     }
 
+    /// Reshape the literal (pure metadata; succeeds).
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
         Ok(Literal)
     }
 
+    /// Destructure a tuple literal. Always fails in the offline stub.
     pub fn to_tuple(&self) -> Result<Vec<Literal>> {
         Err(unavailable("Literal::to_tuple"))
     }
 
+    /// Read the literal as host values. Always fails in the offline stub.
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         Err(unavailable("Literal::to_vec"))
     }

@@ -1,0 +1,446 @@
+//! Parity suite for the cache-blocked kernels (DESIGN.md §13): the
+//! blocked matmul/conv/dense paths vs their retained naive references
+//! on ~100 random shapes (remainder tiles included), the fused
+//! quantize-epilogue vs the separate whole-tensor passes for every
+//! quantizer, and whole-run training determinism through the fused
+//! executor.
+//!
+//! The determinism contract being pinned here:
+//! * `matmul_blocked`, `conv3x3_forward`, `conv3x3_backward` (from
+//!   zeroed grads), `dense_forward` and `dense_backward` are
+//!   **bit-exact** against the naive references — blocking reorders
+//!   loops, not the per-element FLOP chains.
+//! * `conv3x3_backward` accumulating into *pre-filled* `gw` is
+//!   tolerance-pinned (≤1e-5 relative): the blocked path sums its
+//!   contribution in packed scratch before adding it on.
+//! * The fused weight-prologue/grad-epilogue path produces the exact
+//!   tensors the old separate `quantize_masked_weights` + grad-pass
+//!   flow produced, including the RNG draw order.
+
+use dpquant::backend::model::Model;
+use dpquant::backend::{quantize_masked_weights, tensor, NativeExecutor, QuantEpilogue};
+use dpquant::config::TrainConfig;
+use dpquant::coordinator::{train, StepExecutor, TrainerOptions};
+use dpquant::data;
+use dpquant::quant;
+use dpquant::util::rng::Xoshiro256;
+
+fn fill(rng: &mut Xoshiro256, buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        *v = rng.next_f32() - 0.5;
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}: elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+// --- blocked GEMM vs naive ------------------------------------------------
+
+#[test]
+fn blocked_matmul_bit_exact_on_random_shapes() {
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    // 60 random shapes spanning every remainder case: the micro-tile
+    // (MR=4 x NR=8), the MC/NC macro tiles, and the KC panel boundary.
+    let mut shapes: Vec<(usize, usize, usize)> = vec![
+        (1, 1, 1),
+        (4, 8, 8),
+        (5, 9, 7),
+        (tensor::MC, 16, tensor::NC),
+        (tensor::MC + 1, 16, tensor::NC + 1),
+        (3, tensor::KC, 9),
+        (3, tensor::KC + 5, 9),
+        (tensor::MC - 1, tensor::KC - 1, tensor::NC - 1),
+    ];
+    for s in 0..52u64 {
+        let mut srng = Xoshiro256::seed_from_u64(1000 + s);
+        let m = 1 + srng.next_below(70) as usize;
+        let k = 1 + srng.next_below(if s % 4 == 0 { 300 } else { 60 }) as usize;
+        let n = 1 + srng.next_below(140) as usize;
+        shapes.push((m, k, n));
+    }
+    for &(m, k, n) in &shapes {
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut b);
+        // Real activations are sparse after relu — plant zeros so the
+        // shared skip-zero branch is exercised in both paths.
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let mut naive = vec![0f32; m * n];
+        let mut blocked = vec![0f32; m * n];
+        tensor::matmul(&a, &b, m, k, n, &mut naive);
+        tensor::matmul_blocked(&a, &b, m, k, n, &mut blocked);
+        assert_eq!(
+            bits(&naive),
+            bits(&blocked),
+            "matmul {m}x{k}x{n}: blocked must be bit-exact"
+        );
+    }
+}
+
+// --- blocked conv3x3 vs naive ---------------------------------------------
+
+fn conv_shapes() -> Vec<(usize, usize, usize, usize)> {
+    let mut shapes = vec![(1, 1, 1, 1), (2, 3, 1, 2), (16, 16, 8, 16), (8, 16, 3, 8)];
+    for s in 0..16u64 {
+        let mut srng = Xoshiro256::seed_from_u64(2000 + s);
+        shapes.push((
+            1 + srng.next_below(9) as usize,
+            1 + srng.next_below(9) as usize,
+            1 + srng.next_below(7) as usize,
+            1 + srng.next_below(9) as usize,
+        ));
+    }
+    shapes
+}
+
+#[test]
+fn blocked_conv_forward_bit_exact() {
+    let mut rng = Xoshiro256::seed_from_u64(12);
+    for (h, wd, cin, cout) in conv_shapes() {
+        let mut w = vec![0f32; cout * cin * 9];
+        let mut b = vec![0f32; cout];
+        let mut a = vec![0f32; h * wd * cin];
+        fill(&mut rng, &mut w);
+        fill(&mut rng, &mut b);
+        fill(&mut rng, &mut a);
+        let mut naive = vec![0f32; h * wd * cout];
+        let mut blocked = vec![0f32; h * wd * cout];
+        tensor::conv3x3_forward_ref(&w, &b, &a, &mut naive, h, wd, cin, cout);
+        tensor::conv3x3_forward(&w, &b, &a, &mut blocked, h, wd, cin, cout);
+        assert_eq!(
+            bits(&naive),
+            bits(&blocked),
+            "conv3x3_forward {h}x{wd}x{cin}x{cout}: must be bit-exact"
+        );
+    }
+}
+
+#[test]
+fn blocked_conv_backward_bit_exact_from_zeroed_grads() {
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    for (h, wd, cin, cout) in conv_shapes() {
+        let mut w = vec![0f32; cout * cin * 9];
+        let mut a = vec![0f32; h * wd * cin];
+        let mut dy = vec![0f32; h * wd * cout];
+        fill(&mut rng, &mut w);
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut dy);
+        // Sparse dy exercises the shared skip-zero branch.
+        for v in dy.iter_mut().step_by(4) {
+            *v = 0.0;
+        }
+        for want_da in [true, false] {
+            let mut gw_n = vec![0f32; w.len()];
+            let mut gb_n = vec![0f32; cout];
+            let mut da_n = vec![0f32; a.len()];
+            let mut gw_b = vec![0f32; w.len()];
+            let mut gb_b = vec![0f32; cout];
+            let mut da_b = vec![0f32; a.len()];
+            tensor::conv3x3_backward_ref(
+                &w,
+                &a,
+                &dy,
+                &mut gw_n,
+                &mut gb_n,
+                want_da.then_some(&mut da_n[..]),
+                h,
+                wd,
+                cin,
+                cout,
+            );
+            tensor::conv3x3_backward(
+                &w,
+                &a,
+                &dy,
+                &mut gw_b,
+                &mut gb_b,
+                want_da.then_some(&mut da_b[..]),
+                h,
+                wd,
+                cin,
+                cout,
+            );
+            let tag = format!("conv3x3_backward {h}x{wd}x{cin}x{cout} da={want_da}");
+            assert_eq!(bits(&gw_n), bits(&gw_b), "{tag}: gw");
+            assert_eq!(bits(&gb_n), bits(&gb_b), "{tag}: gb");
+            assert_eq!(bits(&da_n), bits(&da_b), "{tag}: da");
+        }
+    }
+}
+
+#[test]
+fn blocked_conv_backward_close_with_preaccumulated_grads() {
+    // The executor always hands conv3x3_backward zeroed per-sample
+    // grads (the bit-exact case above). Accumulating into pre-filled
+    // gw is still supported but tolerance-pinned: the blocked kernel
+    // sums its own contribution in packed scratch first.
+    let mut rng = Xoshiro256::seed_from_u64(14);
+    let (h, wd, cin, cout) = (7, 5, 3, 4);
+    let mut w = vec![0f32; cout * cin * 9];
+    let mut a = vec![0f32; h * wd * cin];
+    let mut dy = vec![0f32; h * wd * cout];
+    let mut pre = vec![0f32; w.len()];
+    fill(&mut rng, &mut w);
+    fill(&mut rng, &mut a);
+    fill(&mut rng, &mut dy);
+    fill(&mut rng, &mut pre);
+    let mut gw_n = pre.clone();
+    let mut gb_n = vec![0f32; cout];
+    let mut gw_b = pre.clone();
+    let mut gb_b = vec![0f32; cout];
+    tensor::conv3x3_backward_ref(&w, &a, &dy, &mut gw_n, &mut gb_n, None, h, wd, cin, cout);
+    tensor::conv3x3_backward(&w, &a, &dy, &mut gw_b, &mut gb_b, None, h, wd, cin, cout);
+    assert_close(&gw_n, &gw_b, 1e-5, "conv3x3_backward pre-accumulated gw");
+}
+
+// --- blocked dense vs naive -----------------------------------------------
+
+#[test]
+fn blocked_dense_forward_and_backward_match_reference() {
+    let mut rng = Xoshiro256::seed_from_u64(15);
+    let mut shapes: Vec<(usize, usize)> = vec![(1, 1), (1024, 96), (33, 5), (256, 10)];
+    for s in 0..16u64 {
+        let mut srng = Xoshiro256::seed_from_u64(3000 + s);
+        shapes.push((
+            1 + srng.next_below(300) as usize,
+            1 + srng.next_below(40) as usize,
+        ));
+    }
+    for &(input, output) in &shapes {
+        let mut w = vec![0f32; output * input];
+        let mut b = vec![0f32; output];
+        let mut a = vec![0f32; input];
+        let mut dy = vec![0f32; output];
+        fill(&mut rng, &mut w);
+        fill(&mut rng, &mut b);
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut dy);
+        // Post-relu activations and sparse upstream grads both hit the
+        // skip-zero branches.
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        for v in dy.iter_mut().step_by(2) {
+            *v = 0.0;
+        }
+        let tag = format!("dense {input}->{output}");
+
+        let mut out_n = vec![0f32; output];
+        let mut out_b = vec![0f32; output];
+        for bias in [Some(&b[..]), None] {
+            tensor::dense_forward_ref(&w, bias, &a, &mut out_n);
+            tensor::dense_forward(&w, bias, &a, &mut out_b);
+            // `==` (not to_bits): the blocked path skips a == 0.0 terms,
+            // which can only ever differ in the sign of a zero.
+            assert_eq!(out_n, out_b, "{tag}: forward (bias={})", bias.is_some());
+        }
+
+        let mut gw_n = vec![0f32; w.len()];
+        let mut gb_n = vec![0f32; output];
+        let mut da_n = vec![0f32; input];
+        let mut gw_b = vec![0f32; w.len()];
+        let mut gb_b = vec![0f32; output];
+        let mut da_b = vec![0f32; input];
+        tensor::dense_backward_ref(
+            &w,
+            &a,
+            &dy,
+            &mut gw_n,
+            Some(&mut gb_n),
+            Some(&mut da_n),
+        );
+        tensor::dense_backward(&w, &a, &dy, &mut gw_b, Some(&mut gb_b), Some(&mut da_b));
+        assert_eq!(bits(&gw_n), bits(&gw_b), "{tag}: gw");
+        assert_eq!(bits(&gb_n), bits(&gb_b), "{tag}: gb");
+        assert_eq!(da_n, da_b, "{tag}: da");
+    }
+}
+
+// --- fused quantize epilogue vs separate passes -----------------------------
+
+#[test]
+fn fused_weight_prologue_matches_separate_pass_per_quantizer() {
+    for name in ["luq4", "uniform4", "fp8"] {
+        let cfg = TrainConfig {
+            quantizer: name.into(),
+            ..TrainConfig::default()
+        };
+        let exec = NativeExecutor::from_config(&cfg, 16 * 16 * 3, 10).unwrap();
+        let model = exec.model();
+        let w = exec.initial_weights();
+        let nl = exec.n_quant_layers();
+        let mut mask = vec![0f32; nl];
+        mask[0] = 1.0;
+        mask[nl - 1] = 1.0;
+        let q = quant::by_name(name).unwrap();
+        let seed = 1.5f32;
+
+        // The separate pass (the pre-fusion public API, still the
+        // contract): full quantized weight set.
+        let separate = quantize_masked_weights(model, &w, &mask, q.as_ref(), seed);
+
+        // The fused prologue: per-layer tensors + Some/None placement.
+        let epi = QuantEpilogue::new(q.as_ref(), &mask, seed);
+        let store = epi.quantized_weight_store(model, &w);
+        assert_eq!(store.len(), w.len(), "{name}: store covers all params");
+        for l in 0..nl {
+            let wi = model.weight_index(l);
+            if mask[l] > 0.0 {
+                let fused = store[wi].as_deref().expect("masked layer quantized");
+                assert_eq!(bits(fused), bits(&separate[wi]), "{name}: layer {l}");
+                assert_eq!(
+                    bits(&epi.quantize_weight(l, &w[wi])),
+                    bits(&separate[wi]),
+                    "{name}: quantize_weight layer {l}"
+                );
+            }
+        }
+        for (ti, slot) in store.iter().enumerate() {
+            if slot.is_none() {
+                assert_eq!(
+                    bits(&w[ti]),
+                    bits(&separate[ti]),
+                    "{name}: unmasked tensor {ti} untouched by separate pass too"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_grad_epilogue_matches_manual_separate_pass() {
+    // Single dense layer (logreg): the whole fused per-sample flow —
+    // quantized weight views in, grad epilogue at the producer point —
+    // is replayed by hand with the separate-pass primitives and must
+    // agree bit-for-bit, RNG stream included.
+    let input = 12usize;
+    let classes = 4usize;
+    let model = Model::by_name("logreg", input, classes).unwrap();
+    let w = model.init_weights(9);
+    let mask = vec![1f32; model.n_layers()];
+    let seed = 2.5f32;
+    let mut xrng = Xoshiro256::seed_from_u64(77);
+    for name in ["luq4", "uniform4", "fp8"] {
+        let q = quant::by_name(name).unwrap();
+        let epi = QuantEpilogue::new(q.as_ref(), &mask, seed);
+        let store = epi.quantized_weight_store(&model, &w);
+        let wviews: Vec<&[f32]> = w
+            .iter()
+            .enumerate()
+            .map(|(i, t)| store[i].as_deref().unwrap_or(t.as_slice()))
+            .collect();
+        let separate = quantize_masked_weights(&model, &w, &mask, q.as_ref(), seed);
+        for i in 0..8usize {
+            let mut x = vec![0f32; input];
+            fill(&mut xrng, &mut x);
+            let label = i % classes;
+
+            // Fused path, exactly as the executor drives it.
+            let mut grads = model.zero_grads();
+            let mut rng_f = NativeExecutor::sample_rng(seed, i);
+            let (loss_f, _) =
+                model.forward_backward(&wviews, &x, label, &mut grads, Some(&epi), &mut rng_f);
+
+            // Manual separate passes: quantized weights from the public
+            // pass, forward, softmax grad, grad quantization, backward.
+            // (logreg is a single bias-less dense layer, so the whole
+            // backward is one dense_backward call.)
+            let logits = model.forward(&separate, &x);
+            let (loss_s, _, mut dy) = tensor::softmax_xent(&logits, label);
+            let mut rng_s = NativeExecutor::sample_rng(seed, i);
+            q.quantize(&mut dy, &mut rng_s);
+            let mut gw = vec![0f32; w[0].len()];
+            tensor::dense_backward(&separate[0], &x, &dy, &mut gw, None, None);
+
+            assert_eq!(loss_f.to_bits(), loss_s.to_bits(), "{name}: sample {i} loss");
+            assert_eq!(bits(&grads[0]), bits(&gw), "{name}: sample {i} gw");
+        }
+    }
+}
+
+#[test]
+fn zero_mask_step_is_quantizer_independent() {
+    // With nothing masked the fused path must collapse to the plain
+    // fp32 step: two executors differing only in quantizer agree
+    // bit-for-bit.
+    let bsz = 8usize;
+    let ds = data::generate("gtsrb", bsz, 5).unwrap();
+    let batches = data::eval_batches(&ds, bsz);
+    let batch = &batches[0];
+    let mk = |name: &str| {
+        let cfg = TrainConfig {
+            quantizer: name.into(),
+            physical_batch: bsz,
+            ..TrainConfig::default()
+        };
+        NativeExecutor::from_config(&cfg, ds.example_numel, ds.n_classes).unwrap()
+    };
+    let e1 = mk("luq4");
+    let e2 = mk("fp8");
+    let w = e1.initial_weights();
+    let zero = vec![0f32; e1.n_quant_layers()];
+    let a = e1
+        .train_step(&w, &batch.x, &batch.y, &batch.mask, &zero, 4.0)
+        .unwrap();
+    let b = e2
+        .train_step(&w, &batch.x, &batch.y, &batch.mask, &zero, 4.0)
+        .unwrap();
+    assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits(), "zero-mask loss");
+    for (ga, gb) in a.grad_sums.iter().zip(&b.grad_sums) {
+        assert_eq!(bits(ga), bits(gb), "zero-mask grads");
+    }
+}
+
+#[test]
+fn whole_run_training_determinism_through_fused_path() {
+    // Same config, two fresh executors: the full coordinator run (real
+    // fwd/bwd, fused quantization, clipping, noise, scheduler) must be
+    // bit-identical — the run-level contract PR 5's goldens pin.
+    let cfg = TrainConfig {
+        model: "miniconvnet".into(),
+        dataset: "gtsrb".into(),
+        quantizer: "luq4".into(),
+        scheduler: "dpquant".into(),
+        epochs: 2,
+        batch_size: 32,
+        dataset_size: 128,
+        val_size: 64,
+        seed: 3,
+        ..TrainConfig::default()
+    };
+    let (tr, va) = data::train_val(&cfg.dataset, cfg.dataset_size, cfg.val_size, cfg.seed).unwrap();
+    let run = || {
+        let exec = NativeExecutor::from_config(&cfg, tr.example_numel, tr.n_classes).unwrap();
+        train(&exec, &cfg, &tr, &va, &TrainerOptions::default()).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.record.best_accuracy.to_bits(),
+        b.record.best_accuracy.to_bits(),
+        "best accuracy"
+    );
+    assert_eq!(
+        a.record.final_epsilon.to_bits(),
+        b.record.final_epsilon.to_bits(),
+        "final epsilon"
+    );
+    for (wa, wb) in a.final_weights.iter().zip(&b.final_weights) {
+        assert_eq!(bits(wa), bits(wb), "final weights");
+    }
+}
