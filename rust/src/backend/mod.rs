@@ -188,8 +188,14 @@ impl<'a> QuantEpilogue<'a> {
     /// GEMM weight prologue for masked layer `l`: quantize-dequantized
     /// copy of `w` under the pinned per-layer stream.
     pub fn quantize_weight(&self, l: usize, w: &[f32]) -> Vec<f32> {
+        let t = crate::obs::maybe_start();
         let mut qw = w.to_vec();
         self.quantizer.quantize(&mut qw, &mut self.weight_rng(l));
+        if let Some(t0) = t {
+            static H: std::sync::OnceLock<crate::obs::Histogram> = std::sync::OnceLock::new();
+            H.get_or_init(|| crate::obs::global().histogram_ns("kernel.quant_weight_ns"))
+                .record_duration(t0.elapsed());
+        }
         qw
     }
 
@@ -218,7 +224,13 @@ impl<'a> QuantEpilogue<'a> {
     /// keeping the stream position identical to the pre-fusion pipeline.
     pub fn grad_epilogue(&self, l: usize, grad: &mut [f32], rng: &mut Xoshiro256) {
         if self.quant_mask[l] > 0.0 {
+            let t = crate::obs::maybe_start();
             self.quantizer.quantize(grad, rng);
+            if let Some(t0) = t {
+                static H: std::sync::OnceLock<crate::obs::Histogram> = std::sync::OnceLock::new();
+                H.get_or_init(|| crate::obs::global().histogram_ns("kernel.quant_grad_ns"))
+                    .record_duration(t0.elapsed());
+            }
         }
     }
 }

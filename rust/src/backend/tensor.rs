@@ -27,7 +27,21 @@
 //! * conv weights are `[cout][cin][ky][kx]` with a 3x3 kernel and same
 //!   padding (stride 1).
 
+use crate::obs::{self, Histogram};
 use crate::util::rng::Xoshiro256;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Record `start.elapsed()` into the lazily-created global histogram
+/// `name` — the shared tail of every instrumented kernel. `start` is
+/// `None` when kernel timing is off ([`obs::maybe_start`]), making the
+/// disabled path one branch. Recording never touches kernel outputs.
+fn record_kernel(start: Option<Instant>, hist: &'static OnceLock<Histogram>, name: &'static str) {
+    if let Some(t0) = start {
+        hist.get_or_init(|| obs::global().histogram_ns(name))
+            .record_duration(t0.elapsed());
+    }
+}
 
 /// A contiguous f32 tensor with an explicit row-major shape. The hot
 /// path passes raw slices; `Tensor` carries shape metadata for
@@ -128,8 +142,11 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
 /// contract.
 pub fn matmul_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(out.len(), m * n, "matmul out shape");
+    let t = obs::maybe_start();
     out.fill(0.0);
     matmul_blocked_into(a, b, m, k, n, out);
+    static H: OnceLock<Histogram> = OnceLock::new();
+    record_kernel(t, &H, "kernel.matmul_blocked_ns");
 }
 
 /// `out[m×n] += a[m×k] · b[k×n]`, cache-blocked: [`MC`]/[`KC`]/[`NC`]
@@ -270,11 +287,14 @@ pub fn dense_forward(w: &[f32], b: Option<&[f32]>, a: &[f32], out: &mut [f32]) {
     let input = a.len();
     let output = out.len();
     assert_eq!(w.len(), input * output, "dense weight shape");
+    let t = obs::maybe_start();
     match b {
         Some(bb) => out.copy_from_slice(bb),
         None => out.fill(0.0),
     }
     matmul_blocked_into(w, a, output, input, 1, out);
+    static H: OnceLock<Histogram> = OnceLock::new();
+    record_kernel(t, &H, "kernel.dense_forward_ns");
 }
 
 /// Straight-line reference for [`dense_forward`] (parity tests and
@@ -409,6 +429,7 @@ pub fn conv3x3_forward(
     assert_eq!(out.len(), h * wd * cout, "conv output shape");
     assert_eq!(w.len(), cout * cin * 9, "conv weight shape");
     assert_eq!(b.len(), cout, "conv bias shape");
+    let t = obs::maybe_start();
     // Repack [cout][cin][3][3] -> [ky][kx][cin][cout].
     let mut wp = vec![0f32; w.len()];
     for co in 0..cout {
@@ -443,6 +464,8 @@ pub fn conv3x3_forward(
             out[obase..obase + cout].copy_from_slice(&acc);
         }
     }
+    static H: OnceLock<Histogram> = OnceLock::new();
+    record_kernel(t, &H, "kernel.conv3x3_forward_ns");
 }
 
 /// Straight-line reference for [`conv3x3_forward`] (parity tests and
@@ -522,6 +545,7 @@ pub fn conv3x3_backward(
     assert_eq!(dy.len(), h * wd * cout, "conv dy shape");
     assert_eq!(gw.len(), cout * cin * 9, "conv grad shape");
     assert_eq!(gb.len(), cout, "conv bias grad shape");
+    let t = obs::maybe_start();
     let need_da = da.is_some();
     if let Some(d) = da.as_deref_mut() {
         assert_eq!(d.len(), h * wd * cin, "conv da shape");
@@ -584,6 +608,8 @@ pub fn conv3x3_backward(
             }
         }
     }
+    static H: OnceLock<Histogram> = OnceLock::new();
+    record_kernel(t, &H, "kernel.conv3x3_backward_ns");
 }
 
 /// Straight-line reference for [`conv3x3_backward`] (parity tests and

@@ -634,6 +634,104 @@ impl ServeConfig {
     }
 }
 
+/// Every key the `[obs]` config section understands.
+pub const KNOWN_OBS_KEYS: &[&str] = &["trace_path", "metrics", "buckets_ns"];
+
+/// Observability configuration, resolved from the `[obs]` config
+/// section with the `--trace-out` flag override on top. Applied by
+/// the CLI front-ends (`train`, `serve`, `bench`); it never changes
+/// training outputs — only what gets recorded about them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Default trace file for `dpquant train` (the `--trace-out` flag
+    /// overrides). `None` disables tracing.
+    pub trace_path: Option<String>,
+    /// Record per-kernel durations into the global metrics registry
+    /// (`crate::obs::set_kernel_timing`). On by default — the off
+    /// path of the gate is one atomic load, and recording never
+    /// affects outputs.
+    pub metrics: bool,
+    /// Override the default latency-histogram bucket bounds, in
+    /// nanoseconds. `None` keeps `obs::registry::DEFAULT_NS_BUCKETS`.
+    pub buckets_ns: Option<Vec<f64>>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            trace_path: None,
+            metrics: true,
+            buckets_ns: None,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Resolve from a parsed file's `[obs]` section, warning on
+    /// unknown keys (the `[train]`-section treatment).
+    pub fn from_file(cf: &ConfigFile) -> Result<Self, ConfigError> {
+        for (sec, key) in cf.entries.keys() {
+            if sec == "obs" && !KNOWN_OBS_KEYS.contains(&key.as_str()) {
+                eprintln!(
+                    "warning: config key [obs] {key} is not recognized and will be ignored"
+                );
+            }
+        }
+        let d = Self::default();
+        let buckets_ns = match cf.get("obs", "buckets_ns") {
+            None => None,
+            Some(v) => {
+                let arr = v.as_array().ok_or_else(|| {
+                    ConfigError::new("[obs] buckets_ns must be an array of numbers")
+                })?;
+                let mut out = Vec::with_capacity(arr.len());
+                for item in arr {
+                    match item.as_f64() {
+                        Some(b) if b.is_finite() && b > 0.0 => out.push(b),
+                        _ => {
+                            return Err(ConfigError::new(
+                                "[obs] buckets_ns entries must be finite numbers > 0",
+                            ))
+                        }
+                    }
+                }
+                Some(out)
+            }
+        };
+        Ok(Self {
+            trace_path: cf
+                .get("obs", "trace_path")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+            metrics: cf.bool_or("obs", "metrics", d.metrics),
+            buckets_ns,
+        })
+    }
+
+    /// Resolve from the command line: `--config file` first (when
+    /// given), then the `--trace-out` override.
+    pub fn from_args(args: &crate::cli::Args) -> crate::util::error::Result<Self> {
+        let mut oc = match args.get("config") {
+            Some(path) => Self::from_file(&ConfigFile::load(path)?)?,
+            None => Self::default(),
+        };
+        if let Some(path) = args.get("trace-out") {
+            oc.trace_path = Some(path.to_string());
+        }
+        Ok(oc)
+    }
+
+    /// Apply the registry-side settings to the process: histogram
+    /// bucket overrides (before the first histogram is created) and
+    /// the kernel-timing gate.
+    pub fn apply(&self) {
+        if let Some(buckets) = &self.buckets_ns {
+            crate::obs::global().set_default_ns_buckets(buckets);
+        }
+        crate::obs::set_kernel_timing(self.metrics);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -860,6 +958,47 @@ backend = "mock"
         )
         .unwrap();
         assert!(ServeConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn obs_config_resolution_and_overrides() {
+        // Defaults with no [obs] section: no trace, metrics on.
+        let d = ObsConfig::from_file(&ConfigFile::parse("").unwrap()).unwrap();
+        assert_eq!(d, ObsConfig::default());
+        assert!(d.trace_path.is_none());
+        assert!(d.metrics);
+        assert!(d.buckets_ns.is_none());
+
+        // File values resolve, covering every KNOWN_OBS_KEYS key.
+        let cf = ConfigFile::parse(
+            "[obs]\ntrace_path = \"/tmp/t.jsonl\"\nmetrics = false\nbuckets_ns = [1000, 1000000]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cf.entries.len(),
+            KNOWN_OBS_KEYS.len(),
+            "sample must cover every known key"
+        );
+        let oc = ObsConfig::from_file(&cf).unwrap();
+        assert_eq!(oc.trace_path.as_deref(), Some("/tmp/t.jsonl"));
+        assert!(!oc.metrics);
+        assert_eq!(oc.buckets_ns.as_deref(), Some(&[1000.0, 1_000_000.0][..]));
+
+        // Malformed buckets are rejected, not clamped.
+        let cf = ConfigFile::parse("[obs]\nbuckets_ns = [0]\n").unwrap();
+        assert!(ObsConfig::from_file(&cf)
+            .unwrap_err()
+            .to_string()
+            .contains("buckets_ns"));
+
+        // --trace-out lands on top of defaults.
+        let args = crate::cli::Args::parse(
+            "train --trace-out /tmp/run.jsonl".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        let oc = ObsConfig::from_args(&args).unwrap();
+        assert_eq!(oc.trace_path.as_deref(), Some("/tmp/run.jsonl"));
+        assert!(oc.metrics);
     }
 
     #[test]

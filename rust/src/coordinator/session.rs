@@ -504,6 +504,12 @@ impl TrainSession {
                     (epoch * 7919) as f32,
                 )?;
                 analysis_seconds = report.seconds;
+                if crate::obs::kernel_timing() {
+                    static H: std::sync::OnceLock<crate::obs::Histogram> =
+                        std::sync::OnceLock::new();
+                    H.get_or_init(|| crate::obs::global().histogram_ns("session.analysis_ns"))
+                        .record(report.seconds * 1e9);
+                }
                 sink.on_event(&TrainEvent::AnalysisCompleted {
                     epoch,
                     impacts: &report.privatized_impacts,
@@ -707,6 +713,7 @@ impl TrainSession {
     /// scenario checkpointing defends against — can never destroy the
     /// previous good snapshot at the same path.
     pub fn checkpoint(&self, path: &str) -> Result<()> {
+        let t = crate::obs::maybe_start();
         let parent = std::path::Path::new(path).parent();
         if let Some(dir) = parent.filter(|d| !d.as_os_str().is_empty()) {
             std::fs::create_dir_all(dir)
@@ -717,6 +724,11 @@ impl TrainSession {
             .with_context(|| format!("writing checkpoint {tmp}"))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("moving checkpoint {tmp} into place"))?;
+        if let Some(t0) = t {
+            static H: std::sync::OnceLock<crate::obs::Histogram> = std::sync::OnceLock::new();
+            H.get_or_init(|| crate::obs::global().histogram_ns("session.checkpoint_write_ns"))
+                .record_duration(t0.elapsed());
+        }
         Ok(())
     }
 

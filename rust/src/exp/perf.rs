@@ -199,10 +199,17 @@ fn ratio(a: f64, b: f64) -> f64 {
 /// `DPQUANT_BENCH_QUICK=1` caps iteration counts so the harness
 /// smoke-tests in seconds (quick numbers are marked `"quick": true`
 /// and are not comparable across machines).
+///
+/// Every measurement is mirrored into the global metrics registry as a
+/// `bench.<group>.<name>` gauge, and the bench run itself executes
+/// with kernel timing on — so `--metrics-out PATH` dumps a
+/// `dpquant-metrics` v1 snapshot holding both the gauges and the live
+/// `kernel.*_ns` histograms the timed kernels just fed.
 pub fn bench(args: &Args) -> Result<()> {
     if let Some(path) = args.get("check") {
         return bench_check(&path);
     }
+    crate::obs::set_kernel_timing(true);
     let quick = std::env::var_os("DPQUANT_BENCH_QUICK").is_some();
     let reps = {
         let r = args.usize_or("reps", 40)?.max(1);
@@ -389,9 +396,27 @@ pub fn bench(args: &Args) -> Result<()> {
         ("steps_per_sec", to_obj(&steps)),
         ("fp32_vs_quantized", to_obj(&ratios)),
     ]);
+    // Mirror the snapshot into the global registry so a single
+    // `--metrics-out` file carries the bench numbers alongside the
+    // kernel histograms the timed calls above just recorded.
+    let reg = crate::obs::global();
+    for (group, pairs) in [
+        ("kernels_ns", &kernels),
+        ("blocked_speedup", &speedups),
+        ("steps_per_sec", &steps),
+        ("fp32_vs_quantized", &ratios),
+    ] {
+        for (k, v) in pairs {
+            reg.gauge(&format!("bench.{group}.{k}")).set(*v);
+        }
+    }
     if let Some(path) = args.get("json") {
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("[bench json -> {path}]");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(&path, format!("{}\n", crate::obs::metrics_doc()))?;
+        println!("[bench metrics -> {path}]");
     }
     Ok(())
 }

@@ -42,6 +42,14 @@
 //! submit|list|status|events|cancel|wait` is the client (DESIGN.md
 //! §12).
 //!
+//! The [`obs`] module is the observability layer (DESIGN.md §14): a
+//! process-wide metrics registry (counters/gauges/latency histograms,
+//! fed by the hot kernels, the worker pool, and the HTTP server) plus
+//! `dpquant-trace` v1 span/event trace files written by `dpquant
+//! train --trace-out` and inspected with `dpquant trace
+//! summarize|check`. Observability is pure observation — outputs are
+//! byte-identical with it on or off.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
@@ -54,6 +62,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod privacy;
 pub mod quant;
@@ -69,7 +78,7 @@ pub mod xla;
 /// glance (a daemon reports the same list on `GET /v1/healthz`).
 pub fn version() -> String {
     format!(
-        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}",
+        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}",
         env!("CARGO_PKG_VERSION"),
         coordinator::session::CHECKPOINT_FORMAT,
         coordinator::session::CHECKPOINT_VERSION,
@@ -77,6 +86,12 @@ pub fn version() -> String {
         sweep::report::REPORT_VERSION,
         serve::api::API_FORMAT,
         serve::api::API_VERSION,
+        exp::perf::BENCH_FORMAT,
+        exp::perf::BENCH_VERSION,
+        obs::TRACE_FORMAT,
+        obs::TRACE_VERSION,
+        obs::METRICS_FORMAT,
+        obs::METRICS_VERSION,
     )
 }
 
@@ -90,5 +105,8 @@ mod tests {
         assert!(v.contains("dpquant-trainsession v1"), "{v}");
         assert!(v.contains("dpquant-sweep-report v1"), "{v}");
         assert!(v.contains("dpquant-serve-api v1"), "{v}");
+        assert!(v.contains("dpquant-bench v1"), "{v}");
+        assert!(v.contains("dpquant-trace v1"), "{v}");
+        assert!(v.contains("dpquant-metrics v1"), "{v}");
     }
 }

@@ -8,7 +8,13 @@
 //!                      EMA scores, RNG streams) every N epochs;
 //!                      `--resume <ckpt>` continues a snapshot
 //!                      bit-exactly (`--epochs` is the only override —
-//!                      everything else comes from the checkpoint)
+//!                      everything else comes from the checkpoint);
+//!                      `--trace-out PATH` writes a `dpquant-trace` v1
+//!                      file of the full event stream (`--no-timing`
+//!                      zeroes its clock fields so files diff), and
+//!                      `--metrics-out PATH` snapshots the metrics
+//!                      registry after the run — both pure observation,
+//!                      outputs stay byte-identical
 //!   eval-only        — evaluate a model's initial weights
 //!   list             — list compiled graphs in the artifact manifest
 //!   accountant       — privacy-accountant utilities (`--dump` emits RDP
@@ -31,6 +37,11 @@
 //!   job              — client verbs against a running daemon:
 //!                      `submit|list|status|events|cancel|wait`
 //!                      (`--addr`, default 127.0.0.1:8117)
+//!   trace            — trace-file utilities: `trace check PATH`
+//!                      validates every line against the
+//!                      `dpquant-trace` v1 schema, `trace summarize
+//!                      PATH` aggregates spans into a per-target table
+//!                      (count, total/mean/p95 ns)
 //!   version          — crate version + the on-disk/wire format versions
 //!                      this build speaks (also `--version`)
 //!   bench-step       — time one train step, fp32 vs fully quantized
@@ -38,7 +49,9 @@
 //!                      kernel timings, quantizer ns/elem, native
 //!                      steps/sec (fp32 vs each quantizer); `--json PATH`
 //!                      writes a `dpquant-bench` v1 blob (DESIGN.md §13),
-//!                      `--check FILE` validates one instead of measuring
+//!                      `--check FILE` validates one instead of measuring,
+//!                      `--metrics-out PATH` snapshots the metrics
+//!                      registry the measurements also feed
 //!
 //! Model-executing subcommands (train, eval-only, bench-step, exp,
 //! sweep) take `--backend native|pjrt|mock`; `serve` reads `backend`
@@ -65,16 +78,18 @@
 
 use dpquant::backend;
 use dpquant::cli::Args;
-use dpquant::config::TrainConfig;
+use dpquant::config::{ObsConfig, TrainConfig};
 use dpquant::coordinator::{
     Checkpoint, EpochOutcome, EventSink, MultiSink, StepExecutor, TraceSink, TrainSession,
     VerboseSink,
 };
 use dpquant::data::{self, Dataset};
 use dpquant::exp;
+use dpquant::obs::{self, JsonlSink, TraceWriter};
 use dpquant::privacy::{default_alphas, rdp_sgm_step, rdp_to_epsilon, RdpAccountant};
 use dpquant::runtime::Runtime;
 use dpquant::util::error::{err, Result};
+use dpquant::util::json;
 
 fn main() {
     let args = match Args::from_env() {
@@ -108,6 +123,7 @@ const COMMANDS: &[&str] = &[
     "sweep",
     "serve",
     "job",
+    "trace",
     "version",
     "bench-step",
     "bench",
@@ -124,9 +140,17 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => {
             let opts = spec(
                 CONFIG_OPTS,
-                &["artifacts", "results", "checkpoint-every", "checkpoint-path", "resume"],
+                &[
+                    "artifacts",
+                    "results",
+                    "checkpoint-every",
+                    "checkpoint-path",
+                    "resume",
+                    "trace-out",
+                    "metrics-out",
+                ],
             );
-            args.require_known("train", &opts, &["no-ema", "stats", "quiet"])?;
+            args.require_known("train", &opts, &["no-ema", "stats", "quiet", "no-timing"])?;
             cmd_train(args)
         }
         Some("eval-only") => {
@@ -185,6 +209,10 @@ fn dispatch(args: &Args) -> Result<()> {
             // accepts the full train-config surface, the others don't.
             dpquant::serve::client::run(args)
         }
+        Some("trace") => {
+            args.require_known("trace", &[], &[])?;
+            cmd_trace(args)
+        }
         Some("version") => {
             args.require_known("version", &[], &[])?;
             println!("{}", dpquant::version());
@@ -196,14 +224,14 @@ fn dispatch(args: &Args) -> Result<()> {
             cmd_bench_step(args)
         }
         Some("bench") => {
-            args.require_known("bench", &["json", "reps", "check"], &[])?;
+            args.require_known("bench", &["json", "reps", "check", "metrics-out"], &[])?;
             exp::perf::bench(args)
         }
         Some(other) => Err(dpquant::cli::unknown_command_error("command", other, COMMANDS).into()),
         None => {
             println!(
-                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|version|\
-                 bench-step|bench> [flags]\n\
+                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|trace|\
+                 version|bench-step|bench> [flags]\n\
                  model-executing commands take --backend native|pjrt|mock (default: native)"
             );
             Ok(())
@@ -320,9 +348,24 @@ fn run_session(
         ));
     }
 
+    // Observability is pure observation: the trace writer and metrics
+    // registry never feed back into the run, so outputs are
+    // byte-identical with or without them (pinned by tests/obs.rs).
+    let obs_cfg = ObsConfig::from_args(args)?;
+    obs_cfg.apply();
+    let timing = !args.has_flag("no-timing");
+    let writer = match &obs_cfg.trace_path {
+        Some(path) => Some(TraceWriter::create(path, timing)?),
+        None => None,
+    };
+    let mut jsonl = writer.as_ref().map(JsonlSink::new);
+
     let mut trace_sink = TraceSink::default();
     let mut verbose_sink = VerboseSink;
     let mut sinks: Vec<&mut dyn EventSink> = Vec::new();
+    if let Some(j) = jsonl.as_mut() {
+        sinks.push(j);
+    }
     if args.has_flag("stats") {
         sinks.push(&mut trace_sink);
     }
@@ -332,11 +375,35 @@ fn run_session(
     let mut sink = MultiSink::new(sinks);
 
     loop {
-        match session.step_epoch(exec, train_ds, val_ds, &mut sink)? {
+        let outcome = {
+            // Coarse span around the whole epoch; the JsonlSink's event
+            // records are written inside it and get it as their parent.
+            let _epoch_span = writer.as_ref().map(|w| {
+                w.span(
+                    "step_epoch",
+                    "session",
+                    json::obj(vec![(
+                        "epoch",
+                        json::num(session.epochs_completed() as f64),
+                    )]),
+                )
+            });
+            session.step_epoch(exec, train_ds, val_ds, &mut sink)?
+        };
+        match outcome {
             EpochOutcome::Finished => break,
             EpochOutcome::Completed { .. } | EpochOutcome::Truncated { .. } => {
                 if ckpt_every > 0 && session.epochs_completed() % ckpt_every == 0 {
-                    session.checkpoint(&ckpt_path)?;
+                    {
+                        let _ckpt_span = writer.as_ref().map(|w| {
+                            w.span(
+                                "checkpoint_write",
+                                "session",
+                                json::obj(vec![("path", json::s(&ckpt_path))]),
+                            )
+                        });
+                        session.checkpoint(&ckpt_path)?;
+                    }
                     if verbose {
                         println!(
                             "checkpoint: {ckpt_path} (after epoch {})",
@@ -348,6 +415,22 @@ fn run_session(
         }
     }
 
+    if let Some(w) = &writer {
+        w.finish()?;
+        if verbose {
+            if let Some(path) = &obs_cfg.trace_path {
+                println!("trace written: {path}");
+            }
+        }
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, format!("{}\n", obs::metrics_doc()))
+            .map_err(|e| err!("writing metrics snapshot {path}: {e}"))?;
+        if verbose {
+            println!("metrics written: {path}");
+        }
+    }
+
     let (record, _weights, _accountant) = session.finish();
     // The one shared formatter: `dpquant job status` rebuilds this line
     // from the daemon's JSON and CI diffs the two byte-for-byte.
@@ -355,6 +438,52 @@ fn run_session(
     let path = record.save(&args.str_or("results", "results"))?;
     println!("saved {path}");
     Ok(())
+}
+
+/// `dpquant trace <check|summarize> PATH` — validate or aggregate a
+/// `dpquant-trace` v1 file.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let usage = "usage: dpquant trace <summarize|check> PATH";
+    let path = args.positional.get(2);
+    match args.subcommand() {
+        Some("summarize") => {
+            let path = path.ok_or_else(|| err!("{usage}"))?;
+            let rows = obs::trace::summarize(path)?;
+            let mut t = dpquant::metrics::Table::new(&[
+                "target", "count", "total_ns", "mean_ns", "p95_ns",
+            ]);
+            for r in &rows {
+                t.row(vec![
+                    r.target.clone(),
+                    r.count.to_string(),
+                    format!("{:.0}", r.total_ns),
+                    format!("{:.0}", r.mean_ns),
+                    format!("{:.0}", r.p95_ns),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("check") => {
+            let path = path.ok_or_else(|| err!("{usage}"))?;
+            let stats = obs::trace::check(path)?;
+            println!(
+                "ok: {path} is {} v{} ({} spans, {} events)",
+                obs::TRACE_FORMAT,
+                obs::TRACE_VERSION,
+                stats.spans,
+                stats.events
+            );
+            Ok(())
+        }
+        Some(other) => Err(dpquant::cli::unknown_command_error(
+            "trace subcommand",
+            other,
+            &["summarize", "check"],
+        )
+        .into()),
+        None => Err(err!("{usage}")),
+    }
 }
 
 fn cmd_eval_only(args: &Args) -> Result<()> {

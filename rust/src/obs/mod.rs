@@ -1,0 +1,114 @@
+//! Observability: a process-wide metrics registry plus span-based
+//! trace files, wired through every layer (backend kernels, the
+//! coordinator session, the sweep worker pool, and the serve daemon).
+//!
+//! Two-tier telemetry, by design:
+//!
+//! - **Hot kernels** (`matmul_blocked`, conv3x3 fwd/bwd, quantizer
+//!   passes) record durations into the global [`MetricsRegistry`]
+//!   only — never trace lines. They run per sample on worker threads;
+//!   per-call trace lines would bloat the file and make line order
+//!   nondeterministic. The recording is gated behind a process-wide
+//!   flag ([`set_kernel_timing`]) so the off path costs one relaxed
+//!   atomic load and a branch.
+//! - **Trace files** ([`TraceWriter`], `dpquant-trace` v1) are written
+//!   only from the single coordinator thread: the [`JsonlSink`] event
+//!   stream plus coarse spans (epoch, checkpoint write). Line order
+//!   is therefore deterministic, and with timing off
+//!   (`--no-timing`) two identical runs produce byte-identical files.
+//!
+//! The determinism contract mirrors sweep/serve: observability is
+//! pure observation. Training outputs are byte-identical with tracing
+//! on or off; timing fields are the only nondeterministic values and
+//! are zeroed in `--no-timing` mode. Tier-1 `tests/obs.rs` and CI
+//! `trace-smoke` pin both properties.
+
+pub mod registry;
+pub mod sink;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, Timer};
+pub use sink::JsonlSink;
+pub use trace::{Span, TraceStats, TraceSummaryRow, TraceWriter};
+
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Trace file format tag (line 1 of every trace file).
+pub const TRACE_FORMAT: &str = "dpquant-trace";
+/// Trace schema version.
+pub const TRACE_VERSION: u64 = 1;
+/// Metrics snapshot format tag (`--metrics-out` files and
+/// `GET /v1/metrics`).
+pub const METRICS_FORMAT: &str = "dpquant-metrics";
+/// Metrics schema version.
+pub const METRICS_VERSION: u64 = 1;
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-wide registry. Kernels, the worker pool, the HTTP
+/// server, and `dpquant bench` all record here; `GET /v1/metrics` and
+/// `--metrics-out` snapshot it.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+static KERNEL_TIMING: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable per-kernel duration recording into [`global`].
+/// Off by default; `train`, `serve`, and `bench` turn it on per the
+/// `[obs] metrics` config key. Never affects training outputs.
+pub fn set_kernel_timing(on: bool) {
+    KERNEL_TIMING.store(on, Ordering::Relaxed);
+}
+
+/// Is per-kernel duration recording enabled?
+pub fn kernel_timing() -> bool {
+    KERNEL_TIMING.load(Ordering::Relaxed)
+}
+
+/// `Some(Instant::now())` when kernel timing is on — the cheap guard
+/// hot kernels use so the off path is one load and a branch.
+pub fn maybe_start() -> Option<Instant> {
+    if kernel_timing() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// The `dpquant-metrics` v1 document for the global registry, as
+/// written by `train --metrics-out` / `bench --metrics-out`. The
+/// daemon's `GET /v1/metrics` emits the same format with additional
+/// job-level fields.
+pub fn metrics_doc() -> Json {
+    json::obj(vec![
+        ("format", json::s(METRICS_FORMAT)),
+        ("version", json::num(METRICS_VERSION as f64)),
+        ("metrics", global().to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_timing_gate_toggles() {
+        set_kernel_timing(false);
+        assert!(maybe_start().is_none());
+        set_kernel_timing(true);
+        assert!(maybe_start().is_some());
+        set_kernel_timing(false);
+    }
+
+    #[test]
+    fn metrics_doc_is_tagged() {
+        let doc = metrics_doc();
+        assert_eq!(doc.get("format").unwrap().as_str(), Some(METRICS_FORMAT));
+        assert_eq!(doc.get("version").unwrap().as_f64(), Some(1.0));
+        assert!(doc.get("metrics").unwrap().get("counters").is_some());
+    }
+}

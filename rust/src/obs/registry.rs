@@ -1,0 +1,502 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! fixed-bucket latency histograms.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`
+//! clones over atomics, so hot paths cache one per site and record
+//! lock-free; the registry's `Mutex` is touched only on get-or-create
+//! and on snapshot. Recording never affects training outputs — the
+//! registry is pure observation, read out as a `dpquant-metrics` v1
+//! JSON document ([`MetricsRegistry::to_json`]) or a Prometheus-style
+//! text exposition ([`MetricsRegistry::to_prometheus`]).
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Default latency-histogram bucket upper bounds, in nanoseconds:
+/// decades from 100 ns to 10 s. Overridable per registry with
+/// [`MetricsRegistry::set_default_ns_buckets`] (the `[obs] buckets_ns`
+/// config key) or per histogram via [`MetricsRegistry::histogram`].
+pub const DEFAULT_NS_BUCKETS: &[f64] = &[
+    100.0,
+    1_000.0,
+    10_000.0,
+    100_000.0,
+    1_000_000.0,
+    10_000_000.0,
+    100_000_000.0,
+    1_000_000_000.0,
+    10_000_000_000.0,
+];
+
+/// A monotonically increasing event count. Cloning shares the cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins instantaneous reading (f64 bits in an atomic).
+/// Cloning shares the cell.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Overwrite the reading.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current reading.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistInner {
+    /// Sorted, strictly increasing, finite bucket upper bounds
+    /// (value `v` lands in the first bucket with `v <= bound`).
+    bounds: Vec<f64>,
+    /// One slot per bound plus a trailing overflow slot.
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+/// A fixed-bucket histogram with running count/sum/min/max, recorded
+/// lock-free from any thread. Cloning shares the cells.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        let mut bounds: Vec<f64> = bounds.iter().copied().filter(|b| b.is_finite()).collect();
+        bounds.sort_by(f64::total_cmp);
+        bounds.dedup();
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Self(Arc::new(HistInner {
+            bounds,
+            counts,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }))
+    }
+
+    /// Record one observation. Non-finite values are dropped — the
+    /// registry must stay serializable as JSON.
+    pub fn record(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let i = self
+            .0
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.0.bounds.len());
+        self.0.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.0.sum_bits, v);
+        atomic_f64_keep(&self.0.min_bits, v, |new, cur| new < cur);
+        atomic_f64_keep(&self.0.max_bits, v, |new, cur| new > cur);
+    }
+
+    /// Record a duration, in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as f64);
+    }
+
+    /// RAII timer: records the elapsed nanoseconds on drop.
+    #[must_use = "the timer records when dropped; binding it to _ records immediately"]
+    pub fn start_timer(&self) -> Timer {
+        Timer {
+            hist: self.clone(),
+            start: Instant::now(),
+        }
+    }
+
+    /// The bucket upper bounds (sorted, without the overflow slot).
+    pub fn bounds(&self) -> &[f64] {
+        &self.0.bounds
+    }
+
+    /// Per-bucket counts; the last entry is the overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Smallest observation (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        let v = f64::from_bits(self.0.min_bits.load(Ordering::Relaxed));
+        if v.is_finite() { v } else { 0.0 }
+    }
+
+    /// Largest observation (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        let v = f64::from_bits(self.0.max_bits.load(Ordering::Relaxed));
+        if v.is_finite() { v } else { 0.0 }
+    }
+
+    /// Mean observation (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() / n as f64 }
+    }
+
+    /// Estimated 95th percentile: the upper bound of the bucket where
+    /// the cumulative count crosses 95%, clamped to the recorded
+    /// `[min, max]` so the estimate never leaves the observed range.
+    pub fn p95(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((0.95 * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in self.0.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                let est = if i < self.0.bounds.len() {
+                    self.0.bounds[i]
+                } else {
+                    self.max()
+                };
+                return est.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Snapshot as the histogram object of the `dpquant-metrics`
+    /// schema: per-bucket `{le, count}` rows plus overflow and the
+    /// running count/sum/min/max/mean/p95.
+    pub fn to_json(&self) -> Json {
+        let counts = self.bucket_counts();
+        let buckets: Vec<Json> = self
+            .0
+            .bounds
+            .iter()
+            .zip(&counts)
+            .map(|(&le, &count)| {
+                json::obj(vec![("count", json::num(count as f64)), ("le", json::num(le))])
+            })
+            .collect();
+        json::obj(vec![
+            ("buckets", Json::Arr(buckets)),
+            ("count", json::num(self.count() as f64)),
+            ("max", json::num(self.max())),
+            ("mean", json::num(self.mean())),
+            ("min", json::num(self.min())),
+            ("overflow", json::num(*counts.last().expect("overflow slot") as f64)),
+            ("p95", json::num(self.p95())),
+            ("sum", json::num(self.sum())),
+        ])
+    }
+}
+
+/// RAII guard from [`Histogram::start_timer`]; records the elapsed
+/// time into the histogram when dropped.
+pub struct Timer {
+    hist: Histogram,
+    start: Instant,
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        self.hist.record_duration(self.start.elapsed());
+    }
+}
+
+fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+fn atomic_f64_keep(cell: &AtomicU64, v: f64, wins: fn(f64, f64) -> bool) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while wins(v, f64::from_bits(cur)) {
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+struct RegistryInner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+    default_ns_buckets: Vec<f64>,
+}
+
+/// Named counters/gauges/histograms with get-or-create semantics. All
+/// methods take `&self`; one registry is shared process-wide through
+/// [`crate::obs::global`].
+pub struct MetricsRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// An empty registry with the [`DEFAULT_NS_BUCKETS`] defaults.
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(RegistryInner {
+                counters: BTreeMap::new(),
+                gauges: BTreeMap::new(),
+                histograms: BTreeMap::new(),
+                default_ns_buckets: DEFAULT_NS_BUCKETS.to_vec(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RegistryInner> {
+        // A panicking recorder must not take observability down with it.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.lock()
+            .counters
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.lock().gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the histogram `name`. `bounds` only applies on
+    /// first creation; an existing histogram keeps its buckets.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histogram {
+        self.lock()
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .clone()
+    }
+
+    /// Get or create a latency histogram with the registry's default
+    /// nanosecond buckets.
+    pub fn histogram_ns(&self, name: &str) -> Histogram {
+        let mut inner = self.lock();
+        if let Some(h) = inner.histograms.get(name) {
+            return h.clone();
+        }
+        let h = Histogram::new(&inner.default_ns_buckets);
+        inner.histograms.insert(name.to_string(), h.clone());
+        h
+    }
+
+    /// Replace the default buckets used by [`Self::histogram_ns`] for
+    /// histograms created after this call.
+    pub fn set_default_ns_buckets(&self, bounds: &[f64]) {
+        let sane: Vec<f64> = bounds.iter().copied().filter(|b| b.is_finite()).collect();
+        if !sane.is_empty() {
+            self.lock().default_ns_buckets = sane;
+        }
+    }
+
+    /// Snapshot every metric as the `metrics` object of the
+    /// `dpquant-metrics` v1 schema: `counters`/`gauges`/`histograms`
+    /// maps keyed by metric name (sorted — `BTreeMap` order).
+    pub fn to_json(&self) -> Json {
+        let inner = self.lock();
+        let mut counters = BTreeMap::new();
+        for (name, c) in &inner.counters {
+            counters.insert(name.clone(), json::num(c.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in &inner.gauges {
+            gauges.insert(name.clone(), json::num(g.get()));
+        }
+        let mut histograms = BTreeMap::new();
+        for (name, h) in &inner.histograms {
+            histograms.insert(name.clone(), h.to_json());
+        }
+        json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Prometheus-style text exposition of the same snapshot: `# TYPE`
+    /// lines, cumulative `_bucket{le=...}` rows ending in `+Inf`, and
+    /// `_sum`/`_count` per histogram. Metric names are sanitized to
+    /// `[a-zA-Z0-9_]`.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let inner = self.lock();
+        let mut out = String::new();
+        for (name, c) in &inner.counters {
+            let n = prom_name(name);
+            let _ = writeln!(out, "# TYPE {n} counter");
+            let _ = writeln!(out, "{n} {}", c.get());
+        }
+        for (name, g) in &inner.gauges {
+            let n = prom_name(name);
+            let _ = writeln!(out, "# TYPE {n} gauge");
+            let _ = writeln!(out, "{n} {}", g.get());
+        }
+        for (name, h) in &inner.histograms {
+            let n = prom_name(name);
+            let _ = writeln!(out, "# TYPE {n} histogram");
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (&le, &count) in h.bounds().iter().zip(&counts) {
+                cum += count;
+                let _ = writeln!(out, "{n}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "{n}_sum {}", h.sum());
+            let _ = writeln!(out, "{n}_count {}", h.count());
+        }
+        out
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("a.count");
+        c.inc();
+        c.add(4);
+        // A second handle to the same name shares the cell.
+        assert_eq!(r.counter("a.count").get(), 5);
+        let g = r.gauge("a.gauge");
+        g.set(2.5);
+        assert_eq!(r.gauge("a.gauge").get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let h = Histogram::new(&[10.0, 100.0, 1000.0]);
+        for v in [1.0, 5.0, 10.0, 50.0, 500.0, 5000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.bucket_counts(), vec![3, 1, 1, 1]);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 5000.0);
+        assert_eq!(h.sum(), 5566.0);
+        // p95 lands in the overflow bucket -> max, inside [min, max].
+        let p95 = h.p95();
+        assert!(p95 >= h.min() && p95 <= h.max(), "{p95}");
+        // Non-finite observations are dropped, not recorded.
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn histogram_bounds_are_sorted_and_deduped() {
+        let h = Histogram::new(&[100.0, 1.0, 100.0, f64::NAN, 10.0]);
+        assert_eq!(h.bounds(), &[1.0, 10.0, 100.0]);
+    }
+
+    #[test]
+    fn empty_histogram_serializes_finite() {
+        let h = Histogram::new(&[10.0]);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p95(), 0.0);
+        let s = h.to_json().to_string();
+        assert!(!s.contains("inf"), "{s}");
+    }
+
+    #[test]
+    fn timer_records_on_drop() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram_ns("t.ns");
+        {
+            let _t = h.start_timer();
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.sum() >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_and_prometheus() {
+        let r = MetricsRegistry::new();
+        r.counter("jobs.done").add(3);
+        r.gauge("queue.depth").set(2.0);
+        r.histogram("lat.ns", &[10.0, 100.0]).record(50.0);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("jobs.done").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("gauges").unwrap().get("queue.depth").unwrap().as_f64(), Some(2.0));
+        let h = j.get("histograms").unwrap().get("lat.ns").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(1.0));
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE jobs_done counter"), "{text}");
+        assert!(text.contains("jobs_done 3"), "{text}");
+        assert!(text.contains("lat_ns_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("lat_ns_count 1"), "{text}");
+    }
+
+    #[test]
+    fn default_bucket_override_applies_to_new_histograms() {
+        let r = MetricsRegistry::new();
+        let before = r.histogram_ns("h.before");
+        assert_eq!(before.bounds(), DEFAULT_NS_BUCKETS);
+        r.set_default_ns_buckets(&[1.0, 2.0]);
+        assert_eq!(r.histogram_ns("h.after").bounds(), &[1.0, 2.0]);
+        // Existing histograms keep their buckets.
+        assert_eq!(r.histogram_ns("h.before").bounds(), DEFAULT_NS_BUCKETS);
+    }
+}

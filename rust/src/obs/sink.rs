@@ -1,0 +1,181 @@
+//! [`JsonlSink`] — serializes the full [`TrainEvent`] stream into a
+//! trace file as `"event"` records (target `"session"`).
+//!
+//! Every deterministic payload field is written: ε, losses, the
+//! quantized-layer set, per-step noise stats. The only wall-clock
+//! payloads in the stream (`AnalysisCompleted.seconds` and the epoch
+//! record's `train_seconds`/`analysis_seconds`) are zeroed when the
+//! writer's timing mode is off, keeping `--no-timing` traces
+//! byte-identical across identical runs.
+
+use super::trace::TraceWriter;
+use crate::coordinator::{EventSink, TrainEvent};
+use crate::util::json::{self, Json};
+
+/// An [`EventSink`] that forwards each event to a shared
+/// [`TraceWriter`]. Enabled by `dpquant train --trace-out PATH`.
+pub struct JsonlSink<'w> {
+    writer: &'w TraceWriter,
+}
+
+impl<'w> JsonlSink<'w> {
+    /// Forward events to `writer`.
+    pub fn new(writer: &'w TraceWriter) -> Self {
+        Self { writer }
+    }
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| json::num(x as f64)).collect())
+}
+
+impl EventSink for JsonlSink<'_> {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        let timing = self.writer.timing();
+        let zeroed = |s: f64| if timing { s } else { 0.0 };
+        let fields = match event {
+            TrainEvent::EpochStarted { epoch } => {
+                json::obj(vec![("epoch", json::num(*epoch as f64))])
+            }
+            TrainEvent::AnalysisCompleted {
+                epoch,
+                impacts,
+                seconds,
+            } => json::obj(vec![
+                ("epoch", json::num(*epoch as f64)),
+                ("impacts", json::arr_f64(impacts)),
+                ("seconds", json::num(zeroed(*seconds))),
+            ]),
+            TrainEvent::PolicySelected { epoch, policy } => json::obj(vec![
+                ("epoch", json::num(*epoch as f64)),
+                ("layers", usize_arr(&policy.layers)),
+                ("n_layers", json::num(policy.n_layers as f64)),
+            ]),
+            TrainEvent::StepCompleted {
+                epoch,
+                step,
+                examples,
+                stats,
+                raw_norm_mean,
+                raw_norm_max,
+            } => json::obj(vec![
+                ("epoch", json::num(*epoch as f64)),
+                ("examples", json::num(*examples as f64)),
+                ("grad_l2", json::num(stats.grad_l2)),
+                ("grad_linf", json::num(stats.grad_linf)),
+                ("noise_l2", json::num(stats.noise_l2)),
+                ("noise_linf", json::num(stats.noise_linf)),
+                ("raw_norm_max", json::num(*raw_norm_max)),
+                ("raw_norm_mean", json::num(*raw_norm_mean)),
+                ("step", json::num(*step as f64)),
+            ]),
+            TrainEvent::Truncated {
+                epoch,
+                step,
+                epsilon,
+            } => json::obj(vec![
+                ("epoch", json::num(*epoch as f64)),
+                ("epsilon", json::num(*epsilon)),
+                ("step", json::num(*step as f64)),
+            ]),
+            TrainEvent::EpochCompleted { record } => json::obj(vec![
+                ("analysis_seconds", json::num(zeroed(record.analysis_seconds))),
+                ("epoch", json::num(record.epoch as f64)),
+                ("epsilon", json::num(record.epsilon)),
+                ("quantized_layers", usize_arr(&record.quantized_layers)),
+                ("train_loss", json::num(record.train_loss)),
+                ("train_seconds", json::num(zeroed(record.train_seconds))),
+                ("val_accuracy", json::num(record.val_accuracy)),
+                ("val_loss", json::num(record.val_loss)),
+            ]),
+        };
+        self.writer.event(event.kind(), "session", fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::NoiseStats;
+    use crate::coordinator::Policy;
+    use crate::metrics::EpochRecord;
+    use crate::obs::trace;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("dpquant_sink_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn feed(sink: &mut JsonlSink<'_>) {
+        sink.on_event(&TrainEvent::EpochStarted { epoch: 0 });
+        sink.on_event(&TrainEvent::AnalysisCompleted {
+            epoch: 0,
+            impacts: &[0.5, 0.25],
+            seconds: 1.25,
+        });
+        let policy = Policy {
+            n_layers: 2,
+            layers: vec![0, 1],
+        };
+        sink.on_event(&TrainEvent::PolicySelected { epoch: 0, policy: &policy });
+        sink.on_event(&TrainEvent::StepCompleted {
+            epoch: 0,
+            step: 3,
+            examples: 16,
+            stats: NoiseStats {
+                grad_linf: 0.5,
+                grad_l2: 1.0,
+                noise_linf: 0.25,
+                noise_l2: 0.75,
+            },
+            raw_norm_mean: 2.0,
+            raw_norm_max: 4.0,
+        });
+        let record = EpochRecord {
+            epoch: 0,
+            train_loss: 0.5,
+            val_loss: 0.25,
+            val_accuracy: 0.875,
+            epsilon: 1.5,
+            quantized_layers: vec![1],
+            train_seconds: 9.0,
+            analysis_seconds: 3.0,
+        };
+        sink.on_event(&TrainEvent::EpochCompleted { record: &record });
+    }
+
+    #[test]
+    fn events_serialize_with_deterministic_fields() {
+        let path = tmp("fields");
+        let w = TraceWriter::create(&path, false).unwrap();
+        let mut sink = JsonlSink::new(&w);
+        feed(&mut sink);
+        w.finish().unwrap();
+        let stats = trace::check(&path).unwrap();
+        assert_eq!(stats.events, 5);
+        assert_eq!(stats.spans, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"name\":\"epoch_started\""), "{text}");
+        assert!(text.contains("\"impacts\":[0.5,0.25]"), "{text}");
+        assert!(text.contains("\"quantized_layers\":[1]"), "{text}");
+        // Wall-clock payloads are zeroed with timing off.
+        assert!(text.contains("\"seconds\":0"), "{text}");
+        assert!(text.contains("\"train_seconds\":0"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn timing_mode_keeps_seconds() {
+        let path = tmp("timed");
+        let w = TraceWriter::create(&path, true).unwrap();
+        let mut sink = JsonlSink::new(&w);
+        feed(&mut sink);
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"seconds\":1.25"), "{text}");
+        assert!(text.contains("\"train_seconds\":9"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+}

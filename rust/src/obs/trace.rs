@@ -1,0 +1,514 @@
+//! Span-based trace files: one JSON object per line.
+//!
+//! The `dpquant-trace` v1 schema. Line 1 is the header
+//! `{"format":"dpquant-trace","version":1}`; every following line is a
+//! record:
+//!
+//! ```json
+//! {"dur_ns":0,"fields":{...},"id":3,"name":"epoch_started",
+//!  "parent":2,"start_ns":0,"target":"session","type":"event"}
+//! ```
+//!
+//! `type` is `"span"` (a timed region, written when it closes) or
+//! `"event"` (a point record, written immediately; `dur_ns` is 0).
+//! Ids are assigned in creation order starting at 1; `parent` is the
+//! id of the innermost open span at creation time, or `null`.
+//! `start_ns` is relative to writer creation.
+//!
+//! Determinism contract: with timing disabled
+//! ([`TraceWriter::create`] with `timing = false`, the CLI's
+//! `--no-timing`), `start_ns`/`dur_ns` are written as 0 and the file
+//! is a pure function of the run — two identical runs produce
+//! byte-identical traces (CI `trace-smoke` diffs them). Writers are
+//! only ever driven from the single coordinator thread, so line order
+//! is deterministic too.
+
+use crate::util::error::{bail, ensure, err, Context, Result};
+use crate::util::json::{self, Json};
+use std::collections::BTreeSet;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use super::{TRACE_FORMAT, TRACE_VERSION};
+
+struct TraceInner {
+    out: Box<dyn Write + Send>,
+    next_id: u64,
+    /// Stack of open span ids (innermost last).
+    open: Vec<u64>,
+    /// Set after the first write failure; later lines are dropped so a
+    /// full disk degrades observability, never the run itself.
+    failed: bool,
+}
+
+impl TraceInner {
+    fn write_line(&mut self, line: &str) {
+        if self.failed {
+            return;
+        }
+        if let Err(e) = writeln!(self.out, "{line}") {
+            eprintln!("trace: write failed ({e}); dropping further trace output");
+            self.failed = true;
+        }
+    }
+}
+
+/// Writes a `dpquant-trace` v1 file. Interior-mutable (`Mutex`), so
+/// sinks and spans share it by `&` reference.
+pub struct TraceWriter {
+    inner: Mutex<TraceInner>,
+    timing: bool,
+    t0: Instant,
+}
+
+struct LineSpec<'a> {
+    kind: &'a str,
+    id: u64,
+    parent: Option<u64>,
+    name: &'a str,
+    target: &'a str,
+    start_ns: u64,
+    dur_ns: u64,
+}
+
+fn render_line(spec: &LineSpec<'_>, fields: Json) -> String {
+    let fields = match fields {
+        Json::Obj(_) => fields,
+        _ => json::obj(vec![]),
+    };
+    json::obj(vec![
+        ("dur_ns", json::num(spec.dur_ns as f64)),
+        ("fields", fields),
+        ("id", json::num(spec.id as f64)),
+        ("name", json::s(spec.name)),
+        (
+            "parent",
+            spec.parent.map(|p| json::num(p as f64)).unwrap_or(Json::Null),
+        ),
+        ("start_ns", json::num(spec.start_ns as f64)),
+        ("target", json::s(spec.target)),
+        ("type", json::s(spec.kind)),
+    ])
+    .to_string()
+}
+
+impl TraceWriter {
+    /// Create (truncate) `path` and write the header line. With
+    /// `timing = false` every `start_ns`/`dur_ns` is written as 0, so
+    /// identical runs produce byte-identical files.
+    pub fn create(path: &str, timing: bool) -> Result<Self> {
+        let file =
+            File::create(path).with_context(|| format!("creating trace file {path}"))?;
+        Ok(Self::from_boxed(Box::new(BufWriter::new(file)), timing))
+    }
+
+    /// Wrap an arbitrary writer (tests, in-memory capture).
+    pub fn from_boxed(out: Box<dyn Write + Send>, timing: bool) -> Self {
+        let w = Self {
+            inner: Mutex::new(TraceInner {
+                out,
+                next_id: 1,
+                open: Vec::new(),
+                failed: false,
+            }),
+            timing,
+            t0: Instant::now(),
+        };
+        let header = json::obj(vec![
+            ("format", json::s(TRACE_FORMAT)),
+            ("version", json::num(TRACE_VERSION as f64)),
+        ])
+        .to_string();
+        w.lock().write_line(&header);
+        w
+    }
+
+    fn lock(&self) -> MutexGuard<'_, TraceInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Are real timestamps being written?
+    pub fn timing(&self) -> bool {
+        self.timing
+    }
+
+    fn now_ns(&self) -> u64 {
+        if self.timing {
+            self.t0.elapsed().as_nanos() as u64
+        } else {
+            0
+        }
+    }
+
+    /// Write a point record. `fields` must be a JSON object (anything
+    /// else is replaced by `{}`).
+    pub fn event(&self, name: &str, target: &str, fields: Json) {
+        let start_ns = self.now_ns();
+        let mut inner = self.lock();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let spec = LineSpec {
+            kind: "event",
+            id,
+            parent: inner.open.last().copied(),
+            name,
+            target,
+            start_ns,
+            dur_ns: 0,
+        };
+        let line = render_line(&spec, fields);
+        inner.write_line(&line);
+    }
+
+    /// Open a timed region. The returned [`Span`] writes its record
+    /// when dropped; records created while it is open get it as their
+    /// `parent`.
+    #[must_use = "the span closes (and writes its line) when dropped"]
+    pub fn span(&self, name: &str, target: &str, fields: Json) -> Span<'_> {
+        let start_ns = self.now_ns();
+        let mut inner = self.lock();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let parent = inner.open.last().copied();
+        inner.open.push(id);
+        drop(inner);
+        Span {
+            writer: self,
+            id,
+            parent,
+            name: name.to_string(),
+            target: target.to_string(),
+            fields,
+            start: Instant::now(),
+            start_ns,
+        }
+    }
+
+    /// Flush buffered lines; errors out if any line was dropped.
+    pub fn finish(&self) -> Result<()> {
+        let mut inner = self.lock();
+        ensure!(!inner.failed, "trace output was truncated by an earlier write failure");
+        inner.out.flush().context("flushing trace file")?;
+        Ok(())
+    }
+}
+
+/// RAII timed region from [`TraceWriter::span`]; writes its trace line
+/// on drop.
+pub struct Span<'w> {
+    writer: &'w TraceWriter,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    target: String,
+    fields: Json,
+    start: Instant,
+    start_ns: u64,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let dur_ns = if self.writer.timing {
+            self.start.elapsed().as_nanos() as u64
+        } else {
+            0
+        };
+        let spec = LineSpec {
+            kind: "span",
+            id: self.id,
+            parent: self.parent,
+            name: &self.name,
+            target: &self.target,
+            start_ns: self.start_ns,
+            dur_ns,
+        };
+        let line = render_line(&spec, std::mem::replace(&mut self.fields, Json::Null));
+        let mut inner = self.writer.lock();
+        if let Some(pos) = inner.open.iter().rposition(|&x| x == self.id) {
+            inner.open.remove(pos);
+        }
+        inner.write_line(&line);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reading traces back: `dpquant trace check` / `trace summarize`
+// ---------------------------------------------------------------------
+
+/// What [`check`] counted in a valid trace file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Span records.
+    pub spans: u64,
+    /// Event records.
+    pub events: u64,
+}
+
+/// One row of the [`summarize`] per-target table.
+#[derive(Clone, Debug)]
+pub struct TraceSummaryRow {
+    /// The `target` field shared by the aggregated spans.
+    pub target: String,
+    /// Spans aggregated.
+    pub count: u64,
+    /// Sum of `dur_ns`.
+    pub total_ns: f64,
+    /// Mean `dur_ns`.
+    pub mean_ns: f64,
+    /// Exact 95th percentile of `dur_ns` (nearest-rank).
+    pub p95_ns: f64,
+}
+
+struct ParsedLine {
+    kind: String,
+    target: String,
+    dur_ns: f64,
+    parent: Option<u64>,
+}
+
+fn parse_record(line_no: usize, line: &str) -> Result<(u64, ParsedLine)> {
+    let j =
+        json::parse(line).map_err(|e| err!("trace line {line_no}: invalid JSON: {e}"))?;
+    let kind = match j.get("type").and_then(Json::as_str) {
+        Some(k @ ("span" | "event")) => k.to_string(),
+        Some(other) => bail!("trace line {line_no}: unknown record type {other:?}"),
+        None => bail!("trace line {line_no}: missing \"type\""),
+    };
+    let id = match j.get("id").and_then(Json::as_f64) {
+        Some(v) if v >= 1.0 => v as u64,
+        _ => bail!("trace line {line_no}: missing or non-positive \"id\""),
+    };
+    for key in ["name", "target"] {
+        match j.get(key).and_then(Json::as_str) {
+            Some(s) if !s.is_empty() => {}
+            _ => bail!("trace line {line_no}: missing or empty {key:?}"),
+        }
+    }
+    let mut ns = [0.0f64; 2];
+    for (slot, key) in ns.iter_mut().zip(["start_ns", "dur_ns"]) {
+        match j.get(key).and_then(Json::as_f64) {
+            Some(v) if v >= 0.0 => *slot = v,
+            _ => bail!("trace line {line_no}: missing or negative {key:?}"),
+        }
+    }
+    if kind == "event" && ns[1] != 0.0 {
+        bail!("trace line {line_no}: event records must have dur_ns 0");
+    }
+    let parent = match j.get("parent") {
+        Some(Json::Null) | None => None,
+        Some(p) => match p.as_f64() {
+            Some(v) if v >= 1.0 && (v as u64) < id => Some(v as u64),
+            _ => bail!("trace line {line_no}: \"parent\" must be null or an earlier id"),
+        },
+    };
+    ensure!(
+        j.get("fields").and_then(Json::as_obj).is_some(),
+        "trace line {line_no}: \"fields\" must be an object"
+    );
+    let target = j.get("target").and_then(Json::as_str).unwrap_or("").to_string();
+    Ok((
+        id,
+        ParsedLine {
+            kind,
+            target,
+            dur_ns: ns[1],
+            parent,
+        },
+    ))
+}
+
+fn read_trace(path: &str) -> Result<Vec<ParsedLine>> {
+    let file = File::open(path).with_context(|| format!("opening trace file {path}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let header = match lines.next() {
+        Some(l) => l.with_context(|| format!("reading {path}"))?,
+        None => bail!("{path}: empty file (missing dpquant-trace header)"),
+    };
+    let h =
+        json::parse(&header).map_err(|e| err!("{path}: invalid header JSON: {e}"))?;
+    ensure!(
+        h.get("format").and_then(Json::as_str) == Some(TRACE_FORMAT),
+        "{path}: header format is not {TRACE_FORMAT:?}"
+    );
+    ensure!(
+        h.get("version").and_then(Json::as_f64) == Some(TRACE_VERSION as f64),
+        "{path}: unsupported trace version (want {TRACE_VERSION})"
+    );
+    let mut records = Vec::new();
+    let mut span_ids = BTreeSet::new();
+    let mut seen_ids = BTreeSet::new();
+    for (i, line) in lines.enumerate() {
+        let line = line.with_context(|| format!("reading {path}"))?;
+        let (id, rec) = parse_record(i + 2, &line)?;
+        ensure!(seen_ids.insert(id), "trace line {}: duplicate id {id}", i + 2);
+        if rec.kind == "span" {
+            span_ids.insert(id);
+        }
+        records.push(rec);
+    }
+    for (i, rec) in records.iter().enumerate() {
+        if let Some(p) = rec.parent {
+            ensure!(
+                span_ids.contains(&p),
+                "trace line {}: parent {p} is not a span in this file",
+                i + 2
+            );
+        }
+    }
+    Ok(records)
+}
+
+/// Validate every line of `path` against the `dpquant-trace` v1
+/// schema: header first, then records with unique ids, well-typed
+/// fields, and parents that reference earlier spans.
+pub fn check(path: &str) -> Result<TraceStats> {
+    let records = read_trace(path)?;
+    let mut stats = TraceStats::default();
+    for rec in &records {
+        if rec.kind == "span" {
+            stats.spans += 1;
+        } else {
+            stats.events += 1;
+        }
+    }
+    Ok(stats)
+}
+
+/// Aggregate the spans of `path` into a per-target table, sorted by
+/// target name. Events are not aggregated (their `dur_ns` is 0 by
+/// schema); [`check`] counts them.
+pub fn summarize(path: &str) -> Result<Vec<TraceSummaryRow>> {
+    let records = read_trace(path)?;
+    let mut by_target: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+    for rec in records {
+        if rec.kind == "span" {
+            by_target.entry(rec.target).or_default().push(rec.dur_ns);
+        }
+    }
+    let mut rows = Vec::new();
+    for (target, mut durs) in by_target {
+        durs.sort_by(f64::total_cmp);
+        let n = durs.len();
+        let total: f64 = durs.iter().sum();
+        let p95_idx = ((0.95 * n as f64).ceil() as usize).clamp(1, n) - 1;
+        rows.push(TraceSummaryRow {
+            target,
+            count: n as u64,
+            total_ns: total,
+            mean_ns: total / n as f64,
+            p95_ns: durs[p95_idx],
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("dpquant_trace_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn write_sample(path: &str, timing: bool) {
+        let w = TraceWriter::create(path, timing).unwrap();
+        {
+            let _outer = w.span("epoch", "session", json::obj(vec![("epoch", json::num(0.0))]));
+            w.event("epoch_started", "session", json::obj(vec![("epoch", json::num(0.0))]));
+            {
+                let _inner = w.span("checkpoint_write", "session", json::obj(vec![]));
+            }
+        }
+        w.event("done", "session", json::obj(vec![]));
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn schema_checks_and_counts() {
+        let path = tmp("schema");
+        write_sample(&path, true);
+        let stats = check(&path).unwrap();
+        assert_eq!(stats, TraceStats { spans: 2, events: 2 });
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parents_nest_spans_and_events() {
+        let path = tmp("parents");
+        write_sample(&path, false);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].contains("\"format\":\"dpquant-trace\""), "{}", lines[0]);
+        // Write order: event(2), inner span(3), outer span(1), event(4).
+        let ev = json::parse(lines[1]).unwrap();
+        assert_eq!(ev.get("id").unwrap().as_f64(), Some(2.0));
+        assert_eq!(ev.get("parent").unwrap().as_f64(), Some(1.0));
+        let inner = json::parse(lines[2]).unwrap();
+        assert_eq!(inner.get("type").unwrap().as_str(), Some("span"));
+        assert_eq!(inner.get("parent").unwrap().as_f64(), Some(1.0));
+        let outer = json::parse(lines[3]).unwrap();
+        assert_eq!(outer.get("id").unwrap().as_f64(), Some(1.0));
+        assert!(matches!(outer.get("parent"), Some(Json::Null)));
+        let last = json::parse(lines[4]).unwrap();
+        assert!(matches!(last.get("parent"), Some(Json::Null)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zeroed_timing_is_byte_deterministic() {
+        let (a, b) = (tmp("det_a"), tmp("det_b"));
+        write_sample(&a, false);
+        write_sample(&b, false);
+        let (ta, tb) = (
+            std::fs::read_to_string(&a).unwrap(),
+            std::fs::read_to_string(&b).unwrap(),
+        );
+        assert_eq!(ta, tb);
+        assert!(!ta.lines().skip(1).any(|l| !l.contains("\"dur_ns\":0,")), "{ta}");
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn summarize_aggregates_per_target() {
+        let path = tmp("sum");
+        let w = TraceWriter::create(&path, true).unwrap();
+        for _ in 0..3 {
+            let _s = w.span("epoch", "session", json::obj(vec![]));
+        }
+        {
+            let _k = w.span("write", "checkpoint", json::obj(vec![]));
+        }
+        w.finish().unwrap();
+        let rows = summarize(&path).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].target, "checkpoint");
+        assert_eq!(rows[0].count, 1);
+        assert_eq!(rows[1].target, "session");
+        assert_eq!(rows[1].count, 3);
+        assert!(rows[1].p95_ns >= 0.0);
+        assert!(rows[1].mean_ns * 3.0 - rows[1].total_ns < 1e-6);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_rejects_malformed_files() {
+        let path = tmp("bad");
+        std::fs::write(&path, "{\"format\":\"other\"}\n").unwrap();
+        assert!(check(&path).unwrap_err().to_string().contains("format"));
+        std::fs::write(
+            &path,
+            "{\"format\":\"dpquant-trace\",\"version\":1}\n{\"type\":\"widget\"}\n",
+        )
+        .unwrap();
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -9,6 +9,7 @@
 //! | GET    | `/v1/jobs/{id}/events`  | —                   | 200 epoch-event ring |
 //! | POST   | `/v1/jobs/{id}/cancel`  | —                   | 200 `{"id", "status"}` |
 //! | GET    | `/v1/healthz`           | —                   | 200 counts + formats |
+//! | GET    | `/v1/metrics`           | —                   | 200 live metrics snapshot |
 //!
 //! Every response body is JSON; every error is `{"error": "..."}` with
 //! a 4xx status (404 unknown path/job, 405 wrong method, 400 bad id or
@@ -22,10 +23,13 @@
 
 use std::fmt::Display;
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::http::{Handler, Request, Response};
 use super::jobs::{config_from_json, CancelOutcome, JobManager};
 use crate::coordinator::session::{CHECKPOINT_FORMAT, CHECKPOINT_VERSION};
+use crate::exp::perf::{BENCH_FORMAT, BENCH_VERSION};
+use crate::obs;
 use crate::sweep::report::{REPORT_FORMAT, REPORT_VERSION};
 use crate::util::json::{self, Json};
 
@@ -38,12 +42,18 @@ pub const API_VERSION: u64 = 1;
 /// started it (the CLI keeps a handle for shutdown).
 pub struct Api {
     manager: Arc<JobManager>,
+    /// Construction instant — the daemon's uptime epoch for
+    /// `/v1/healthz` and the `/v1/metrics` jobs-per-second rate.
+    start: Instant,
 }
 
 impl Api {
     /// An API over the given job manager.
     pub fn new(manager: Arc<JobManager>) -> Self {
-        Self { manager }
+        Self {
+            manager,
+            start: Instant::now(),
+        }
     }
 
     /// Wrap into the boxed callback `http::serve` wants.
@@ -60,6 +70,10 @@ impl Api {
             ["v1", "healthz"] => match method {
                 "GET" => self.healthz(),
                 _ => method_not_allowed(method, "GET /v1/healthz"),
+            },
+            ["v1", "metrics"] => match method {
+                "GET" => self.metrics(),
+                _ => method_not_allowed(method, "GET /v1/metrics"),
             },
             ["v1", "jobs"] => match method {
                 "GET" => Response::ok(json::obj(vec![("jobs", self.manager.jobs_json())])),
@@ -156,6 +170,7 @@ impl Api {
             ("status", json::s("ok")),
             ("format", json::s(API_FORMAT)),
             ("version", json::num(API_VERSION as f64)),
+            ("uptime_seconds", json::num(self.start.elapsed().as_secs_f64())),
             ("workers", json::num(self.manager.workers() as f64)),
             ("queue_depth", json::num(c.queued as f64)),
             (
@@ -174,8 +189,48 @@ impl Api {
                     format_entry(CHECKPOINT_FORMAT, CHECKPOINT_VERSION),
                     format_entry(REPORT_FORMAT, REPORT_VERSION),
                     format_entry(API_FORMAT, API_VERSION),
+                    format_entry(BENCH_FORMAT, u64::from(BENCH_VERSION)),
+                    format_entry(obs::TRACE_FORMAT, obs::TRACE_VERSION),
+                    format_entry(obs::METRICS_FORMAT, obs::METRICS_VERSION),
                 ]),
             ),
+        ]))
+    }
+
+    /// `GET /v1/metrics`: the `dpquant-metrics` v1 document extended
+    /// with daemon-level job fields — per-status counts, throughput
+    /// since start, live queue depth, and per-job ε spend — on top of
+    /// the global registry snapshot (pool utilization, HTTP latency,
+    /// kernel timings).
+    fn metrics(&self) -> Response {
+        let c = self.manager.counts();
+        let uptime = self.start.elapsed().as_secs_f64();
+        let jobs_per_sec = if uptime > 0.0 { c.done as f64 / uptime } else { 0.0 };
+        let per_job: std::collections::BTreeMap<String, Json> = self
+            .manager
+            .epsilons()
+            .into_iter()
+            .map(|(id, eps)| (id.to_string(), json::num(eps)))
+            .collect();
+        Response::ok(json::obj(vec![
+            ("format", json::s(obs::METRICS_FORMAT)),
+            ("version", json::num(obs::METRICS_VERSION as f64)),
+            ("uptime_seconds", json::num(uptime)),
+            ("workers", json::num(self.manager.workers() as f64)),
+            ("queue_depth", json::num(self.manager.queue_depth() as f64)),
+            (
+                "jobs",
+                json::obj(vec![
+                    ("queued", json::num(c.queued as f64)),
+                    ("running", json::num(c.running as f64)),
+                    ("done", json::num(c.done as f64)),
+                    ("failed", json::num(c.failed as f64)),
+                    ("cancelled", json::num(c.cancelled as f64)),
+                ]),
+            ),
+            ("jobs_per_sec", json::num(jobs_per_sec)),
+            ("per_job_epsilon", Json::Obj(per_job)),
+            ("metrics", obs::global().to_json()),
         ]))
     }
 }
@@ -274,8 +329,33 @@ mod tests {
         assert!(names.contains(&"dpquant-trainsession"), "{names:?}");
         assert!(names.contains(&"dpquant-sweep-report"), "{names:?}");
         assert!(names.contains(&"dpquant-serve-api"), "{names:?}");
+        assert!(names.contains(&"dpquant-bench"), "{names:?}");
+        assert!(names.contains(&"dpquant-trace"), "{names:?}");
+        assert!(names.contains(&"dpquant-metrics"), "{names:?}");
+        let uptime = resp.body.get("uptime_seconds").unwrap().as_f64().unwrap();
+        assert!(uptime >= 0.0, "{uptime}");
         let jobs = resp.body.get("jobs").unwrap();
         assert_eq!(jobs.get("queued").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_the_registry_snapshot() {
+        let api = api();
+        let resp = api.handle(&req("GET", "/v1/metrics", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.body.get("format").unwrap().as_str(),
+            Some("dpquant-metrics")
+        );
+        assert_eq!(resp.body.get("version").unwrap().as_f64(), Some(1.0));
+        assert!(resp.body.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(resp.body.get("jobs").unwrap().get("done").unwrap().as_usize(), Some(0));
+        assert!(resp.body.get("per_job_epsilon").unwrap().as_obj().is_some());
+        let m = resp.body.get("metrics").unwrap();
+        assert!(m.get("counters").is_some());
+        assert!(m.get("gauges").is_some());
+        assert!(m.get("histograms").is_some());
+        assert_eq!(api.handle(&req("POST", "/v1/metrics", "")).status, 405);
     }
 
     #[test]

@@ -75,6 +75,13 @@ impl Client {
         self.get("/v1/healthz")
     }
 
+    /// `GET /v1/metrics` — the live `dpquant-metrics` v1 snapshot
+    /// (job counts/throughput, queue depth, per-job ε, and the global
+    /// pool/HTTP/kernel telemetry registry).
+    pub fn metrics(&self) -> Result<Json> {
+        self.get("/v1/metrics")
+    }
+
     /// Poll until the job reaches a terminal status; returns its final
     /// status document.
     pub fn wait(&self, id: u64, timeout: Duration, poll: Duration) -> Result<Json> {

@@ -30,6 +30,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::obs;
 use crate::util::error::{err, Context, Result};
 use crate::util::json::{self, Json};
 
@@ -411,21 +412,37 @@ fn handle_connection(stream: TcpStream, handler: &Handler) {
         Ok(w) => w,
         Err(_) => return,
     };
+    // Request-level metrics (one registry touch per request, always on):
+    // the latency histogram times the handler only — parse and socket
+    // I/O are the client's pace, not the daemon's.
+    let reg = obs::global();
+    let latency = reg.histogram_ns("http.request_ns");
+    let requests = reg.counter("http.requests");
+    let errors = reg.counter("http.errors");
     let mut reader = BufReader::new(stream);
     for _ in 0..MAX_REQUESTS_PER_CONN {
         match read_request(&mut reader) {
             Ok(None) => return, // peer closed between requests
             Ok(Some(req)) => {
+                requests.inc();
                 let close = req.wants_close();
-                let resp = catch_unwind(AssertUnwindSafe(|| handler(&req))).unwrap_or_else(|_| {
-                    Response::error(500, "internal error: request handler panicked")
-                });
+                let resp = {
+                    let _timer = latency.start_timer();
+                    catch_unwind(AssertUnwindSafe(|| handler(&req))).unwrap_or_else(|_| {
+                        Response::error(500, "internal error: request handler panicked")
+                    })
+                };
+                if resp.status >= 400 {
+                    errors.inc();
+                }
                 if write_response(&mut writer, &resp, close).is_err() || close {
                     return;
                 }
             }
             Err(e) => {
                 // Malformed input: answer with its 4xx/5xx and close.
+                requests.inc();
+                errors.inc();
                 let _ = write_response(&mut writer, &Response::error(e.status, &e.message), true);
                 return;
             }

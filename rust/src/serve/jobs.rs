@@ -205,6 +205,11 @@ impl EventRing {
         self.items.push_back(ev);
     }
 
+    /// ε spent as of the most recent epoch event, if any has arrived.
+    fn latest_epsilon(&self) -> Option<f64> {
+        self.items.back().map(|e| e.epsilon)
+    }
+
     fn to_json(&self) -> Json {
         json::obj(vec![
             ("total", json::num(self.total() as f64)),
@@ -631,6 +636,29 @@ impl JobManager {
     /// Worker-thread count (`--jobs N`).
     pub fn workers(&self) -> usize {
         self.shared.workers
+    }
+
+    /// Jobs waiting in the pool queue (excludes jobs already running).
+    pub fn queue_depth(&self) -> usize {
+        self.pool.pending()
+    }
+
+    /// Per-job privacy spend for `GET /v1/metrics`: `(id, ε)` for every
+    /// job with a signal — a finished job's summary ε, else the ε of
+    /// its most recent epoch event. Jobs that have not reported yet
+    /// (queued, or recovered without a summary) are omitted.
+    pub fn epsilons(&self) -> Vec<(u64, f64)> {
+        let jobs = self.shared.jobs.lock().unwrap();
+        jobs.values()
+            .filter_map(|j| {
+                let eps = j
+                    .summary
+                    .as_ref()
+                    .map(|s| s.final_epsilon)
+                    .or_else(|| j.events.latest_epsilon())?;
+                Some((j.id, eps))
+            })
+            .collect()
     }
 
     /// Convenience for tests/embedders: the status name of one job.

@@ -14,7 +14,10 @@
 //!   restarts and finishes every job bit-exactly);
 //! * [`api`]    — the versioned JSON endpoints (`dpquant-serve-api`
 //!   v1: `POST /v1/jobs`, `GET /v1/jobs[/{id}[/events]]`,
-//!   `POST /v1/jobs/{id}/cancel`, `GET /v1/healthz`);
+//!   `POST /v1/jobs/{id}/cancel`, `GET /v1/healthz`,
+//!   `GET /v1/metrics` — the live `dpquant-metrics` v1 snapshot:
+//!   job counts and throughput, queue depth, per-job ε spend, and the
+//!   global registry of pool/HTTP/kernel telemetry);
 //! * [`client`] — the typed client + the `dpquant job
 //!   submit|list|status|events|cancel|wait` CLI verbs.
 //!
@@ -80,6 +83,9 @@ impl Daemon {
 /// until killed.
 pub fn run_serve(args: &Args) -> Result<()> {
     let sc = ServeConfig::from_args(args)?;
+    // The daemon always feeds `GET /v1/metrics`; recording never
+    // touches job outputs (the determinism contract above).
+    crate::obs::set_kernel_timing(true);
     let daemon = Daemon::start(&sc.addr, sc.jobs, sc.state_dir.as_deref())?;
     let counts = daemon.manager.counts();
     let recovered = counts.queued + counts.running + counts.done + counts.failed + counts.cancelled;
@@ -97,7 +103,7 @@ pub fn run_serve(args: &Args) -> Result<()> {
     }
     println!(
         "API {API_FORMAT} v{API_VERSION}: POST /v1/jobs  GET /v1/jobs[/ID[/events]]  \
-         POST /v1/jobs/ID/cancel  GET /v1/healthz"
+         POST /v1/jobs/ID/cancel  GET /v1/healthz  GET /v1/metrics"
     );
     println!("submit with: dpquant job submit --addr {} [train flags]", daemon.addr());
     daemon.server.join();

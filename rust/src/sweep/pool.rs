@@ -33,7 +33,9 @@ use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
+use crate::obs;
 use crate::util::error::Result;
 
 /// A failed pool run: the index of the first failing job plus its error
@@ -134,7 +136,12 @@ fn record_failure(failure: &Mutex<Option<PoolError>>, index: usize, message: Str
 // Long-lived worker pool
 // ---------------------------------------------------------------------
 
-type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+/// A queued job plus its submission instant, so workers can report how
+/// long it waited before running (`pool.queue_wait_ns`).
+struct PoolJob {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    enqueued: Instant,
+}
 
 /// A fixed set of long-lived worker threads draining an unbounded job
 /// queue — the submit-after-start generalization of [`run_ordered`].
@@ -149,6 +156,13 @@ type PoolJob = Box<dyn FnOnce() + Send + 'static>;
 ///   Callers that want to abandon queued work cancel it at their own
 ///   layer first (the job manager's cancel flag) — the pool never drops
 ///   a job on the floor silently.
+/// * Every worker reports utilization into the global
+///   [`MetricsRegistry`](crate::obs::MetricsRegistry): per-job
+///   queue-wait and busy-time histograms (`pool.queue_wait_ns`,
+///   `pool.busy_ns`), completion/panic counters, and a cumulative
+///   per-worker busy counter (`pool.worker<i>.busy_ns`). Recording is
+///   unconditional — one registry touch per *job*, not per kernel — so
+///   `GET /v1/metrics` always has live pool data.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -176,9 +190,9 @@ impl WorkerPool {
             wake: Condvar::new(),
         });
         let workers = (0..threads.max(1))
-            .map(|_| {
+            .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || worker_loop(&shared, i))
             })
             .collect();
         Self { shared, workers }
@@ -195,7 +209,10 @@ impl WorkerPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.jobs.push_back(Box::new(job));
+            q.jobs.push_back(PoolJob {
+                run: Box::new(job),
+                enqueued: Instant::now(),
+            });
         }
         self.shared.wake.notify_one();
     }
@@ -233,7 +250,13 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, worker: usize) {
+    let reg = obs::global();
+    let queue_wait = reg.histogram_ns("pool.queue_wait_ns");
+    let busy = reg.histogram_ns("pool.busy_ns");
+    let completed = reg.counter("pool.jobs_completed");
+    let panicked = reg.counter("pool.jobs_panicked");
+    let worker_busy = reg.counter(&format!("pool.worker{worker}.busy_ns"));
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();
@@ -247,11 +270,21 @@ fn worker_loop(shared: &PoolShared) {
                 q = shared.wake.wait(q).unwrap();
             }
         };
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
-            // The job's own error channel is responsible for marking it
-            // failed; this line is the backstop so a panic is never
-            // fully silent.
-            eprintln!("worker pool: job panicked: {}", panic_text(payload));
+        queue_wait.record_duration(job.enqueued.elapsed());
+        let t0 = Instant::now();
+        let outcome = catch_unwind(AssertUnwindSafe(job.run));
+        let spent = t0.elapsed();
+        busy.record_duration(spent);
+        worker_busy.add(u64::try_from(spent.as_nanos()).unwrap_or(u64::MAX));
+        match outcome {
+            Ok(()) => completed.inc(),
+            Err(payload) => {
+                panicked.inc();
+                // The job's own error channel is responsible for marking
+                // it failed; this line is the backstop so a panic is
+                // never fully silent.
+                eprintln!("worker pool: job panicked: {}", panic_text(payload));
+            }
         }
     }
 }

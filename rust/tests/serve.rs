@@ -345,6 +345,59 @@ fn malformed_requests_get_4xx_and_daemon_keeps_serving() {
 }
 
 // ---------------------------------------------------------------------
+// GET /v1/metrics round-trips live daemon telemetry
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_endpoint_round_trips_live_counters() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let client = Client::new(&daemon.addr());
+
+    let cfg = native_cfg(5, 2);
+    let id = client.submit(&cfg).unwrap();
+    let status = client.wait(id, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("format").unwrap().as_str(), Some("dpquant-metrics"));
+    assert_eq!(m.get("version").unwrap().as_f64(), Some(1.0));
+    assert!(m.get("uptime_seconds").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(m.get("workers").unwrap().as_usize(), Some(1));
+    assert_eq!(m.get("queue_depth").unwrap().as_usize(), Some(0));
+    assert_eq!(m.get("jobs").unwrap().get("done").unwrap().as_usize(), Some(1));
+
+    // The finished job's ε spend is reported under its id, equal to the
+    // summary's final_epsilon (same f64 through the same formatter).
+    let eps = m.get("per_job_epsilon").unwrap().get("1").unwrap().as_f64().unwrap();
+    let summary_eps = status
+        .get("summary")
+        .unwrap()
+        .get("final_epsilon")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert_eq!(eps, summary_eps);
+
+    // The registry snapshot carries live pool + HTTP telemetry. The
+    // registry is process-global (other tests in this binary may have
+    // bumped it too), so assert presence and lower bounds, not exact
+    // values.
+    let reg = m.get("metrics").unwrap();
+    let counters = reg.get("counters").unwrap();
+    assert!(counters.get("pool.jobs_completed").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(counters.get("http.requests").unwrap().as_f64().unwrap() >= 1.0);
+    let hists = reg.get("histograms").unwrap();
+    assert!(hists.get("pool.busy_ns").is_some());
+    assert!(hists.get("pool.queue_wait_ns").is_some());
+    assert!(hists.get("http.request_ns").is_some());
+
+    // Serving metrics is pure observation: the job's final metrics line
+    // still diffs byte-identical against a direct run.
+    assert_eq!(final_line_from_status(&status).unwrap(), direct_final_line(&cfg));
+    daemon.stop();
+}
+
+// ---------------------------------------------------------------------
 // Cancel + events over the full stack
 // ---------------------------------------------------------------------
 
