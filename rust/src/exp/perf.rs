@@ -421,10 +421,15 @@ pub fn bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Validate a `dpquant-bench` v1 blob: format/version pins, the four
-/// numeric groups present and non-empty, the per-group required keys,
-/// and every number finite. Used by the CI `bench-json` job against
-/// both a fresh quick emit and the committed `BENCH_native.json`.
+/// Validate a `dpquant-bench` v1 blob: format/version pins, the
+/// family's numeric groups present and non-empty, the per-group
+/// required keys, and every number finite. Two families share the
+/// format: `"native"` (kernel/step timings, the default when the
+/// `family` field is absent — every pre-ledger blob) and `"serve"`
+/// (loadgen latency percentiles + admission counts, see
+/// [`crate::serve::loadgen`]). Used by the CI `bench-json` job
+/// against fresh quick emits and the committed `BENCH_native.json` /
+/// `BENCH_serve.json`.
 fn bench_check(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| err!("bench --check: cannot read {path}: {e}"))?;
@@ -437,21 +442,36 @@ fn bench_check(path: &str) -> Result<()> {
     if ver != BENCH_VERSION as f64 {
         return Err(err!("bench --check: {path}: version {ver} != {BENCH_VERSION}"));
     }
-    let required: &[(&str, &[&str])] = &[
-        ("kernels_ns", &[]),
-        (
-            "blocked_speedup",
-            &[
-                "matmul_96x256x96",
-                "matmul_256x256x256",
-                "conv3x3_forward",
-                "conv3x3_backward",
-                "dense_forward",
-            ],
-        ),
-        ("steps_per_sec", &["fp32", "luq4", "uniform4", "fp8"]),
-        ("fp32_vs_quantized", &["luq4", "uniform4", "fp8"]),
-    ];
+    let family = doc.get("family").and_then(Json::as_str).unwrap_or("native");
+    let required: &[(&str, &[&str])] = match family {
+        "native" => &[
+            ("kernels_ns", &[]),
+            (
+                "blocked_speedup",
+                &[
+                    "matmul_96x256x96",
+                    "matmul_256x256x256",
+                    "conv3x3_forward",
+                    "conv3x3_backward",
+                    "dense_forward",
+                ],
+            ),
+            ("steps_per_sec", &["fp32", "luq4", "uniform4", "fp8"]),
+            ("fp32_vs_quantized", &["luq4", "uniform4", "fp8"]),
+        ],
+        "serve" => &[
+            ("load", &["tenants", "jobs_per_tenant", "concurrency"]),
+            ("counts", &["submitted", "accepted", "rejected_budget"]),
+            ("submit_ms", &["p50", "p90", "p99"]),
+            ("wait_ms", &["p50", "p90", "p99"]),
+        ],
+        other => {
+            return Err(err!(
+                "bench --check: {path}: unknown bench family {other:?} \
+                 (this build knows \"native\" and \"serve\")"
+            ))
+        }
+    };
     let mut n_values = 0usize;
     for &(group, keys) in required {
         let obj = doc
@@ -476,6 +496,9 @@ fn bench_check(path: &str) -> Result<()> {
             n_values += 1;
         }
     }
-    println!("[bench check ok] {path}: {BENCH_FORMAT} v{BENCH_VERSION}, {n_values} finite metrics");
+    println!(
+        "[bench check ok] {path}: {BENCH_FORMAT} v{BENCH_VERSION} family {family}, \
+         {n_values} finite metrics"
+    );
     Ok(())
 }

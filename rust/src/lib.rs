@@ -78,7 +78,7 @@ pub mod xla;
 /// glance (a daemon reports the same list on `GET /v1/healthz`).
 pub fn version() -> String {
     format!(
-        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}",
+        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}",
         env!("CARGO_PKG_VERSION"),
         coordinator::session::CHECKPOINT_FORMAT,
         coordinator::session::CHECKPOINT_VERSION,
@@ -86,6 +86,8 @@ pub fn version() -> String {
         sweep::report::REPORT_VERSION,
         serve::api::API_FORMAT,
         serve::api::API_VERSION,
+        serve::ledger::LEDGER_FORMAT,
+        serve::ledger::LEDGER_VERSION,
         exp::perf::BENCH_FORMAT,
         exp::perf::BENCH_VERSION,
         obs::TRACE_FORMAT,
@@ -105,6 +107,7 @@ mod tests {
         assert!(v.contains("dpquant-trainsession v1"), "{v}");
         assert!(v.contains("dpquant-sweep-report v1"), "{v}");
         assert!(v.contains("dpquant-serve-api v1"), "{v}");
+        assert!(v.contains("dpquant-serve-ledger v1"), "{v}");
         assert!(v.contains("dpquant-bench v1"), "{v}");
         assert!(v.contains("dpquant-trace v1"), "{v}");
         assert!(v.contains("dpquant-metrics v1"), "{v}");

@@ -36,7 +36,24 @@
 //!                      in-flight job bit-exactly)
 //!   job              — client verbs against a running daemon:
 //!                      `submit|list|status|events|cancel|wait`
-//!                      (`--addr`, default 127.0.0.1:8117)
+//!                      (`--addr`, default 127.0.0.1:8117); `submit
+//!                      --tenant ID` charges the job to a ledger tenant
+//!   tenant           — budget-ledger verbs against a running daemon:
+//!                      `create ID --budget-epsilon EPS [--delta D]`,
+//!                      `list`, `status ID` (remaining ε printed at
+//!                      full precision so scripts can diff it across a
+//!                      daemon restart)
+//!   cost             — predict a config's privacy cost *without
+//!                      training*: the composed (ε, α) the ledger will
+//!                      reserve for it, the training-only ε, and the
+//!                      analysis overhead (same `--key` surface as
+//!                      train)
+//!   loadgen          — loopback load generator: N tenants × M jobs
+//!                      against an embedded daemon (budgets sized so
+//!                      ~half the jobs hit 403), reporting accept/reject
+//!                      counts and submit/wait latency percentiles as a
+//!                      `dpquant-bench` "serve"-family JSON
+//!                      (BENCH_serve.json, `--check`-validatable)
 //!   trace            — trace-file utilities: `trace check PATH`
 //!                      validates every line against the
 //!                      `dpquant-trace` v1 schema, `trace summarize
@@ -123,6 +140,9 @@ const COMMANDS: &[&str] = &[
     "sweep",
     "serve",
     "job",
+    "tenant",
+    "cost",
+    "loadgen",
     "trace",
     "version",
     "bench-step",
@@ -209,6 +229,18 @@ fn dispatch(args: &Args) -> Result<()> {
             // accepts the full train-config surface, the others don't.
             dpquant::serve::client::run(args)
         }
+        Some("tenant") => {
+            // Per-verb option validation happens inside run_tenant.
+            dpquant::serve::client::run_tenant(args)
+        }
+        Some("cost") => {
+            args.require_known("cost", CONFIG_OPTS, &["no-ema"])?;
+            cmd_cost(args)
+        }
+        Some("loadgen") => {
+            // Option validation happens inside run_loadgen.
+            dpquant::serve::loadgen::run_loadgen(args)
+        }
         Some("trace") => {
             args.require_known("trace", &[], &[])?;
             cmd_trace(args)
@@ -230,8 +262,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some(other) => Err(dpquant::cli::unknown_command_error("command", other, COMMANDS).into()),
         None => {
             println!(
-                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|trace|\
-                 version|bench-step|bench> [flags]\n\
+                "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|tenant|\
+                 cost|loadgen|trace|version|bench-step|bench> [flags]\n\
                  model-executing commands take --backend native|pjrt|mock (default: native)"
             );
             Ok(())
@@ -561,6 +593,37 @@ fn cmd_accountant(args: &Args) -> Result<()> {
         .collect();
     let (eps_train, _) = rdp_to_epsilon(&alphas, &curve, delta);
     println!("training-only epsilon = {eps_train:.4}");
+    Ok(())
+}
+
+/// `dpquant cost [--key value ...]` — predict the privacy cost the
+/// ledger would reserve for this config, without training anything.
+/// Pure arithmetic over the config ([`dpquant::serve::ledger::schedule_cost`]
+/// → [`RdpAccountant::predict`]), so the printed composed ε is exactly
+/// the estimate a `POST /v1/jobs` admission check uses.
+fn cmd_cost(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let cost = dpquant::serve::ledger::schedule_cost(&cfg);
+    println!(
+        "schedule: {} training steps (q={}, sigma={}), {} analysis steps (q={}, sigma={})",
+        cost.train_steps,
+        cost.sample_rate,
+        cost.noise_multiplier,
+        cost.analysis_steps,
+        cost.analysis_rate,
+        cost.analysis_sigma
+    );
+    println!(
+        "composed epsilon = {} at alpha = {} (delta = {})",
+        cost.epsilon, cost.alpha, cost.delta
+    );
+    println!("training-only epsilon = {}", cost.train_epsilon);
+    if cost.epsilon > 0.0 {
+        println!(
+            "analysis overhead = {:.4}% of the composed budget",
+            (cost.epsilon - cost.train_epsilon) / cost.epsilon * 100.0
+        );
+    }
     Ok(())
 }
 

@@ -171,6 +171,40 @@ impl RdpAccountant {
         ((total - train_only) / total).max(0.0)
     }
 
+    /// Const-input cost estimator: the `(ε, best α)` a fresh accountant
+    /// would report after composing `train_steps` training SGM steps at
+    /// `(sample_rate, noise_multiplier)` with `analysis_steps` analysis
+    /// SGM steps at `(analysis_rate, analysis_sigma)`, converted at
+    /// `delta` — the same math [`RdpAccountant::epsilon`] composes on a
+    /// live run. Builds a scratch accountant internally, so callers
+    /// (the serve ledger's admission check, `dpquant cost`) can quote a
+    /// job's cost without mutating — or even owning — a live one. The
+    /// analysis block carries its own rate and σ because the live path
+    /// probes at `analysis_samples/|D|` with `σ_measure`, not the
+    /// training rate/σ (paper Fig. 3).
+    ///
+    /// Note on bit-level agreement: a live run *interleaves* training
+    /// and analysis records, while `predict` composes two homogeneous
+    /// blocks. RDP addition is exact per record, so the predicted ε is
+    /// the correct composed value for those step counts, but it is an
+    /// *estimate* of a live run (which may also skip empty Poisson
+    /// probes); reconciliation against actual spend uses the run's real
+    /// history, not this function.
+    pub fn predict(
+        sample_rate: f64,
+        noise_multiplier: f64,
+        train_steps: u64,
+        analysis_rate: f64,
+        analysis_sigma: f64,
+        analysis_steps: u64,
+        delta: f64,
+    ) -> (f64, f64) {
+        let mut scratch = Self::new();
+        scratch.record(Mechanism::Training, sample_rate, noise_multiplier, train_steps);
+        scratch.record(Mechanism::Analysis, analysis_rate, analysis_sigma, analysis_steps);
+        scratch.epsilon(delta)
+    }
+
     /// Total recorded steps per mechanism.
     pub fn steps_of(&self, mechanism: Mechanism) -> u64 {
         self.history
@@ -256,6 +290,38 @@ mod tests {
         // subadditive-ish) and ≥ each part.
         assert!(etot >= et.max(ea));
         assert!(etot <= et + ea + 1e-9);
+    }
+
+    #[test]
+    fn predict_matches_a_live_block_composition_bitwise() {
+        // predict() is defined as "what a fresh accountant would say
+        // after recording the same two blocks" — hold it to that
+        // bit-for-bit, since the serve ledger's admission math and
+        // `GET /v1/tenants/{id}` both ride on it.
+        let (eps, alpha) = RdpAccountant::predict(0.02, 1.1, 300, 0.004, 0.5, 6, 1e-5);
+        let mut acc = RdpAccountant::new();
+        acc.step_training(0.02, 1.1, 300);
+        for _ in 0..6 {
+            acc.step_analysis(0.004, 0.5);
+        }
+        let (eps_live, alpha_live) = acc.epsilon(1e-5);
+        assert_eq!(eps.to_bits(), eps_live.to_bits());
+        assert_eq!(alpha.to_bits(), alpha_live.to_bits());
+    }
+
+    #[test]
+    fn predict_handles_degenerate_blocks() {
+        // Zero analysis steps: pure training cost, identical to a
+        // training-only accountant.
+        let (eps, _) = RdpAccountant::predict(0.02, 1.0, 500, 0.01, 0.5, 0, 1e-5);
+        let mut acc = RdpAccountant::new();
+        acc.step_training(0.02, 1.0, 500);
+        assert_eq!(eps.to_bits(), acc.epsilon(1e-5).0.to_bits());
+        // More steps cost more ε (monotone in both blocks).
+        let (more, _) = RdpAccountant::predict(0.02, 1.0, 1000, 0.01, 0.5, 0, 1e-5);
+        assert!(more > eps);
+        let (with_analysis, _) = RdpAccountant::predict(0.02, 1.0, 500, 0.01, 0.5, 10, 1e-5);
+        assert!(with_analysis > eps);
     }
 
     #[test]

@@ -3,19 +3,29 @@
 //!
 //! | Method | Path                    | Body                | Reply |
 //! |--------|-------------------------|---------------------|-------|
-//! | POST   | `/v1/jobs`              | `{"config": {...}}` | 201 `{"id", "status"}` |
+//! | POST   | `/v1/jobs`              | `{"config": {...}, "tenant": ...?}` | 201 `{"id", "status"}` |
 //! | GET    | `/v1/jobs`              | —                   | 200 `{"jobs": [...]}` |
 //! | GET    | `/v1/jobs/{id}`         | —                   | 200 full status |
 //! | GET    | `/v1/jobs/{id}/events`  | —                   | 200 epoch-event ring |
 //! | POST   | `/v1/jobs/{id}/cancel`  | —                   | 200 `{"id", "status"}` |
+//! | POST   | `/v1/tenants`           | `{"id", "budget_epsilon", "delta"?}` | 201 tenant status |
+//! | GET    | `/v1/tenants`           | —                   | 200 `{"tenants": [...]}` |
+//! | GET    | `/v1/tenants/{id}`      | —                   | 200 tenant status |
 //! | GET    | `/v1/healthz`           | —                   | 200 counts + formats |
 //! | GET    | `/v1/metrics`           | —                   | 200 live metrics snapshot |
 //!
 //! Every response body is JSON; every error is `{"error": "..."}` with
-//! a 4xx status (404 unknown path/job, 405 wrong method, 400 bad id or
-//! body, 409 cancel on a finished job). The `config` object uses the
-//! `[train]`-section keys (see [`config_from_json`]); unknown keys are
-//! 400s with a did-you-mean, mirroring the CLI.
+//! a 4xx status (404 unknown path/job/tenant, 405 wrong method, 400 bad
+//! id or body, 409 cancel on a finished job or duplicate tenant). The
+//! `config` object uses the `[train]`-section keys (see
+//! [`config_from_json`]); unknown keys are 400s with a did-you-mean,
+//! mirroring the CLI.
+//!
+//! A submit naming a `tenant` goes through budget admission (DESIGN.md
+//! §15); refusal is a **403** `{"error": "budget_exhausted",
+//! "remaining_epsilon", "estimated_epsilon", "tenant"}` whose
+//! `remaining_epsilon` is bit-identical to `GET /v1/tenants/{id}`'s
+//! (same ledger function, shortest-round-trip float formatting).
 //!
 //! `/v1/healthz` doubles as the compatibility probe: it reports the API
 //! format/version plus the on-disk format versions this daemon speaks,
@@ -26,7 +36,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::http::{Handler, Request, Response};
-use super::jobs::{config_from_json, CancelOutcome, JobManager};
+use super::jobs::{config_from_json, CancelOutcome, JobManager, SubmitError};
+use super::ledger::{CreateError, LEDGER_FORMAT, LEDGER_VERSION};
 use crate::coordinator::session::{CHECKPOINT_FORMAT, CHECKPOINT_VERSION};
 use crate::exp::perf::{BENCH_FORMAT, BENCH_VERSION};
 use crate::obs;
@@ -109,6 +120,28 @@ impl Api {
                     _ => method_not_allowed(method, "GET /v1/jobs/{id}/events"),
                 }
             }
+            ["v1", "tenants"] => match method {
+                "GET" => Response::ok(json::obj(vec![(
+                    "tenants",
+                    Json::Arr(
+                        self.manager
+                            .ledger()
+                            .tenants()
+                            .iter()
+                            .map(|d| d.to_json())
+                            .collect(),
+                    ),
+                )])),
+                "POST" => self.create_tenant(req),
+                _ => method_not_allowed(method, "GET or POST /v1/tenants"),
+            },
+            ["v1", "tenants", id] => match method {
+                "GET" => match self.manager.ledger().status(id) {
+                    Some(doc) => Response::ok(doc.to_json()),
+                    None => Response::error(404, format!("no such tenant '{id}'")),
+                },
+                _ => method_not_allowed(method, "GET /v1/tenants/{id}"),
+            },
             ["v1", "jobs", id, "cancel"] => {
                 let Some(id) = parse_id(id) else {
                     return bad_id(id);
@@ -152,7 +185,14 @@ impl Api {
             Ok(c) => c,
             Err(e) => return Response::error(400, format!("bad config: {e:#}")),
         };
-        match self.manager.submit(cfg) {
+        let tenant = match body.get("tenant") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(t)) => Some(t.as_str()),
+            Some(_) => {
+                return Response::error(400, "'tenant' must be a string (a tenant id) or null")
+            }
+        };
+        match self.manager.submit(cfg, tenant) {
             Ok(id) => Response {
                 status: 201,
                 body: json::obj(vec![
@@ -160,7 +200,59 @@ impl Api {
                     ("status", json::s("queued")),
                 ]),
             },
-            Err(e) => Response::error(400, format!("rejected: {e:#}")),
+            Err(SubmitError::Invalid(e)) => Response::error(400, format!("rejected: {e:#}")),
+            Err(SubmitError::UnknownTenant(t)) => {
+                Response::error(404, format!("no such tenant '{t}'"))
+            }
+            // The 403 body is structured, not a plain message: clients
+            // (and the loadgen) read `remaining_epsilon` off it, and it
+            // must match the tenant status document bit-for-bit.
+            Err(SubmitError::Exhausted {
+                tenant,
+                remaining_epsilon,
+                estimated_epsilon,
+            }) => Response {
+                status: 403,
+                body: json::obj(vec![
+                    ("error", json::s("budget_exhausted")),
+                    ("tenant", json::s(&tenant)),
+                    ("remaining_epsilon", json::num(remaining_epsilon)),
+                    ("estimated_epsilon", json::num(estimated_epsilon)),
+                ]),
+            },
+        }
+    }
+
+    /// `POST /v1/tenants` `{"id": ..., "budget_epsilon": ..., "delta":
+    /// ...?}` (δ defaults to the training default 1e-5).
+    fn create_tenant(&self, req: &Request) -> Response {
+        let body = match req.body_json() {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, format!("malformed JSON body: {e}")),
+        };
+        let Some(id) = body.get("id").and_then(Json::as_str) else {
+            return Response::error(
+                400,
+                "body must be {\"id\": \"...\", \"budget_epsilon\": N, \"delta\": N?}",
+            );
+        };
+        let Some(budget) = body.get("budget_epsilon").and_then(Json::as_f64) else {
+            return Response::error(400, "'budget_epsilon' must be a number");
+        };
+        let delta = match body.get("delta") {
+            None | Some(Json::Null) => crate::config::TrainConfig::default().delta,
+            Some(v) => match v.as_f64() {
+                Some(d) => d,
+                None => return Response::error(400, "'delta' must be a number"),
+            },
+        };
+        match self.manager.ledger().create_tenant(id, budget, delta) {
+            Ok(doc) => Response {
+                status: 201,
+                body: doc.to_json(),
+            },
+            Err(e @ CreateError::Invalid(_)) => Response::error(400, e.to_string()),
+            Err(e @ CreateError::Exists(_)) => Response::error(409, e.to_string()),
         }
     }
 
@@ -192,6 +284,7 @@ impl Api {
                     format_entry(BENCH_FORMAT, u64::from(BENCH_VERSION)),
                     format_entry(obs::TRACE_FORMAT, obs::TRACE_VERSION),
                     format_entry(obs::METRICS_FORMAT, obs::METRICS_VERSION),
+                    format_entry(LEDGER_FORMAT, LEDGER_VERSION),
                 ]),
             ),
         ]))
@@ -230,6 +323,7 @@ impl Api {
             ),
             ("jobs_per_sec", json::num(jobs_per_sec)),
             ("per_job_epsilon", Json::Obj(per_job)),
+            ("per_tenant", self.manager.ledger().metrics_json()),
             ("metrics", obs::global().to_json()),
         ]))
     }
@@ -332,6 +426,7 @@ mod tests {
         assert!(names.contains(&"dpquant-bench"), "{names:?}");
         assert!(names.contains(&"dpquant-trace"), "{names:?}");
         assert!(names.contains(&"dpquant-metrics"), "{names:?}");
+        assert!(names.contains(&"dpquant-serve-ledger"), "{names:?}");
         let uptime = resp.body.get("uptime_seconds").unwrap().as_f64().unwrap();
         assert!(uptime >= 0.0, "{uptime}");
         let jobs = resp.body.get("jobs").unwrap();
@@ -351,6 +446,7 @@ mod tests {
         assert!(resp.body.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(resp.body.get("jobs").unwrap().get("done").unwrap().as_usize(), Some(0));
         assert!(resp.body.get("per_job_epsilon").unwrap().as_obj().is_some());
+        assert!(resp.body.get("per_tenant").unwrap().as_obj().is_some());
         let m = resp.body.get("metrics").unwrap();
         assert!(m.get("counters").is_some());
         assert!(m.get("gauges").is_some());
@@ -391,5 +487,72 @@ mod tests {
         // Cancelling a finished job is a 409, not a crash.
         let c = api.handle(&req("POST", "/v1/jobs/1/cancel", ""));
         assert_eq!(c.status, 409);
+    }
+
+    #[test]
+    fn tenant_endpoints_create_list_status_and_reject() {
+        let api = api();
+        // Bad bodies.
+        assert_eq!(api.handle(&req("POST", "/v1/tenants", "nope")).status, 400);
+        assert_eq!(api.handle(&req("POST", "/v1/tenants", "{}")).status, 400);
+        let e = api.handle(&req(
+            "POST",
+            "/v1/tenants",
+            r#"{"id": "bad/slash", "budget_epsilon": 2}"#,
+        ));
+        assert_eq!(e.status, 400);
+        // Create, duplicate, list, status.
+        let c = api.handle(&req(
+            "POST",
+            "/v1/tenants",
+            r#"{"id": "acme", "budget_epsilon": 2.5}"#,
+        ));
+        assert_eq!(c.status, 201, "{}", c.body.to_string());
+        assert_eq!(c.body.get("remaining_epsilon").unwrap().as_f64(), Some(2.5));
+        let dup = api.handle(&req(
+            "POST",
+            "/v1/tenants",
+            r#"{"id": "acme", "budget_epsilon": 1}"#,
+        ));
+        assert_eq!(dup.status, 409);
+        let list = api.handle(&req("GET", "/v1/tenants", ""));
+        assert_eq!(list.body.get("tenants").unwrap().as_arr().unwrap().len(), 1);
+        let s = api.handle(&req("GET", "/v1/tenants/acme", ""));
+        assert_eq!(s.status, 200);
+        assert_eq!(s.body.get("delta").unwrap().as_f64(), Some(1e-5));
+        assert_eq!(api.handle(&req("GET", "/v1/tenants/ghost", "")).status, 404);
+        assert_eq!(api.handle(&req("DELETE", "/v1/tenants/acme", "")).status, 405);
+    }
+
+    #[test]
+    fn exhausted_submit_403_matches_tenant_status_bitwise() {
+        let api = api();
+        // A budget far below one tiny job's estimate: first tenant
+        // submit must be refused.
+        let c = api.handle(&req(
+            "POST",
+            "/v1/tenants",
+            r#"{"id": "tiny", "budget_epsilon": 1e-6}"#,
+        ));
+        assert_eq!(c.status, 201);
+        let submit_body = r#"{"tenant": "tiny", "config": {"backend": "mock",
+            "dataset_size": 96, "val_size": 32, "batch_size": 16,
+            "physical_batch": 32, "epochs": 2}}"#;
+        let resp = api.handle(&req("POST", "/v1/jobs", submit_body));
+        assert_eq!(resp.status, 403, "{}", resp.body.to_string());
+        assert_eq!(
+            resp.body.get("error").unwrap().as_str(),
+            Some("budget_exhausted")
+        );
+        let rejected_remaining = resp.body.get("remaining_epsilon").unwrap().as_f64().unwrap();
+        let status = api.handle(&req("GET", "/v1/tenants/tiny", ""));
+        let status_remaining = status.body.get("remaining_epsilon").unwrap().as_f64().unwrap();
+        assert_eq!(rejected_remaining.to_bits(), status_remaining.to_bits());
+        // Unknown tenants are 404, not 403.
+        let ghost = submit_body.replace("tiny", "ghost");
+        assert_eq!(api.handle(&req("POST", "/v1/jobs", &ghost)).status, 404);
+        // And a non-string tenant field is a 400.
+        let bad = submit_body.replace("\"tiny\"", "7");
+        assert_eq!(api.handle(&req("POST", "/v1/jobs", &bad)).status, 400);
     }
 }

@@ -1,7 +1,8 @@
 //! Client half of the serving story: a typed [`Client`] over
 //! [`http::http_call`](super::http::http_call) plus the `dpquant job`
-//! CLI verbs (`submit | list | status | events | cancel | wait`), so CI
-//! and operators drive the daemon with the same binary — no curl.
+//! CLI verbs (`submit | list | status | events | cancel | wait`) and
+//! the `dpquant tenant` verbs (`create | list | status`), so CI and
+//! operators drive the daemon with the same binary — no curl.
 //!
 //! `job status`/`job wait` rebuild the daemon's summary into the exact
 //! `final:` line `dpquant train` prints (one shared formatter,
@@ -40,14 +41,46 @@ impl Client {
         expect_2xx(http_call(&self.addr, "POST", path, body)?)
     }
 
-    /// Submit a config; returns the assigned job id.
+    /// Submit a config anonymously; returns the assigned job id.
     pub fn submit(&self, cfg: &TrainConfig) -> Result<u64> {
-        let body = json::obj(vec![("config", config_to_json(cfg))]);
+        self.submit_as(cfg, None)
+    }
+
+    /// Submit a config, optionally on a tenant's budget. A budget
+    /// refusal surfaces as an error carrying the daemon's 403 message
+    /// (use raw [`http_call`] to read the structured body).
+    pub fn submit_as(&self, cfg: &TrainConfig, tenant: Option<&str>) -> Result<u64> {
+        let mut fields = vec![("config", config_to_json(cfg))];
+        if let Some(t) = tenant {
+            fields.push(("tenant", json::s(t)));
+        }
+        let body = json::obj(fields);
         let resp = self.post("/v1/jobs", Some(&body))?;
         resp.get("id")
             .and_then(Json::as_usize)
             .map(|id| id as u64)
             .ok_or_else(|| err!("daemon accepted the job but sent no id: {resp}"))
+    }
+
+    /// `POST /v1/tenants` — create a tenant with a lifetime (ε, δ)
+    /// budget; returns its status document.
+    pub fn create_tenant(&self, id: &str, budget_epsilon: f64, delta: f64) -> Result<Json> {
+        let body = json::obj(vec![
+            ("id", json::s(id)),
+            ("budget_epsilon", json::num(budget_epsilon)),
+            ("delta", json::num(delta)),
+        ]);
+        self.post("/v1/tenants", Some(&body))
+    }
+
+    /// `GET /v1/tenants` — every tenant's status document.
+    pub fn tenants(&self) -> Result<Json> {
+        self.get("/v1/tenants")
+    }
+
+    /// `GET /v1/tenants/{id}` — one tenant's status document.
+    pub fn tenant_status(&self, id: &str) -> Result<Json> {
+        self.get(&format!("/v1/tenants/{id}"))
     }
 
     /// `GET /v1/jobs` — every job, one summary row each.
@@ -140,7 +173,11 @@ const JOB_SUBCOMMANDS: &[&str] = &["submit", "list", "status", "events", "cancel
 
 const USAGE: &str = "\
 usage: dpquant job <submit|list|status|events|cancel|wait> [--addr HOST:PORT]
-  submit [train flags / --config file]   validate + enqueue a job, print its id
+  submit [train flags / --config file] [--tenant ID]
+                                         validate + enqueue a job, print its id
+                                         (--tenant: charge the job to that
+                                          tenant's budget; refused when it
+                                          can't cover the estimated ε)
   list                                   all jobs, one row each
   status <id>                            full status (+ final metrics when done)
   events <id>                            the job's epoch-progress ring buffer
@@ -162,10 +199,15 @@ pub fn run(args: &Args) -> Result<()> {
         "submit" => {
             let mut opts: Vec<&str> = CONFIG_ARG_KEYS.to_vec();
             opts.push("addr");
+            opts.push("tenant");
             args.require_known("job submit", &opts, &["no-ema"])?;
             let cfg = TrainConfig::from_args(args)?;
-            let id = client.submit(&cfg)?;
-            println!("submitted job {id} (status queued)");
+            let tenant = args.get("tenant");
+            let id = client.submit_as(&cfg, tenant)?;
+            match tenant {
+                Some(t) => println!("submitted job {id} for tenant {t} (status queued)"),
+                None => println!("submitted job {id} (status queued)"),
+            }
             println!("  follow with: dpquant job status {id} --addr {addr}");
             Ok(())
         }
@@ -242,6 +284,125 @@ pub fn run(args: &Args) -> Result<()> {
         }
         other => Err(cli::unknown_command_error("job subcommand", other, JOB_SUBCOMMANDS).into()),
     }
+}
+
+const TENANT_SUBCOMMANDS: &[&str] = &["create", "list", "status"];
+
+const TENANT_USAGE: &str = "\
+usage: dpquant tenant <create|list|status> [--addr HOST:PORT]
+  create <id> --budget-epsilon EPS [--delta D]   create a tenant with a lifetime
+                                                 (ε, δ) budget (δ default 1e-5)
+  list                                           every tenant: budget/spent/remaining
+  status <id>                                    one tenant's full budget document
+estimate a job's ε cost before spending: dpquant cost [train flags]";
+
+/// `dpquant tenant <verb>` entry point (dispatched from `main.rs`).
+pub fn run_tenant(args: &Args) -> Result<()> {
+    let Some(sub) = args.subcommand() else {
+        println!("{TENANT_USAGE}");
+        return Ok(());
+    };
+    let addr = args
+        .get("addr")
+        .map(str::to_string)
+        .unwrap_or_else(|| ServeConfig::default().addr);
+    let client = Client::new(&addr);
+    match sub {
+        "create" => {
+            args.require_known("tenant create", &["addr", "budget-epsilon", "delta"], &[])?;
+            let id = positional_tenant(args, "tenant create")?;
+            let budget: f64 = args
+                .get("budget-epsilon")
+                .ok_or_else(|| err!("'tenant create' needs --budget-epsilon EPS"))?
+                .parse()
+                .map_err(|_| err!("--budget-epsilon must be a number"))?;
+            let delta = args.f64_or("delta", TrainConfig::default().delta)?;
+            let doc = client.create_tenant(id, budget, delta)?;
+            println!("created tenant {id} (budget ε = {budget}, δ = {delta})");
+            print_tenant(&doc);
+            Ok(())
+        }
+        "list" => {
+            args.require_known("tenant list", &["addr"], &[])?;
+            let resp = client.tenants()?;
+            let rows = resp
+                .get("tenants")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err!("daemon sent no tenant list: {resp}"))?;
+            let mut t = Table::new(&[
+                "tenant", "budget_eps", "spent_eps", "reserved_eps", "remaining_eps", "jobs",
+            ]);
+            for r in rows {
+                t.row(vec![
+                    fmt_str(r, "id"),
+                    fmt_eps(r, "budget_epsilon"),
+                    fmt_eps(r, "spent_epsilon"),
+                    fmt_eps(r, "reserved_epsilon"),
+                    fmt_eps(r, "remaining_epsilon"),
+                    fmt_num(r, "debited_jobs"),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "status" => {
+            args.require_known("tenant status", &["addr"], &[])?;
+            let id = positional_tenant(args, "tenant status")?;
+            let doc = client.tenant_status(id)?;
+            print_tenant(&doc);
+            Ok(())
+        }
+        other => {
+            Err(cli::unknown_command_error("tenant subcommand", other, TENANT_SUBCOMMANDS).into())
+        }
+    }
+}
+
+fn positional_tenant<'a>(args: &'a Args, what: &str) -> Result<&'a str> {
+    let ids: Vec<&String> = args.positional.iter().skip(2).collect();
+    match ids.as_slice() {
+        [one] => Ok(one.as_str()),
+        [] => Err(err!("'{what}' needs a tenant id (see `dpquant tenant`)")),
+        _ => Err(err!("'{what}' takes exactly one tenant id")),
+    }
+}
+
+/// Render a tenant status document. The ε lines use Rust's default
+/// (shortest-round-trip) float formatting on purpose: scripts diffing
+/// remaining budget across a daemon restart need every bit.
+fn print_tenant(doc: &Json) {
+    let f = |key: &str| {
+        doc.get(key)
+            .and_then(Json::as_f64)
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| "?".into())
+    };
+    println!(
+        "tenant {}: budget ε = {} at δ = {}",
+        doc.get("id").and_then(Json::as_str).unwrap_or("?"),
+        f("budget_epsilon"),
+        f("delta"),
+    );
+    println!(
+        "  spent ε     = {}  ({} jobs debited)",
+        f("spent_epsilon"),
+        fmt_num(doc, "debited_jobs")
+    );
+    println!(
+        "  reserved ε  = {}  ({} open reservations)",
+        f("reserved_epsilon"),
+        fmt_num(doc, "open_reservations")
+    );
+    println!("  remaining ε = {}", f("remaining_epsilon"));
+}
+
+/// Short fixed-precision ε for table cells (full precision lives in
+/// `tenant status`).
+fn fmt_eps(j: &Json, key: &str) -> String {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|v| format!("{v:.4}"))
+        .unwrap_or_else(|| "?".into())
 }
 
 fn positional_ids(args: &Args, what: &str) -> Result<Vec<u64>> {
@@ -373,5 +534,18 @@ mod tests {
         assert!(positional_id(&args, "job status").is_err());
         let args = Args::parse("job status 1 2".split_whitespace().map(String::from)).unwrap();
         assert!(positional_id(&args, "job status").is_err());
+    }
+
+    #[test]
+    fn positional_tenant_parses_and_rejects() {
+        let args =
+            Args::parse("tenant status acme --addr x".split_whitespace().map(String::from))
+                .unwrap();
+        assert_eq!(positional_tenant(&args, "tenant status").unwrap(), "acme");
+        let args = Args::parse("tenant list".split_whitespace().map(String::from)).unwrap();
+        assert!(positional_tenant(&args, "tenant status").is_err());
+        let args =
+            Args::parse("tenant status a b".split_whitespace().map(String::from)).unwrap();
+        assert!(positional_tenant(&args, "tenant status").is_err());
     }
 }

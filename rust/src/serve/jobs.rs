@@ -14,6 +14,26 @@
 //! config, byte-identical to `DPQUANT_THREADS=1 dpquant train` with the
 //! same flags and independent of how many jobs run concurrently.
 //!
+//! **Tenancy.** A submit may name a tenant; admission then goes through
+//! the [`BudgetLedger`](super::ledger::BudgetLedger): the job's
+//! estimated RDP cost is *reserved* against the tenant's lifetime
+//! (ε, δ) budget (rejected with [`SubmitError::Exhausted`] when it
+//! doesn't fit), the *actual* accountant history is debited on
+//! successful completion, and cancel/failure/panic refunds the
+//! reservation. Every refusal path bumps a
+//! `serve.jobs_rejected.<reason>` counter (`validation`, `backend`,
+//! `tenant`, `budget`) so `/v1/metrics` distinguishes causes.
+//!
+//! **Fairness.** Workers do not pop job ids directly: each submit puts
+//! one *ticket* on the pool and the job id on its tenant's queue; a
+//! ticket pops the next id **round-robin across tenants** with queued
+//! work (anonymous jobs form one tenant-like bucket). One tenant
+//! dumping 100 jobs cannot starve another's next submit behind them —
+//! with queued work from k tenants, each gets every k-th worker slot.
+//! Tickets and queue entries stay 1:1 by construction; a
+//! cancelled-while-queued job's ticket pops it and no-ops on the status
+//! check.
+//!
 //! **Observability.** The session's [`TrainEvent`] stream drains into a
 //! per-job ring buffer of epoch progress ([`EVENT_RING_CAP`] entries;
 //! older entries drop off, the `dropped` counter says how many). The
@@ -48,9 +68,13 @@ use crate::coordinator::session::validate_config;
 use crate::coordinator::{Checkpoint, EpochOutcome, EventSink, TrainEvent, TrainSession};
 use crate::data;
 use crate::metrics::RunRecord;
+use crate::obs;
+use crate::privacy::StepRecord;
 use crate::sweep::pool::{panic_text, WorkerPool};
-use crate::util::error::{ensure, err, Context, Result};
+use crate::util::error::{ensure, err, Context, Error, Result};
 use crate::util::json::{self, Json};
+
+use super::ledger::{AdmitError, BudgetLedger};
 
 /// On-disk job-manifest format tag (`job-<id>.json` in the state dir).
 pub const MANIFEST_FORMAT: &str = "dpquant-serve-job";
@@ -240,6 +264,9 @@ impl EventRing {
 struct Job {
     id: u64,
     cfg: TrainConfig,
+    /// Owning tenant, if the submit named one (`None` = anonymous:
+    /// unmetered, admitted without a ledger check).
+    tenant: Option<String>,
     status: JobStatus,
     epochs_completed: usize,
     error: Option<String>,
@@ -255,6 +282,7 @@ impl Job {
         Self {
             id,
             cfg,
+            tenant: None,
             status: JobStatus::Queued,
             epochs_completed: 0,
             error: None,
@@ -270,6 +298,10 @@ impl Job {
         json::obj(vec![
             ("id", json::num(self.id as f64)),
             ("status", json::s(self.status.name())),
+            (
+                "tenant",
+                self.tenant.as_deref().map(json::s).unwrap_or(Json::Null),
+            ),
             ("recovered", Json::Bool(self.recovered)),
             ("epochs_completed", json::num(self.epochs_completed as f64)),
             ("epochs_target", json::num(self.cfg.epochs as f64)),
@@ -290,6 +322,10 @@ impl Job {
         json::obj(vec![
             ("id", json::num(self.id as f64)),
             ("status", json::s(self.status.name())),
+            (
+                "tenant",
+                self.tenant.as_deref().map(json::s).unwrap_or(Json::Null),
+            ),
             ("model", json::s(&self.cfg.model)),
             ("dataset", json::s(&self.cfg.dataset)),
             ("scheduler", json::s(&self.cfg.scheduler)),
@@ -309,6 +345,10 @@ impl Job {
             ("version", json::num(MANIFEST_VERSION as f64)),
             ("id", json::num(self.id as f64)),
             ("status", json::s(self.status.name())),
+            (
+                "tenant",
+                self.tenant.as_deref().map(json::s).unwrap_or(Json::Null),
+            ),
             (
                 "cancel_requested",
                 Json::Bool(self.cancel.load(Ordering::SeqCst)),
@@ -349,6 +389,14 @@ impl Job {
                 .ok_or_else(|| err!("missing field 'status'"))?,
         )?;
         job.epochs_completed = jusize(&j, "epochs_completed")?;
+        job.tenant = match j.get("tenant") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| err!("'tenant' must be null or a string"))?
+                    .to_string(),
+            ),
+        };
         if j.get("cancel_requested").and_then(Json::as_bool) == Some(true) {
             job.cancel.store(true, Ordering::SeqCst);
         }
@@ -397,15 +445,101 @@ pub enum CancelOutcome {
     Cancelling,
 }
 
+/// Why a submit was refused, typed so the API can map causes onto
+/// distinct status codes (400 / 404 / 403). Every variant has already
+/// bumped its `serve.jobs_rejected.<reason>` counter when it reaches
+/// the caller.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Config or backend rejected (→ 400), with the same message the
+    /// session builder / CLI would print.
+    Invalid(Error),
+    /// The submit named a tenant the ledger has never seen (→ 404).
+    UnknownTenant(String),
+    /// The tenant's remaining budget cannot cover the job (→ 403).
+    Exhausted {
+        /// The tenant that ran dry.
+        tenant: String,
+        /// Headroom at rejection — bit-identical to the tenant status
+        /// document's `remaining_epsilon` (same ledger function).
+        remaining_epsilon: f64,
+        /// The rejected job's estimated composed ε at the tenant's δ.
+        estimated_epsilon: f64,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Invalid(e) => write!(f, "{e:#}"),
+            SubmitError::UnknownTenant(t) => write!(f, "no such tenant '{t}'"),
+            SubmitError::Exhausted {
+                tenant,
+                remaining_epsilon,
+                estimated_epsilon,
+            } => write!(
+                f,
+                "tenant '{tenant}' budget exhausted: job needs an estimated \
+                 ε = {estimated_epsilon} but only {remaining_epsilon} remains"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 // ---------------------------------------------------------------------
 // Manager
 // ---------------------------------------------------------------------
+
+/// Per-tenant FIFO queues + a round-robin cursor. Pool workers consume
+/// *tickets*, and each ticket pops the next job id from the first
+/// non-empty tenant bucket after the cursor (BTreeMap order, wrapping) —
+/// so tenants with queued work share worker slots evenly regardless of
+/// how deep any one backlog is. Anonymous jobs queue under `""`.
+#[derive(Default)]
+struct Dispatch {
+    queues: BTreeMap<String, VecDeque<u64>>,
+    last: Option<String>,
+}
+
+impl Dispatch {
+    fn push(&mut self, tenant: &str, id: u64) {
+        self.queues.entry(tenant.to_string()).or_default().push_back(id);
+    }
+
+    /// Pop round-robin. Empty buckets are removed eagerly, so every key
+    /// present has work and the first candidate always yields.
+    fn pop(&mut self) -> Option<u64> {
+        let key = match &self.last {
+            Some(last) => self
+                .queues
+                .range::<String, _>((
+                    std::ops::Bound::Excluded(last.clone()),
+                    std::ops::Bound::Unbounded,
+                ))
+                .map(|(k, _)| k.clone())
+                .next()
+                .or_else(|| self.queues.keys().next().cloned()),
+            None => self.queues.keys().next().cloned(),
+        }?;
+        let queue = self.queues.get_mut(&key).expect("key just observed");
+        let id = queue.pop_front().expect("non-empty by invariant");
+        if queue.is_empty() {
+            self.queues.remove(&key);
+        }
+        self.last = Some(key);
+        Some(id)
+    }
+}
 
 struct Shared {
     state_dir: Option<String>,
     jobs: Mutex<BTreeMap<u64, Job>>,
     next_id: AtomicU64,
     workers: usize,
+    ledger: Arc<BudgetLedger>,
+    dispatch: Mutex<Dispatch>,
 }
 
 impl Shared {
@@ -454,11 +588,14 @@ impl JobManager {
             }
             None => None,
         };
+        let ledger = Arc::new(BudgetLedger::open(state_dir.as_deref())?);
         let shared = Arc::new(Shared {
             state_dir,
             jobs: Mutex::new(BTreeMap::new()),
             next_id: AtomicU64::new(1),
             workers: workers.max(1),
+            ledger,
+            dispatch: Mutex::new(Dispatch::default()),
         });
         let manager = Self {
             shared,
@@ -515,52 +652,121 @@ impl JobManager {
         }
         recovered.sort_by_key(|j| j.id);
         let mut max_id = 0;
-        let mut to_enqueue = Vec::new();
+        let mut to_enqueue: Vec<(String, u64)> = Vec::new();
         {
             let mut jobs = self.shared.jobs.lock().unwrap();
             for job in recovered {
                 max_id = max_id.max(job.id);
                 if job.status == JobStatus::Queued {
-                    to_enqueue.push(job.id);
+                    // A re-enqueued tenant job was admitted before the
+                    // crash; rebuild its reservation (a pure function
+                    // of the config, so remaining ε is identical before
+                    // and after the kill) unless it was already debited
+                    // — the ledger persists before the job manifest, so
+                    // a crash between the two must not hold budget
+                    // twice.
+                    if let Some(t) = &job.tenant {
+                        self.shared.ledger.restore_reservation(t, job.id, &job.cfg);
+                    }
+                    to_enqueue.push((job.tenant.clone().unwrap_or_default(), job.id));
                 }
                 self.shared.persist(&job);
                 jobs.insert(job.id, job);
             }
         }
         self.shared.next_id.store(max_id + 1, Ordering::SeqCst);
-        for id in to_enqueue {
-            self.enqueue(id);
+        for (tenant, id) in to_enqueue {
+            self.enqueue(&tenant, id);
         }
         Ok(())
     }
 
-    /// Validate and enqueue a new job; returns its id. Rejects configs
-    /// the session builder would reject (same messages) plus backends a
-    /// self-contained worker cannot run.
-    pub fn submit(&self, cfg: TrainConfig) -> Result<u64> {
-        ensure!(
-            matches!(cfg.backend.as_str(), "native" | "mock"),
-            "backend '{}' is not servable: daemon workers are self-contained; \
-             use backend \"native\" or \"mock\"",
-            cfg.backend
-        );
+    /// Validate, admit (when a tenant is named), and enqueue a new job;
+    /// returns its id. Rejects configs the session builder would reject
+    /// (same messages), backends a self-contained worker cannot run,
+    /// unknown tenants, and jobs the tenant's budget can't cover — each
+    /// cause under its own `serve.jobs_rejected.<reason>` counter.
+    pub fn submit(
+        &self,
+        cfg: TrainConfig,
+        tenant: Option<&str>,
+    ) -> std::result::Result<u64, SubmitError> {
+        fn reject(reason: &str) {
+            obs::global()
+                .counter(&format!("serve.jobs_rejected.{reason}"))
+                .inc();
+        }
+        if !matches!(cfg.backend.as_str(), "native" | "mock") {
+            reject("backend");
+            return Err(SubmitError::Invalid(err!(
+                "backend '{}' is not servable: daemon workers are self-contained; \
+                 use backend \"native\" or \"mock\"",
+                cfg.backend
+            )));
+        }
         // |D_train| equals dataset_size by construction (data::train_val
         // draws dataset_size + val_size and splits val off the tail).
-        validate_config(&cfg, cfg.dataset_size)?;
+        if let Err(e) = validate_config(&cfg, cfg.dataset_size) {
+            reject("validation");
+            return Err(SubmitError::Invalid(e));
+        }
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
+        if let Some(t) = tenant {
+            // Admission is atomic inside the ledger (check + reserve
+            // under one lock), so racing submits never oversubscribe.
+            // A rejected submit burns the id — ids only promise
+            // monotonicity, not density.
+            match self.shared.ledger.reserve(t, id, &cfg) {
+                Ok(_estimated) => {}
+                Err(AdmitError::UnknownTenant(t)) => {
+                    reject("tenant");
+                    return Err(SubmitError::UnknownTenant(t));
+                }
+                Err(AdmitError::Exhausted {
+                    tenant,
+                    remaining_epsilon,
+                    estimated_epsilon,
+                }) => {
+                    reject("budget");
+                    return Err(SubmitError::Exhausted {
+                        tenant,
+                        remaining_epsilon,
+                        estimated_epsilon,
+                    });
+                }
+            }
+        }
         {
             let mut jobs = self.shared.jobs.lock().unwrap();
-            let job = Job::new(id, cfg);
+            let mut job = Job::new(id, cfg);
+            job.tenant = tenant.map(str::to_string);
             self.shared.persist(&job);
             jobs.insert(id, job);
         }
-        self.enqueue(id);
+        self.enqueue(tenant.unwrap_or(""), id);
         Ok(id)
     }
 
-    fn enqueue(&self, id: u64) {
+    /// Queue `id` under its tenant bucket and hand the pool one ticket.
+    fn enqueue(&self, tenant: &str, id: u64) {
+        self.shared.dispatch.lock().unwrap().push(tenant, id);
         let shared = Arc::clone(&self.shared);
-        self.pool.submit(move || run_job(&shared, id));
+        self.pool.submit(move || {
+            // Tickets are 1:1 with queue entries, so the pop never
+            // comes up empty; a racing shutdown drops leftovers whole.
+            // (The guard must drop before the job runs — an `if let` on
+            // the locked pop would hold the dispatch mutex for the
+            // whole training run.)
+            let next = shared.dispatch.lock().unwrap().pop();
+            if let Some(next) = next {
+                run_job(&shared, next);
+            }
+        });
+    }
+
+    /// The per-tenant budget ledger (tenant CRUD + status documents).
+    pub fn ledger(&self) -> &BudgetLedger {
+        &self.shared.ledger
     }
 
     /// Cancel a job: a queued job never runs, a running job stops at
@@ -574,6 +780,12 @@ impl JobManager {
             JobStatus::Queued => {
                 job.cancel.store(true, Ordering::SeqCst);
                 job.status = JobStatus::Cancelled;
+                // A cancelled-while-queued job never spends: release
+                // its reservation right here (its ticket will pop the
+                // id and no-op on the status check).
+                if let Some(t) = &job.tenant {
+                    self.shared.ledger.refund(t, id);
+                }
                 self.shared.persist(job);
                 CancelOutcome::CancelledQueued
             }
@@ -684,7 +896,10 @@ impl JobManager {
 // ---------------------------------------------------------------------
 
 enum JobEnd {
-    Finished(JobSummary),
+    /// Ran to completion: the summary plus the session accountant's
+    /// actual RDP history — what a tenant's ledger debit records
+    /// (reality, not the reservation's worst-case estimate).
+    Finished(JobSummary, Vec<StepRecord>),
     Cancelled,
 }
 
@@ -707,19 +922,36 @@ fn run_job(shared: &Arc<Shared>, id: u64) {
 
     let mut jobs = shared.jobs.lock().unwrap();
     let Some(job) = jobs.get_mut(&id) else { return };
+    // Ledger first, job manifest second: the debit is idempotent per
+    // job id, so a crash between the two re-runs the job and the second
+    // debit no-ops — the budget can never be spent twice, and a crash
+    // *before* the debit leaves a non-terminal manifest whose recovery
+    // restores the reservation. Cancel/failure/panic never spends.
     match result {
-        Ok(Ok(JobEnd::Finished(summary))) => {
+        Ok(Ok(JobEnd::Finished(summary, history))) => {
+            if let Some(t) = &job.tenant {
+                shared.ledger.debit(t, id, &history);
+            }
             job.summary = Some(summary);
             job.status = JobStatus::Done;
         }
         Ok(Ok(JobEnd::Cancelled)) => {
+            if let Some(t) = &job.tenant {
+                shared.ledger.refund(t, id);
+            }
             job.status = JobStatus::Cancelled;
         }
         Ok(Err(e)) => {
+            if let Some(t) = &job.tenant {
+                shared.ledger.refund(t, id);
+            }
             job.error = Some(format!("{e:#}"));
             job.status = JobStatus::Failed;
         }
         Err(payload) => {
+            if let Some(t) = &job.tenant {
+                shared.ledger.refund(t, id);
+            }
             job.error = Some(format!("job panicked: {}", panic_text(payload)));
             job.status = JobStatus::Failed;
         }
@@ -779,8 +1011,11 @@ fn train_job(
         }
     }
     let truncated = session.is_truncated();
-    let (record, _weights, _accountant) = session.finish();
-    Ok(JobEnd::Finished(JobSummary::from_record(&record, truncated)))
+    let (record, _weights, accountant) = session.finish();
+    Ok(JobEnd::Finished(
+        JobSummary::from_record(&record, truncated),
+        accountant.history().to_vec(),
+    ))
 }
 
 /// Streams a session's epoch-level events into the job's ring buffer
@@ -1112,13 +1347,17 @@ mod tests {
         // batch_size 0 is the session builder's canonical rejection.
         let mut bad = tiny_mock_cfg(0, 1);
         bad.batch_size = 0;
-        let e = m.submit(bad).unwrap_err().to_string();
-        assert!(e.contains("batch_size"), "{e}");
+        let e = m.submit(bad, None).unwrap_err();
+        assert!(matches!(e, SubmitError::Invalid(_)), "{e:?}");
+        assert!(e.to_string().contains("batch_size"), "{e}");
         // pjrt cannot run in a self-contained worker.
         let mut pjrt = tiny_mock_cfg(0, 1);
         pjrt.backend = "pjrt".into();
-        let e = m.submit(pjrt).unwrap_err().to_string();
+        let e = m.submit(pjrt, None).unwrap_err().to_string();
         assert!(e.contains("not servable"), "{e}");
+        // Naming a tenant nobody created is its own refusal.
+        let e = m.submit(tiny_mock_cfg(0, 1), Some("nobody")).unwrap_err();
+        assert!(matches!(e, SubmitError::UnknownTenant(_)), "{e:?}");
         assert_eq!(m.counts(), JobCounts::default());
         m.shutdown();
     }
@@ -1126,7 +1365,7 @@ mod tests {
     #[test]
     fn submit_runs_to_done_with_events() {
         let m = JobManager::new(2, None).unwrap();
-        let id = m.submit(tiny_mock_cfg(5, 2)).unwrap();
+        let id = m.submit(tiny_mock_cfg(5, 2), None).unwrap();
         assert_eq!(id, 1);
         assert_eq!(wait_terminal(&m, id), "done");
         let j = m.job_json(id).unwrap();
@@ -1148,13 +1387,13 @@ mod tests {
         // at run time) and then fails in the worker.
         let mut cfg = tiny_mock_cfg(0, 1);
         cfg.dataset = "imagenet".into();
-        let id = m.submit(cfg).unwrap();
+        let id = m.submit(cfg, None).unwrap();
         assert_eq!(wait_terminal(&m, id), "failed");
         let j = m.job_json(id).unwrap();
         let error = j.get("error").unwrap().as_str().unwrap().to_string();
         assert!(error.contains("unknown dataset"), "{error}");
         // The worker survives: the next job still runs.
-        let id2 = m.submit(tiny_mock_cfg(1, 1)).unwrap();
+        let id2 = m.submit(tiny_mock_cfg(1, 1), None).unwrap();
         assert_eq!(wait_terminal(&m, id2), "done");
         m.shutdown();
     }
@@ -1163,8 +1402,8 @@ mod tests {
     fn cancel_queued_job_never_runs() {
         let m = JobManager::new(1, None).unwrap();
         // Head-of-line job long enough to keep the single worker busy.
-        let head = m.submit(tiny_mock_cfg(0, 50)).unwrap();
-        let queued = m.submit(tiny_mock_cfg(1, 1)).unwrap();
+        let head = m.submit(tiny_mock_cfg(0, 50), None).unwrap();
+        let queued = m.submit(tiny_mock_cfg(1, 1), None).unwrap();
         // The cancel may land while the job is still queued (the usual
         // case: the lone worker is busy with `head`) or, in a slow-start
         // race, after it was claimed — both end in "cancelled".
@@ -1184,6 +1423,60 @@ mod tests {
         assert_eq!(m.status_of(queued), Some("cancelled"));
         let events = m.events_json(queued).unwrap();
         assert_eq!(events.get("total").unwrap().as_usize(), Some(0));
+        m.shutdown();
+    }
+
+    #[test]
+    fn dispatch_round_robins_across_tenants() {
+        let mut d = Dispatch::default();
+        // alice floods the queue; bob and an anonymous job arrive after.
+        for id in 1..=4 {
+            d.push("alice", id);
+        }
+        d.push("bob", 10);
+        d.push("", 20);
+        // BTreeMap order is "" < "alice" < "bob": each tenant with work
+        // gets a slot per cycle, however deep alice's backlog is.
+        let order: Vec<u64> = std::iter::from_fn(|| d.pop()).collect();
+        assert_eq!(order, vec![20, 1, 10, 2, 3, 4]);
+        assert!(d.pop().is_none());
+    }
+
+    #[test]
+    fn tenant_job_reserves_then_debits_actual_spend() {
+        let m = JobManager::new(1, None).unwrap();
+        m.ledger().create_tenant("acme", 50.0, 1e-5).unwrap();
+        let id = m.submit(tiny_mock_cfg(2, 2), Some("acme")).unwrap();
+        let doc = m.ledger().status("acme").unwrap();
+        assert!(doc.reserved_epsilon > 0.0 || doc.debited_jobs == 1);
+        assert_eq!(wait_terminal(&m, id), "done");
+        let doc = m.ledger().status("acme").unwrap();
+        assert_eq!(doc.open_reservations, 0);
+        assert_eq!(doc.debited_jobs, 1);
+        assert!(doc.spent_epsilon > 0.0);
+        // The status document carries the owner.
+        let j = m.job_json(id).unwrap();
+        assert_eq!(j.get("tenant").unwrap().as_str(), Some("acme"));
+        m.shutdown();
+    }
+
+    #[test]
+    fn cancelled_queued_tenant_job_refunds_in_full() {
+        let m = JobManager::new(1, None).unwrap();
+        m.ledger().create_tenant("acme", 50.0, 1e-5).unwrap();
+        // Anonymous head keeps the lone worker busy; the tenant job
+        // waits behind it.
+        let head = m.submit(tiny_mock_cfg(0, 50), None).unwrap();
+        let queued = m.submit(tiny_mock_cfg(1, 1), Some("acme")).unwrap();
+        let reserved = m.ledger().status("acme").unwrap().reserved_epsilon;
+        assert!(reserved > 0.0);
+        m.cancel(queued);
+        m.cancel(head);
+        assert_eq!(wait_terminal(&m, queued), "cancelled");
+        let doc = m.ledger().status("acme").unwrap();
+        assert_eq!(doc.open_reservations, 0);
+        assert_eq!(doc.spent_epsilon, 0.0);
+        assert_eq!(doc.remaining_epsilon.to_bits(), 50.0f64.to_bits());
         m.shutdown();
     }
 }

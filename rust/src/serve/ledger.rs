@@ -1,0 +1,927 @@
+//! The per-tenant privacy-budget ledger: durable (ε, δ) accounting for
+//! the job daemon (DESIGN.md §15).
+//!
+//! A **tenant** owns a lifetime `(budget_epsilon, delta)` budget. The
+//! ledger moves every tenant-owned job through a three-state machine:
+//!
+//! ```text
+//!   submit ──reserve──▶ open reservation ──debit───▶ spent (durable)
+//!                               │
+//!                               └─refund──▶ gone (cancel / failure)
+//! ```
+//!
+//! * **reserve** — admission control. The job's worst-case schedule is
+//!   derived from its config ([`schedule_cost`]: all training steps
+//!   plus every analysis-eligible epoch, truncation ignored) and
+//!   composed — at the RDP level, through the same
+//!   [`RdpAccountant`] math a live run uses — with the tenant's spent
+//!   history and every open reservation. If the composed ε exceeds the
+//!   budget the submit is rejected; the `remaining_epsilon` in the
+//!   rejection is computed by the **same function** that feeds
+//!   `GET /v1/tenants/{id}`, so the two agree bit-for-bit.
+//! * **debit** — on successful completion the job's *actual* accountant
+//!   history (from `TrainSession::finish`) is appended to the tenant's
+//!   spent records and the reservation is released. Debits are
+//!   idempotent per job id (`debited_jobs`), so a crash between the
+//!   ledger write and the job-manifest write can never double-spend.
+//! * **refund** — cancel, failure, or panic releases the reservation
+//!   without spending.
+//!
+//! **Why records, not a running ε.** ε does not add: composing two runs
+//! through one accountant is tighter than summing their individual ε's.
+//! The ledger therefore stores per-tenant RDP *step records* and
+//! re-derives ε by replay, which makes a tenant's spend after two
+//! sequential jobs bit-equal to one accountant composing both runs
+//! (`tests/privacy_golden.rs` pins this).
+//!
+//! **Durability.** With a state dir, tenants + spent histories +
+//! debited-job ids persist to `ledger.json` (`dpquant-serve-ledger` v1,
+//! atomic temp+rename, floats as IEEE-754 hex — the checkpoint idiom).
+//! Reservations are deliberately **not** persisted: they are
+//! reconstructed during restart recovery for every re-enqueued
+//! tenant-owned job (a pure function of the job's config, so the
+//! remaining ε is identical before and after a `kill -9`), and a
+//! reservation whose job died terminally can therefore never leak.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use crate::config::TrainConfig;
+use crate::obs;
+use crate::privacy::{Mechanism, RdpAccountant, StepRecord};
+use crate::util::error::{ensure, err, Result};
+use crate::util::json::{self, Json};
+
+/// On-disk ledger format tag (`ledger.json` in the state dir).
+pub const LEDGER_FORMAT: &str = "dpquant-serve-ledger";
+/// Ledger version this build reads and writes.
+pub const LEDGER_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// Schedule cost estimation (shared by admission control and `dpquant cost`)
+// ---------------------------------------------------------------------
+
+/// The worst-case privacy schedule a config can spend, and its composed
+/// cost — what a reservation holds. Training steps count every epoch
+/// (`target_epsilon` truncation is ignored: the estimate must be an
+/// upper bound on actual spend); analysis steps count every
+/// analysis-eligible epoch of the `dpquant` scheduler (the live path
+/// additionally skips empty Poisson probes, so this too is an upper
+/// bound).
+#[derive(Clone, Debug)]
+pub struct ScheduleCost {
+    /// Training Poisson rate `q = B/|D|`.
+    pub sample_rate: f64,
+    /// Training noise multiplier σ.
+    pub noise_multiplier: f64,
+    /// DP-SGD steps: `epochs × max(|D|/B, 1)`.
+    pub train_steps: u64,
+    /// Analysis probe rate `min(analysis_samples/|D|, 1)`.
+    pub analysis_rate: f64,
+    /// Analysis noise σ_measure.
+    pub analysis_sigma: f64,
+    /// Analysis invocations: `ceil(epochs/analysis_interval)` for the
+    /// `dpquant` scheduler, 0 otherwise.
+    pub analysis_steps: u64,
+    /// δ the ε below is converted at.
+    pub delta: f64,
+    /// Composed (training + analysis) ε at `delta`.
+    pub epsilon: f64,
+    /// The Rényi order that realized `epsilon`.
+    pub alpha: f64,
+    /// ε of the training block alone (the analysis overhead is
+    /// `epsilon - train_epsilon`).
+    pub train_epsilon: f64,
+}
+
+/// Estimate a config's full-schedule privacy cost via
+/// [`RdpAccountant::predict`]. Pure function of the config — recovery
+/// relies on this to rebuild byte-identical reservations.
+pub fn schedule_cost(cfg: &TrainConfig) -> ScheduleCost {
+    let steps_per_epoch = (cfg.dataset_size / cfg.batch_size.max(1)).max(1);
+    let train_steps = (cfg.epochs * steps_per_epoch) as u64;
+    let sample_rate = cfg.sample_rate();
+    let analysis_steps = if cfg.scheduler == "dpquant" {
+        cfg.epochs.div_ceil(cfg.analysis_interval.max(1)) as u64
+    } else {
+        0
+    };
+    let analysis_rate = (cfg.analysis_samples as f64 / cfg.dataset_size.max(1) as f64).min(1.0);
+    let (epsilon, alpha) = RdpAccountant::predict(
+        sample_rate,
+        cfg.noise_multiplier,
+        train_steps,
+        analysis_rate,
+        cfg.sigma_measure,
+        analysis_steps,
+        cfg.delta,
+    );
+    let (train_epsilon, _) = RdpAccountant::predict(
+        sample_rate,
+        cfg.noise_multiplier,
+        train_steps,
+        analysis_rate,
+        cfg.sigma_measure,
+        0,
+        cfg.delta,
+    );
+    ScheduleCost {
+        sample_rate,
+        noise_multiplier: cfg.noise_multiplier,
+        train_steps,
+        analysis_rate,
+        analysis_sigma: cfg.sigma_measure,
+        analysis_steps,
+        delta: cfg.delta,
+        epsilon,
+        alpha,
+        train_epsilon,
+    }
+}
+
+impl ScheduleCost {
+    /// The estimate as the two homogeneous [`StepRecord`] blocks a
+    /// reservation composes against the tenant's history.
+    fn records(&self) -> Vec<StepRecord> {
+        vec![
+            StepRecord {
+                mechanism: Mechanism::Training,
+                sample_rate: self.sample_rate,
+                noise_multiplier: self.noise_multiplier,
+                steps: self.train_steps,
+            },
+            StepRecord {
+                mechanism: Mechanism::Analysis,
+                sample_rate: self.analysis_rate,
+                noise_multiplier: self.analysis_sigma,
+                steps: self.analysis_steps,
+            },
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tenant state
+// ---------------------------------------------------------------------
+
+struct TenantState {
+    budget_epsilon: f64,
+    delta: f64,
+    /// Coalesced RDP history of every debited job, oldest first —
+    /// appended by replaying each job's actual accountant history, so
+    /// this is exactly what one accountant composing all the runs would
+    /// hold.
+    spent: Vec<StepRecord>,
+    /// Job ids already debited (debit idempotence across crashes).
+    debited_jobs: BTreeSet<u64>,
+    /// Open reservations, job id → estimated schedule. In-memory only;
+    /// rebuilt during recovery.
+    reservations: BTreeMap<u64, Vec<StepRecord>>,
+}
+
+/// ε of a record sequence by replay through a fresh accountant — the
+/// ONE composition path every ledger number flows through. An empty
+/// history is defined as ε = 0 (a fresh tenant has spent nothing; the
+/// RDP→(ε, δ) conversion of an all-zero curve would still pay its
+/// log(1/δ)/(α−1) term).
+fn epsilon_of_records<'a, I>(records: I, delta: f64) -> f64
+where
+    I: IntoIterator<Item = &'a StepRecord>,
+{
+    let mut acc = RdpAccountant::new();
+    for r in records {
+        acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+    }
+    if acc.history().is_empty() {
+        return 0.0;
+    }
+    acc.epsilon(delta).0
+}
+
+impl TenantState {
+    fn spent_epsilon(&self) -> f64 {
+        epsilon_of_records(&self.spent, self.delta)
+    }
+
+    /// ε of spent ∪ reserved, composed (reservations in job-id order).
+    fn committed_epsilon(&self) -> f64 {
+        epsilon_of_records(
+            self.spent.iter().chain(self.reservations.values().flatten()),
+            self.delta,
+        )
+    }
+
+    /// Budget headroom: `max(budget − ε(spent ∪ reserved), 0)`. The one
+    /// function behind both the 403 body and the tenant status document.
+    fn remaining_epsilon(&self) -> f64 {
+        (self.budget_epsilon - self.committed_epsilon()).max(0.0)
+    }
+
+    fn doc(&self, id: &str) -> TenantDoc {
+        let spent = self.spent_epsilon();
+        let committed = self.committed_epsilon();
+        TenantDoc {
+            id: id.to_string(),
+            budget_epsilon: self.budget_epsilon,
+            delta: self.delta,
+            spent_epsilon: spent,
+            reserved_epsilon: committed - spent,
+            remaining_epsilon: self.remaining_epsilon(),
+            debited_jobs: self.debited_jobs.len(),
+            open_reservations: self.reservations.len(),
+        }
+    }
+
+    fn update_gauges(&self, id: &str) {
+        let reg = obs::global();
+        let doc = self.doc(id);
+        reg.gauge(&format!("ledger.tenant.{id}.spent_epsilon")).set(doc.spent_epsilon);
+        reg.gauge(&format!("ledger.tenant.{id}.reserved_epsilon"))
+            .set(doc.reserved_epsilon);
+        reg.gauge(&format!("ledger.tenant.{id}.remaining_epsilon"))
+            .set(doc.remaining_epsilon);
+    }
+}
+
+/// A tenant's public status: what `GET /v1/tenants/{id}` serves and the
+/// `dpquant tenant` CLI renders.
+#[derive(Clone, Debug)]
+pub struct TenantDoc {
+    /// Tenant id (`[A-Za-z0-9_-]`, ≤ 64 chars).
+    pub id: String,
+    /// Lifetime ε budget.
+    pub budget_epsilon: f64,
+    /// δ every ledger ε for this tenant is converted at.
+    pub delta: f64,
+    /// ε of the debited (actually spent) history.
+    pub spent_epsilon: f64,
+    /// Marginal ε held by open reservations on top of the spend
+    /// (`ε(spent ∪ reserved) − ε(spent)`).
+    pub reserved_epsilon: f64,
+    /// `max(budget − ε(spent ∪ reserved), 0)` — admission headroom.
+    pub remaining_epsilon: f64,
+    /// Jobs debited so far.
+    pub debited_jobs: usize,
+    /// Open (undecided) reservations.
+    pub open_reservations: usize,
+}
+
+impl TenantDoc {
+    /// The status document as JSON (plain numbers: Rust's shortest
+    /// round-trip float formatting keeps them f64-bit-exact on the wire).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::s(&self.id)),
+            ("budget_epsilon", json::num(self.budget_epsilon)),
+            ("delta", json::num(self.delta)),
+            ("spent_epsilon", json::num(self.spent_epsilon)),
+            ("reserved_epsilon", json::num(self.reserved_epsilon)),
+            ("remaining_epsilon", json::num(self.remaining_epsilon)),
+            ("debited_jobs", json::num(self.debited_jobs as f64)),
+            ("open_reservations", json::num(self.open_reservations as f64)),
+        ])
+    }
+}
+
+/// Why a tenant could not be created (maps to 400 / 409 in the API).
+#[derive(Clone, Debug)]
+pub enum CreateError {
+    /// Bad id / budget / delta.
+    Invalid(String),
+    /// A tenant with that id already exists.
+    Exists(String),
+}
+
+impl std::fmt::Display for CreateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CreateError::Invalid(m) => f.write_str(m),
+            CreateError::Exists(id) => write!(f, "tenant '{id}' already exists"),
+        }
+    }
+}
+
+impl std::error::Error for CreateError {}
+
+/// Why a tenant-owned submit was refused (maps to 404 / 403 in the API).
+#[derive(Clone, Debug)]
+pub enum AdmitError {
+    /// No tenant with that id.
+    UnknownTenant(String),
+    /// The remaining budget cannot cover the job's estimated cost.
+    Exhausted {
+        /// The tenant that ran dry.
+        tenant: String,
+        /// Headroom at rejection time — bit-identical to the
+        /// `remaining_epsilon` of `GET /v1/tenants/{id}`.
+        remaining_epsilon: f64,
+        /// The rejected job's estimated composed ε.
+        estimated_epsilon: f64,
+    },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::UnknownTenant(id) => write!(f, "no such tenant '{id}'"),
+            AdmitError::Exhausted {
+                tenant,
+                remaining_epsilon,
+                estimated_epsilon,
+            } => write!(
+                f,
+                "tenant '{tenant}' budget exhausted: job needs an estimated \
+                 ε = {estimated_epsilon} but only {remaining_epsilon} remains"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+// ---------------------------------------------------------------------
+// The ledger
+// ---------------------------------------------------------------------
+
+/// Durable per-tenant budget ledger. All methods take `&self`; one
+/// mutex guards the tenant table (admission check + reservation insert
+/// are a single critical section, so concurrent submits can never
+/// oversubscribe a budget).
+pub struct BudgetLedger {
+    /// `ledger.json` path, when running with a state dir.
+    path: Option<String>,
+    tenants: Mutex<BTreeMap<String, TenantState>>,
+}
+
+impl BudgetLedger {
+    /// Open the ledger: load `ledger.json` from the state dir if
+    /// present (failing loudly on a malformed one — silently dropping
+    /// budgets would violate the durability contract), else start
+    /// empty. `None` runs fully in-memory.
+    pub fn open(state_dir: Option<&str>) -> Result<Self> {
+        let path = state_dir.map(|d| format!("{d}/ledger.json"));
+        let tenants = match path.as_deref().filter(|p| std::path::Path::new(p).exists()) {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| err!("reading ledger manifest {p}: {e}"))?;
+                parse_manifest(&text).map_err(|e| err!("ledger manifest {p}: {e:#}"))?
+            }
+            None => BTreeMap::new(),
+        };
+        let ledger = Self {
+            path,
+            tenants: Mutex::new(tenants),
+        };
+        {
+            let tenants = ledger.tenants.lock().unwrap();
+            for (id, t) in tenants.iter() {
+                t.update_gauges(id);
+            }
+        }
+        Ok(ledger)
+    }
+
+    /// Create a tenant with a lifetime (ε, δ) budget.
+    pub fn create_tenant(
+        &self,
+        id: &str,
+        budget_epsilon: f64,
+        delta: f64,
+    ) -> std::result::Result<TenantDoc, CreateError> {
+        if id.is_empty()
+            || id.len() > 64
+            || !id.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(CreateError::Invalid(format!(
+                "tenant id '{id}' must be 1–64 chars of [A-Za-z0-9_-]"
+            )));
+        }
+        if !(budget_epsilon.is_finite() && budget_epsilon > 0.0) {
+            return Err(CreateError::Invalid(format!(
+                "budget_epsilon must be a finite value > 0 (got {budget_epsilon})"
+            )));
+        }
+        if !(delta.is_finite() && delta > 0.0 && delta < 1.0) {
+            return Err(CreateError::Invalid(format!(
+                "delta must be in (0, 1) (got {delta})"
+            )));
+        }
+        let mut tenants = self.tenants.lock().unwrap();
+        if tenants.contains_key(id) {
+            return Err(CreateError::Exists(id.to_string()));
+        }
+        let state = TenantState {
+            budget_epsilon,
+            delta,
+            spent: Vec::new(),
+            debited_jobs: BTreeSet::new(),
+            reservations: BTreeMap::new(),
+        };
+        state.update_gauges(id);
+        let doc = state.doc(id);
+        tenants.insert(id.to_string(), state);
+        self.persist(&tenants);
+        Ok(doc)
+    }
+
+    /// Every tenant's status, id order.
+    pub fn tenants(&self) -> Vec<TenantDoc> {
+        let tenants = self.tenants.lock().unwrap();
+        tenants.iter().map(|(id, t)| t.doc(id)).collect()
+    }
+
+    /// One tenant's status, if it exists.
+    pub fn status(&self, id: &str) -> Option<TenantDoc> {
+        let tenants = self.tenants.lock().unwrap();
+        tenants.get(id).map(|t| t.doc(id))
+    }
+
+    /// Admission control: atomically check the tenant's headroom
+    /// against `cfg`'s worst-case schedule and place a reservation for
+    /// `job_id`. Returns the estimated ε on success.
+    pub fn reserve(
+        &self,
+        tenant: &str,
+        job_id: u64,
+        cfg: &TrainConfig,
+    ) -> std::result::Result<f64, AdmitError> {
+        let cost = schedule_cost(cfg);
+        let mut tenants = self.tenants.lock().unwrap();
+        let Some(t) = tenants.get_mut(tenant) else {
+            return Err(AdmitError::UnknownTenant(tenant.to_string()));
+        };
+        // The candidate composes at the tenant's δ, not the job's.
+        let records = cost.records();
+        let would_be = epsilon_of_records(
+            t.spent
+                .iter()
+                .chain(t.reservations.values().flatten())
+                .chain(records.iter()),
+            t.delta,
+        );
+        if would_be > t.budget_epsilon {
+            let (estimated_epsilon, _) = RdpAccountant::predict(
+                cost.sample_rate,
+                cost.noise_multiplier,
+                cost.train_steps,
+                cost.analysis_rate,
+                cost.analysis_sigma,
+                cost.analysis_steps,
+                t.delta,
+            );
+            return Err(AdmitError::Exhausted {
+                tenant: tenant.to_string(),
+                remaining_epsilon: t.remaining_epsilon(),
+                estimated_epsilon,
+            });
+        }
+        t.reservations.insert(job_id, records);
+        t.update_gauges(tenant);
+        Ok(cost.epsilon)
+    }
+
+    /// Recovery: rebuild the reservation for a re-enqueued job without
+    /// re-running admission (it was admitted before the crash; refusing
+    /// it now would strand a durable job). No-ops if the job was
+    /// already debited — its cost already lives in `spent`.
+    pub fn restore_reservation(&self, tenant: &str, job_id: u64, cfg: &TrainConfig) {
+        let mut tenants = self.tenants.lock().unwrap();
+        let Some(t) = tenants.get_mut(tenant) else {
+            eprintln!(
+                "serve: recovered job {job_id} names unknown tenant '{tenant}'; \
+                 running it unmetered"
+            );
+            return;
+        };
+        if t.debited_jobs.contains(&job_id) {
+            return;
+        }
+        t.reservations.insert(job_id, schedule_cost(cfg).records());
+        t.update_gauges(tenant);
+    }
+
+    /// Debit the job's **actual** spend (its session accountant
+    /// history) and release its reservation. Idempotent per job id: a
+    /// second debit (crash-recovered job re-finishing) only releases
+    /// the reservation. Persists the ledger — callers write the job's
+    /// terminal manifest *after* this returns, so a crash between the
+    /// two re-runs the job deterministically and the second debit
+    /// no-ops.
+    pub fn debit(&self, tenant: &str, job_id: u64, history: &[StepRecord]) {
+        let mut tenants = self.tenants.lock().unwrap();
+        let Some(t) = tenants.get_mut(tenant) else {
+            return;
+        };
+        t.reservations.remove(&job_id);
+        if t.debited_jobs.insert(job_id) {
+            // Append by replay so `spent` stays exactly the coalesced
+            // history one accountant composing every run would hold.
+            let mut acc = RdpAccountant::new();
+            for r in t.spent.iter().chain(history.iter()) {
+                acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+            }
+            t.spent = acc.history().to_vec();
+            self.persist(&tenants);
+            // Re-borrow after persist (persist only reads).
+            let t = tenants.get(tenant).expect("tenant just updated");
+            t.update_gauges(tenant);
+        } else {
+            t.update_gauges(tenant);
+        }
+    }
+
+    /// Release a reservation without spending (cancel / failure /
+    /// panic). Idempotent; unknown tenants or jobs no-op.
+    pub fn refund(&self, tenant: &str, job_id: u64) {
+        let mut tenants = self.tenants.lock().unwrap();
+        if let Some(t) = tenants.get_mut(tenant) {
+            t.reservations.remove(&job_id);
+            t.update_gauges(tenant);
+        }
+    }
+
+    /// Per-tenant spend/reservation snapshot for `GET /v1/metrics`:
+    /// `{tenant: {budget_epsilon, spent_epsilon, reserved_epsilon,
+    /// remaining_epsilon}}`.
+    pub fn metrics_json(&self) -> Json {
+        let tenants = self.tenants.lock().unwrap();
+        Json::Obj(
+            tenants
+                .iter()
+                .map(|(id, t)| {
+                    let doc = t.doc(id);
+                    (
+                        id.clone(),
+                        json::obj(vec![
+                            ("budget_epsilon", json::num(doc.budget_epsilon)),
+                            ("spent_epsilon", json::num(doc.spent_epsilon)),
+                            ("reserved_epsilon", json::num(doc.reserved_epsilon)),
+                            ("remaining_epsilon", json::num(doc.remaining_epsilon)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Write `ledger.json` atomically (temp + rename). Failures are
+    /// reported on stderr, never panicked on — an unwritable state dir
+    /// degrades durability, not service (same policy as job manifests).
+    fn persist(&self, tenants: &BTreeMap<String, TenantState>) {
+        let Some(path) = &self.path else {
+            return;
+        };
+        let tmp = format!("{path}.tmp");
+        let text = manifest_json(tenants).to_string();
+        let result =
+            std::fs::write(&tmp, text).and_then(|()| std::fs::rename(&tmp, path.as_str()));
+        if let Err(e) = result {
+            eprintln!("serve: failed to persist ledger: {e}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Manifest (dpquant-serve-ledger v1)
+// ---------------------------------------------------------------------
+
+// Floats persist as IEEE-754 bit patterns in hex (the
+// dpquant-trainsession idiom): budgets and rates round-trip bit-exactly
+// by construction, so recovered admission decisions can never drift.
+fn hex_f64(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn parse_hex_f64(j: &Json, what: &str) -> Result<f64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| err!("{what} must be a 16-hex-digit string"))?;
+    ensure!(s.len() == 16, "{what} must be exactly 16 hex digits (got '{s}')");
+    let bits = u64::from_str_radix(s, 16).map_err(|_| err!("{what}: bad hex '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn mechanism_name(m: Mechanism) -> &'static str {
+    match m {
+        Mechanism::Training => "training",
+        Mechanism::Analysis => "analysis",
+    }
+}
+
+fn parse_mechanism(s: &str) -> Result<Mechanism> {
+    match s {
+        "training" => Ok(Mechanism::Training),
+        "analysis" => Ok(Mechanism::Analysis),
+        other => Err(err!("unknown mechanism '{other}'")),
+    }
+}
+
+fn manifest_json(tenants: &BTreeMap<String, TenantState>) -> Json {
+    let body: BTreeMap<String, Json> = tenants
+        .iter()
+        .map(|(id, t)| {
+            (
+                id.clone(),
+                json::obj(vec![
+                    ("budget_epsilon", hex_f64(t.budget_epsilon)),
+                    ("delta", hex_f64(t.delta)),
+                    (
+                        "debited_jobs",
+                        Json::Arr(
+                            t.debited_jobs.iter().map(|id| json::num(*id as f64)).collect(),
+                        ),
+                    ),
+                    (
+                        "spent",
+                        Json::Arr(
+                            t.spent
+                                .iter()
+                                .map(|r| {
+                                    json::obj(vec![
+                                        ("mechanism", json::s(mechanism_name(r.mechanism))),
+                                        ("sample_rate", hex_f64(r.sample_rate)),
+                                        ("noise_multiplier", hex_f64(r.noise_multiplier)),
+                                        ("steps", json::num(r.steps as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            )
+        })
+        .collect();
+    json::obj(vec![
+        ("format", json::s(LEDGER_FORMAT)),
+        ("version", json::num(LEDGER_VERSION as f64)),
+        ("tenants", Json::Obj(body)),
+    ])
+}
+
+fn parse_manifest(text: &str) -> Result<BTreeMap<String, TenantState>> {
+    let j = json::parse(text).map_err(|e| err!("malformed JSON: {e}"))?;
+    let format = j.get("format").and_then(Json::as_str).unwrap_or("<missing>");
+    ensure!(
+        format == LEDGER_FORMAT,
+        "not a ledger manifest (format '{format}', want '{LEDGER_FORMAT}')"
+    );
+    let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    ensure!(
+        version == LEDGER_VERSION,
+        "ledger manifest version {version} is not readable by this build (which reads \
+         version {LEDGER_VERSION})"
+    );
+    let tenants_json = j
+        .get("tenants")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| err!("missing 'tenants' object"))?;
+    let mut tenants = BTreeMap::new();
+    for (id, tj) in tenants_json {
+        let budget_epsilon = parse_hex_f64(
+            tj.get("budget_epsilon").ok_or_else(|| err!("tenant '{id}': missing budget_epsilon"))?,
+            "budget_epsilon",
+        )?;
+        let delta = parse_hex_f64(
+            tj.get("delta").ok_or_else(|| err!("tenant '{id}': missing delta"))?,
+            "delta",
+        )?;
+        let debited_jobs: BTreeSet<u64> = tj
+            .get("debited_jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("tenant '{id}': missing debited_jobs array"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .map(|n| n as u64)
+                    .ok_or_else(|| err!("tenant '{id}': debited_jobs entries must be job ids"))
+            })
+            .collect::<Result<_>>()?;
+        let spent: Vec<StepRecord> = tj
+            .get("spent")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("tenant '{id}': missing spent array"))?
+            .iter()
+            .map(|rj| {
+                Ok(StepRecord {
+                    mechanism: parse_mechanism(
+                        rj.get("mechanism")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| err!("tenant '{id}': spent entry missing mechanism"))?,
+                    )?,
+                    sample_rate: parse_hex_f64(
+                        rj.get("sample_rate")
+                            .ok_or_else(|| err!("tenant '{id}': spent entry missing sample_rate"))?,
+                        "sample_rate",
+                    )?,
+                    noise_multiplier: parse_hex_f64(
+                        rj.get("noise_multiplier").ok_or_else(|| {
+                            err!("tenant '{id}': spent entry missing noise_multiplier")
+                        })?,
+                        "noise_multiplier",
+                    )?,
+                    steps: rj
+                        .get("steps")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| err!("tenant '{id}': spent entry missing steps"))?
+                        as u64,
+                })
+            })
+            .collect::<Result<_>>()?;
+        tenants.insert(
+            id.clone(),
+            TenantState {
+                budget_epsilon,
+                delta,
+                spent,
+                debited_jobs,
+                reservations: BTreeMap::new(),
+            },
+        );
+    }
+    Ok(tenants)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            backend: "mock".into(),
+            dataset_size: 96,
+            val_size: 32,
+            batch_size: 16,
+            physical_batch: 32,
+            epochs: 2,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn schedule_cost_counts_the_full_schedule() {
+        let cfg = tiny_cfg();
+        let cost = schedule_cost(&cfg);
+        // 2 epochs × (96/16 = 6 steps) = 12 training steps; dpquant
+        // scheduler analyzes epochs 0 (and every analysis_interval-th):
+        // ceil(2/2) = 1 invocation.
+        assert_eq!(cost.train_steps, 12);
+        assert_eq!(cost.analysis_steps, 1);
+        assert_eq!(cost.sample_rate.to_bits(), (16.0f64 / 96.0).to_bits());
+        assert!(cost.epsilon.is_finite() && cost.epsilon > 0.0);
+        assert!(cost.train_epsilon <= cost.epsilon);
+        // Non-dpquant schedulers never run Algorithm 1.
+        let mut none = tiny_cfg();
+        none.scheduler = "none".into();
+        assert_eq!(schedule_cost(&none).analysis_steps, 0);
+    }
+
+    #[test]
+    fn create_validates_and_rejects_duplicates() {
+        let ledger = BudgetLedger::open(None).unwrap();
+        assert!(matches!(
+            ledger.create_tenant("", 1.0, 1e-5),
+            Err(CreateError::Invalid(_))
+        ));
+        assert!(matches!(
+            ledger.create_tenant("bad/slash", 1.0, 1e-5),
+            Err(CreateError::Invalid(_))
+        ));
+        assert!(matches!(
+            ledger.create_tenant("a", 0.0, 1e-5),
+            Err(CreateError::Invalid(_))
+        ));
+        assert!(matches!(
+            ledger.create_tenant("a", 1.0, 1.5),
+            Err(CreateError::Invalid(_))
+        ));
+        let doc = ledger.create_tenant("alice", 4.0, 1e-5).unwrap();
+        assert_eq!(doc.remaining_epsilon.to_bits(), 4.0f64.to_bits());
+        assert_eq!(doc.spent_epsilon, 0.0);
+        assert!(matches!(
+            ledger.create_tenant("alice", 2.0, 1e-5),
+            Err(CreateError::Exists(_))
+        ));
+        assert_eq!(ledger.tenants().len(), 1);
+    }
+
+    #[test]
+    fn reserve_debit_refund_lifecycle() {
+        let ledger = BudgetLedger::open(None).unwrap();
+        ledger.create_tenant("t", 8.0, 1e-5).unwrap();
+        let cfg = tiny_cfg();
+        let est = ledger.reserve("t", 1, &cfg).unwrap();
+        assert!(est > 0.0);
+        let doc = ledger.status("t").unwrap();
+        assert_eq!(doc.open_reservations, 1);
+        assert!(doc.reserved_epsilon > 0.0);
+        assert!(doc.remaining_epsilon < 8.0);
+        // Refund restores the headroom bit-exactly.
+        ledger.refund("t", 1);
+        let doc = ledger.status("t").unwrap();
+        assert_eq!(doc.open_reservations, 0);
+        assert_eq!(doc.remaining_epsilon.to_bits(), 8.0f64.to_bits());
+        // Reserve again and debit an actual (smaller) history.
+        ledger.reserve("t", 2, &cfg).unwrap();
+        let history = vec![StepRecord {
+            mechanism: Mechanism::Training,
+            sample_rate: 16.0 / 96.0,
+            noise_multiplier: 1.0,
+            steps: 12,
+        }];
+        ledger.debit("t", 2, &history);
+        let doc = ledger.status("t").unwrap();
+        assert_eq!(doc.open_reservations, 0);
+        assert_eq!(doc.debited_jobs, 1);
+        assert!(doc.spent_epsilon > 0.0);
+        // Idempotent: a second debit of the same job changes nothing.
+        let before = doc.spent_epsilon.to_bits();
+        ledger.debit("t", 2, &history);
+        assert_eq!(ledger.status("t").unwrap().spent_epsilon.to_bits(), before);
+        assert_eq!(ledger.status("t").unwrap().debited_jobs, 1);
+    }
+
+    #[test]
+    fn exhaustion_rejects_with_the_status_documents_remaining() {
+        let ledger = BudgetLedger::open(None).unwrap();
+        let cfg = tiny_cfg();
+        let one_job = schedule_cost(&cfg).epsilon;
+        // Budget fits one job but not two.
+        ledger.create_tenant("t", one_job * 1.5, 1e-5).unwrap();
+        ledger.reserve("t", 1, &cfg).unwrap();
+        let err = ledger.reserve("t", 2, &cfg).unwrap_err();
+        let AdmitError::Exhausted {
+            remaining_epsilon, ..
+        } = err
+        else {
+            panic!("expected Exhausted, got {err:?}");
+        };
+        let doc = ledger.status("t").unwrap();
+        assert_eq!(remaining_epsilon.to_bits(), doc.remaining_epsilon.to_bits());
+        // The rejected reservation left no trace.
+        assert_eq!(doc.open_reservations, 1);
+        // Unknown tenants are their own error.
+        assert!(matches!(
+            ledger.reserve("ghost", 3, &cfg),
+            Err(AdmitError::UnknownTenant(_))
+        ));
+    }
+
+    #[test]
+    fn manifest_roundtrip_is_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("dpquant-ledger-rt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_s = dir.to_str().unwrap().to_string();
+        let cfg = tiny_cfg();
+        {
+            let ledger = BudgetLedger::open(Some(&dir_s)).unwrap();
+            ledger.create_tenant("alice", 1.0 / 3.0, 1e-5).unwrap();
+            ledger.create_tenant("bob", 7.0, 1e-6).unwrap();
+            ledger.reserve("alice", 1, &cfg).unwrap();
+            ledger.debit(
+                "alice",
+                1,
+                &[StepRecord {
+                    mechanism: Mechanism::Training,
+                    sample_rate: 0.1 + 0.2, // no short decimal form
+                    noise_multiplier: 1.0 / 7.0,
+                    steps: 5,
+                }],
+            );
+        }
+        let reopened = BudgetLedger::open(Some(&dir_s)).unwrap();
+        let alice = reopened.status("alice").unwrap();
+        assert_eq!(alice.budget_epsilon.to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(alice.debited_jobs, 1);
+        // Reservations do NOT survive: they are rebuilt by job recovery.
+        assert_eq!(alice.open_reservations, 0);
+        let bob = reopened.status("bob").unwrap();
+        assert_eq!(bob.budget_epsilon.to_bits(), 7.0f64.to_bits());
+        assert_eq!(bob.spent_epsilon, 0.0);
+        // The spent history replays to the same ε.
+        {
+            let mut acc = RdpAccountant::new();
+            acc.step_training(0.1 + 0.2, 1.0 / 7.0, 5);
+            assert_eq!(alice.spent_epsilon.to_bits(), acc.epsilon(1e-5).0.to_bits());
+        }
+        // Malformed manifests fail loudly.
+        std::fs::write(dir.join("ledger.json"), "{}").unwrap();
+        assert!(BudgetLedger::open(Some(&dir_s)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_reservation_skips_debited_jobs() {
+        let ledger = BudgetLedger::open(None).unwrap();
+        let cfg = tiny_cfg();
+        ledger.create_tenant("t", 100.0, 1e-5).unwrap();
+        ledger.reserve("t", 1, &cfg).unwrap();
+        ledger.debit("t", 1, &schedule_cost(&cfg).records());
+        // A crash-recovered, already-debited job must not re-reserve.
+        ledger.restore_reservation("t", 1, &cfg);
+        assert_eq!(ledger.status("t").unwrap().open_reservations, 0);
+        // A genuinely open job does.
+        ledger.restore_reservation("t", 2, &cfg);
+        assert_eq!(ledger.status("t").unwrap().open_reservations, 1);
+    }
+}

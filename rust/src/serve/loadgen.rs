@@ -1,0 +1,399 @@
+//! `dpquant loadgen` — a zero-dependency loopback load generator for
+//! the multi-tenant daemon.
+//!
+//! Spins up an embedded [`Daemon`] on `127.0.0.1:0` (or targets an
+//! external one via `--addr`), creates `--tenants N` tenants whose
+//! budgets are sized to fit only about **half** of their
+//! `--jobs-per-tenant M` jobs — driving the ledger into exhaustion on
+//! purpose — and hammers the HTTP API from `--concurrency C` client
+//! threads using the same [`http_call`] the CLI verbs use. Each thread
+//! submits a job, records the submit round-trip, then polls the job to
+//! a terminal status and records the wait; 403 budget refusals are
+//! counted, not retried (the point is to measure the refusal path).
+//!
+//! The run reports accept/reject counts and submit/wait latency
+//! percentiles to stdout and writes them as a `dpquant-bench` v1 blob
+//! of the `"serve"` family to `--out` (default `BENCH_serve.json`) —
+//! validatable with `dpquant bench --check`, exactly like
+//! `BENCH_native.json`.
+//!
+//! Jobs are tiny mock-backend configs: the generator measures the
+//! *serving* stack (admission, queueing, fairness, recovery machinery),
+//! not kernel throughput — that's `dpquant bench`'s job.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::http::http_call;
+use super::jobs::config_to_json;
+use super::ledger::schedule_cost;
+use super::Daemon;
+use crate::cli::Args;
+use crate::config::TrainConfig;
+use crate::exp::perf::{BENCH_FORMAT, BENCH_VERSION};
+use crate::privacy::{Mechanism, RdpAccountant};
+use crate::util::error::{err, Result};
+use crate::util::json::{self, Json};
+
+/// The tiny mock job every loadgen submit carries (seed varies per
+/// job). Mock backend: admission math is identical to native's, the
+/// training loop is just cheap.
+fn loadgen_cfg(seed: u64, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        backend: "mock".into(),
+        dataset_size: 96,
+        val_size: 32,
+        batch_size: 16,
+        physical_batch: 32,
+        epochs,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// A tenant budget that admits about half of `per_tenant` copies of
+/// `cfg`: the composed ε of `ceil(per_tenant/2)` worst-case schedules.
+/// Composition is done the ledger's way (one accountant, records in
+/// sequence), so "fits k jobs" means exactly what admission will
+/// compute.
+fn half_fleet_budget(cfg: &TrainConfig, per_tenant: usize) -> f64 {
+    let cost = schedule_cost(cfg);
+    let mut acc = RdpAccountant::new();
+    for _ in 0..per_tenant.div_ceil(2) {
+        acc.record(
+            Mechanism::Training,
+            cost.sample_rate,
+            cost.noise_multiplier,
+            cost.train_steps,
+        );
+        acc.record(
+            Mechanism::Analysis,
+            cost.analysis_rate,
+            cost.analysis_sigma,
+            cost.analysis_steps,
+        );
+    }
+    acc.epsilon(cfg.delta).0
+}
+
+fn ms_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Nearest-rank percentile of an already-sorted sample; 0.0 for an
+/// empty one (all-rejected runs still emit finite, checkable numbers).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn percentile_obj(samples: &mut Vec<f64>) -> Json {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    json::obj(vec![
+        ("p50", json::num(percentile(samples, 50.0))),
+        ("p90", json::num(percentile(samples, 90.0))),
+        ("p99", json::num(percentile(samples, 99.0))),
+        ("max", json::num(samples.last().copied().unwrap_or(0.0))),
+        ("count", json::num(samples.len() as f64)),
+    ])
+}
+
+/// `dpquant loadgen --tenants N --jobs-per-tenant M --concurrency C
+/// [--epochs E] [--addr HOST:PORT] [--out PATH]` — see the module doc.
+pub fn run_loadgen(args: &Args) -> Result<()> {
+    args.require_known(
+        "loadgen",
+        &["tenants", "jobs-per-tenant", "concurrency", "epochs", "jobs", "addr", "out"],
+        &[],
+    )?;
+    let n_tenants = args.usize_or("tenants", 3)?.max(1);
+    let per_tenant = args.usize_or("jobs-per-tenant", 4)?.max(1);
+    // Well under the server's per-connection cap; loadgen opens one
+    // short-lived connection per call.
+    let concurrency = args.usize_or("concurrency", 4)?.clamp(1, 16);
+    let epochs = args.usize_or("epochs", 2)?.max(1);
+    let workers = args.usize_or("jobs", 2)?.max(1);
+    let out = args.str_or("out", "BENCH_serve.json");
+
+    // Embedded daemon by default — the "loopback" in loopback loadgen.
+    // `--addr` redirects the hammering at an already-running daemon
+    // (tenant names are pid-suffixed so reruns don't collide).
+    let embedded = match args.get("addr") {
+        Some(_) => None,
+        None => Some(Daemon::start("127.0.0.1:0", workers, None)?),
+    };
+    let addr = match (&embedded, args.get("addr")) {
+        (Some(d), _) => d.addr(),
+        (None, Some(a)) => a.to_string(),
+        (None, None) => unreachable!("no addr and no embedded daemon"),
+    };
+
+    let base = loadgen_cfg(0, epochs);
+    let budget = half_fleet_budget(&base, per_tenant);
+    let tenant_names: Vec<String> = (0..n_tenants)
+        .map(|i| format!("load-{}-t{i}", std::process::id()))
+        .collect();
+    for name in &tenant_names {
+        let body = json::obj(vec![
+            ("id", json::s(name)),
+            ("budget_epsilon", json::num(budget)),
+            ("delta", json::num(base.delta)),
+        ]);
+        let (status, resp) = http_call(&addr, "POST", "/v1/tenants", Some(&body))?;
+        if status != 201 {
+            return Err(err!("loadgen: creating tenant {name} failed ({status}): {resp}"));
+        }
+    }
+    println!(
+        "loadgen: {n_tenants} tenants x {per_tenant} jobs (concurrency {concurrency}) \
+         against http://{addr}"
+    );
+    println!(
+        "  per-tenant budget ε = {budget} (≈ {} of {per_tenant} jobs — exhaustion is the point)",
+        per_tenant.div_ceil(2)
+    );
+
+    // Interleave tenants round-by-round so every tenant is still
+    // submitting when budgets start running dry.
+    let mut items: VecDeque<(String, Json)> = VecDeque::new();
+    for round in 0..per_tenant {
+        for (t, name) in tenant_names.iter().enumerate() {
+            let cfg = loadgen_cfg((round * n_tenants + t) as u64, epochs);
+            items.push_back((
+                name.clone(),
+                json::obj(vec![
+                    ("config", config_to_json(&cfg)),
+                    ("tenant", json::s(name)),
+                ]),
+            ));
+        }
+    }
+    let queue = Mutex::new(items);
+    let submit_ms = Mutex::new(Vec::<f64>::new());
+    let wait_ms = Mutex::new(Vec::<f64>::new());
+    let accepted = AtomicU64::new(0);
+    let rejected_budget = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            scope.spawn(|| loop {
+                let item = queue.lock().unwrap().pop_front();
+                let Some((_tenant, body)) = item else { break };
+                let t0 = Instant::now();
+                let reply = http_call(&addr, "POST", "/v1/jobs", Some(&body));
+                let elapsed = ms_since(t0);
+                match reply {
+                    Ok((201, resp)) => {
+                        submit_ms.lock().unwrap().push(elapsed);
+                        accepted.fetch_add(1, Ordering::Relaxed);
+                        let Some(id) = resp.get("id").and_then(Json::as_usize) else {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        };
+                        // Poll to terminal; ~10 minutes of patience is
+                        // a hang, not a slow mock job.
+                        let t1 = Instant::now();
+                        let mut outcome = None;
+                        for _ in 0..120_000 {
+                            match http_call(&addr, "GET", &format!("/v1/jobs/{id}"), None) {
+                                Ok((200, s)) => {
+                                    let st = s
+                                        .get("status")
+                                        .and_then(Json::as_str)
+                                        .unwrap_or("")
+                                        .to_string();
+                                    if matches!(st.as_str(), "done" | "failed" | "cancelled") {
+                                        outcome = Some(st);
+                                        break;
+                                    }
+                                }
+                                _ => break,
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        wait_ms.lock().unwrap().push(ms_since(t1));
+                        match outcome.as_deref() {
+                            Some("done") => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Ok((403, resp))
+                        if resp.get("error").and_then(Json::as_str)
+                            == Some("budget_exhausted") =>
+                    {
+                        submit_ms.lock().unwrap().push(elapsed);
+                        rejected_budget.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok((status, resp)) => {
+                        eprintln!("loadgen: unexpected submit reply {status}: {resp}");
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        eprintln!("loadgen: submit failed: {e:#}");
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    let submitted = (n_tenants * per_tenant) as u64;
+    let accepted = accepted.into_inner();
+    let rejected_budget = rejected_budget.into_inner();
+    let completed = completed.into_inner();
+    let errors = errors.into_inner();
+    let mut submit_ms = submit_ms.into_inner().unwrap();
+    let mut wait_ms = wait_ms.into_inner().unwrap();
+    let submit_obj = percentile_obj(&mut submit_ms);
+    let wait_obj = percentile_obj(&mut wait_ms);
+
+    println!(
+        "  submitted {submitted}: accepted {accepted}, rejected(budget) {rejected_budget}, \
+         errors {errors}; completed {completed}"
+    );
+    for (label, o) in [("submit", &submit_obj), ("wait", &wait_obj)] {
+        let g = |k: &str| o.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "  {label} latency ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  max {:.2}",
+            g("p50"),
+            g("p90"),
+            g("p99"),
+            g("max")
+        );
+    }
+
+    // Mirror into the global registry (same idiom as `dpquant bench`).
+    let reg = crate::obs::global();
+    reg.gauge("bench.serve.accepted").set(accepted as f64);
+    reg.gauge("bench.serve.rejected_budget").set(rejected_budget as f64);
+    for (label, o) in [("submit_ms", &submit_obj), ("wait_ms", &wait_obj)] {
+        for p in ["p50", "p90", "p99"] {
+            let v = o.get(p).and_then(Json::as_f64).unwrap_or(0.0);
+            reg.gauge(&format!("bench.serve.{label}.{p}")).set(v);
+        }
+    }
+
+    let doc = json::obj(vec![
+        ("format", json::s(BENCH_FORMAT)),
+        ("version", json::num(BENCH_VERSION as f64)),
+        ("family", json::s("serve")),
+        ("quick", Json::Bool(std::env::var_os("DPQUANT_BENCH_QUICK").is_some())),
+        ("provisional", Json::Bool(false)),
+        (
+            "load",
+            json::obj(vec![
+                ("tenants", json::num(n_tenants as f64)),
+                ("jobs_per_tenant", json::num(per_tenant as f64)),
+                ("concurrency", json::num(concurrency as f64)),
+                ("workers", json::num(workers as f64)),
+                ("budget_epsilon", json::num(budget)),
+            ]),
+        ),
+        (
+            "counts",
+            json::obj(vec![
+                ("submitted", json::num(submitted as f64)),
+                ("accepted", json::num(accepted as f64)),
+                ("rejected_budget", json::num(rejected_budget as f64)),
+                ("completed", json::num(completed as f64)),
+                ("errors", json::num(errors as f64)),
+            ]),
+        ),
+        ("submit_ms", submit_obj),
+        ("wait_ms", wait_obj),
+    ]);
+    std::fs::write(&out, format!("{doc}\n"))?;
+    println!("[loadgen json -> {out}]  (validate: dpquant bench --check {out})");
+
+    if let Some(daemon) = embedded {
+        daemon.stop();
+    }
+    if errors > 0 {
+        return Err(err!("loadgen finished with {errors} errors (see stderr above)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_nearest_rank_and_total() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 5.0);
+        assert_eq!(percentile(&v, 100.0), 10.0);
+        // NaN-free sorting path.
+        let mut v = vec![3.0, 1.0, 2.0];
+        let o = percentile_obj(&mut v);
+        assert_eq!(o.get("p50").unwrap().as_f64(), Some(2.0));
+        assert_eq!(o.get("max").unwrap().as_f64(), Some(3.0));
+        assert_eq!(o.get("count").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn half_fleet_budget_sits_between_half_and_full_fleet() {
+        let cfg = loadgen_cfg(0, 2);
+        let one = schedule_cost(&cfg).epsilon;
+        let budget = half_fleet_budget(&cfg, 4); // fits 2 of 4 jobs
+        assert!(budget > one, "budget {budget} must fit more than one job ({one})");
+        let mut acc = RdpAccountant::new();
+        let cost = schedule_cost(&cfg);
+        for _ in 0..4 {
+            acc.record(
+                Mechanism::Training,
+                cost.sample_rate,
+                cost.noise_multiplier,
+                cost.train_steps,
+            );
+            acc.record(
+                Mechanism::Analysis,
+                cost.analysis_rate,
+                cost.analysis_sigma,
+                cost.analysis_steps,
+            );
+        }
+        let full = acc.epsilon(cfg.delta).0;
+        assert!(budget < full, "budget {budget} must NOT fit the whole fleet ({full})");
+    }
+
+    #[test]
+    fn loadgen_end_to_end_exhausts_and_emits_checkable_json() {
+        let dir = std::env::temp_dir().join(format!("dpquant-loadgen-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_serve.json");
+        let argv = format!(
+            "loadgen --tenants 2 --jobs-per-tenant 2 --concurrency 2 --epochs 1 --out {}",
+            out.display()
+        );
+        let args = Args::parse(argv.split_whitespace().map(String::from)).unwrap();
+        run_loadgen(&args).unwrap();
+        let doc = json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(doc.get("format").unwrap().as_str(), Some(BENCH_FORMAT));
+        assert_eq!(doc.get("family").unwrap().as_str(), Some("serve"));
+        let counts = doc.get("counts").unwrap();
+        // Budget fits ceil(2/2) = 1 job per tenant: the second submit
+        // of each tenant must be a 403.
+        assert_eq!(counts.get("submitted").unwrap().as_usize(), Some(4));
+        assert_eq!(counts.get("accepted").unwrap().as_usize(), Some(2));
+        assert_eq!(counts.get("rejected_budget").unwrap().as_usize(), Some(2));
+        assert_eq!(counts.get("errors").unwrap().as_usize(), Some(0));
+        assert!(doc.get("submit_ms").unwrap().get("p99").unwrap().as_f64().is_some());
+        assert!(doc.get("wait_ms").unwrap().get("p50").unwrap().as_f64().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -18,8 +18,18 @@
 //!   `GET /v1/metrics` — the live `dpquant-metrics` v1 snapshot:
 //!   job counts and throughput, queue depth, per-job ε spend, and the
 //!   global registry of pool/HTTP/kernel telemetry);
+//! * [`ledger`] — the per-tenant privacy-budget ledger
+//!   (`dpquant-serve-ledger` v1, DESIGN.md §15): lifetime (ε, δ)
+//!   budgets, reservation-based admission control on submit, debit of
+//!   the actual spend on completion, refunds on cancel/failure, and
+//!   crash-safe durability (reservations rebuilt during recovery);
 //! * [`client`] — the typed client + the `dpquant job
-//!   submit|list|status|events|cancel|wait` CLI verbs.
+//!   submit|list|status|events|cancel|wait` and `dpquant tenant
+//!   create|list|status` CLI verbs;
+//! * [`loadgen`] — the zero-dep loopback load generator
+//!   (`dpquant loadgen`): hammers the HTTP API from N tenants, drives
+//!   budgets into exhaustion on purpose, and writes submit/wait latency
+//!   percentiles plus accept/reject counts into `BENCH_serve.json`.
 //!
 //! **Thread ownership** (DESIGN.md §12): the accept thread owns the
 //! listener; each connection gets a short-lived handler thread that
@@ -39,6 +49,8 @@ pub mod api;
 pub mod client;
 pub mod http;
 pub mod jobs;
+pub mod ledger;
+pub mod loadgen;
 
 use std::sync::Arc;
 
@@ -103,7 +115,7 @@ pub fn run_serve(args: &Args) -> Result<()> {
     }
     println!(
         "API {API_FORMAT} v{API_VERSION}: POST /v1/jobs  GET /v1/jobs[/ID[/events]]  \
-         POST /v1/jobs/ID/cancel  GET /v1/healthz  GET /v1/metrics"
+         POST /v1/jobs/ID/cancel  POST/GET /v1/tenants[/ID]  GET /v1/healthz  GET /v1/metrics"
     );
     println!("submit with: dpquant job submit --addr {} [train flags]", daemon.addr());
     daemon.server.join();

@@ -1,0 +1,375 @@
+//! Tier-1 ledger tests: the acceptance contract of the per-tenant
+//! privacy-budget ledger (`rust/src/serve/ledger.rs`) over the full
+//! HTTP stack.
+//!
+//! (a) **Exhaustion**: a submit that doesn't fit gets a 403 whose
+//!     `remaining_epsilon` is bit-for-bit the number
+//!     `GET /v1/tenants/{id}` reports — one ε computation, one wire
+//!     encoding, no drift.
+//! (b) **Refund**: cancelling a queued tenant job restores the
+//!     remaining budget to the exact pre-submit bits.
+//! (c) **Crash recovery**: a fabricated kill -9 state (ledger manifest
+//!     + a queued tenant job) restarts with the reservation rebuilt
+//!     bit-identically, the recovered job debits exactly once, and the
+//!     remaining ε is bit-stable across a second restart.
+//! (d) **No oversubscription**: three tenants hammered by concurrent
+//!     submits each admit exactly the jobs their budget fits — never
+//!     one more, no matter the interleaving.
+//!
+//! Everything runs on `127.0.0.1:0`, in-process, no artifacts —
+//! tier-1 like `tests/serve.rs`.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use dpquant::config::TrainConfig;
+use dpquant::privacy::{Mechanism, RdpAccountant};
+use dpquant::serve::client::Client;
+use dpquant::serve::http::http_call;
+use dpquant::serve::jobs::config_to_json;
+use dpquant::serve::ledger::{schedule_cost, BudgetLedger};
+use dpquant::serve::Daemon;
+use dpquant::util::json::{self, Json};
+
+const WAIT: Duration = Duration::from_secs(120);
+const POLL: Duration = Duration::from_millis(20);
+
+fn mock_cfg(seed: u64, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        backend: "mock".into(),
+        dataset_size: 96,
+        val_size: 32,
+        batch_size: 16,
+        physical_batch: 32,
+        epochs,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+fn temp_state_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("dpquant_ledger_{tag}_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A budget that fits exactly `k` copies of `cfg`'s worst-case
+/// schedule, composed the ledger's way (one accountant, records in
+/// sequence — NOT k × ε of one job, which would be loose).
+fn budget_for_jobs(cfg: &TrainConfig, k: usize) -> f64 {
+    let cost = schedule_cost(cfg);
+    let mut acc = RdpAccountant::new();
+    for _ in 0..k {
+        acc.record(
+            Mechanism::Training,
+            cost.sample_rate,
+            cost.noise_multiplier,
+            cost.train_steps,
+        );
+        acc.record(
+            Mechanism::Analysis,
+            cost.analysis_rate,
+            cost.analysis_sigma,
+            cost.analysis_steps,
+        );
+    }
+    acc.epsilon(cfg.delta).0
+}
+
+fn submit_raw(addr: &str, cfg: &TrainConfig, tenant: &str) -> (u16, Json) {
+    let body = json::obj(vec![
+        ("config", config_to_json(cfg)),
+        ("tenant", json::s(tenant)),
+    ]);
+    http_call(addr, "POST", "/v1/jobs", Some(&body)).unwrap()
+}
+
+fn remaining_bits(status: &Json) -> u64 {
+    status
+        .get("remaining_epsilon")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+        .to_bits()
+}
+
+// ---------------------------------------------------------------------
+// (a) 403 remaining_epsilon == tenant status, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn exhausted_submit_403_matches_tenant_status_bits_over_the_wire() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let addr = daemon.addr();
+    let client = Client::new(&addr);
+
+    let cfg = mock_cfg(0, 1);
+    // Fits exactly one job.
+    client.create_tenant("one-shot", budget_for_jobs(&cfg, 1), cfg.delta).unwrap();
+
+    // Job 1 fits (composed estimate == budget, not greater).
+    let (status, resp) = submit_raw(&addr, &cfg, "one-shot");
+    assert_eq!(status, 201, "{resp}");
+    let id = resp.get("id").unwrap().as_usize().unwrap() as u64;
+    client.wait(id, WAIT, POLL).unwrap();
+
+    // Job 2 cannot: 403 with the structured refusal.
+    let (status, refusal) = submit_raw(&addr, &mock_cfg(1, 1), "one-shot");
+    assert_eq!(status, 403, "{refusal}");
+    assert_eq!(refusal.get("error").unwrap().as_str(), Some("budget_exhausted"));
+    assert_eq!(refusal.get("tenant").unwrap().as_str(), Some("one-shot"));
+    assert!(refusal.get("estimated_epsilon").unwrap().as_f64().unwrap() > 0.0);
+
+    // The refusal's remaining ε IS the status document's, bitwise.
+    let doc = client.tenant_status("one-shot").unwrap();
+    assert_eq!(
+        remaining_bits(&refusal),
+        remaining_bits(&doc),
+        "403 body and GET /v1/tenants/one-shot must agree bit-for-bit: {refusal} vs {doc}"
+    );
+    assert_eq!(doc.get("debited_jobs").unwrap().as_usize(), Some(1));
+    assert_eq!(doc.get("open_reservations").unwrap().as_usize(), Some(0));
+    daemon.stop();
+}
+
+// ---------------------------------------------------------------------
+// (b) cancel refunds the reservation to the exact pre-submit bits
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancelling_a_queued_tenant_job_refunds_bit_exact() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let addr = daemon.addr();
+    let client = Client::new(&addr);
+
+    // Occupy the lone worker so the tenant job stays queued with an
+    // open reservation.
+    let long = client.submit(&mock_cfg(0, 100_000)).unwrap();
+
+    client.create_tenant("acme", 50.0, 1e-5).unwrap();
+    let before = client.tenant_status("acme").unwrap();
+    assert_eq!(before.get("remaining_epsilon").unwrap().as_f64(), Some(50.0));
+
+    let (status, resp) = submit_raw(&addr, &mock_cfg(1, 2), "acme");
+    assert_eq!(status, 201, "{resp}");
+    let id = resp.get("id").unwrap().as_usize().unwrap() as u64;
+
+    let held = client.tenant_status("acme").unwrap();
+    assert_eq!(held.get("open_reservations").unwrap().as_usize(), Some(1));
+    assert!(
+        held.get("remaining_epsilon").unwrap().as_f64().unwrap() < 50.0,
+        "an open reservation must reduce the remaining budget: {held}"
+    );
+
+    client.cancel(id).unwrap();
+    let status = client.wait(id, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("cancelled"));
+
+    let after = client.tenant_status("acme").unwrap();
+    assert_eq!(
+        remaining_bits(&after),
+        remaining_bits(&before),
+        "a full refund must restore the exact bits: {after}"
+    );
+    assert_eq!(after.get("open_reservations").unwrap().as_usize(), Some(0));
+    assert_eq!(after.get("debited_jobs").unwrap().as_usize(), Some(0));
+
+    client.cancel(long).unwrap();
+    client.wait(long, WAIT, POLL).unwrap();
+    daemon.stop();
+}
+
+// ---------------------------------------------------------------------
+// (c) kill -9: reservation rebuilt bit-identically, debit exactly once
+// ---------------------------------------------------------------------
+
+#[test]
+fn restart_rebuilds_reservations_and_debits_exactly_once() {
+    let dir = temp_state_dir("recover");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = mock_cfg(3, 2);
+    let budget = budget_for_jobs(&cfg, 2);
+
+    // Fabricate the kill -9 disk state: the ledger manifest written by
+    // a real ledger (create_tenant persists), plus two job manifests a
+    // crashed daemon leaves behind — an anonymous long job (id 1) and a
+    // queued tenant job (id 2) whose reservation lived only in memory.
+    {
+        let ledger = BudgetLedger::open(Some(&dir)).unwrap();
+        ledger.create_tenant("acme", budget, cfg.delta).unwrap();
+    }
+    let long_manifest = json::obj(vec![
+        ("format", json::s("dpquant-serve-job")),
+        ("version", json::num(1.0)),
+        ("id", json::num(1.0)),
+        ("status", json::s("queued")),
+        ("epochs_completed", json::num(0.0)),
+        ("config", config_to_json(&mock_cfg(0, 100_000))),
+        ("error", Json::Null),
+        ("summary", Json::Null),
+    ]);
+    std::fs::write(format!("{dir}/job-1.json"), long_manifest.to_string()).unwrap();
+    let tenant_manifest = json::obj(vec![
+        ("format", json::s("dpquant-serve-job")),
+        ("version", json::num(1.0)),
+        ("id", json::num(2.0)),
+        ("status", json::s("queued")),
+        ("tenant", json::s("acme")),
+        ("epochs_completed", json::num(0.0)),
+        ("config", config_to_json(&cfg)),
+        ("error", Json::Null),
+        ("summary", Json::Null),
+    ]);
+    std::fs::write(format!("{dir}/job-2.json"), tenant_manifest.to_string()).unwrap();
+
+    // What the rebuilt reservation must look like: an independent
+    // ledger with the same tenant and the same open reservation.
+    let expected_held = {
+        let oracle_dir = temp_state_dir("oracle");
+        std::fs::create_dir_all(&oracle_dir).unwrap();
+        let oracle = BudgetLedger::open(Some(&oracle_dir)).unwrap();
+        oracle.create_tenant("acme", budget, cfg.delta).unwrap();
+        oracle.reserve("acme", 2, &cfg).unwrap();
+        let doc = oracle.status("acme").unwrap();
+        std::fs::remove_dir_all(&oracle_dir).ok();
+        doc.remaining_epsilon.to_bits()
+    };
+
+    // "Restart" with one worker: recovery dispatches the anonymous
+    // bucket first, so the long job pins the worker and the tenant
+    // job's rebuilt reservation is observable while it queues.
+    let daemon = Daemon::start("127.0.0.1:0", 1, Some(&dir)).unwrap();
+    let client = Client::new(&daemon.addr());
+    let held = client.tenant_status("acme").unwrap();
+    assert_eq!(held.get("open_reservations").unwrap().as_usize(), Some(1), "{held}");
+    assert_eq!(
+        remaining_bits(&held),
+        expected_held,
+        "recovery must rebuild the reservation bit-identically: {held}"
+    );
+
+    // Unblock the worker; the recovered tenant job runs and debits.
+    client.cancel(1).unwrap();
+    client.wait(1, WAIT, POLL).unwrap();
+    let status = client.wait(2, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+
+    let done = client.tenant_status("acme").unwrap();
+    assert_eq!(done.get("debited_jobs").unwrap().as_usize(), Some(1));
+    assert_eq!(done.get("open_reservations").unwrap().as_usize(), Some(0));
+    let spent = done.get("spent_epsilon").unwrap().as_f64().unwrap();
+    assert!(spent > 0.0 && spent <= budget, "{done}");
+    let remaining_before_restart = remaining_bits(&done);
+    daemon.stop();
+
+    // Second restart over the settled state: the debit must not happen
+    // again and the remaining ε must be bit-stable.
+    let daemon = Daemon::start("127.0.0.1:0", 1, Some(&dir)).unwrap();
+    let client = Client::new(&daemon.addr());
+    let again = client.tenant_status("acme").unwrap();
+    assert_eq!(again.get("debited_jobs").unwrap().as_usize(), Some(1), "{again}");
+    assert_eq!(again.get("open_reservations").unwrap().as_usize(), Some(0));
+    assert_eq!(
+        remaining_bits(&again),
+        remaining_before_restart,
+        "remaining ε must be bit-identical across a restart: {again}"
+    );
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// (d) concurrent submits never oversubscribe a budget
+// ---------------------------------------------------------------------
+
+#[test]
+fn three_tenants_of_concurrent_submits_never_oversubscribe() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let addr = daemon.addr();
+    let client = Client::new(&addr);
+
+    // Pin the lone worker so no debit lands during the submit storm —
+    // every admission decision is reservations-vs-budget, atomically
+    // under the ledger lock.
+    let long = client.submit(&mock_cfg(0, 100_000)).unwrap();
+
+    let cfg = mock_cfg(1, 1);
+    let fits = 2usize;
+    let budget = budget_for_jobs(&cfg, fits);
+    let tenants = ["t-red", "t-green", "t-blue"];
+    for t in &tenants {
+        client.create_tenant(t, budget, cfg.delta).unwrap();
+    }
+
+    // 6 submits per tenant from 6 threads, interleaved.
+    let accepted = Mutex::new(Vec::<(String, u64)>::new());
+    let rejected = Mutex::new(Vec::<String>::new());
+    std::thread::scope(|scope| {
+        for round in 0..2 {
+            for chunk in 0..3 {
+                let accepted = &accepted;
+                let rejected = &rejected;
+                let addr = &addr;
+                let tenants = &tenants;
+                scope.spawn(move || {
+                    for (i, t) in tenants.iter().enumerate() {
+                        let seed = (round * 100 + chunk * 10 + i) as u64;
+                        let (status, resp) = submit_raw(addr, &mock_cfg(seed, 1), t);
+                        match status {
+                            201 => accepted.lock().unwrap().push((
+                                t.to_string(),
+                                resp.get("id").unwrap().as_usize().unwrap() as u64,
+                            )),
+                            403 => {
+                                assert_eq!(
+                                    resp.get("error").unwrap().as_str(),
+                                    Some("budget_exhausted"),
+                                    "{resp}"
+                                );
+                                rejected.lock().unwrap().push(t.to_string());
+                            }
+                            other => panic!("unexpected submit status {other}: {resp}"),
+                        }
+                    }
+                });
+            }
+        }
+    });
+    let accepted = accepted.into_inner().unwrap();
+    let rejected = rejected.into_inner().unwrap();
+
+    // Each tenant admitted exactly what its budget fits — regardless of
+    // thread interleaving — and refused the rest.
+    for t in &tenants {
+        let a = accepted.iter().filter(|(name, _)| name == t).count();
+        let r = rejected.iter().filter(|name| name == *t).count();
+        assert_eq!(a, fits, "tenant {t}: accepted {a} of budget-for-{fits}");
+        assert_eq!(r, 6 - fits, "tenant {t}: rejected {r}");
+        let doc = client.tenant_status(t).unwrap();
+        assert_eq!(doc.get("open_reservations").unwrap().as_usize(), Some(fits));
+        assert!(
+            doc.get("remaining_epsilon").unwrap().as_f64().unwrap() >= 0.0,
+            "{doc}"
+        );
+    }
+
+    // Drain: the accepted jobs run; debits never exceed the budget.
+    client.cancel(long).unwrap();
+    client.wait(long, WAIT, POLL).unwrap();
+    for (_, id) in &accepted {
+        let status = client.wait(*id, WAIT, POLL).unwrap();
+        assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+    }
+    for t in &tenants {
+        let doc = client.tenant_status(t).unwrap();
+        assert_eq!(doc.get("debited_jobs").unwrap().as_usize(), Some(fits), "{doc}");
+        assert_eq!(doc.get("open_reservations").unwrap().as_usize(), Some(0));
+        let spent = doc.get("spent_epsilon").unwrap().as_f64().unwrap();
+        assert!(
+            spent > 0.0 && spent <= budget,
+            "tenant {t} oversubscribed: spent {spent} of {budget}"
+        );
+    }
+    daemon.stop();
+}

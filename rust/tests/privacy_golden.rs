@@ -16,9 +16,11 @@
 //! headroom over float-op-reordering noise while still catching any
 //! real change in the math.
 
+use dpquant::config::TrainConfig;
 use dpquant::privacy::{
-    default_alphas, rdp_sgm_step, rdp_to_epsilon, Mechanism, RdpAccountant,
+    default_alphas, rdp_sgm_step, rdp_to_epsilon, Mechanism, RdpAccountant, StepRecord,
 };
+use dpquant::serve::ledger::BudgetLedger;
 
 const REL_TOL: f64 = 1e-6;
 
@@ -117,6 +119,78 @@ fn accountant_composition_golden() {
     // Attribution bookkeeping stays exact.
     assert_eq!(acc.steps_of(Mechanism::Training), 64);
     assert_eq!(acc.steps_of(Mechanism::Analysis), 3);
+}
+
+#[test]
+fn ledger_spend_composes_like_one_accountant() {
+    // The budget ledger's contract (DESIGN.md §15): a tenant that runs
+    // two jobs sequentially must be charged EXACTLY what one accountant
+    // composing both runs' histories would report — debit-by-debit
+    // replay cannot drift from straight-line composition, bit for bit.
+    let h1 = [
+        StepRecord {
+            mechanism: Mechanism::Training,
+            sample_rate: 0.0625,
+            noise_multiplier: 0.6,
+            steps: 64,
+        },
+        StepRecord {
+            mechanism: Mechanism::Analysis,
+            sample_rate: 0.03125,
+            noise_multiplier: 0.5,
+            steps: 3,
+        },
+    ];
+    let h2 = [
+        StepRecord {
+            mechanism: Mechanism::Training,
+            sample_rate: 0.02,
+            noise_multiplier: 1.0,
+            steps: 500,
+        },
+        StepRecord {
+            mechanism: Mechanism::Analysis,
+            sample_rate: 0.03125,
+            noise_multiplier: 0.5,
+            steps: 2,
+        },
+    ];
+    let delta = 1e-5;
+
+    // One accountant, both runs straight through.
+    let mut acc = RdpAccountant::new();
+    for r in h1.iter().chain(h2.iter()) {
+        acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+    }
+    let composed = acc.epsilon(delta).0;
+
+    // The ledger: two reserve → debit cycles.
+    let ledger = BudgetLedger::open(None).unwrap();
+    ledger.create_tenant("golden", 1000.0, delta).unwrap();
+    let cfg = TrainConfig {
+        backend: "mock".into(),
+        ..TrainConfig::default()
+    };
+    ledger.reserve("golden", 1, &cfg).unwrap();
+    ledger.debit("golden", 1, &h1);
+    ledger.reserve("golden", 2, &cfg).unwrap();
+    ledger.debit("golden", 2, &h2);
+
+    let doc = ledger.status("golden").unwrap();
+    assert_eq!(doc.open_reservations, 0);
+    assert_eq!(doc.debited_jobs, 2);
+    assert_eq!(
+        doc.spent_epsilon.to_bits(),
+        composed.to_bits(),
+        "ledger spend {} vs one-accountant composition {}",
+        doc.spent_epsilon,
+        composed
+    );
+    assert_eq!(
+        doc.remaining_epsilon.to_bits(),
+        (1000.0 - composed).max(0.0).to_bits(),
+        "remaining must be budget minus the composed spend, same bits"
+    );
 }
 
 #[test]
