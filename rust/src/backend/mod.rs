@@ -273,6 +273,16 @@ impl StepExecutor for NativeExecutor {
         self.init.clone()
     }
 
+    fn quant_weight_params(&self) -> Option<Vec<usize>> {
+        // Layer l's weights live in the tensor the quant epilogue also
+        // targets; biases are separate tensors and stay unmapped.
+        Some(
+            (0..self.model.n_layers())
+                .map(|l| self.model.weight_index(l))
+                .collect(),
+        )
+    }
+
     fn train_step(
         &self,
         weights: &[Vec<f32>],

@@ -293,6 +293,25 @@ pub struct TrainConfig {
     /// artifacts), "pjrt" (AOT artifacts + XLA runtime), or "mock"
     /// (logistic regression with simulated quantization damage).
     pub backend: String,
+    /// Adaptive-DP policy: "static" (the paper's fixed knobs, default),
+    /// "noise_decay" (Dynamic DP-SGD σ/C schedules), "rate_schedule"
+    /// (DPIS-style sampling-rate schedule), or "layer_lr" (per-layer
+    /// learning rates from the privatized EMA scores). DESIGN.md §16.
+    pub policy: String,
+    /// Final noise multiplier for policy = "noise_decay" (σ at the last
+    /// epoch). 0.0 holds σ at `noise_multiplier`.
+    pub noise_final: f64,
+    /// Final clipping norm for policy = "noise_decay" (C at the last
+    /// epoch). 0.0 holds C at `clip_norm`.
+    pub clip_final: f64,
+    /// Final Poisson sampling rate for policy = "rate_schedule" (q at
+    /// the last epoch). 0.0 holds q at `batch_size / dataset_size`.
+    pub rate_final: f64,
+    /// Interpolation shape for "noise_decay": "linear" or "exp".
+    pub decay_shape: String,
+    /// Spread of the per-layer lr factors for policy = "layer_lr":
+    /// factors span [1 − s/2, 1 + s/2]. Must be in [0, 2).
+    pub layer_lr_strength: f64,
 }
 
 impl Default for TrainConfig {
@@ -324,6 +343,12 @@ impl Default for TrainConfig {
             seed: 0,
             physical_batch: 64,
             backend: "native".into(),
+            policy: "static".into(),
+            noise_final: 0.0,
+            clip_final: 0.0,
+            rate_final: 0.0,
+            decay_shape: "linear".into(),
+            layer_lr_strength: 0.5,
         }
     }
 }
@@ -359,6 +384,12 @@ pub const KNOWN_TRAIN_KEYS: &[&str] = &[
     "seed",
     "physical_batch",
     "backend",
+    "policy",
+    "noise_final",
+    "clip_final",
+    "rate_final",
+    "decay_shape",
+    "layer_lr_strength",
 ];
 
 /// The `--key` command-line forms [`TrainConfig::from_args`] reads.
@@ -387,6 +418,12 @@ pub const CONFIG_ARG_KEYS: &[&str] = &[
     "seed",
     "target-epsilon",
     "backend",
+    "policy",
+    "noise-final",
+    "clip-final",
+    "rate-final",
+    "decay-shape",
+    "layer-lr-strength",
 ];
 
 impl TrainConfig {
@@ -464,6 +501,12 @@ impl TrainConfig {
             seed: cf.i64_or(sec, "seed", d.seed as i64) as u64,
             physical_batch: cf.i64_or(sec, "physical_batch", d.physical_batch as i64) as usize,
             backend: cf.str_or(sec, "backend", &d.backend),
+            policy: cf.str_or(sec, "policy", &d.policy),
+            noise_final: cf.f64_or(sec, "noise_final", d.noise_final),
+            clip_final: cf.f64_or(sec, "clip_final", d.clip_final),
+            rate_final: cf.f64_or(sec, "rate_final", d.rate_final),
+            decay_shape: cf.str_or(sec, "decay_shape", &d.decay_shape),
+            layer_lr_strength: cf.f64_or(sec, "layer_lr_strength", d.layer_lr_strength),
         })
     }
 
@@ -525,6 +568,16 @@ impl TrainConfig {
         if let Some(v) = args.get("backend") {
             cfg.backend = v.to_string();
         }
+        if let Some(v) = args.get("policy") {
+            cfg.policy = v.to_string();
+        }
+        cfg.noise_final = args.f64_or("noise-final", cfg.noise_final)?;
+        cfg.clip_final = args.f64_or("clip-final", cfg.clip_final)?;
+        cfg.rate_final = args.f64_or("rate-final", cfg.rate_final)?;
+        if let Some(v) = args.get("decay-shape") {
+            cfg.decay_shape = v.to_string();
+        }
+        cfg.layer_lr_strength = args.f64_or("layer-lr-strength", cfg.layer_lr_strength)?;
         Ok(self)
     }
 
@@ -852,6 +905,12 @@ val_size = 96
 seed = 95
 physical_batch = 94
 backend = "mock"
+policy = "noise_decay"
+noise_final = 0.25
+clip_final = 0.5
+rate_final = 0.01
+decay_shape = "exp"
+layer_lr_strength = 0.75
 "#;
         let cf = ConfigFile::parse(text).unwrap();
         let keys_in_sample = cf.entries.len();
@@ -889,6 +948,12 @@ backend = "mock"
         assert_ne!(c.seed, d.seed);
         assert_ne!(c.physical_batch, d.physical_batch);
         assert_ne!(c.backend, d.backend);
+        assert_ne!(c.policy, d.policy);
+        assert_ne!(c.noise_final, d.noise_final);
+        assert_ne!(c.clip_final, d.clip_final);
+        assert_ne!(c.rate_final, d.rate_final);
+        assert_ne!(c.decay_shape, d.decay_shape);
+        assert_ne!(c.layer_lr_strength, d.layer_lr_strength);
     }
 
     #[test]

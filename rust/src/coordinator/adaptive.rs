@@ -1,0 +1,563 @@
+//! Adaptive-DP policies: per-epoch schedules for the DP-SGD knobs —
+//! noise multiplier, clipping norm, Poisson sampling rate, per-layer
+//! learning rates — pluggable behind the existing scheduler config
+//! (DESIGN.md §16).
+//!
+//! Three levers from the adaptive-DP literature adjacent to the paper,
+//! each a contained policy selected by the `policy` config key:
+//!
+//! * [`AdaptivePolicy::NoiseDecay`] — Dynamic DP-SGD (arXiv
+//!   2111.00173): σ(t) and C(t) follow a linear or exponential
+//!   schedule across epochs. ε-consuming: every epoch's (q, σ_t) pair
+//!   becomes its own RDP composition block.
+//! * [`AdaptivePolicy::RateSchedule`] — the DPIS lever (arXiv
+//!   2210.09634): the Poisson sampling rate q(t) follows a linear
+//!   schedule, with per-step (q_t, σ) accounting through the same
+//!   subsampled-Gaussian math.
+//! * [`AdaptivePolicy::LayerLr`] — adaptive per-layer learning rates
+//!   (arXiv 1912.09150) driven by the **already-privatized** EMA
+//!   loss-impact scores: pure post-processing of DP outputs, zero
+//!   extra ε.
+//!
+//! The contract that keeps the budget ledger honest: a policy's
+//! worst-case training schedule is a pure function of the config
+//! ([`training_schedule`]), and replaying those records through
+//! `RdpAccountant::predict_schedule` composes **bit-identically** to
+//! the live run's block-by-block accounting (the per-epoch knobs here
+//! are the very values the session feeds `step_training`; pinned by
+//! `tests/privacy_golden.rs`).
+//!
+//! Clipping decays without touching the executor: executors clip every
+//! per-sample gradient at the immutable build-time norm C₀, and the
+//! optimizer rescales the summed clipped gradients by `C(t)/C₀` — a
+//! valid sensitivity-C(t) mechanism (clip-then-rescale), so the
+//! accountant's (q, σ_t) pairs are exactly right (DESIGN.md §16.2).
+
+use crate::config::TrainConfig;
+use crate::privacy::{Mechanism, StepRecord};
+use crate::util::error::{ensure, err, Result};
+
+/// Interpolation shape for [`AdaptivePolicy::NoiseDecay`] schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecayShape {
+    /// `a + t·(b − a)` — exact at both endpoints.
+    Linear,
+    /// `a·(b/a)^t` — geometric decay; needs positive endpoints.
+    Exp,
+}
+
+impl DecayShape {
+    /// Parse a shape name as it appears in configs/flags.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "linear" => Ok(Self::Linear),
+            "exp" => Ok(Self::Exp),
+            other => Err(err!("unknown decay_shape '{other}' (expected linear | exp)")),
+        }
+    }
+}
+
+/// The per-epoch values of every scheduling-relevant DP knob. The
+/// session computes one of these at the top of each epoch and feeds it
+/// to the optimizer (σ·C, C(t)/C₀ rescale) and the accountant
+/// ((q_t, σ_t) per step); [`training_schedule`] replays the identical
+/// sequence for admission control.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpochKnobs {
+    /// DP-SGD noise multiplier σ_t.
+    pub noise_multiplier: f64,
+    /// Clipping norm C_t (applied as a C_t/C₀ rescale of C₀-clipped
+    /// sums — executors clip at the immutable C₀).
+    pub clip_norm: f64,
+    /// Poisson sampling rate q_t.
+    pub sample_rate: f64,
+}
+
+/// An adaptive-DP policy: how the DP knobs evolve across epochs.
+///
+/// `Static` (the default) and `LayerLr` return the base knobs with
+/// **no arithmetic at all**, so their training runs and privacy
+/// accounting are bit-identical to the pre-policy code path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdaptivePolicy {
+    /// The paper's fixed-(σ, C, q) schedule — today's behavior.
+    Static,
+    /// Dynamic DP-SGD: σ and C interpolate from the config's base
+    /// values to `noise_final` / `clip_final` over the epochs.
+    NoiseDecay {
+        /// Linear or exponential interpolation.
+        shape: DecayShape,
+        /// σ at the last epoch (resolved: a `noise_final` of 0 in the
+        /// config holds σ at its base value).
+        noise_final: f64,
+        /// C at the last epoch (resolved likewise).
+        clip_final: f64,
+    },
+    /// DPIS-style sampling-rate schedule: q interpolates linearly from
+    /// the config's `batch_size/dataset_size` to `rate_final`.
+    RateSchedule {
+        /// q at the last epoch (resolved: 0 holds q at its base value).
+        rate_final: f64,
+    },
+    /// Per-layer learning rates from the privatized EMA scores
+    /// (post-processing — the DP knobs stay at their base values).
+    LayerLr {
+        /// Scale spread: per-layer lr factors span
+        /// `[1 − strength/2, 1 + strength/2]`. Must be in `[0, 2)`.
+        strength: f64,
+    },
+}
+
+impl AdaptivePolicy {
+    /// Resolve and validate the policy a config selects. Finals of 0.0
+    /// mean "hold the base value"; every endpoint is range-checked here
+    /// so `validate_config` rejects hostile configs before a session
+    /// (or a ledger reservation) is built.
+    pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        match cfg.policy.as_str() {
+            "static" => Ok(Self::Static),
+            "noise_decay" => {
+                let shape = DecayShape::parse(&cfg.decay_shape)?;
+                let noise_final = if cfg.noise_final == 0.0 {
+                    cfg.noise_multiplier
+                } else {
+                    cfg.noise_final
+                };
+                let clip_final = if cfg.clip_final == 0.0 {
+                    cfg.clip_norm
+                } else {
+                    cfg.clip_final
+                };
+                ensure!(
+                    noise_final.is_finite() && noise_final >= 0.0,
+                    "noise_final must be a finite value >= 0 (got {noise_final})"
+                );
+                ensure!(
+                    clip_final.is_finite() && clip_final > 0.0,
+                    "clip_final must be a finite value > 0 (got {clip_final})"
+                );
+                if shape == DecayShape::Exp {
+                    ensure!(
+                        cfg.noise_multiplier > 0.0 && noise_final > 0.0,
+                        "decay_shape=exp needs positive noise endpoints \
+                         (sigma {} -> {noise_final})",
+                        cfg.noise_multiplier
+                    );
+                }
+                Ok(Self::NoiseDecay {
+                    shape,
+                    noise_final,
+                    clip_final,
+                })
+            }
+            "rate_schedule" => {
+                let rate_final = if cfg.rate_final == 0.0 {
+                    cfg.sample_rate()
+                } else {
+                    cfg.rate_final
+                };
+                ensure!(
+                    rate_final.is_finite() && rate_final > 0.0 && rate_final <= 1.0,
+                    "rate_final must be in (0, 1] (got {rate_final})"
+                );
+                Ok(Self::RateSchedule { rate_final })
+            }
+            "layer_lr" => {
+                ensure!(
+                    cfg.scheduler == "dpquant",
+                    "policy 'layer_lr' needs the privatized EMA scores only the 'dpquant' \
+                     scheduler maintains (got scheduler '{}')",
+                    cfg.scheduler
+                );
+                let strength = cfg.layer_lr_strength;
+                ensure!(
+                    strength.is_finite() && (0.0..2.0).contains(&strength),
+                    "layer_lr_strength must be in [0, 2) so lr scales stay positive \
+                     (got {strength})"
+                );
+                Ok(Self::LayerLr { strength })
+            }
+            other => Err(err!(
+                "unknown policy '{other}' (expected static | noise_decay | rate_schedule \
+                 | layer_lr)"
+            )),
+        }
+    }
+
+    /// The knob values for `epoch` of an `epochs`-epoch run. The
+    /// schedule position is `t = epoch/(epochs−1)` (0 for single-epoch
+    /// runs), so the base values apply exactly at epoch 0 and the
+    /// finals exactly at the last epoch. `Static` and `LayerLr` return
+    /// `base` untouched — no float op, so their bits cannot drift.
+    pub fn knobs(&self, epoch: usize, epochs: usize, base: &EpochKnobs) -> EpochKnobs {
+        let t = if epochs <= 1 {
+            0.0
+        } else {
+            epoch as f64 / (epochs - 1) as f64
+        };
+        match *self {
+            Self::Static | Self::LayerLr { .. } => *base,
+            Self::NoiseDecay {
+                shape,
+                noise_final,
+                clip_final,
+            } => EpochKnobs {
+                noise_multiplier: interp(shape, base.noise_multiplier, noise_final, t),
+                clip_norm: interp(shape, base.clip_norm, clip_final, t),
+                sample_rate: base.sample_rate,
+            },
+            Self::RateSchedule { rate_final } => EpochKnobs {
+                noise_multiplier: base.noise_multiplier,
+                clip_norm: base.clip_norm,
+                sample_rate: interp(DecayShape::Linear, base.sample_rate, rate_final, t),
+            },
+        }
+    }
+}
+
+/// Interpolate between `a` (t = 0) and `b` (t = 1). Both shapes are
+/// exact at t = 0 and fixed-point when `a == b` (so a resolved-to-base
+/// final reproduces the static schedule bit for bit).
+fn interp(shape: DecayShape, a: f64, b: f64, t: f64) -> f64 {
+    match shape {
+        DecayShape::Linear => a + t * (b - a),
+        DecayShape::Exp => a * (b / a).powf(t),
+    }
+}
+
+/// The worst-case training-side privacy schedule of a policy: one
+/// `(q_t, σ_t)` block per epoch, adjacent identical blocks coalesced —
+/// exactly the history a live run's per-step `step_training` calls
+/// coalesce into. Pure function of `(policy, base, epochs,
+/// steps_per_epoch)`, which is what lets the budget ledger rebuild
+/// byte-identical reservations after a crash.
+pub fn training_schedule(
+    policy: &AdaptivePolicy,
+    base: &EpochKnobs,
+    epochs: usize,
+    steps_per_epoch: u64,
+) -> Vec<StepRecord> {
+    let mut out: Vec<StepRecord> = Vec::new();
+    for epoch in 0..epochs {
+        let k = policy.knobs(epoch, epochs, base);
+        match out.last_mut() {
+            Some(r)
+                if r.sample_rate == k.sample_rate
+                    && r.noise_multiplier == k.noise_multiplier =>
+            {
+                r.steps += steps_per_epoch;
+            }
+            _ => out.push(StepRecord {
+                mechanism: Mechanism::Training,
+                sample_rate: k.sample_rate,
+                noise_multiplier: k.noise_multiplier,
+                steps: steps_per_epoch,
+            }),
+        }
+    }
+    out
+}
+
+/// Per-layer learning-rate factors from the privatized EMA scores:
+/// min-max normalize, then spread around 1.0 so the highest-impact
+/// layer trains at `1 + strength/2` and the lowest at `1 − strength/2`.
+/// Degenerate score vectors (empty, constant, non-finite spread — in
+/// particular an uninitialized EMA) yield all-ones: the policy is a
+/// no-op until the first privatized measurement lands.
+pub fn layer_lr_scales(scores: &[f64], strength: f64) -> Vec<f64> {
+    let n = scores.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let spread = max - min;
+    if !spread.is_finite() || spread <= 0.0 {
+        return vec![1.0; n];
+    }
+    scores
+        .iter()
+        .map(|&s| 1.0 + strength * ((s - min) / spread - 0.5))
+        .collect()
+}
+
+/// Map per-*layer* lr factors onto per-*tensor* factors: a tensor's
+/// factor is the mean over the quantizable layers whose weights live in
+/// it (`StepExecutor::quant_weight_params`), 1.0 for tensors no layer
+/// maps to (biases, unmapped params). Layers are not 1:1 with tensors —
+/// `MockExecutor` has one tensor for all its layers.
+pub fn tensor_lr_scales(
+    layer_scales: &[f64],
+    layer_tensors: &[usize],
+    n_tensors: usize,
+) -> Vec<f64> {
+    let mut sums = vec![0.0f64; n_tensors];
+    let mut counts = vec![0usize; n_tensors];
+    for (l, &ti) in layer_tensors.iter().enumerate() {
+        if ti < n_tensors && l < layer_scales.len() {
+            sums[ti] += layer_scales[l];
+            counts[ti] += 1;
+        }
+    }
+    (0..n_tensors)
+        .map(|i| {
+            if counts[i] > 0 {
+                sums[i] / counts[i] as f64
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> EpochKnobs {
+        EpochKnobs {
+            noise_multiplier: 0.6,
+            clip_norm: 1.0,
+            sample_rate: 0.0625,
+        }
+    }
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            batch_size: 16,
+            dataset_size: 256,
+            noise_multiplier: 0.6,
+            clip_norm: 1.0,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn static_and_layer_lr_knobs_are_bit_identical_to_base() {
+        let b = base();
+        for policy in [AdaptivePolicy::Static, AdaptivePolicy::LayerLr { strength: 0.5 }] {
+            for epoch in 0..7 {
+                let k = policy.knobs(epoch, 7, &b);
+                assert_eq!(k.noise_multiplier.to_bits(), b.noise_multiplier.to_bits());
+                assert_eq!(k.clip_norm.to_bits(), b.clip_norm.to_bits());
+                assert_eq!(k.sample_rate.to_bits(), b.sample_rate.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn noise_decay_hits_both_endpoints_exactly() {
+        let b = base();
+        for shape in [DecayShape::Linear, DecayShape::Exp] {
+            let p = AdaptivePolicy::NoiseDecay {
+                shape,
+                noise_final: 1.2,
+                clip_final: 0.5,
+            };
+            let first = p.knobs(0, 5, &b);
+            assert_eq!(first.noise_multiplier.to_bits(), 0.6f64.to_bits());
+            assert_eq!(first.clip_norm.to_bits(), 1.0f64.to_bits());
+            let last = p.knobs(4, 5, &b);
+            assert_eq!(last.noise_multiplier.to_bits(), 1.2f64.to_bits());
+            assert_eq!(last.clip_norm.to_bits(), 0.5f64.to_bits());
+            // q never moves under noise decay.
+            for e in 0..5 {
+                assert_eq!(p.knobs(e, 5, &b).sample_rate.to_bits(), b.sample_rate.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn equal_endpoints_are_a_fixed_point() {
+        // A final resolved to the base value must reproduce the base
+        // bits at EVERY epoch — this is what keeps noise_final=0 (hold)
+        // schedules coalescing into one accounting block.
+        let b = base();
+        for shape in [DecayShape::Linear, DecayShape::Exp] {
+            let p = AdaptivePolicy::NoiseDecay {
+                shape,
+                noise_final: b.noise_multiplier,
+                clip_final: b.clip_norm,
+            };
+            for e in 0..9 {
+                let k = p.knobs(e, 9, &b);
+                assert_eq!(k.noise_multiplier.to_bits(), b.noise_multiplier.to_bits());
+                assert_eq!(k.clip_norm.to_bits(), b.clip_norm.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn single_epoch_runs_pin_t_to_zero() {
+        let b = base();
+        let p = AdaptivePolicy::NoiseDecay {
+            shape: DecayShape::Linear,
+            noise_final: 9.0,
+            clip_final: 9.0,
+        };
+        let k = p.knobs(0, 1, &b);
+        assert_eq!(k.noise_multiplier.to_bits(), b.noise_multiplier.to_bits());
+        assert_eq!(k.clip_norm.to_bits(), b.clip_norm.to_bits());
+    }
+
+    #[test]
+    fn rate_schedule_moves_only_q_and_monotonically() {
+        let b = base();
+        let p = AdaptivePolicy::RateSchedule { rate_final: 0.03125 };
+        let mut prev = f64::INFINITY;
+        for e in 0..6 {
+            let k = p.knobs(e, 6, &b);
+            assert_eq!(k.noise_multiplier.to_bits(), b.noise_multiplier.to_bits());
+            assert_eq!(k.clip_norm.to_bits(), b.clip_norm.to_bits());
+            assert!(k.sample_rate < prev);
+            prev = k.sample_rate;
+        }
+        assert_eq!(p.knobs(0, 6, &b).sample_rate.to_bits(), 0.0625f64.to_bits());
+        assert_eq!(p.knobs(5, 6, &b).sample_rate.to_bits(), 0.03125f64.to_bits());
+    }
+
+    #[test]
+    fn static_schedule_coalesces_to_one_block() {
+        let recs = training_schedule(&AdaptivePolicy::Static, &base(), 8, 16);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].steps, 8 * 16);
+        assert_eq!(recs[0].sample_rate.to_bits(), 0.0625f64.to_bits());
+        assert_eq!(recs[0].noise_multiplier.to_bits(), 0.6f64.to_bits());
+    }
+
+    #[test]
+    fn decay_schedule_has_one_block_per_distinct_epoch() {
+        let p = AdaptivePolicy::NoiseDecay {
+            shape: DecayShape::Linear,
+            noise_final: 1.2,
+            clip_final: 1.0,
+        };
+        let recs = training_schedule(&p, &base(), 4, 16);
+        assert_eq!(recs.len(), 4, "4 distinct sigmas, 4 blocks");
+        assert_eq!(recs.iter().map(|r| r.steps).sum::<u64>(), 64);
+        // Each block carries the exact per-epoch knob value.
+        let b = base();
+        for (e, r) in recs.iter().enumerate() {
+            let k = p.knobs(e, 4, &b);
+            assert_eq!(r.noise_multiplier.to_bits(), k.noise_multiplier.to_bits());
+            assert_eq!(r.sample_rate.to_bits(), k.sample_rate.to_bits());
+        }
+    }
+
+    #[test]
+    fn from_config_resolves_and_rejects() {
+        // Defaults: static.
+        assert_eq!(AdaptivePolicy::from_config(&cfg()).unwrap(), AdaptivePolicy::Static);
+        // noise_decay resolves 0.0 finals to the base values.
+        let mut c = cfg();
+        c.policy = "noise_decay".into();
+        assert_eq!(
+            AdaptivePolicy::from_config(&c).unwrap(),
+            AdaptivePolicy::NoiseDecay {
+                shape: DecayShape::Linear,
+                noise_final: 0.6,
+                clip_final: 1.0,
+            }
+        );
+        c.noise_final = 1.5;
+        c.clip_final = 0.25;
+        c.decay_shape = "exp".into();
+        assert_eq!(
+            AdaptivePolicy::from_config(&c).unwrap(),
+            AdaptivePolicy::NoiseDecay {
+                shape: DecayShape::Exp,
+                noise_final: 1.5,
+                clip_final: 0.25,
+            }
+        );
+        // rate_schedule resolves 0.0 to the base sample rate.
+        let mut c = cfg();
+        c.policy = "rate_schedule".into();
+        assert_eq!(
+            AdaptivePolicy::from_config(&c).unwrap(),
+            AdaptivePolicy::RateSchedule { rate_final: 16.0 / 256.0 }
+        );
+        // Rejections.
+        let reject = |mutate: &dyn Fn(&mut TrainConfig), needle: &str| {
+            let mut c = cfg();
+            mutate(&mut c);
+            let e = AdaptivePolicy::from_config(&c).unwrap_err().to_string();
+            assert!(e.contains(needle), "want '{needle}' in '{e}'");
+        };
+        reject(&|c| c.policy = "frobnicate".into(), "unknown policy");
+        reject(
+            &|c| {
+                c.policy = "noise_decay".into();
+                c.decay_shape = "cubic".into();
+            },
+            "decay_shape",
+        );
+        reject(
+            &|c| {
+                c.policy = "noise_decay".into();
+                c.noise_final = f64::NAN;
+            },
+            "noise_final",
+        );
+        reject(
+            &|c| {
+                c.policy = "noise_decay".into();
+                c.clip_final = -1.0;
+            },
+            "clip_final",
+        );
+        reject(
+            &|c| {
+                c.policy = "noise_decay".into();
+                c.decay_shape = "exp".into();
+                c.noise_multiplier = 0.0;
+            },
+            "positive noise endpoints",
+        );
+        reject(
+            &|c| {
+                c.policy = "rate_schedule".into();
+                c.rate_final = 1.5;
+            },
+            "rate_final",
+        );
+        reject(
+            &|c| {
+                c.policy = "layer_lr".into();
+                c.scheduler = "static_random".into();
+            },
+            "layer_lr",
+        );
+        reject(
+            &|c| {
+                c.policy = "layer_lr".into();
+                c.layer_lr_strength = 2.0;
+            },
+            "layer_lr_strength",
+        );
+    }
+
+    #[test]
+    fn layer_lr_scales_spread_and_degenerate_cases() {
+        // Empty and constant scores are no-ops.
+        assert!(layer_lr_scales(&[], 0.5).is_empty());
+        assert_eq!(layer_lr_scales(&[3.0, 3.0, 3.0], 0.5), vec![1.0, 1.0, 1.0]);
+        // Min-max spread: lowest at 1 - s/2, highest at 1 + s/2.
+        let s = layer_lr_scales(&[0.0, 1.0, 2.0], 1.0);
+        assert_eq!(s, vec![0.5, 1.0, 1.5]);
+        // Strength 0 is the identity.
+        assert_eq!(layer_lr_scales(&[0.0, 7.0], 0.0), vec![1.0, 1.0]);
+        // All factors stay positive for strength < 2.
+        let s = layer_lr_scales(&[-5.0, 0.0, 11.0], 1.99);
+        assert!(s.iter().all(|&x| x > 0.0), "{s:?}");
+    }
+
+    #[test]
+    fn tensor_scales_average_mapped_layers() {
+        // Layers 0,1 -> tensor 0; layer 2 -> tensor 2; tensor 1 unmapped.
+        let got = tensor_lr_scales(&[0.5, 1.5, 2.0], &[0, 0, 2], 3);
+        assert_eq!(got, vec![1.0, 1.0, 2.0]);
+        // No mapping at all: all ones.
+        assert_eq!(tensor_lr_scales(&[2.0], &[], 2), vec![1.0, 1.0]);
+    }
+}

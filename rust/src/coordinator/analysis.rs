@@ -53,6 +53,17 @@ pub fn compute_loss_impact<E: StepExecutor + ?Sized>(
         .collect();
     policies.push(Policy::baseline(n_layers));
 
+    // Probe-step seed strides. The old fixed strides (1000 per policy,
+    // 100 per rep) collided as soon as a run used ≥ 100 probe batches
+    // or ≥ 10 reps — two different (pi, rep, bi) probes would then
+    // share a quantization-noise seed and the estimator silently lost
+    // rank resolution. Deriving the strides from the actual loop
+    // extents keeps every (pi, rep, bi) seed distinct; clamping to the
+    // old constants keeps default-range runs (bi < 100, rep < 10)
+    // bit-identical to checkpoints taken before the fix.
+    let stride_rep = probe_batches.len().max(100);
+    let stride_pi = (cfg.analysis_reps * stride_rep).max(1000);
+
     let mut avg_losses = vec![0f64; policies.len()];
     for (pi, policy) in policies.iter().enumerate() {
         let mask = policy.mask();
@@ -72,7 +83,7 @@ pub fn compute_loss_impact<E: StepExecutor + ?Sized>(
             let mut rep_loss = 0f64;
             let mut rep_count = 0f64;
             for (bi, batch) in probe_batches.iter().enumerate() {
-                let seed = seed_base + (pi * 1000 + rep * 100 + bi) as f32;
+                let seed = seed_base + (pi * stride_pi + rep * stride_rep + bi) as f32;
                 let mut out = exec.train_step(
                     &probe_weights,
                     &batch.x,
@@ -206,6 +217,69 @@ mod tests {
             acc_impacts[3] >= acc_impacts[0],
             "expected layer 3 ≥ layer 0: {acc_impacts:?}"
         );
+    }
+
+    #[test]
+    fn probe_seeds_are_injective_and_back_compatible() {
+        // Mirror of the stride derivation in compute_loss_impact.
+        let strides = |n_batches: usize, reps: usize| {
+            let stride_rep = n_batches.max(100);
+            let stride_pi = (reps * stride_rep).max(1000);
+            (stride_pi, stride_rep)
+        };
+        // Large extents (the pre-fix collision zone: bi ≥ 100, rep ≥ 10)
+        // must still yield pairwise-distinct seed offsets.
+        let (n_batches, reps, n_policies) = (120, 12, 3);
+        let (stride_pi, stride_rep) = strides(n_batches, reps);
+        let mut seen = std::collections::HashSet::new();
+        for pi in 0..n_policies {
+            for rep in 0..reps {
+                for bi in 0..n_batches {
+                    assert!(
+                        seen.insert(pi * stride_pi + rep * stride_rep + bi),
+                        "seed collision at pi={pi} rep={rep} bi={bi}"
+                    );
+                }
+            }
+        }
+        // The old constants collide in exactly this zone: (pi=0, rep=10,
+        // bi=0) and (pi=1, rep=0, bi=0) both hit seed offset 1000.
+        assert_eq!(10 * 100, 1000);
+        // Default-range runs (bi < 100, rep < 10) keep the old strides,
+        // so pre-fix checkpoints replay bit-identically.
+        assert_eq!(strides(8, 2), (1000, 100));
+        assert_eq!(strides(100, 10), (1000, 100));
+    }
+
+    #[test]
+    fn empty_probe_set_is_a_privacy_noop() {
+        // A Poisson draw can legitimately select zero probe examples;
+        // the estimator must not panic, must emit per-layer numbers
+        // (pure noise), and must account NO analysis step — rate 0
+        // touches nobody's data.
+        let exec = MockExecutor::new(6, 3, 4, 8);
+        let cfg = TrainConfig {
+            analysis_reps: 2,
+            sigma_measure: 0.5,
+            clip_measure: 0.05,
+            dataset_size: 64,
+            batch_size: 8,
+            noise_multiplier: 0.0,
+            lr: 0.05,
+            ..TrainConfig::default()
+        };
+        let weights = exec.initial_weights();
+        let mut ema = EmaScores::new(4, 0.3, true);
+        let mut acc = RdpAccountant::new();
+        let mut noise = GaussianSampler::seed_from_u64(7);
+        let rep =
+            compute_loss_impact(&exec, &cfg, &weights, &[], &mut ema, &mut acc, &mut noise, 0.0)
+                .unwrap();
+        assert_eq!(rep.privatized_impacts.len(), 4);
+        assert!(rep.privatized_impacts.iter().all(|x| x.is_finite()));
+        assert_eq!(acc.steps_of(Mechanism::Analysis), 0);
+        let (eps, _) = acc.epsilon_of(Mechanism::Analysis, 1e-5);
+        assert_eq!(eps, 0.0);
     }
 
     #[test]

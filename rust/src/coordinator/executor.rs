@@ -28,6 +28,15 @@ pub trait StepExecutor {
     /// Full-precision eval of a masked batch.
     fn eval_step(&self, weights: &[Vec<f32>], x: &[f32], y: &[i32], mask: &[f32])
         -> Result<EvalOutput>;
+    /// For each quantizable layer, the index of the parameter tensor
+    /// holding its weights (quantizable layers are NOT 1:1 with
+    /// parameter tensors — biases have their own tensors, and the mock
+    /// folds every layer into one). `None` when the executor cannot
+    /// provide the mapping; policy = "layer_lr" then degrades to
+    /// uniform learning rates instead of guessing.
+    fn quant_weight_params(&self) -> Option<Vec<usize>> {
+        None
+    }
 }
 
 impl StepExecutor for LoadedGraph {
@@ -146,6 +155,11 @@ impl StepExecutor for MockExecutor {
     }
     fn initial_weights(&self) -> Vec<Vec<f32>> {
         vec![vec![0f32; self.n_classes * self.n_features]]
+    }
+    fn quant_weight_params(&self) -> Option<Vec<usize>> {
+        // Every simulated layer perturbs the single logistic-regression
+        // weight tensor.
+        Some(vec![0; self.n_layers])
     }
 
     fn train_step(

@@ -1,5 +1,7 @@
 //! The DPQuant coordinator — the paper's system contribution, in Rust.
 //!
+//! * [`adaptive`]  — adaptive-DP policies: noise/clip decay, sampling-
+//!   rate schedules, per-layer learning rates (DESIGN.md §16);
 //! * [`policy`]    — quantization policies and masks;
 //! * [`ema`]       — EMA of loss-impact scores (Alg. 1 step 4);
 //! * [`sampler`]   — Algorithm 2 (SELECTTARGETS);
@@ -10,6 +12,7 @@
 //!   observable, checkpointable state machine over the epoch loop;
 //! * [`trainer`]   — the batch-mode `train()` compatibility wrapper.
 
+pub mod adaptive;
 pub mod analysis;
 pub mod ema;
 pub mod executor;
@@ -19,6 +22,7 @@ pub mod sampler;
 pub mod session;
 pub mod trainer;
 
+pub use adaptive::{AdaptivePolicy, DecayShape, EpochKnobs};
 pub use executor::{MockExecutor, StepExecutor};
 pub use policy::{budget_to_k, Policy};
 pub use session::{

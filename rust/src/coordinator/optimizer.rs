@@ -31,6 +31,13 @@ pub struct DpOptimizer {
     noise_std: f64,
     /// Expected lot size B = q·|D|.
     expected_batch: f64,
+    /// Clip-then-rescale factor C(t)/C₀ applied to the summed clipped
+    /// gradients before noising (adaptive clip schedules; DESIGN.md
+    /// §16.2). 1.0 — the static value — is bit-exact: x·1.0 ≡ x.
+    grad_scale: f64,
+    /// Per-tensor learning-rate factors (policy = "layer_lr").
+    /// `None` keeps the exact single-lr code path.
+    lr_scales: Option<Vec<f64>>,
     beta1: f64,
     beta2: f64,
     eps: f64,
@@ -65,6 +72,8 @@ impl DpOptimizer {
             lr,
             noise_std: noise_multiplier * clip_norm,
             expected_batch,
+            grad_scale: 1.0,
+            lr_scales: None,
             beta1: 0.9,
             beta2: 0.999,
             eps: 1e-8,
@@ -91,6 +100,41 @@ impl DpOptimizer {
         &self.sampler
     }
 
+    /// Re-aim the DP mechanism at this epoch's (σ_t, C_t): the noise
+    /// std on the sum becomes σ_t·C_t and the C₀-clipped gradient sums
+    /// are rescaled by C_t/C₀ (`grad_scale`), which realizes
+    /// sensitivity C_t without touching the executor's baked-in clip.
+    /// With the base knobs this recomputes the identical product and a
+    /// scale of exactly 1.0, so static runs cannot drift by a bit.
+    pub fn set_dp_params(&mut self, noise_multiplier: f64, clip_norm: f64, grad_scale: f64) {
+        self.noise_std = noise_multiplier * clip_norm;
+        self.grad_scale = grad_scale;
+    }
+
+    /// Re-aim the normalization at this epoch's expected lot size
+    /// B̄_t = q_t·|D| (policy = "rate_schedule"). Not called on the
+    /// static path, which keeps the constructor's exact value.
+    pub fn set_expected_batch(&mut self, expected_batch: f64) {
+        self.expected_batch = expected_batch;
+    }
+
+    /// Install per-tensor learning-rate factors (policy = "layer_lr",
+    /// post-processing of the privatized EMA scores). `None` restores
+    /// the exact single-lr code path; factors missing for a tensor
+    /// default to 1.0.
+    pub fn set_lr_scales(&mut self, scales: Option<Vec<f64>>) {
+        self.lr_scales = scales;
+    }
+
+    /// The learning rate for tensor `ti`: `lr` itself (bit-exact) when
+    /// no factors are installed, otherwise `lr · scale[ti]`.
+    fn tensor_lr(&self, ti: usize) -> f64 {
+        match &self.lr_scales {
+            None => self.lr,
+            Some(s) => self.lr * s.get(ti).copied().unwrap_or(1.0),
+        }
+    }
+
     /// Restore moments + step count captured from another optimizer
     /// with the same configuration (checkpoint resume). Hyperparameters
     /// and the noise sampler are not part of this call — they are
@@ -113,11 +157,11 @@ impl DpOptimizer {
         self.step += 1;
         let mut stats = NoiseStats::default();
 
-        // Noise + normalize: u = (Σ clipped + N(0, σ²C²)) / B̄, tracked in
-        // fp64 accumulators for the norms.
+        // Noise + normalize: u = (C_t/C₀·Σ clipped + N(0, σ_t²C_t²)) / B̄,
+        // tracked in fp64 accumulators for the norms.
         for g in grad_sums.iter_mut() {
             for x in g.iter_mut() {
-                let gx = *x as f64;
+                let gx = *x as f64 * self.grad_scale;
                 stats.grad_l2 += gx * gx;
                 stats.grad_linf = stats.grad_linf.max(gx.abs());
                 let n = self.noise_std * self.sampler.standard();
@@ -131,8 +175,8 @@ impl DpOptimizer {
 
         match self.kind {
             OptimizerKind::Sgd => {
-                let lr = self.lr as f32;
-                for (w, g) in weights.iter_mut().zip(grad_sums.iter()) {
+                for (ti, (w, g)) in weights.iter_mut().zip(grad_sums.iter()).enumerate() {
+                    let lr = self.tensor_lr(ti) as f32;
                     for (wi, gi) in w.iter_mut().zip(g) {
                         *wi -= lr * gi;
                     }
@@ -143,11 +187,13 @@ impl DpOptimizer {
                 let b2 = self.beta2;
                 let bc1 = 1.0 - b1.powi(self.step as i32);
                 let bc2 = 1.0 - b2.powi(self.step as i32);
-                for ((w, g), (m, v)) in weights
+                for (ti, ((w, g), (m, v))) in weights
                     .iter_mut()
                     .zip(grad_sums.iter())
                     .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+                    .enumerate()
                 {
+                    let lr = self.tensor_lr(ti);
                     for i in 0..w.len() {
                         let gi = g[i] as f64;
                         let mi = b1 * m[i] as f64 + (1.0 - b1) * gi;
@@ -156,9 +202,9 @@ impl DpOptimizer {
                         v[i] = vi as f32;
                         let mhat = mi / bc1;
                         let vhat = vi / bc2;
-                        let mut upd = self.lr * mhat / (vhat.sqrt() + self.eps);
+                        let mut upd = lr * mhat / (vhat.sqrt() + self.eps);
                         if self.weight_decay > 0.0 {
-                            upd += self.lr * self.weight_decay * w[i] as f64;
+                            upd += lr * self.weight_decay * w[i] as f64;
                         }
                         w[i] = (w[i] as f64 - upd) as f32;
                     }
@@ -253,6 +299,39 @@ mod tests {
         // L∞ of 10k gaussians ≈ 3·3.7 ≈ 11; bounds loose.
         assert!(stats.noise_linf > 3.0 * 2.5 && stats.noise_linf < 3.0 * 6.0);
         assert_eq!(stats.grad_l2, 0.0);
+    }
+
+    #[test]
+    fn grad_scale_rescales_clipped_sums() {
+        let mut opt =
+            DpOptimizer::new(OptimizerKind::Sgd, 1.0, 0.0, 1.0, 1.0, &[2], sampler());
+        // Clip schedule halves C: sums clipped at C₀ rescale by 0.5.
+        opt.set_dp_params(0.0, 0.5, 0.5);
+        let mut w = vec![vec![0.0f32, 0.0]];
+        let mut g = vec![vec![1.0f32, -2.0]];
+        let stats = opt.update(&mut w, &mut g);
+        assert!((w[0][0] + 0.5).abs() < 1e-6, "{}", w[0][0]);
+        assert!((w[0][1] - 1.0).abs() < 1e-6, "{}", w[0][1]);
+        // Norm stats see the rescaled (sensitivity-C_t) gradient.
+        assert!((stats.grad_linf - 1.0).abs() < 1e-9, "{}", stats.grad_linf);
+    }
+
+    #[test]
+    fn per_tensor_lr_scales_apply_only_where_installed() {
+        let mut opt =
+            DpOptimizer::new(OptimizerKind::Sgd, 1.0, 0.0, 1.0, 1.0, &[1, 1], sampler());
+        opt.set_lr_scales(Some(vec![0.5, 2.0]));
+        let mut w = vec![vec![0.0f32], vec![0.0f32]];
+        let mut g = vec![vec![1.0f32], vec![1.0f32]];
+        opt.update(&mut w, &mut g);
+        assert!((w[0][0] + 0.5).abs() < 1e-6, "{}", w[0][0]);
+        assert!((w[1][0] + 2.0).abs() < 1e-6, "{}", w[1][0]);
+        // None restores the single-lr path.
+        opt.set_lr_scales(None);
+        let mut g = vec![vec![1.0f32], vec![1.0f32]];
+        opt.update(&mut w, &mut g);
+        assert!((w[0][0] + 1.5).abs() < 1e-6, "{}", w[0][0]);
+        assert!((w[1][0] + 3.0).abs() < 1e-6, "{}", w[1][0]);
     }
 
     #[test]

@@ -33,6 +33,17 @@ pub fn softmax_neg(v: &[f64], beta: f64) -> Vec<f64> {
 /// distribution `probs` (sequential draws with renormalization — the
 /// semantics of `torch.multinomial(..., replacement=False)` the paper's
 /// implementation uses).
+///
+/// When the remaining weight mass is zero — at large β (≳ 745 after
+/// min-max normalization) `softmax` underflows every non-minimum entry
+/// to exactly 0.0, so once the positive-weight indices are exhausted
+/// the renormalized distribution is 0/0 — the draw falls back to
+/// **uniform** over the remaining set. Without the fallback, `r` starts
+/// at 0 and the first `r <= 0.0` test fires immediately, so every
+/// zero-mass draw deterministically picked the first remaining slot:
+/// high-β runs silently stopped rotating their extra quantization
+/// targets. Each draw consumes exactly one `next_f64` on either path,
+/// so fixed-seed runs that never hit the zero-mass case are unchanged.
 pub fn multinomial_without_replacement(
     rng: &mut Xoshiro256,
     probs: &[f64],
@@ -44,15 +55,22 @@ pub fn multinomial_without_replacement(
     let mut picked = Vec::with_capacity(m);
     for _ in 0..m {
         let total: f64 = available.iter().map(|&i| weights[i]).sum();
-        let mut r = rng.next_f64() * total;
-        let mut chosen_pos = available.len() - 1;
-        for (pos, &i) in available.iter().enumerate() {
-            r -= weights[i];
-            if r <= 0.0 {
-                chosen_pos = pos;
-                break;
+        let u = rng.next_f64();
+        let chosen_pos = if total > 0.0 {
+            let mut r = u * total;
+            let mut chosen = available.len() - 1;
+            for (pos, &i) in available.iter().enumerate() {
+                r -= weights[i];
+                if r <= 0.0 {
+                    chosen = pos;
+                    break;
+                }
             }
-        }
+            chosen
+        } else {
+            // Degenerate mass: uniform over what's left.
+            ((u * available.len() as f64) as usize).min(available.len() - 1)
+        };
         picked.push(available.swap_remove(chosen_pos));
     }
     picked.sort_unstable();
@@ -152,6 +170,33 @@ mod tests {
         for i in 0..3 {
             let freq = counts[i] as f64 / trials as f64;
             assert!((freq - pi[i]).abs() < 0.01, "i={i} freq={freq} pi={}", pi[i]);
+        }
+    }
+
+    #[test]
+    fn huge_beta_still_rotates_zero_mass_targets() {
+        // β = 2000 underflows every non-minimum softmax weight to 0.0,
+        // so after the single minimum-score layer is drawn the
+        // remaining mass is exactly zero. Pre-fix, the zero-mass draws
+        // deterministically picked the first remaining slot (indices
+        // {6, 7} after the swap_remove shuffle), never the others; the
+        // fix draws uniformly, so across seeds every layer must appear.
+        let scores = [0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut seen = [0usize; 8];
+        for seed in 0..400 {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let s = select_targets(&mut rng, &scores, 2000.0, 3);
+            assert_eq!(s.len(), 3);
+            assert!(s.contains(&0), "the minimum-score layer has all the mass");
+            for l in s {
+                seen[l] += 1;
+            }
+        }
+        for (l, &c) in seen.iter().enumerate().skip(1) {
+            assert!(c > 0, "layer {l} never selected across seeds: {seen:?}");
+            // 2 uniform picks among 7 zero-mass layers × 400 seeds
+            // ≈ 114 expected hits each; fail far outside that.
+            assert!(c > 40 && c < 250, "layer {l} frequency off: {seen:?}");
         }
     }
 

@@ -25,6 +25,7 @@
 //!   format; resuming continues the run **bit-exactly** — floats travel
 //!   as IEEE-754 bit patterns in hex, never as decimal text.
 
+use super::adaptive::{self, AdaptivePolicy, EpochKnobs};
 use super::analysis::compute_loss_impact;
 use super::ema::EmaScores;
 use super::executor::StepExecutor;
@@ -290,6 +291,10 @@ pub fn validate_config(cfg: &TrainConfig, train_len: usize) -> Result<Scheduler>
             "target_epsilon {target} must be a finite value > 0"
         );
     }
+    // The adaptive-DP policy resolves (and range-checks its endpoints)
+    // from the same config; reject hostile schedules here, before a
+    // session or a ledger reservation is built on them.
+    AdaptivePolicy::from_config(cfg)?;
     Scheduler::parse(&cfg.scheduler)
 }
 
@@ -316,6 +321,9 @@ pub enum EpochOutcome {
 pub struct TrainSession {
     cfg: TrainConfig,
     scheduler: Scheduler,
+    /// Adaptive-DP policy (DESIGN.md §16). A pure function of `cfg`,
+    /// so it is re-derived on resume rather than checkpointed.
+    adaptive: AdaptivePolicy,
     n_layers: usize,
     k: usize,
     /// Poisson rate q = B / |D_train|.
@@ -359,6 +367,8 @@ impl TrainSession {
         let k = budget_to_k(n_layers, cfg.quant_fraction);
         let q = cfg.batch_size as f64 / train_len as f64;
         let steps_per_epoch = (train_len / cfg.batch_size).max(1);
+        let adaptive =
+            AdaptivePolicy::from_config(&cfg).expect("config validated by SessionBuilder");
 
         // Stream order is part of the reproducibility contract: the
         // legacy trainer split data/sched/noise/analysis in exactly this
@@ -421,6 +431,7 @@ impl TrainSession {
         Self {
             cfg,
             scheduler,
+            adaptive,
             n_layers,
             k,
             q,
@@ -536,13 +547,45 @@ impl TrainSession {
         sink.on_event(&TrainEvent::PolicySelected { epoch, policy: &policy });
         let quant_mask = policy.mask();
 
+        // ---- Adaptive-DP policy: this epoch's DP knobs (DESIGN.md §16).
+        // `Static` returns the base values without arithmetic, and the
+        // re-derived σ·C / C(t)/C₀ = 1.0 are bit-exact, so the default
+        // path cannot drift from pre-policy builds.
+        let base = EpochKnobs {
+            noise_multiplier: self.cfg.noise_multiplier,
+            clip_norm: self.cfg.clip_norm,
+            sample_rate: self.q,
+        };
+        let knobs = self.adaptive.knobs(epoch, self.cfg.epochs, &base);
+        self.opt.set_dp_params(
+            knobs.noise_multiplier,
+            knobs.clip_norm,
+            knobs.clip_norm / self.cfg.clip_norm,
+        );
+        if let AdaptivePolicy::RateSchedule { .. } = self.adaptive {
+            // Poisson lot size follows q_t; only touched on this policy
+            // (q·|D| need not reproduce B's bits exactly).
+            self.opt.set_expected_batch(knobs.sample_rate * self.train_len as f64);
+        }
+        if let AdaptivePolicy::LayerLr { strength } = self.adaptive {
+            // Post-processing of the privatized EMA scores: zero extra ε.
+            // Recomputed every epoch so it tracks the EMA (and survives
+            // resume — the EMA is checkpointed, the scales are not).
+            let layer_scales = adaptive::layer_lr_scales(self.ema.scores(), strength);
+            let scales = exec.quant_weight_params().map(|map| {
+                adaptive::tensor_lr_scales(&layer_scales, &map, exec.param_sizes().len())
+            });
+            self.opt.set_lr_scales(scales);
+        }
+
         // ---- The epoch's DP-SGD steps
         let t0 = std::time::Instant::now();
         let mut train_loss_sum = 0f64;
         let mut train_count = 0f64;
         for step in 0..self.steps_per_epoch {
-            let idx = poisson_sample(&mut self.data_rng, train_ds.len(), self.q);
-            self.accountant.step_training(self.q, self.cfg.noise_multiplier, 1);
+            let idx = poisson_sample(&mut self.data_rng, train_ds.len(), knobs.sample_rate);
+            self.accountant
+                .step_training(knobs.sample_rate, knobs.noise_multiplier, 1);
             if idx.is_empty() {
                 continue;
             }
@@ -820,6 +863,7 @@ impl TrainSession {
         let k = budget_to_k(ckpt.n_layers, ckpt.cfg.quant_fraction);
         let q = ckpt.cfg.batch_size as f64 / ckpt.train_len as f64;
         let steps_per_epoch = (ckpt.train_len / ckpt.cfg.batch_size).max(1);
+        let adaptive = AdaptivePolicy::from_config(&ckpt.cfg)?;
 
         let mut opt = DpOptimizer::new(
             ckpt.cfg.optimizer,
@@ -850,6 +894,7 @@ impl TrainSession {
         Ok(Self {
             cfg: ckpt.cfg,
             scheduler,
+            adaptive,
             n_layers: ckpt.n_layers,
             k,
             q,
@@ -1237,10 +1282,20 @@ fn config_to_json(cfg: &TrainConfig) -> Json {
         ("seed", hex_u64(cfg.seed)),
         ("physical_batch", json::num(cfg.physical_batch as f64)),
         ("backend", json::s(&cfg.backend)),
+        ("policy", json::s(&cfg.policy)),
+        ("noise_final", hex_f64(cfg.noise_final)),
+        ("clip_final", hex_f64(cfg.clip_final)),
+        ("rate_final", hex_f64(cfg.rate_final)),
+        ("decay_shape", json::s(&cfg.decay_shape)),
+        ("layer_lr_strength", hex_f64(cfg.layer_lr_strength)),
     ])
 }
 
 fn config_from_json(j: &Json) -> Result<TrainConfig> {
+    // Adaptive-policy keys are optional (absent -> defaults) so version-1
+    // checkpoints written before the policy suite stay readable; their
+    // defaults reproduce the pre-policy behavior bit for bit.
+    let d = TrainConfig::default();
     Ok(TrainConfig {
         model: parse_str(field(j, "model")?, "config.model")?,
         dataset: parse_str(field(j, "dataset")?, "config.dataset")?,
@@ -1274,6 +1329,30 @@ fn config_from_json(j: &Json) -> Result<TrainConfig> {
         seed: parse_hex_u64(field(j, "seed")?, "config.seed")?,
         physical_batch: parse_usize(field(j, "physical_batch")?, "config.physical_batch")?,
         backend: parse_str(field(j, "backend")?, "config.backend")?,
+        policy: match j.get("policy") {
+            None => d.policy,
+            Some(v) => parse_str(v, "config.policy")?,
+        },
+        noise_final: match j.get("noise_final") {
+            None => d.noise_final,
+            Some(v) => parse_hex_f64(v, "config.noise_final")?,
+        },
+        clip_final: match j.get("clip_final") {
+            None => d.clip_final,
+            Some(v) => parse_hex_f64(v, "config.clip_final")?,
+        },
+        rate_final: match j.get("rate_final") {
+            None => d.rate_final,
+            Some(v) => parse_hex_f64(v, "config.rate_final")?,
+        },
+        decay_shape: match j.get("decay_shape") {
+            None => d.decay_shape,
+            Some(v) => parse_str(v, "config.decay_shape")?,
+        },
+        layer_lr_strength: match j.get("layer_lr_strength") {
+            None => d.layer_lr_strength,
+            Some(v) => parse_hex_f64(v, "config.layer_lr_strength")?,
+        },
     })
 }
 
@@ -1426,6 +1505,29 @@ mod tests {
         reject(|c| c.ema_alpha = 1.5, "ema_alpha");
         reject(|c| c.target_epsilon = Some(0.0), "target_epsilon");
         reject(|c| c.scheduler = "dpqaunt".into(), "scheduler");
+        // Adaptive-policy configs are validated through the same gate.
+        reject(|c| c.policy = "frobnicate".into(), "policy");
+        reject(
+            |c| {
+                c.policy = "noise_decay".into();
+                c.noise_final = f64::NAN;
+            },
+            "noise_final",
+        );
+        reject(
+            |c| {
+                c.policy = "rate_schedule".into();
+                c.rate_final = -0.5;
+            },
+            "rate_final",
+        );
+        reject(
+            |c| {
+                c.policy = "layer_lr".into();
+                c.scheduler = "pls".into();
+            },
+            "layer_lr",
+        );
         // An empty training set is rejected regardless of config.
         assert!(validate_config(&base_cfg(), 0).is_err());
         // The default config is valid.
@@ -1678,6 +1780,68 @@ mod tests {
         let (l3, a3) = evaluate(&exec, &weights, &doubled).unwrap();
         assert_eq!(a3, acc);
         assert!((l3 - loss).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_decay_checkpoint_roundtrip_is_bit_exact() {
+        // Resume must re-derive the policy from the checkpointed config
+        // and continue mid-schedule with the exact same per-epoch knobs.
+        let mut cfg = base_cfg();
+        cfg.policy = "noise_decay".into();
+        cfg.noise_final = 1.2;
+        cfg.clip_final = 0.5;
+        let (exec, tr, va) = fixtures(&cfg);
+
+        let mut full = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        full.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        let (full_record, full_weights, mut full_acc) = full.finish();
+
+        let mut first = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        for _ in 0..2 {
+            first.step_epoch(&exec, &tr, &va, &mut NullSink).unwrap();
+        }
+        let text = first.checkpoint_text();
+        let ckpt = Checkpoint::from_json_text(&text).unwrap();
+        assert_eq!(ckpt.config().policy, "noise_decay");
+        let mut resumed = TrainSession::resume_from(ckpt, &exec).unwrap();
+        resumed.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        let (record, weights, mut acc) = resumed.finish();
+
+        assert_eq!(weights, full_weights);
+        assert_eq!(record.final_epsilon.to_bits(), full_record.final_epsilon.to_bits());
+        assert_eq!(acc.epsilon(1e-5), full_acc.epsilon(1e-5));
+        // The decay left one Training block per distinct sigma (4 epochs,
+        // all sigmas distinct) plus the interleaved analysis blocks.
+        let train_blocks = full_acc
+            .history()
+            .iter()
+            .filter(|r| r.mechanism == Mechanism::Training)
+            .count();
+        assert_eq!(train_blocks, cfg.epochs);
+    }
+
+    #[test]
+    fn layer_lr_policy_is_pure_post_processing() {
+        // Per-layer lr from the privatized EMA must change the trained
+        // weights without moving the composed epsilon by a single bit.
+        let cfg_static = base_cfg();
+        let mut cfg_lr = base_cfg();
+        cfg_lr.policy = "layer_lr".into();
+        cfg_lr.layer_lr_strength = 1.0;
+        let (exec, tr, va) = fixtures(&cfg_static);
+
+        let mut a = TrainSession::builder(cfg_static).build(&exec, &tr).unwrap();
+        a.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        let (_, weights_a, mut acc_a) = a.finish();
+
+        let mut b = TrainSession::builder(cfg_lr).build(&exec, &tr).unwrap();
+        b.run(&exec, &tr, &va, &mut NullSink).unwrap();
+        let (_, weights_b, mut acc_b) = b.finish();
+
+        let (eps_a, _) = acc_a.epsilon(1e-5);
+        let (eps_b, _) = acc_b.epsilon(1e-5);
+        assert_eq!(eps_a.to_bits(), eps_b.to_bits(), "layer_lr must cost zero extra eps");
+        assert_ne!(weights_a, weights_b, "layer_lr must actually steer training");
     }
 
     #[test]

@@ -42,11 +42,12 @@ pub fn run(args: &Args) -> Result<()> {
         Some("tab11") => tables::tab11(args),
         Some("tab12") => tables::tab12(args),
         Some("tab14") => perf::tab14(args),
+        Some("policy") => tables::policy(args),
         Some("all") => {
             // Everything, cheapest first.
             for id in [
-                "fig3", "fig6", "fig1b", "fig1c", "tab2", "fig1a", "fig4", "fig5", "tab1",
-                "tab4", "tab6", "tab8", "tab9", "tab10", "tab11", "tab12", "tab14",
+                "fig3", "fig6", "fig1b", "fig1c", "tab2", "fig1a", "fig4", "fig5", "policy",
+                "tab1", "tab4", "tab6", "tab8", "tab9", "tab10", "tab11", "tab12", "tab14",
             ] {
                 println!("\n================ exp {id} ================");
                 let mut sub = args.clone();
@@ -57,7 +58,7 @@ pub fn run(args: &Args) -> Result<()> {
         }
         Some(other) => Err(err!("unknown experiment '{other}'")),
         None => Err(err!(
-            "usage: dpquant exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6|tab1|tab2|tab4|tab6|tab8|tab9|tab10|tab11|tab12|tab14|all>"
+            "usage: dpquant exp <fig1a|fig1b|fig1c|fig3|fig4|fig5|fig6|tab1|tab2|tab4|tab6|tab8|tab9|tab10|tab11|tab12|tab14|policy|all>"
         )),
     }
 }

@@ -276,6 +276,57 @@ pub fn tab11(args: &Args) -> Result<()> {
     budget_table(&ctx, "tab11", &[4.0], &[0.5, 0.75, 0.9], |_| {})
 }
 
+/// Adaptive-policy Pareto: the four adaptive-DP policies (DESIGN.md
+/// §16) under the same substrate and base knobs, rendered as the
+/// accuracy-vs-ε Pareto table. Dynamic policies shift where a run
+/// lands on the frontier — noise decay and rate schedules trade ε for
+/// accuracy, per-layer LR moves accuracy at identical ε (pure
+/// post-processing).
+pub fn policy(args: &Args) -> Result<()> {
+    let ctx = ExpCtx::open(args, "miniconvnet", "gtsrb", "luq4")?;
+    let variants: [(&str, fn(&mut crate::config::TrainConfig)); 4] = [
+        ("static", |_| {}),
+        ("noise_decay", |c| {
+            c.policy = "noise_decay".into();
+            c.noise_final = c.noise_multiplier * 1.5;
+        }),
+        ("rate_schedule", |c| {
+            c.policy = "rate_schedule".into();
+            c.rate_final = c.sample_rate() / 2.0;
+        }),
+        ("layer_lr", |c| {
+            c.policy = "layer_lr".into();
+            c.layer_lr_strength = 0.75;
+        }),
+    ];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (label, tweak) in variants {
+        let mut cfg = ctx.base.clone();
+        cfg.scheduler = "dpquant".into();
+        cfg.quant_fraction = 0.75;
+        tweak(&mut cfg);
+        let res = ctx.run_cfg(&cfg, false)?;
+        rows.push(SweepRow {
+            label: label.into(),
+            accuracy: res.record.best_accuracy,
+            epsilon: res.record.final_epsilon,
+        });
+        out.push(json::obj(vec![
+            ("policy", json::s(label)),
+            ("acc", json::num(res.record.best_accuracy)),
+            ("eps", json::num(res.record.final_epsilon)),
+        ]));
+    }
+    println!("Adaptive-policy Pareto — static vs noise_decay vs rate_schedule vs layer_lr");
+    pareto_table(&rows).print();
+    println!(
+        "expect: layer_lr at the static ε (post-processing); noise_decay/rate_schedule \
+         at lower ε with competitive accuracy"
+    );
+    save_json("policy_pareto", Json::Arr(out))
+}
+
 /// Table 12 (A.9.2): uniform INT4 stochastic rounding.
 pub fn tab12(args: &Args) -> Result<()> {
     let ctx = ExpCtx::open(args, "miniresnet", "cifar", "uniform4")?;

@@ -613,6 +613,22 @@ fn cmd_cost(args: &Args) -> Result<()> {
         cost.analysis_rate,
         cost.analysis_sigma
     );
+    // Adaptive policies expand into a heterogeneous block sequence; list
+    // it whenever it differs from the single-block static shape above.
+    let training_blocks: Vec<_> = cost
+        .records()
+        .iter()
+        .filter(|r| r.mechanism == dpquant::privacy::Mechanism::Training)
+        .collect();
+    if training_blocks.len() > 1 {
+        println!("adaptive training schedule (policy = {}):", cfg.policy);
+        for (i, r) in training_blocks.iter().enumerate() {
+            println!(
+                "  block {i}: {} steps at q={}, sigma={}",
+                r.steps, r.sample_rate, r.noise_multiplier
+            );
+        }
+    }
     println!(
         "composed epsilon = {} at alpha = {} (delta = {})",
         cost.epsilon, cost.alpha, cost.delta

@@ -199,9 +199,44 @@ impl RdpAccountant {
         analysis_steps: u64,
         delta: f64,
     ) -> (f64, f64) {
+        Self::predict_schedule(
+            &[
+                StepRecord {
+                    mechanism: Mechanism::Training,
+                    sample_rate,
+                    noise_multiplier,
+                    steps: train_steps,
+                },
+                StepRecord {
+                    mechanism: Mechanism::Analysis,
+                    sample_rate: analysis_rate,
+                    noise_multiplier: analysis_sigma,
+                    steps: analysis_steps,
+                },
+            ],
+            delta,
+        )
+    }
+
+    /// Heterogeneous-schedule cost estimator: the `(ε, best α)` a fresh
+    /// accountant would report after replaying `schedule` through
+    /// [`RdpAccountant::record`] in order. This is the generalization of
+    /// [`RdpAccountant::predict`] that adaptive policies need — a
+    /// noise-decay or rate-schedule job is a *sequence* of `(q_t, σ_t)`
+    /// blocks, not a single triple, and its composed ε must be quoted
+    /// block-by-block for the serve ledger to admit it correctly.
+    ///
+    /// Because the replay goes through `record()`, zero-step and
+    /// zero-rate blocks are skipped and adjacent identical blocks
+    /// coalesce exactly as on a live run, so a prediction over the same
+    /// per-step schedule a live session records matches that session's
+    /// composed ε bit-for-bit (RDP addition is per-record exact and the
+    /// summation order is the schedule order).
+    pub fn predict_schedule(schedule: &[StepRecord], delta: f64) -> (f64, f64) {
         let mut scratch = Self::new();
-        scratch.record(Mechanism::Training, sample_rate, noise_multiplier, train_steps);
-        scratch.record(Mechanism::Analysis, analysis_rate, analysis_sigma, analysis_steps);
+        for rec in schedule {
+            scratch.record(rec.mechanism, rec.sample_rate, rec.noise_multiplier, rec.steps);
+        }
         scratch.epsilon(delta)
     }
 
@@ -322,6 +357,76 @@ mod tests {
         assert!(more > eps);
         let (with_analysis, _) = RdpAccountant::predict(0.02, 1.0, 500, 0.01, 0.5, 10, 1e-5);
         assert!(with_analysis > eps);
+    }
+
+    #[test]
+    fn predict_schedule_replays_like_a_live_run() {
+        // A heterogeneous (σ_t, q_t) schedule must compose bit-for-bit
+        // like the same blocks recorded on a live accountant, including
+        // the skip-zero and coalescing semantics of `record()`.
+        let schedule = vec![
+            StepRecord {
+                mechanism: Mechanism::Training,
+                sample_rate: 0.02,
+                noise_multiplier: 0.8,
+                steps: 100,
+            },
+            StepRecord {
+                mechanism: Mechanism::Training,
+                sample_rate: 0.0, // skipped: empty Poisson epoch
+                noise_multiplier: 1.0,
+                steps: 50,
+            },
+            StepRecord {
+                mechanism: Mechanism::Training,
+                sample_rate: 0.02,
+                noise_multiplier: 0.8, // coalesces with block 0
+                steps: 25,
+            },
+            StepRecord {
+                mechanism: Mechanism::Training,
+                sample_rate: 0.01,
+                noise_multiplier: 1.2,
+                steps: 100,
+            },
+            StepRecord {
+                mechanism: Mechanism::Analysis,
+                sample_rate: 0.004,
+                noise_multiplier: 0.5,
+                steps: 3,
+            },
+        ];
+        let (eps, alpha) = RdpAccountant::predict_schedule(&schedule, 1e-5);
+        let mut acc = RdpAccountant::new();
+        for r in &schedule {
+            acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+        }
+        assert_eq!(acc.history().len(), 3, "skip + coalesce must apply");
+        let (eps_live, alpha_live) = acc.epsilon(1e-5);
+        assert_eq!(eps.to_bits(), eps_live.to_bits());
+        assert_eq!(alpha.to_bits(), alpha_live.to_bits());
+        // And the homogeneous special case still routes through the same
+        // path as the legacy 7-arg signature.
+        let (e7, a7) = RdpAccountant::predict(0.02, 0.8, 100, 0.004, 0.5, 3, 1e-5);
+        let (es, as_) = RdpAccountant::predict_schedule(
+            &[
+                StepRecord {
+                    mechanism: Mechanism::Training,
+                    sample_rate: 0.02,
+                    noise_multiplier: 0.8,
+                    steps: 100,
+                },
+                StepRecord {
+                    mechanism: Mechanism::Analysis,
+                    sample_rate: 0.004,
+                    noise_multiplier: 0.5,
+                    steps: 3,
+                },
+            ],
+            1e-5,
+        );
+        assert_eq!(e7.to_bits(), es.to_bits());
+        assert_eq!(a7.to_bits(), as_.to_bits());
     }
 
     #[test]

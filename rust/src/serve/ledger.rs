@@ -47,6 +47,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 
 use crate::config::TrainConfig;
+use crate::coordinator::adaptive::{self, AdaptivePolicy, EpochKnobs};
 use crate::obs;
 use crate::privacy::{Mechanism, RdpAccountant, StepRecord};
 use crate::util::error::{ensure, err, Result};
@@ -67,14 +68,18 @@ pub const LEDGER_VERSION: u64 = 1;
 /// upper bound on actual spend); analysis steps count every
 /// analysis-eligible epoch of the `dpquant` scheduler (the live path
 /// additionally skips empty Poisson probes, so this too is an upper
-/// bound).
+/// bound). Under an adaptive policy the training portion is a
+/// heterogeneous `(σ_t, q_t)` sequence — one block per distinct
+/// per-epoch knob setting ([`adaptive::training_schedule`]) — so
+/// dynamic-noise and rate-schedule jobs are admitted at their true
+/// composed cost, not a single-triple approximation.
 #[derive(Clone, Debug)]
 pub struct ScheduleCost {
-    /// Training Poisson rate `q = B/|D|`.
+    /// Training Poisson rate `q = B/|D|` at the schedule start (epoch 0).
     pub sample_rate: f64,
-    /// Training noise multiplier σ.
+    /// Training noise multiplier σ at the schedule start (epoch 0).
     pub noise_multiplier: f64,
-    /// DP-SGD steps: `epochs × max(|D|/B, 1)`.
+    /// DP-SGD steps: `epochs × max(|D|/B, 1)`, summed over all blocks.
     pub train_steps: u64,
     /// Analysis probe rate `min(analysis_samples/|D|, 1)`.
     pub analysis_rate: f64,
@@ -89,14 +94,22 @@ pub struct ScheduleCost {
     pub epsilon: f64,
     /// The Rényi order that realized `epsilon`.
     pub alpha: f64,
-    /// ε of the training block alone (the analysis overhead is
+    /// ε of the training schedule alone (the analysis overhead is
     /// `epsilon - train_epsilon`).
     pub train_epsilon: f64,
+    /// The full block schedule (training blocks in epoch order, then
+    /// the analysis block) — what a reservation composes against the
+    /// tenant's history.
+    records: Vec<StepRecord>,
 }
 
 /// Estimate a config's full-schedule privacy cost via
-/// [`RdpAccountant::predict`]. Pure function of the config — recovery
-/// relies on this to rebuild byte-identical reservations.
+/// [`RdpAccountant::predict_schedule`]. Pure function of the config —
+/// recovery relies on this to rebuild byte-identical reservations. The
+/// config's adaptive policy (`cfg.policy`) shapes the training blocks;
+/// an invalid policy spec falls back to the static single-block
+/// schedule (admission happens after config validation on every serve
+/// path, so the fallback only guards direct library callers).
 pub fn schedule_cost(cfg: &TrainConfig) -> ScheduleCost {
     let steps_per_epoch = (cfg.dataset_size / cfg.batch_size.max(1)).max(1);
     let train_steps = (cfg.epochs * steps_per_epoch) as u64;
@@ -107,24 +120,23 @@ pub fn schedule_cost(cfg: &TrainConfig) -> ScheduleCost {
         0
     };
     let analysis_rate = (cfg.analysis_samples as f64 / cfg.dataset_size.max(1) as f64).min(1.0);
-    let (epsilon, alpha) = RdpAccountant::predict(
+    let policy = AdaptivePolicy::from_config(cfg).unwrap_or(AdaptivePolicy::Static);
+    let base = EpochKnobs {
+        noise_multiplier: cfg.noise_multiplier,
+        clip_norm: cfg.clip_norm,
         sample_rate,
-        cfg.noise_multiplier,
-        train_steps,
-        analysis_rate,
-        cfg.sigma_measure,
-        analysis_steps,
-        cfg.delta,
-    );
-    let (train_epsilon, _) = RdpAccountant::predict(
-        sample_rate,
-        cfg.noise_multiplier,
-        train_steps,
-        analysis_rate,
-        cfg.sigma_measure,
-        0,
-        cfg.delta,
-    );
+    };
+    let train_records =
+        adaptive::training_schedule(&policy, &base, cfg.epochs, steps_per_epoch as u64);
+    let (train_epsilon, _) = RdpAccountant::predict_schedule(&train_records, cfg.delta);
+    let mut records = train_records;
+    records.push(StepRecord {
+        mechanism: Mechanism::Analysis,
+        sample_rate: analysis_rate,
+        noise_multiplier: cfg.sigma_measure,
+        steps: analysis_steps,
+    });
+    let (epsilon, alpha) = RdpAccountant::predict_schedule(&records, cfg.delta);
     ScheduleCost {
         sample_rate,
         noise_multiplier: cfg.noise_multiplier,
@@ -136,27 +148,16 @@ pub fn schedule_cost(cfg: &TrainConfig) -> ScheduleCost {
         epsilon,
         alpha,
         train_epsilon,
+        records,
     }
 }
 
 impl ScheduleCost {
-    /// The estimate as the two homogeneous [`StepRecord`] blocks a
-    /// reservation composes against the tenant's history.
-    fn records(&self) -> Vec<StepRecord> {
-        vec![
-            StepRecord {
-                mechanism: Mechanism::Training,
-                sample_rate: self.sample_rate,
-                noise_multiplier: self.noise_multiplier,
-                steps: self.train_steps,
-            },
-            StepRecord {
-                mechanism: Mechanism::Analysis,
-                sample_rate: self.analysis_rate,
-                noise_multiplier: self.analysis_sigma,
-                steps: self.analysis_steps,
-            },
-        ]
+    /// The estimated schedule as [`StepRecord`] blocks: training blocks
+    /// in epoch order (one per distinct `(q, σ)` setting of the
+    /// config's adaptive policy), then the analysis block.
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
     }
 }
 
@@ -451,7 +452,7 @@ impl BudgetLedger {
             return Err(AdmitError::UnknownTenant(tenant.to_string()));
         };
         // The candidate composes at the tenant's δ, not the job's.
-        let records = cost.records();
+        let records = cost.records().to_vec();
         let would_be = epsilon_of_records(
             t.spent
                 .iter()
@@ -460,15 +461,7 @@ impl BudgetLedger {
             t.delta,
         );
         if would_be > t.budget_epsilon {
-            let (estimated_epsilon, _) = RdpAccountant::predict(
-                cost.sample_rate,
-                cost.noise_multiplier,
-                cost.train_steps,
-                cost.analysis_rate,
-                cost.analysis_sigma,
-                cost.analysis_steps,
-                t.delta,
-            );
+            let (estimated_epsilon, _) = RdpAccountant::predict_schedule(&records, t.delta);
             return Err(AdmitError::Exhausted {
                 tenant: tenant.to_string(),
                 remaining_epsilon: t.remaining_epsilon(),
@@ -496,7 +489,7 @@ impl BudgetLedger {
         if t.debited_jobs.contains(&job_id) {
             return;
         }
-        t.reservations.insert(job_id, schedule_cost(cfg).records());
+        t.reservations.insert(job_id, schedule_cost(cfg).records().to_vec());
         t.update_gauges(tenant);
     }
 
@@ -776,6 +769,79 @@ mod tests {
     }
 
     #[test]
+    fn schedule_cost_expands_adaptive_policies_block_by_block() {
+        // A noise-decay config must be admitted at its heterogeneous
+        // composed cost: one training block per distinct per-epoch σ.
+        let mut cfg = tiny_cfg();
+        cfg.policy = "noise_decay".into();
+        cfg.noise_final = cfg.noise_multiplier * 2.0;
+        let cost = schedule_cost(&cfg);
+        let train_blocks = cost
+            .records()
+            .iter()
+            .filter(|r| r.mechanism == Mechanism::Training)
+            .count();
+        assert_eq!(train_blocks, cfg.epochs, "one block per distinct sigma");
+        let block_steps: u64 = cost
+            .records()
+            .iter()
+            .filter(|r| r.mechanism == Mechanism::Training)
+            .map(|r| r.steps)
+            .sum();
+        assert_eq!(block_steps, cost.train_steps);
+        // Decaying *up* to 2σ must cost less than running every epoch at
+        // the starting σ, and more than running every epoch at 2σ.
+        let static_lo = schedule_cost(&tiny_cfg());
+        let mut hi_cfg = tiny_cfg();
+        hi_cfg.noise_multiplier *= 2.0;
+        hi_cfg.sigma_measure = cfg.sigma_measure;
+        let static_hi = schedule_cost(&hi_cfg);
+        assert!(cost.epsilon < static_lo.epsilon, "decay toward more noise is cheaper");
+        assert!(cost.epsilon > static_hi.epsilon, "but not as cheap as all-high-noise");
+        // The quoted ε is exactly the block-by-block replay.
+        let (replay, _) = RdpAccountant::predict_schedule(cost.records(), cfg.delta);
+        assert_eq!(cost.epsilon.to_bits(), replay.to_bits());
+        // And the static path still produces the legacy two-block shape
+        // with an ε bit-equal to the legacy 7-arg predict.
+        let s = static_lo;
+        assert_eq!(s.records().len(), 2);
+        let (legacy, _) = RdpAccountant::predict(
+            s.sample_rate,
+            s.noise_multiplier,
+            s.train_steps,
+            s.analysis_rate,
+            s.analysis_sigma,
+            s.analysis_steps,
+            tiny_cfg().delta,
+        );
+        assert_eq!(s.epsilon.to_bits(), legacy.to_bits());
+    }
+
+    #[test]
+    fn adaptive_jobs_admit_and_exhaust_through_the_ledger() {
+        let ledger = BudgetLedger::open(None).unwrap();
+        let mut cfg = tiny_cfg();
+        cfg.policy = "rate_schedule".into();
+        cfg.rate_final = cfg.sample_rate() / 2.0;
+        let one_job = schedule_cost(&cfg).epsilon;
+        // Strict `>` admission: a budget of exactly one composed job
+        // admits job 1 and rejects job 2 (two jobs always compose to
+        // strictly more than one).
+        ledger.create_tenant("t", one_job, 1e-5).unwrap();
+        ledger.reserve("t", 1, &cfg).unwrap();
+        // The second identical job must be rejected with the schedule's
+        // composed ε quoted at the tenant's δ (here equal to the job's).
+        let err = ledger.reserve("t", 2, &cfg).unwrap_err();
+        let AdmitError::Exhausted {
+            estimated_epsilon, ..
+        } = err
+        else {
+            panic!("expected Exhausted, got {err:?}");
+        };
+        assert_eq!(estimated_epsilon.to_bits(), one_job.to_bits());
+    }
+
+    #[test]
     fn create_validates_and_rejects_duplicates() {
         let ledger = BudgetLedger::open(None).unwrap();
         assert!(matches!(
@@ -916,7 +982,7 @@ mod tests {
         let cfg = tiny_cfg();
         ledger.create_tenant("t", 100.0, 1e-5).unwrap();
         ledger.reserve("t", 1, &cfg).unwrap();
-        ledger.debit("t", 1, &schedule_cost(&cfg).records());
+        ledger.debit("t", 1, schedule_cost(&cfg).records());
         // A crash-recovered, already-debited job must not re-reserve.
         ledger.restore_reservation("t", 1, &cfg);
         assert_eq!(ledger.status("t").unwrap().open_reservations, 0);

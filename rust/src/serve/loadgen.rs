@@ -62,18 +62,9 @@ fn half_fleet_budget(cfg: &TrainConfig, per_tenant: usize) -> f64 {
     let cost = schedule_cost(cfg);
     let mut acc = RdpAccountant::new();
     for _ in 0..per_tenant.div_ceil(2) {
-        acc.record(
-            Mechanism::Training,
-            cost.sample_rate,
-            cost.noise_multiplier,
-            cost.train_steps,
-        );
-        acc.record(
-            Mechanism::Analysis,
-            cost.analysis_rate,
-            cost.analysis_sigma,
-            cost.analysis_steps,
-        );
+        for r in cost.records() {
+            acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+        }
     }
     acc.epsilon(cfg.delta).0
 }
@@ -82,14 +73,17 @@ fn ms_since(t0: Instant) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3
 }
 
-/// Nearest-rank percentile of an already-sorted sample; 0.0 for an
-/// empty one (all-rejected runs still emit finite, checkable numbers).
+/// Nearest-rank percentile of an already-sorted sample: the value at
+/// rank `⌈p/100 · n⌉` (1-based, clamped to `[1, n]`, so p = 0 reads the
+/// minimum and p = 100 the maximum); 0.0 for an empty sample
+/// (all-rejected runs still emit finite, checkable numbers).
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 fn percentile_obj(samples: &mut Vec<f64>) -> Json {
@@ -336,6 +330,13 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 50.0), 5.0);
         assert_eq!(percentile(&v, 100.0), 10.0);
+        // True nearest-rank (⌈p/100·n⌉, 1-based) — these two
+        // distinguish it from the old round(p/100·(n−1)) interpolation,
+        // which returned 3.0 and 2.0 respectively.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 25.0), 1.0);
+        // p90 of 10 samples is the 9th order statistic, not the 10th.
+        assert_eq!(percentile(&v, 90.0), 9.0);
         // NaN-free sorting path.
         let mut v = vec![3.0, 1.0, 2.0];
         let o = percentile_obj(&mut v);

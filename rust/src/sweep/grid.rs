@@ -93,6 +93,12 @@ pub const SWEEP_KEYS: &[&str] = &[
     "target_epsilon",
     "delta",
     "physical_batch",
+    "policy",
+    "noise_final",
+    "clip_final",
+    "rate_final",
+    "decay_shape",
+    "layer_lr_strength",
 ];
 
 impl GridSpec {
@@ -321,6 +327,12 @@ pub fn apply_key(cfg: &mut TrainConfig, key: &str, value: &str) -> Result<()> {
         "seed" => cfg.seed = num(key, value)?,
         "delta" => cfg.delta = num(key, value)?,
         "physical_batch" => cfg.physical_batch = num(key, value)?,
+        "policy" => cfg.policy = value.to_string(),
+        "noise_final" => cfg.noise_final = num(key, value)?,
+        "clip_final" => cfg.clip_final = num(key, value)?,
+        "rate_final" => cfg.rate_final = num(key, value)?,
+        "decay_shape" => cfg.decay_shape = value.to_string(),
+        "layer_lr_strength" => cfg.layer_lr_strength = num(key, value)?,
         "target_epsilon" => {
             cfg.target_epsilon = if value == "none" { None } else { Some(num(key, value)?) }
         }
@@ -349,6 +361,26 @@ mod tests {
         let g = GridSpec::parse("quant-fraction=0.5;noise-multiplier=1.0,2.0").unwrap();
         assert_eq!(g.axes[0].key, "quant_fraction");
         assert_eq!(g.axes[1].key, "noise_multiplier");
+    }
+
+    #[test]
+    fn policy_axis_parses_and_applies() {
+        let g = GridSpec::parse("policy=static,noise_decay,rate_schedule,layer_lr").unwrap();
+        assert_eq!(g.axes[0].key, "policy");
+        assert_eq!(g.axes[0].values.len(), 4);
+        let mut cfg = TrainConfig::default();
+        apply_key(&mut cfg, "policy", "noise_decay").unwrap();
+        apply_key(&mut cfg, "noise_final", "1.5").unwrap();
+        apply_key(&mut cfg, "clip_final", "0.25").unwrap();
+        apply_key(&mut cfg, "rate_final", "0.01").unwrap();
+        apply_key(&mut cfg, "decay_shape", "exp").unwrap();
+        apply_key(&mut cfg, "layer_lr_strength", "0.75").unwrap();
+        assert_eq!(cfg.policy, "noise_decay");
+        assert_eq!(cfg.noise_final, 1.5);
+        assert_eq!(cfg.clip_final, 0.25);
+        assert_eq!(cfg.rate_final, 0.01);
+        assert_eq!(cfg.decay_shape, "exp");
+        assert_eq!(cfg.layer_lr_strength, 0.75);
     }
 
     #[test]

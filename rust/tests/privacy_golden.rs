@@ -17,10 +17,15 @@
 //! real change in the math.
 
 use dpquant::config::TrainConfig;
+use dpquant::coordinator::{
+    adaptive, AdaptivePolicy, DecayShape, EpochKnobs, MockExecutor, NullSink, TrainSession,
+};
+use dpquant::data::Dataset;
 use dpquant::privacy::{
     default_alphas, rdp_sgm_step, rdp_to_epsilon, Mechanism, RdpAccountant, StepRecord,
 };
 use dpquant::serve::ledger::BudgetLedger;
+use dpquant::util::rng::Xoshiro256;
 
 const REL_TOL: f64 = 1e-6;
 
@@ -191,6 +196,175 @@ fn ledger_spend_composes_like_one_accountant() {
         (1000.0 - composed).max(0.0).to_bits(),
         "remaining must be budget minus the composed spend, same bits"
     );
+}
+
+#[test]
+fn adaptive_policy_schedule_goldens() {
+    // ε of each ε-consuming adaptive policy's heterogeneous schedule,
+    // pinned against the same independent Python port (per-epoch
+    // (q_t, σ_t) blocks composed by summing per-α RDP curves). The α
+    // pins are loose, as in `epsilon_golden_values`.
+    let delta = 1e-5;
+
+    // Dynamic DP-SGD, linear: σ ramps 0.6 → 1.2 over 4 epochs of 16
+    // steps at q = 1/16 (σ_e = 0.6 + (e/3)·0.6).
+    let base = EpochKnobs {
+        noise_multiplier: 0.6,
+        clip_norm: 1.0,
+        sample_rate: 0.0625,
+    };
+    let policy = AdaptivePolicy::NoiseDecay {
+        shape: DecayShape::Linear,
+        noise_final: 1.2,
+        clip_final: 1.0,
+    };
+    let sched = adaptive::training_schedule(&policy, &base, 4, 16);
+    assert_eq!(sched.len(), 4, "4 distinct sigmas, 4 blocks");
+    let (eps, alpha) = RdpAccountant::predict_schedule(&sched, delta);
+    assert_rel(eps, 9.252442252463918, "noise_decay linear eps");
+    assert!((alpha - 2.5).abs() < 0.5, "best alpha {alpha}, expected near 2.5");
+
+    // Dynamic DP-SGD, exponential: σ ramps 0.5 → 2.0 geometrically over
+    // 3 epochs of 10 steps at q = 0.05 (σ_e = 0.5·4^(e/2)).
+    let base = EpochKnobs {
+        noise_multiplier: 0.5,
+        clip_norm: 1.0,
+        sample_rate: 0.05,
+    };
+    let policy = AdaptivePolicy::NoiseDecay {
+        shape: DecayShape::Exp,
+        noise_final: 2.0,
+        clip_final: 1.0,
+    };
+    let sched = adaptive::training_schedule(&policy, &base, 3, 10);
+    assert_eq!(sched.len(), 3);
+    let (eps, alpha) = RdpAccountant::predict_schedule(&sched, delta);
+    assert_rel(eps, 10.456251949781658, "noise_decay exp eps");
+    assert!((alpha - 2.3).abs() < 0.5, "best alpha {alpha}, expected near 2.3");
+
+    // DPIS-style rate schedule: q ramps 1/16 → 1/32 linearly over 4
+    // epochs of 16 steps at σ = 1 (q_e = 0.0625 − (e/3)·0.03125).
+    let base = EpochKnobs {
+        noise_multiplier: 1.0,
+        clip_norm: 1.0,
+        sample_rate: 0.0625,
+    };
+    let policy = AdaptivePolicy::RateSchedule { rate_final: 0.03125 };
+    let sched = adaptive::training_schedule(&policy, &base, 4, 16);
+    assert_eq!(sched.len(), 4);
+    let (eps, alpha) = RdpAccountant::predict_schedule(&sched, delta);
+    assert_rel(eps, 3.404901768845483, "rate_schedule eps");
+    assert!((alpha - 4.9).abs() < 0.5, "best alpha {alpha}, expected near 4.9");
+
+    // LayerLr is pure post-processing: its training schedule is the
+    // static one, record for record, bit for bit.
+    let s_static = adaptive::training_schedule(&AdaptivePolicy::Static, &base, 4, 16);
+    let s_lr =
+        adaptive::training_schedule(&AdaptivePolicy::LayerLr { strength: 0.5 }, &base, 4, 16);
+    assert_eq!(s_static.len(), s_lr.len());
+    for (a, b) in s_static.iter().zip(&s_lr) {
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.sample_rate.to_bits(), b.sample_rate.to_bits());
+        assert_eq!(a.noise_multiplier.to_bits(), b.noise_multiplier.to_bits());
+    }
+}
+
+fn toy_dataset(n: usize, feats: usize, classes: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..n {
+        let c = rng.next_below(classes as u64) as i32;
+        for f in 0..feats {
+            xs.push(0.5 * rng.next_f32() + if f == c as usize { 1.0 } else { 0.0 });
+        }
+        ys.push(c);
+    }
+    Dataset {
+        xs,
+        ys,
+        example_numel: feats,
+        n_classes: classes,
+    }
+}
+
+#[test]
+fn predicted_schedule_matches_live_adaptive_run_bitwise() {
+    // Issue 9 acceptance: `predict_schedule` on a heterogeneous
+    // (σ_t, q_t) schedule must match the live run's composed ε down to
+    // the last bit. Scheduler `static_random` keeps Analysis blocks out
+    // of the history so the comparison covers exactly the training-side
+    // composition; the train split has exactly `dataset_size` examples
+    // so the live q = B/|D| division is the same division
+    // `TrainConfig::sample_rate` performs.
+    let cfg = TrainConfig {
+        epochs: 4,
+        batch_size: 16,
+        dataset_size: 256,
+        noise_multiplier: 0.6,
+        clip_norm: 1.0,
+        lr: 0.8,
+        quant_fraction: 0.5,
+        scheduler: "static_random".into(),
+        policy: "noise_decay".into(),
+        noise_final: 1.2,
+        seed: 3,
+        physical_batch: 32,
+        ..TrainConfig::default()
+    };
+    let exec = MockExecutor::new(8, 4, 6, 32);
+    let tr = toy_dataset(256, 8, 4, cfg.seed);
+    let va = toy_dataset(64, 8, 4, cfg.seed + 1);
+
+    let mut session = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+    session.run(&exec, &tr, &va, &mut NullSink).unwrap();
+    let (record, _weights, mut acc) = session.finish();
+    let delta = cfg.delta;
+    let live = acc.epsilon(delta);
+
+    let policy = AdaptivePolicy::from_config(&cfg).unwrap();
+    let base = EpochKnobs {
+        noise_multiplier: cfg.noise_multiplier,
+        clip_norm: cfg.clip_norm,
+        sample_rate: cfg.sample_rate(),
+    };
+    let steps_per_epoch = (cfg.dataset_size / cfg.batch_size) as u64;
+    let sched = adaptive::training_schedule(&policy, &base, cfg.epochs, steps_per_epoch);
+    let predicted = RdpAccountant::predict_schedule(&sched, delta);
+
+    assert_eq!(
+        predicted.0.to_bits(),
+        live.0.to_bits(),
+        "predicted ε {} vs live ε {}",
+        predicted.0,
+        live.0
+    );
+    assert_eq!(predicted.1, live.1, "best α must agree too");
+    assert_eq!(record.final_epsilon.to_bits(), live.0.to_bits());
+
+    // The live history IS the predicted schedule, block for block.
+    let history = acc.history();
+    assert_eq!(history.len(), sched.len());
+    for (h, s) in history.iter().zip(&sched) {
+        assert_eq!(h.steps, s.steps);
+        assert_eq!(h.sample_rate.to_bits(), s.sample_rate.to_bits());
+        assert_eq!(h.noise_multiplier.to_bits(), s.noise_multiplier.to_bits());
+    }
+}
+
+#[test]
+fn zero_rate_analysis_step_costs_nothing() {
+    // An empty probe draw accounts `step_analysis(0.0, σ)`: an SGM that
+    // touches nobody's data. The accountant must record nothing and
+    // report exactly ε = 0 — not a tiny positive number.
+    let mut acc = RdpAccountant::new();
+    acc.step_analysis(0.0, 0.5);
+    assert!(acc.history().is_empty(), "zero-rate steps must not be recorded");
+    assert_eq!(acc.steps_of(Mechanism::Analysis), 0);
+    let (eps, _) = acc.epsilon(1e-5);
+    assert_eq!(eps, 0.0);
+    let (eps, _) = acc.epsilon_of(Mechanism::Analysis, 1e-5);
+    assert_eq!(eps, 0.0);
 }
 
 #[test]
