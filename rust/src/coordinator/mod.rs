@@ -26,8 +26,8 @@ pub use adaptive::{AdaptivePolicy, DecayShape, EpochKnobs};
 pub use executor::{MockExecutor, StepExecutor};
 pub use policy::{budget_to_k, Policy};
 pub use session::{
-    Checkpoint, EpochOutcome, EventSink, MultiSink, NullSink, SessionBuilder, TraceSink,
-    TrainEvent, TrainSession, VerboseSink,
+    AuditEpoch, Checkpoint, EpochOutcome, EventSink, MultiSink, NullSink, SessionBuilder,
+    TraceSink, TrainEvent, TrainSession, VerboseSink,
 };
 pub use session::evaluate;
 pub use trainer::{train, train_with_sink, Scheduler, TrainResult, TrainerOptions};

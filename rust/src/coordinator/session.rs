@@ -31,7 +31,7 @@ use super::ema::EmaScores;
 use super::executor::StepExecutor;
 use super::optimizer::{DpOptimizer, NoiseStats};
 use super::policy::{budget_to_k, Policy};
-use super::sampler::select_targets;
+use super::sampler::{normalize, select_targets, softmax_neg};
 use super::trainer::{Scheduler, StepTrace};
 use crate::config::TrainConfig;
 use crate::data::{eval_batches, make_batches, poisson_sample, Dataset};
@@ -78,6 +78,13 @@ pub enum TrainEvent<'a> {
     Truncated { epoch: usize, step: usize, epsilon: f64 },
     /// The epoch's record (eval + ε) was appended to the run record.
     EpochCompleted { record: &'a EpochRecord },
+    /// The epoch's DP audit record: resolved knobs, sampled mask with
+    /// draw probabilities, the accountant's step-record delta, and the
+    /// composed (ε, α*). Emitted once per epoch, after
+    /// [`EpochCompleted`](TrainEvent::EpochCompleted). Collecting it is
+    /// pure observation — no RNG stream or accountant state is touched —
+    /// so audited and unaudited runs are byte-identical.
+    EpochAudited { audit: &'a AuditEpoch },
 }
 
 impl TrainEvent<'_> {
@@ -90,8 +97,78 @@ impl TrainEvent<'_> {
             TrainEvent::StepCompleted { .. } => "step_completed",
             TrainEvent::Truncated { .. } => "truncated",
             TrainEvent::EpochCompleted { .. } => "epoch_completed",
+            TrainEvent::EpochAudited { .. } => "epoch_audited",
         }
     }
+}
+
+/// Everything ε-relevant that one epoch resolved, for the
+/// `dpquant-audit` stream (DESIGN.md §17): the adaptive-policy knobs
+/// actually applied, the Algorithm 2 mask with its draw probabilities,
+/// the accountant's step-record *delta* for the epoch (training blocks
+/// plus any analysis-probe event, in live order), and the composed
+/// (ε, α*) afterwards. Built from clones of already-computed state plus
+/// the pure Algorithm 2 probability function — never from fresh RNG
+/// draws — so emitting it cannot perturb training.
+#[derive(Clone, Debug)]
+pub struct AuditEpoch {
+    /// Epoch index.
+    pub epoch: usize,
+    /// Resolved σ_t after the adaptive policy.
+    pub noise_multiplier: f64,
+    /// Resolved Poisson rate q_t after the adaptive policy.
+    pub sample_rate: f64,
+    /// Resolved clip norm C_t.
+    pub clip_norm: f64,
+    /// C_t / C₀ — the clip-then-rescale factor applied to updates.
+    pub clip_scale: f64,
+    /// Per-layer lr scales when the `layer_lr` policy is active.
+    pub lr_scales: Option<Vec<f64>>,
+    /// The quantized-layer mask Algorithm 2 sampled (sorted indices).
+    pub mask: Vec<usize>,
+    /// Algorithm 2 draw probabilities π = softmax(-β · normalize(EMA))
+    /// over all layers (DPQuant scheduler only; empty otherwise).
+    pub draw_probs: Vec<f64>,
+    /// The accountant's step-record delta for this epoch, in the order
+    /// the live accountant recorded it (analysis probe first, then
+    /// training steps). Replaying these blocks through a fresh
+    /// accountant reproduces the composed ε bit-for-bit.
+    pub accounting: Vec<StepRecord>,
+    /// Training SGM steps accounted this epoch (= the training-step sum
+    /// of `accounting`).
+    pub steps: u64,
+    /// Composed ε after this epoch, at the config δ.
+    pub epsilon: f64,
+    /// The α* minimizing the RDP→(ε, δ) conversion.
+    pub alpha: f64,
+    /// Wall-clock seconds the Algorithm 1 probe took (0 when it did not
+    /// run; zeroed on the wire in `--no-timing` mode).
+    pub analysis_seconds: f64,
+    /// Did this epoch end by privacy-budget truncation?
+    pub truncated: bool,
+}
+
+/// The accountant history appended since a bookmark taken at epoch
+/// start (`mark` = history length, `boundary_steps` = step count of the
+/// then-last block). Because [`RdpAccountant::record`] coalesces
+/// identical adjacent blocks, the first block of the delta may be the
+/// *growth* of the pre-existing boundary block; replaying the deltas of
+/// every epoch in order through a fresh accountant rebuilds the exact
+/// coalesced history — and therefore the exact ε float-sum order — of
+/// the live run.
+fn history_delta(history: &[StepRecord], mark: usize, boundary_steps: u64) -> Vec<StepRecord> {
+    let mut delta = Vec::new();
+    if mark > 0 && mark <= history.len() {
+        let boundary = &history[mark - 1];
+        if boundary.steps > boundary_steps {
+            delta.push(StepRecord {
+                steps: boundary.steps - boundary_steps,
+                ..boundary.clone()
+            });
+        }
+    }
+    delta.extend(history[mark.min(history.len())..].iter().cloned());
+    delta
 }
 
 /// Receives [`TrainEvent`]s as the session advances.
@@ -494,6 +571,12 @@ impl TrainSession {
         let epoch = self.epoch;
         sink.on_event(&TrainEvent::EpochStarted { epoch });
 
+        // Audit bookmark: where the accountant history stands before
+        // this epoch spends anything, so the epoch's delta can be
+        // extracted afterwards (pure reads — see `AuditEpoch`).
+        let audit_mark = self.accountant.history().len();
+        let audit_boundary_steps = self.accountant.history().last().map_or(0, |r| r.steps);
+
         // ---- Algorithm 1 (DPQuant only, every analysis_interval epochs)
         let mut analysis_seconds = 0.0;
         if self.scheduler == Scheduler::DpQuant && epoch % self.cfg.analysis_interval.max(1) == 0 {
@@ -530,9 +613,13 @@ impl TrainSession {
         }
 
         // ---- Algorithm 2: pick this epoch's policy
+        let mut audit_draw_probs: Vec<f64> = Vec::new();
         let policy = match self.scheduler {
             Scheduler::DpQuant => {
                 let scores = self.ema.scores().to_vec();
+                // The same π the sampler draws from, recomputed through
+                // the pure pipeline (no RNG) for the audit record.
+                audit_draw_probs = softmax_neg(&normalize(&scores), self.cfg.beta);
                 Policy::from_layers(
                     self.n_layers,
                     select_targets(&mut self.sched_rng, &scores, self.cfg.beta, self.k),
@@ -567,11 +654,13 @@ impl TrainSession {
             // (q·|D| need not reproduce B's bits exactly).
             self.opt.set_expected_batch(knobs.sample_rate * self.train_len as f64);
         }
+        let mut audit_lr_scales: Option<Vec<f64>> = None;
         if let AdaptivePolicy::LayerLr { strength } = self.adaptive {
             // Post-processing of the privatized EMA scores: zero extra ε.
             // Recomputed every epoch so it tracks the EMA (and survives
             // resume — the EMA is checkpointed, the scales are not).
             let layer_scales = adaptive::layer_lr_scales(self.ema.scores(), strength);
+            audit_lr_scales = Some(layer_scales.clone());
             let scales = exec.quant_weight_params().map(|map| {
                 adaptive::tensor_lr_scales(&layer_scales, &map, exec.param_sizes().len())
             });
@@ -659,7 +748,7 @@ impl TrainSession {
 
         // ---- Eval + record
         let (val_loss, val_acc) = evaluate(exec, &self.weights, val_ds)?;
-        let (eps, _) = self.accountant.epsilon(self.cfg.delta);
+        let (eps, alpha) = self.accountant.epsilon(self.cfg.delta);
         self.record.analysis_epsilon =
             self.accountant.epsilon_of(Mechanism::Analysis, self.cfg.delta).0;
         self.record.push(EpochRecord {
@@ -675,6 +764,32 @@ impl TrainSession {
         sink.on_event(&TrainEvent::EpochCompleted {
             record: self.record.epochs.last().unwrap(),
         });
+
+        // ---- Audit record (pure observation of what just happened)
+        let accounting =
+            history_delta(self.accountant.history(), audit_mark, audit_boundary_steps);
+        let accounted_steps: u64 = accounting
+            .iter()
+            .filter(|r| r.mechanism == Mechanism::Training)
+            .map(|r| r.steps)
+            .sum();
+        let audit = AuditEpoch {
+            epoch,
+            noise_multiplier: knobs.noise_multiplier,
+            sample_rate: knobs.sample_rate,
+            clip_norm: knobs.clip_norm,
+            clip_scale: knobs.clip_norm / self.cfg.clip_norm,
+            lr_scales: audit_lr_scales,
+            mask: policy.layers.clone(),
+            draw_probs: audit_draw_probs,
+            accounting,
+            steps: accounted_steps,
+            epsilon: eps,
+            alpha,
+            analysis_seconds,
+            truncated: self.truncated,
+        };
+        sink.on_event(&TrainEvent::EpochAudited { audit: &audit });
         self.epoch += 1;
 
         if self.truncated {
@@ -731,6 +846,13 @@ impl TrainSession {
     /// Did the privacy budget stop the session before its epoch target?
     pub fn is_truncated(&self) -> bool {
         self.truncated
+    }
+    /// The accountant's coalesced step history so far. An audit writer
+    /// opened mid-run (`--resume` + `--audit-out`) records this as the
+    /// run's `prior` blocks so `audit replay` can seed its fresh
+    /// accountant before the first audited epoch.
+    pub fn accountant_history(&self) -> &[StepRecord] {
+        self.accountant.history()
     }
 
     /// Raise (or lower) the epoch target — the supported override when
@@ -1711,6 +1833,7 @@ mod tests {
             "policy_selected",
             "step_completed",
             "epoch_completed",
+            "epoch_audited",
         ];
         let expected: Vec<String> = per_epoch
             .iter()
@@ -1719,6 +1842,57 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         assert_eq!(rec.0, expected);
+    }
+
+    #[test]
+    fn audit_events_replay_bitwise_and_never_perturb_training() {
+        struct AuditRec(Vec<AuditEpoch>);
+        impl EventSink for AuditRec {
+            fn on_event(&mut self, event: &TrainEvent<'_>) {
+                if let TrainEvent::EpochAudited { audit } = event {
+                    self.0.push((*audit).clone());
+                }
+            }
+        }
+        let cfg = base_cfg();
+        let (exec, tr, va) = fixtures(&cfg);
+        let mut audited = TrainSession::builder(cfg.clone()).build(&exec, &tr).unwrap();
+        let mut rec = AuditRec(Vec::new());
+        audited.run(&exec, &tr, &va, &mut rec).unwrap();
+        assert_eq!(rec.0.len(), cfg.epochs);
+
+        // Replaying every epoch's accounting delta through a fresh
+        // accountant reproduces the recorded ε timeline bit-for-bit —
+        // the `dpquant audit replay` contract, at the session level.
+        let mut fresh = RdpAccountant::new();
+        for a in &rec.0 {
+            for r in &a.accounting {
+                fresh.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+            }
+            let (eps, alpha) = fresh.epsilon(cfg.delta);
+            assert_eq!(eps.to_bits(), a.epsilon.to_bits(), "epoch {}", a.epoch);
+            assert_eq!(alpha.to_bits(), a.alpha.to_bits(), "epoch {}", a.epoch);
+        }
+        // Masks mirror the run record; DPQuant epochs carry a full
+        // probability vector over the executor's 6 quantizable layers.
+        for (a, r) in rec.0.iter().zip(&audited.record().epochs) {
+            assert_eq!(a.mask, r.quantized_layers);
+            assert_eq!(a.draw_probs.len(), 6);
+            let sum: f64 = a.draw_probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "draw probs sum to {sum}");
+            assert_eq!(a.clip_scale.to_bits(), 1.0f64.to_bits());
+        }
+
+        // Observation never perturbs training: a run that discards the
+        // event stream entirely ends with bit-identical weights.
+        let (exec2, tr2, va2) = fixtures(&cfg);
+        let mut plain = TrainSession::builder(cfg).build(&exec2, &tr2).unwrap();
+        plain.run(&exec2, &tr2, &va2, &mut NullSink).unwrap();
+        for (a, b) in audited.weights().iter().zip(plain.weights()) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

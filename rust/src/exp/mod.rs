@@ -14,6 +14,7 @@
 pub mod figs;
 pub mod perf;
 pub mod tables;
+pub mod trend;
 
 use crate::backend;
 use crate::cli::Args;

@@ -207,7 +207,7 @@ fn ratio(a: f64, b: f64) -> f64 {
 /// `kernel.*_ns` histograms the timed kernels just fed.
 pub fn bench(args: &Args) -> Result<()> {
     if let Some(path) = args.get("check") {
-        return bench_check(&path);
+        return bench_check(&path, args.has_flag("allow-provisional"));
     }
     crate::obs::set_kernel_timing(true);
     let quick = std::env::var_os("DPQUANT_BENCH_QUICK").is_some();
@@ -429,8 +429,10 @@ pub fn bench(args: &Args) -> Result<()> {
 /// (loadgen latency percentiles + admission counts, see
 /// [`crate::serve::loadgen`]). Used by the CI `bench-json` job
 /// against fresh quick emits and the committed `BENCH_native.json` /
-/// `BENCH_serve.json`.
-fn bench_check(path: &str) -> Result<()> {
+/// `BENCH_serve.json`. Blobs marked `"provisional": true` (placeholder
+/// numbers, not measurements) are rejected unless `--allow-provisional`
+/// is passed — committed snapshots must be real measurements.
+fn bench_check(path: &str, allow_provisional: bool) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| err!("bench --check: cannot read {path}: {e}"))?;
     let doc = json::parse(&text).map_err(|e| err!("bench --check: {path}: invalid JSON: {e}"))?;
@@ -441,6 +443,16 @@ fn bench_check(path: &str) -> Result<()> {
     let ver = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
     if ver != BENCH_VERSION as f64 {
         return Err(err!("bench --check: {path}: version {ver} != {BENCH_VERSION}"));
+    }
+    let provisional = doc
+        .get("provisional")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    if provisional && !allow_provisional {
+        return Err(err!(
+            "bench --check: {path}: blob is marked provisional (placeholder numbers); \
+             re-measure it or pass --allow-provisional"
+        ));
     }
     let family = doc.get("family").and_then(Json::as_str).unwrap_or("native");
     let required: &[(&str, &[&str])] = match family {
@@ -501,4 +513,43 @@ fn bench_check(path: &str) -> Result<()> {
          {n_values} finite metrics"
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_native_blob(tag: &str, provisional: bool) -> String {
+        let path = std::env::temp_dir()
+            .join(format!("dpquant_bench_{tag}_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let doc = format!(
+            "{{\"format\":\"{BENCH_FORMAT}\",\"version\":{BENCH_VERSION},\
+             \"provisional\":{provisional},\"quick\":false,\
+             \"kernels_ns\":{{\"matmul_96x256x96_blocked\":1200.5}},\
+             \"blocked_speedup\":{{\"matmul_96x256x96\":3.0,\"matmul_256x256x256\":3.5,\
+             \"conv3x3_forward\":2.0,\"conv3x3_backward\":2.2,\"dense_forward\":1.8}},\
+             \"steps_per_sec\":{{\"fp32\":25.0,\"luq4\":20.0,\"uniform4\":21.0,\"fp8\":22.0}},\
+             \"fp32_vs_quantized\":{{\"luq4\":1.25,\"uniform4\":1.19,\"fp8\":1.14}}}}\n"
+        );
+        std::fs::write(&path, doc).unwrap();
+        path
+    }
+
+    #[test]
+    fn check_accepts_a_measured_blob() {
+        let path = write_native_blob("measured", false);
+        bench_check(&path, false).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_rejects_provisional_unless_allowed() {
+        let path = write_native_blob("prov", true);
+        let e = bench_check(&path, false).unwrap_err().to_string();
+        assert!(e.contains("provisional"), "{e}");
+        bench_check(&path, true).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
 }

@@ -1,0 +1,488 @@
+//! Perf-trend engine over `dpquant-bench` snapshots (DESIGN.md §17.3).
+//!
+//! The ROADMAP calls the committed `BENCH_*.json` files the repo's
+//! reviewable perf record; this module makes that record *enforceable*.
+//! `dpquant bench diff OLD NEW` compares two snapshots key by key and
+//! exits nonzero when a gated metric regresses past its threshold, so
+//! the CI `bench-json` job fails loudly on a PR that silently slows the
+//! hot path. `dpquant bench trend A B C...` walks a snapshot sequence
+//! (oldest first) and renders the per-key trajectory, gating the
+//! first→last movement with the same thresholds.
+//!
+//! Gating policy (per top-level group of the bench doc):
+//!
+//! | group                      | direction        | gate               |
+//! |----------------------------|------------------|--------------------|
+//! | `kernels_ns`               | lower is better  | **fail** > --fail-threshold (default 10%) |
+//! | `submit_ms`, `wait_ms`     | lower is better  | warn > --warn-threshold (default 5%) |
+//! | `steps_per_sec`            | higher is better | warn on drop > --warn-threshold |
+//! | `blocked_speedup`          | higher is better | warn on drop > --warn-threshold |
+//! | everything else            | informational    | never gates        |
+//!
+//! Keys present in only one snapshot are reported (`added`/`removed`)
+//! but never gate — renaming a kernel must not brick CI. Snapshots
+//! marked `"quick": true` are compared like any others (CI diffs
+//! same-machine quick emits) but flagged in the output, since quick
+//! numbers are not comparable across machines.
+
+use crate::cli::Args;
+use crate::metrics::Table;
+use crate::util::error::{ensure, err, Result};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+use super::perf::{BENCH_FORMAT, BENCH_VERSION};
+
+/// A parsed `dpquant-bench` document: every top-level object whose
+/// members are all numbers becomes a metric group.
+pub struct Snapshot {
+    /// Where it was loaded from (for messages).
+    pub path: String,
+    /// Bench family (`native`, `serve`; absent = `native`).
+    pub family: String,
+    /// Was it emitted under `DPQUANT_BENCH_QUICK`?
+    pub quick: bool,
+    /// Is it a hand-provisioned placeholder rather than a measurement?
+    pub provisional: bool,
+    /// group → key → value.
+    pub groups: BTreeMap<String, BTreeMap<String, f64>>,
+}
+
+/// Load and structurally validate one snapshot (format/version pins;
+/// deeper schema checks belong to `bench --check`).
+pub fn load(path: &str) -> Result<Snapshot> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| err!("bench trend: cannot read {path}: {e}"))?;
+    let doc =
+        json::parse(&text).map_err(|e| err!("bench trend: {path}: invalid JSON: {e}"))?;
+    let fmt = doc.get("format").and_then(Json::as_str).unwrap_or("");
+    ensure!(
+        fmt == BENCH_FORMAT,
+        "bench trend: {path}: format {fmt:?} != {BENCH_FORMAT:?}"
+    );
+    let ver = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+    ensure!(
+        ver == BENCH_VERSION as f64,
+        "bench trend: {path}: version {ver} != {BENCH_VERSION}"
+    );
+    let obj = doc
+        .as_obj()
+        .ok_or_else(|| err!("bench trend: {path}: top level is not an object"))?;
+    let mut groups = BTreeMap::new();
+    for (name, value) in obj {
+        if let Some(members) = value.as_obj() {
+            let mut metrics = BTreeMap::new();
+            let mut all_numbers = !members.is_empty();
+            for (k, v) in members {
+                match v.as_f64() {
+                    Some(x) if x.is_finite() => {
+                        metrics.insert(k.clone(), x);
+                    }
+                    _ => {
+                        all_numbers = false;
+                        break;
+                    }
+                }
+            }
+            if all_numbers {
+                groups.insert(name.clone(), metrics);
+            }
+        }
+    }
+    ensure!(
+        !groups.is_empty(),
+        "bench trend: {path}: no numeric metric groups found"
+    );
+    Ok(Snapshot {
+        path: path.to_string(),
+        family: doc
+            .get("family")
+            .and_then(Json::as_str)
+            .unwrap_or("native")
+            .to_string(),
+        quick: doc.get("quick").and_then(Json::as_bool).unwrap_or(false),
+        provisional: doc
+            .get("provisional")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+        groups,
+    })
+}
+
+/// How a group's movement is judged.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Gate {
+    /// Lower is better; an increase past the fail threshold fails.
+    FailOnIncrease,
+    /// Lower is better; an increase past the warn threshold warns.
+    WarnOnIncrease,
+    /// Higher is better; a drop past the warn threshold warns.
+    WarnOnDrop,
+    /// Reported, never gated.
+    Info,
+}
+
+fn gate_for(group: &str) -> Gate {
+    match group {
+        "kernels_ns" => Gate::FailOnIncrease,
+        "submit_ms" | "wait_ms" => Gate::WarnOnIncrease,
+        "steps_per_sec" | "blocked_speedup" => Gate::WarnOnDrop,
+        _ => Gate::Info,
+    }
+}
+
+/// One compared key.
+pub struct Delta {
+    /// Metric group (`kernels_ns`, ...).
+    pub group: String,
+    /// Metric key within the group.
+    pub key: String,
+    /// Old value (`None` = key added in the new snapshot).
+    pub old: Option<f64>,
+    /// New value (`None` = key removed).
+    pub new: Option<f64>,
+    /// Percent change new vs old, when both sides exist and old > 0.
+    pub pct: Option<f64>,
+    /// Rendered status cell (`ok`, `FAIL`, `warn`, ...).
+    pub status: &'static str,
+}
+
+/// The full comparison of two snapshots.
+pub struct Comparison {
+    /// Every compared key, group-major.
+    pub rows: Vec<Delta>,
+    /// Gated keys past the fail threshold.
+    pub regressions: usize,
+    /// Gated keys past the warn threshold.
+    pub warnings: usize,
+}
+
+/// Compare `new` against `old` with percent thresholds.
+pub fn compare(old: &Snapshot, new: &Snapshot, fail_pct: f64, warn_pct: f64) -> Comparison {
+    let mut rows = Vec::new();
+    let mut regressions = 0usize;
+    let mut warnings = 0usize;
+    let group_names: BTreeMap<&String, ()> = old
+        .groups
+        .keys()
+        .chain(new.groups.keys())
+        .map(|g| (g, ()))
+        .collect();
+    for (group, ()) in group_names {
+        let empty = BTreeMap::new();
+        let o = old.groups.get(group).unwrap_or(&empty);
+        let n = new.groups.get(group).unwrap_or(&empty);
+        let keys: BTreeMap<&String, ()> = o.keys().chain(n.keys()).map(|k| (k, ())).collect();
+        let gate = gate_for(group);
+        for (key, ()) in keys {
+            let (ov, nv) = (o.get(key).copied(), n.get(key).copied());
+            let (pct, status) = match (ov, nv) {
+                (Some(a), Some(b)) if a > 0.0 => {
+                    let pct = (b / a - 1.0) * 100.0;
+                    let status = match gate {
+                        Gate::FailOnIncrease if pct > fail_pct => {
+                            regressions += 1;
+                            "FAIL"
+                        }
+                        Gate::FailOnIncrease | Gate::WarnOnIncrease if pct > warn_pct => {
+                            warnings += 1;
+                            "warn"
+                        }
+                        Gate::WarnOnDrop if pct < -warn_pct => {
+                            warnings += 1;
+                            "warn"
+                        }
+                        Gate::Info => "",
+                        _ => "ok",
+                    };
+                    (Some(pct), status)
+                }
+                (Some(_), Some(_)) => (None, "n/a"),
+                (Some(_), None) => (None, "removed"),
+                (None, Some(_)) => (None, "added"),
+                (None, None) => (None, ""),
+            };
+            rows.push(Delta {
+                group: group.clone(),
+                key: key.clone(),
+                old: ov,
+                new: nv,
+                pct,
+                status,
+            });
+        }
+    }
+    Comparison {
+        rows,
+        regressions,
+        warnings,
+    }
+}
+
+fn fmt_val(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.abs() >= 100.0 => format!("{x:.0}"),
+        Some(x) => format!("{x:.3}"),
+        None => "-".into(),
+    }
+}
+
+fn print_comparison(cmp: &Comparison) {
+    let mut t = Table::new(&["group", "key", "old", "new", "delta %", "status"]);
+    for d in &cmp.rows {
+        t.row(vec![
+            d.group.clone(),
+            d.key.clone(),
+            fmt_val(d.old),
+            fmt_val(d.new),
+            d.pct.map_or("-".into(), |p| format!("{p:+.1}")),
+            d.status.into(),
+        ]);
+    }
+    t.print();
+}
+
+fn thresholds(args: &Args) -> Result<(f64, f64)> {
+    let fail = args.f64_or("fail-threshold", 10.0)?;
+    let warn = args.f64_or("warn-threshold", 5.0)?;
+    ensure!(
+        fail.is_finite() && fail >= 0.0 && warn.is_finite() && warn >= 0.0,
+        "bench thresholds must be finite non-negative percentages"
+    );
+    Ok((fail, warn))
+}
+
+fn note_flags(s: &Snapshot) {
+    if s.quick {
+        println!("note: {} is a quick emit (numbers only comparable on one machine)", s.path);
+    }
+    if s.provisional {
+        println!("note: {} is marked provisional (placeholder, not a measurement)", s.path);
+    }
+}
+
+/// Entry point for `dpquant bench diff|trend` (dispatched from main).
+pub fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("diff") => cmd_diff(args),
+        Some("trend") => cmd_trend(args),
+        _ => Err(err!("usage: dpquant bench <diff OLD NEW|trend A B [C...]>")),
+    }
+}
+
+/// `dpquant bench diff OLD NEW` — per-key delta table, nonzero exit on
+/// gated regression.
+fn cmd_diff(args: &Args) -> Result<()> {
+    let usage = "usage: dpquant bench diff OLD NEW [--fail-threshold PCT] [--warn-threshold PCT]";
+    let old_path = args.positional.get(2).ok_or_else(|| err!("{usage}"))?;
+    let new_path = args.positional.get(3).ok_or_else(|| err!("{usage}"))?;
+    let (fail_pct, warn_pct) = thresholds(args)?;
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    ensure!(
+        old.family == new.family,
+        "bench diff: cannot compare family {:?} ({}) against {:?} ({})",
+        old.family,
+        old.path,
+        new.family,
+        new.path
+    );
+    note_flags(&old);
+    note_flags(&new);
+    let cmp = compare(&old, &new, fail_pct, warn_pct);
+    print_comparison(&cmp);
+    println!(
+        "bench diff: {} keys, {} regression(s) > {fail_pct}%, {} warning(s) > {warn_pct}%",
+        cmp.rows.len(),
+        cmp.regressions,
+        cmp.warnings
+    );
+    ensure!(
+        cmp.regressions == 0,
+        "bench diff: {} gated metric(s) regressed more than {fail_pct}% \
+         ({new_path} vs {old_path})",
+        cmp.regressions
+    );
+    Ok(())
+}
+
+/// `dpquant bench trend A B [C...]` — per-key trajectory across a
+/// snapshot sequence (oldest first); gates the first→last movement.
+fn cmd_trend(args: &Args) -> Result<()> {
+    let usage = "usage: dpquant bench trend A B [C...] [--fail-threshold PCT] [--warn-threshold PCT]";
+    let paths: Vec<&String> = args.positional.iter().skip(2).collect();
+    ensure!(paths.len() >= 2, "{usage}");
+    let (fail_pct, warn_pct) = thresholds(args)?;
+    let snaps = paths.iter().map(|p| load(p)).collect::<Result<Vec<_>>>()?;
+    for s in &snaps {
+        ensure!(
+            s.family == snaps[0].family,
+            "bench trend: mixed families ({} is {:?}, {} is {:?})",
+            snaps[0].path,
+            snaps[0].family,
+            s.path,
+            s.family
+        );
+        note_flags(s);
+    }
+
+    // Trajectory per key: one column per snapshot plus first→last delta.
+    let mut header: Vec<String> = vec!["group".into(), "key".into()];
+    for (i, s) in snaps.iter().enumerate() {
+        header.push(format!("[{i}] {}", short_name(&s.path)));
+    }
+    header.push("first->last %".into());
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&header_refs);
+    let first = &snaps[0];
+    let last = &snaps[snaps.len() - 1];
+    for (group, keys) in &first.groups {
+        for key in keys.keys() {
+            let mut row = vec![group.clone(), key.clone()];
+            for s in &snaps {
+                row.push(fmt_val(s.groups.get(group).and_then(|g| g.get(key)).copied()));
+            }
+            let pct = match (
+                first.groups.get(group).and_then(|g| g.get(key)),
+                last.groups.get(group).and_then(|g| g.get(key)),
+            ) {
+                (Some(&a), Some(&b)) if a > 0.0 => Some((b / a - 1.0) * 100.0),
+                _ => None,
+            };
+            row.push(pct.map_or("-".into(), |p| format!("{p:+.1}")));
+            t.row(row);
+        }
+    }
+    t.print();
+
+    // Per-transition gate counts, then the first→last gate.
+    for w in snaps.windows(2) {
+        let cmp = compare(&w[0], &w[1], fail_pct, warn_pct);
+        println!(
+            "{} -> {}: {} regression(s), {} warning(s)",
+            short_name(&w[0].path),
+            short_name(&w[1].path),
+            cmp.regressions,
+            cmp.warnings
+        );
+    }
+    let overall = compare(first, last, fail_pct, warn_pct);
+    ensure!(
+        overall.regressions == 0,
+        "bench trend: {} gated metric(s) regressed more than {fail_pct}% from {} to {}",
+        overall.regressions,
+        first.path,
+        last.path
+    );
+    Ok(())
+}
+
+fn short_name(path: &str) -> String {
+    std::path::Path::new(path)
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("dpquant_trend_{tag}_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn snapshot_text(matmul_ns: f64, fp32_sps: f64) -> String {
+        format!(
+            "{{\"format\":\"{BENCH_FORMAT}\",\"version\":{BENCH_VERSION},\"quick\":false,\
+             \"provisional\":false,\"reps\":40,\"batch\":32,\
+             \"kernels_ns\":{{\"matmul_96x256x96_blocked\":{matmul_ns},\"quant_luq4_per_elem\":4.2}},\
+             \"blocked_speedup\":{{\"matmul_96x256x96\":3.1}},\
+             \"steps_per_sec\":{{\"fp32\":{fp32_sps},\"luq4\":20.0}},\
+             \"fp32_vs_quantized\":{{\"luq4\":1.4}}}}\n"
+        )
+    }
+
+    fn write_snap(tag: &str, matmul_ns: f64, fp32_sps: f64) -> String {
+        let path = tmp(tag);
+        std::fs::write(&path, snapshot_text(matmul_ns, fp32_sps)).unwrap();
+        path
+    }
+
+    #[test]
+    fn identical_snapshots_have_no_regressions() {
+        let a = write_snap("id_a", 1000.0, 25.0);
+        let b = write_snap("id_b", 1000.0, 25.0);
+        let cmp = compare(&load(&a).unwrap(), &load(&b).unwrap(), 10.0, 5.0);
+        assert_eq!(cmp.regressions, 0);
+        assert_eq!(cmp.warnings, 0);
+        assert!(cmp.rows.iter().all(|d| d.pct == Some(0.0) || d.pct.is_none()));
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn kernel_ns_increase_past_threshold_fails() {
+        let a = write_snap("reg_a", 1000.0, 25.0);
+        let b = write_snap("reg_b", 1200.0, 25.0); // +20% kernel ns
+        let cmp = compare(&load(&a).unwrap(), &load(&b).unwrap(), 10.0, 5.0);
+        assert_eq!(cmp.regressions, 1);
+        let d = cmp
+            .rows
+            .iter()
+            .find(|d| d.key == "matmul_96x256x96_blocked")
+            .unwrap();
+        assert_eq!(d.status, "FAIL");
+        assert!((d.pct.unwrap() - 20.0).abs() < 1e-9);
+        // Same movement under a 25% threshold is merely a warning.
+        let cmp = compare(&load(&a).unwrap(), &load(&b).unwrap(), 25.0, 5.0);
+        assert_eq!(cmp.regressions, 0);
+        assert_eq!(cmp.warnings, 1);
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn steps_per_sec_drop_warns_but_never_fails() {
+        let a = write_snap("sps_a", 1000.0, 25.0);
+        let b = write_snap("sps_b", 1000.0, 20.0); // -20% steps/sec
+        let cmp = compare(&load(&a).unwrap(), &load(&b).unwrap(), 10.0, 5.0);
+        assert_eq!(cmp.regressions, 0);
+        assert_eq!(cmp.warnings, 1);
+        let d = cmp.rows.iter().find(|d| d.key == "fp32").unwrap();
+        assert_eq!(d.status, "warn");
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn added_and_removed_keys_report_without_gating() {
+        let a = write_snap("keys_a", 1000.0, 25.0);
+        let path_b = tmp("keys_b");
+        // Rename the matmul kernel: old key removed, new key added.
+        std::fs::write(
+            &path_b,
+            snapshot_text(1000.0, 25.0)
+                .replace("matmul_96x256x96_blocked", "matmul_96x256x96_tiled"),
+        )
+        .unwrap();
+        let cmp = compare(&load(&a).unwrap(), &load(&path_b).unwrap(), 10.0, 5.0);
+        assert_eq!(cmp.regressions, 0);
+        assert!(cmp.rows.iter().any(|d| d.status == "removed"));
+        assert!(cmp.rows.iter().any(|d| d.status == "added"));
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&path_b).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_format() {
+        let path = tmp("badfmt");
+        std::fs::write(&path, "{\"format\":\"other\",\"version\":1}\n").unwrap();
+        let e = load(&path).unwrap_err().to_string();
+        assert!(e.contains("format"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -39,16 +39,20 @@
 //! streams epoch progress into per-job ring buffers, and — with a
 //! `--state-dir` — checkpoints every job so a killed daemon restarts
 //! and finishes them bit-exactly; `dpquant job
-//! submit|list|status|events|cancel|wait` is the client (DESIGN.md
-//! §12).
+//! submit|list|status|events|audit|cancel|wait` is the client
+//! (DESIGN.md §12).
 //!
 //! The [`obs`] module is the observability layer (DESIGN.md §14): a
 //! process-wide metrics registry (counters/gauges/latency histograms,
 //! fed by the hot kernels, the worker pool, and the HTTP server) plus
 //! `dpquant-trace` v1 span/event trace files written by `dpquant
 //! train --trace-out` and inspected with `dpquant trace
-//! summarize|check`. Observability is pure observation — outputs are
-//! byte-identical with it on or off.
+//! summarize|check`, and the `dpquant-audit` v1 DP audit trail
+//! (DESIGN.md §17) written by `--audit-out` (and by every served job
+//! under `--state-dir`), whose recorded ε timeline `dpquant audit
+//! replay` re-derives bit-exactly through a fresh accountant.
+//! Observability is pure observation — outputs are byte-identical
+//! with it on or off.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -78,7 +82,7 @@ pub mod xla;
 /// glance (a daemon reports the same list on `GET /v1/healthz`).
 pub fn version() -> String {
     format!(
-        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}",
+        "dpquant {}\nformats: {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}, {} v{}",
         env!("CARGO_PKG_VERSION"),
         coordinator::session::CHECKPOINT_FORMAT,
         coordinator::session::CHECKPOINT_VERSION,
@@ -94,6 +98,8 @@ pub fn version() -> String {
         obs::TRACE_VERSION,
         obs::METRICS_FORMAT,
         obs::METRICS_VERSION,
+        obs::AUDIT_FORMAT,
+        obs::AUDIT_VERSION,
     )
 }
 
@@ -111,5 +117,6 @@ mod tests {
         assert!(v.contains("dpquant-bench v1"), "{v}");
         assert!(v.contains("dpquant-trace v1"), "{v}");
         assert!(v.contains("dpquant-metrics v1"), "{v}");
+        assert!(v.contains("dpquant-audit v1"), "{v}");
     }
 }

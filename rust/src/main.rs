@@ -59,6 +59,13 @@
 //!                      `dpquant-trace` v1 schema, `trace summarize
 //!                      PATH` aggregates spans into a per-target table
 //!                      (count, total/mean/p95 ns)
+//!   audit            — DP audit-trail utilities: `audit check PATH`
+//!                      validates a `dpquant-audit` v1 file (written by
+//!                      `train --audit-out` and by served jobs), `audit
+//!                      replay PATH` re-drives every recorded
+//!                      (q, σ, steps) block through a fresh accountant
+//!                      and fails unless the replayed ε timeline is
+//!                      bitwise equal to the recorded one
 //!   version          — crate version + the on-disk/wire format versions
 //!                      this build speaks (also `--version`)
 //!   bench-step       — time one train step, fp32 vs fully quantized
@@ -66,9 +73,15 @@
 //!                      kernel timings, quantizer ns/elem, native
 //!                      steps/sec (fp32 vs each quantizer); `--json PATH`
 //!                      writes a `dpquant-bench` v1 blob (DESIGN.md §13),
-//!                      `--check FILE` validates one instead of measuring,
-//!                      `--metrics-out PATH` snapshots the metrics
-//!                      registry the measurements also feed
+//!                      `--check FILE` validates one instead of measuring
+//!                      (rejecting `provisional: true` snapshots unless
+//!                      `--allow-provisional`), `--metrics-out PATH`
+//!                      snapshots the metrics registry the measurements
+//!                      also feed; `bench diff OLD NEW` and `bench trend
+//!                      A B C...` compare snapshots per key with
+//!                      regression thresholds (`--fail-threshold`,
+//!                      default 10% kernel-ns; `--warn-threshold` for
+//!                      steps/sec) and exit nonzero on regression
 //!
 //! Model-executing subcommands (train, eval-only, bench-step, exp,
 //! sweep) take `--backend native|pjrt|mock`; `serve` reads `backend`
@@ -144,6 +157,7 @@ const COMMANDS: &[&str] = &[
     "cost",
     "loadgen",
     "trace",
+    "audit",
     "version",
     "bench-step",
     "bench",
@@ -168,6 +182,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     "resume",
                     "trace-out",
                     "metrics-out",
+                    "audit-out",
                 ],
             );
             args.require_known("train", &opts, &["no-ema", "stats", "quiet", "no-timing"])?;
@@ -216,7 +231,7 @@ fn dispatch(args: &Args) -> Result<()> {
             exp::run(args)
         }
         Some("sweep") => {
-            let opts = spec(CONFIG_OPTS, &["grid", "jobs", "out"]);
+            let opts = spec(CONFIG_OPTS, &["grid", "jobs", "out", "trace-out", "metrics-out"]);
             args.require_known("sweep", &opts, &["no-ema", "no-timing", "quiet"])?;
             dpquant::sweep::run(args)
         }
@@ -245,6 +260,10 @@ fn dispatch(args: &Args) -> Result<()> {
             args.require_known("trace", &[], &[])?;
             cmd_trace(args)
         }
+        Some("audit") => {
+            args.require_known("audit", &[], &[])?;
+            cmd_audit(args)
+        }
         Some("version") => {
             args.require_known("version", &[], &[])?;
             println!("{}", dpquant::version());
@@ -255,15 +274,26 @@ fn dispatch(args: &Args) -> Result<()> {
             args.require_known("bench-step", &opts, &["no-ema"])?;
             cmd_bench_step(args)
         }
-        Some("bench") => {
-            args.require_known("bench", &["json", "reps", "check", "metrics-out"], &[])?;
-            exp::perf::bench(args)
-        }
+        Some("bench") => match args.subcommand() {
+            // Trend engine: compare committed dpquant-bench snapshots.
+            Some("diff") | Some("trend") => {
+                args.require_known("bench", &["fail-threshold", "warn-threshold"], &[])?;
+                exp::trend::run(args)
+            }
+            _ => {
+                args.require_known(
+                    "bench",
+                    &["json", "reps", "check", "metrics-out"],
+                    &["allow-provisional"],
+                )?;
+                exp::perf::bench(args)
+            }
+        },
         Some(other) => Err(dpquant::cli::unknown_command_error("command", other, COMMANDS).into()),
         None => {
             println!(
                 "usage: dpquant <train|eval-only|list|accountant|exp|sweep|serve|job|tenant|\
-                 cost|loadgen|trace|version|bench-step|bench> [flags]\n\
+                 cost|loadgen|trace|audit|version|bench-step|bench> [flags]\n\
                  model-executing commands take --backend native|pjrt|mock (default: native)"
             );
             Ok(())
@@ -392,11 +422,29 @@ fn run_session(
     };
     let mut jsonl = writer.as_ref().map(JsonlSink::new);
 
+    // The DP audit trail (`dpquant-audit` v1): run record now, one
+    // record per epoch via the sink. On `--resume` the accountant
+    // already carries history — recorded as the run's `prior` blocks so
+    // `audit replay` composes from the same starting point.
+    let audit_path = args.get("audit-out");
+    let audit_writer = match audit_path {
+        Some(path) => {
+            let w = obs::AuditWriter::create(path, timing)?;
+            w.begin_run(session.config(), train_ds.len(), session.accountant_history());
+            Some(w)
+        }
+        None => None,
+    };
+    let mut audit_sink = audit_writer.as_ref().map(obs::AuditSink::new);
+
     let mut trace_sink = TraceSink::default();
     let mut verbose_sink = VerboseSink;
     let mut sinks: Vec<&mut dyn EventSink> = Vec::new();
     if let Some(j) = jsonl.as_mut() {
         sinks.push(j);
+    }
+    if let Some(a) = audit_sink.as_mut() {
+        sinks.push(a);
     }
     if args.has_flag("stats") {
         sinks.push(&mut trace_sink);
@@ -452,6 +500,14 @@ fn run_session(
         if verbose {
             if let Some(path) = &obs_cfg.trace_path {
                 println!("trace written: {path}");
+            }
+        }
+    }
+    if let Some(w) = &audit_writer {
+        w.finish()?;
+        if verbose {
+            if let Some(path) = audit_path {
+                println!("audit written: {path}");
             }
         }
     }
@@ -512,6 +568,47 @@ fn cmd_trace(args: &Args) -> Result<()> {
             "trace subcommand",
             other,
             &["summarize", "check"],
+        )
+        .into()),
+        None => Err(err!("{usage}")),
+    }
+}
+
+/// `dpquant audit <check|replay> PATH` — validate a `dpquant-audit` v1
+/// file, or re-compose its ε timeline through a fresh accountant and
+/// demand bitwise agreement (DESIGN.md §17).
+fn cmd_audit(args: &Args) -> Result<()> {
+    let usage = "usage: dpquant audit <check|replay> PATH";
+    let path = args.positional.get(2);
+    match args.subcommand() {
+        Some("check") => {
+            let path = path.ok_or_else(|| err!("{usage}"))?;
+            let stats = obs::audit::check(path)?;
+            println!(
+                "ok: {path} is {} v{} ({} epochs, {} accounting blocks, {} analysis steps{})",
+                obs::AUDIT_FORMAT,
+                obs::AUDIT_VERSION,
+                stats.epochs,
+                stats.records,
+                stats.analysis_steps,
+                if stats.truncated { ", truncated at budget" } else { "" }
+            );
+            Ok(())
+        }
+        Some("replay") => {
+            let path = path.ok_or_else(|| err!("{usage}"))?;
+            let replay = obs::audit::replay(path)?;
+            println!(
+                "replay ok: {path}: {} epochs re-composed bitwise; final epsilon = {} \
+                 at alpha = {}",
+                replay.epochs, replay.final_epsilon, replay.final_alpha
+            );
+            Ok(())
+        }
+        Some(other) => Err(dpquant::cli::unknown_command_error(
+            "audit subcommand",
+            other,
+            &["check", "replay"],
         )
         .into()),
         None => Err(err!("{usage}")),

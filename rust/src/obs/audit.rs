@@ -1,0 +1,829 @@
+//! DP audit trail: the `dpquant-audit` v1 JSONL stream.
+//!
+//! The paper's privacy claim is only as good as the artifacts a run
+//! leaves behind: PR 7's traces record *what happened*, but nothing
+//! lets a reviewer recompute the DP guarantee after the fact. The audit
+//! stream closes that gap. Line 1 is the header
+//! `{"format":"dpquant-audit","version":1}`; line 2 is a `"run"` record
+//! pinning the config-level DP inputs (δ, base (q, σ, C),
+//! scheduler/policy, seed) plus the accountant history already composed
+//! before the first audited epoch (`prior` — empty for fresh runs,
+//! non-empty when auditing a resumed checkpoint); every following line
+//! is an `"epoch"` record carrying the resolved knobs (σ_t, q_t, clip
+//! scale, optional per-layer lr scales), the sampled layer mask with
+//! its Algorithm 2 draw probabilities, the epoch's accountant *delta*
+//! (every training/analysis SGM block, in live order), and the composed
+//! (ε, α*) after the epoch.
+//!
+//! Floats travel as IEEE-754 bit patterns in hex (the checkpoint
+//! idiom), so [`replay`] can demand **bitwise** equality: re-driving
+//! the recorded blocks through a fresh
+//! [`RdpAccountant`](crate::privacy::RdpAccountant) must reproduce the
+//! recorded ε timeline to the last bit, or the file is rejected. The
+//! per-epoch deltas preserve live event order (analysis before the
+//! training steps of the same epoch), so the accountant's
+//! coalesce-adjacent-blocks behavior — and therefore its float-sum
+//! order — is identical between the live run and the replay.
+//!
+//! Determinism contract: collecting audit data is pure observation
+//! (clones of already-computed state plus the pure Algorithm 2
+//! probability function) — it touches no RNG stream and never feeds
+//! back into training, so audited and unaudited runs are byte-identical
+//! (`tests/audit.rs`). The only wall-clock field
+//! (`analysis_seconds`) is zeroed in `--no-timing` mode, making audit
+//! files byte-diffable across identical runs. Writes are flushed per
+//! line, so a `kill -9`'d daemon loses at most the record being
+//! written; [`AuditWriter::resume`] truncates any such torn tail and
+//! appends from the recovered epoch, reproducing the uninterrupted
+//! file byte for byte.
+
+use crate::config::TrainConfig;
+use crate::coordinator::{AuditEpoch, EventSink, TrainEvent};
+use crate::privacy::{Mechanism, RdpAccountant, StepRecord};
+use crate::util::error::{bail, ensure, err, Context, Result};
+use crate::util::json::{self, Json};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use super::{AUDIT_FORMAT, AUDIT_VERSION};
+
+// ---------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------
+
+struct AuditInner {
+    out: Box<dyn Write + Send>,
+    /// Set after the first write failure; later lines are dropped so a
+    /// full disk degrades auditing, never the run itself.
+    failed: bool,
+}
+
+impl AuditInner {
+    fn write_line(&mut self, line: &str) {
+        if self.failed {
+            return;
+        }
+        // Flush per line: records are one per epoch (cheap) and a
+        // kill -9'd process must find every completed epoch on disk.
+        let r = writeln!(self.out, "{line}").and_then(|()| self.out.flush());
+        if let Err(e) = r {
+            eprintln!("audit: write failed ({e}); dropping further audit output");
+            self.failed = true;
+        }
+    }
+}
+
+/// Writes a `dpquant-audit` v1 file. Interior-mutable (`Mutex`), so the
+/// [`AuditSink`] shares it by `&` reference, like [`TraceWriter`]
+/// (crate::obs::TraceWriter).
+pub struct AuditWriter {
+    inner: Mutex<AuditInner>,
+    timing: bool,
+}
+
+impl AuditWriter {
+    /// Create (truncate) `path` and write the header line. With
+    /// `timing = false` the one wall-clock field (`analysis_seconds`)
+    /// is written as 0, so identical runs produce byte-identical files.
+    pub fn create(path: &str, timing: bool) -> Result<Self> {
+        let file = File::create(path).with_context(|| format!("creating audit file {path}"))?;
+        Ok(Self::from_boxed(Box::new(file), timing))
+    }
+
+    /// Wrap an arbitrary writer (tests, in-memory capture).
+    pub fn from_boxed(out: Box<dyn Write + Send>, timing: bool) -> Self {
+        let w = Self {
+            inner: Mutex::new(AuditInner { out, failed: false }),
+            timing,
+        };
+        let header = json::obj(vec![
+            ("format", json::s(AUDIT_FORMAT)),
+            ("version", json::num(AUDIT_VERSION as f64)),
+        ])
+        .to_string();
+        w.lock().write_line(&header);
+        w
+    }
+
+    /// Reopen an existing audit file for a resumed session: keep the
+    /// header, the run record, and every epoch record with
+    /// `epoch < epochs_completed`; drop any later line (the record that
+    /// was mid-flight when the process died — the resumed session will
+    /// re-emit it identically); append from there. A recovered run's
+    /// audit file therefore ends up byte-identical to an uninterrupted
+    /// one.
+    pub fn resume(path: &str, epochs_completed: usize, timing: bool) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading audit file {path}"))?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| err!("{path}: empty audit file"))?;
+        let h = json::parse(header).map_err(|e| err!("{path}: invalid header JSON: {e}"))?;
+        ensure!(
+            h.get("format").and_then(Json::as_str) == Some(AUDIT_FORMAT)
+                && h.get("version").and_then(Json::as_f64) == Some(AUDIT_VERSION as f64),
+            "{path}: not a {AUDIT_FORMAT} v{AUDIT_VERSION} file"
+        );
+        let run = lines.next().ok_or_else(|| err!("{path}: missing run record"))?;
+        let r = json::parse(run).map_err(|e| err!("{path}: invalid run JSON: {e}"))?;
+        ensure!(
+            r.get("kind").and_then(Json::as_str) == Some("run"),
+            "{path}: line 2 must be the run record"
+        );
+        let mut kept = format!("{header}\n{run}\n");
+        for line in lines {
+            let j = json::parse(line).map_err(|e| err!("{path}: invalid epoch JSON: {e}"))?;
+            match j.get("epoch").and_then(Json::as_usize) {
+                Some(e) if e < epochs_completed => {
+                    kept.push_str(line);
+                    kept.push('\n');
+                }
+                _ => break,
+            }
+        }
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, &kept).with_context(|| format!("rewriting audit {tmp}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("moving audit {tmp} into place"))?;
+        let out = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("reopening audit file {path}"))?;
+        Ok(Self {
+            inner: Mutex::new(AuditInner {
+                out: Box::new(out),
+                failed: false,
+            }),
+            timing,
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, AuditInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Is the wall-clock field being written (vs zeroed)?
+    pub fn timing(&self) -> bool {
+        self.timing
+    }
+
+    /// Write the run record (line 2): the config-level DP inputs plus
+    /// `prior`, the accountant history already composed before the
+    /// first audited epoch (empty unless auditing a resumed session).
+    pub fn begin_run(&self, cfg: &TrainConfig, train_len: usize, prior: &[StepRecord]) {
+        let line = json::obj(vec![
+            ("batch_size", json::num(cfg.batch_size as f64)),
+            ("beta", hex_f64(cfg.beta)),
+            ("clip_norm", hex_f64(cfg.clip_norm)),
+            ("delta", hex_f64(cfg.delta)),
+            ("epochs", json::num(cfg.epochs as f64)),
+            ("kind", json::s("run")),
+            ("noise_multiplier", hex_f64(cfg.noise_multiplier)),
+            ("policy", json::s(&cfg.policy)),
+            ("prior", Json::Arr(prior.iter().map(step_record_json).collect())),
+            (
+                "sample_rate",
+                hex_f64(cfg.batch_size as f64 / train_len.max(1) as f64),
+            ),
+            ("scheduler", json::s(&cfg.scheduler)),
+            ("seed", hex_u64(cfg.seed)),
+            ("train_len", json::num(train_len as f64)),
+        ])
+        .to_string();
+        self.lock().write_line(&line);
+    }
+
+    /// Write one epoch record.
+    pub fn epoch(&self, a: &AuditEpoch) {
+        let analysis_seconds = if self.timing { a.analysis_seconds } else { 0.0 };
+        let line = json::obj(vec![
+            (
+                "accounting",
+                Json::Arr(a.accounting.iter().map(step_record_json).collect()),
+            ),
+            ("alpha", hex_f64(a.alpha)),
+            ("analysis_seconds", json::num(analysis_seconds)),
+            ("clip_norm", hex_f64(a.clip_norm)),
+            ("clip_scale", hex_f64(a.clip_scale)),
+            (
+                "draw_probs",
+                Json::Arr(a.draw_probs.iter().map(|&p| hex_f64(p)).collect()),
+            ),
+            ("epoch", json::num(a.epoch as f64)),
+            ("epsilon", hex_f64(a.epsilon)),
+            ("kind", json::s("epoch")),
+            (
+                "lr_scales",
+                match &a.lr_scales {
+                    Some(s) => Json::Arr(s.iter().map(|&x| hex_f64(x)).collect()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "mask",
+                Json::Arr(a.mask.iter().map(|&l| json::num(l as f64)).collect()),
+            ),
+            ("noise_multiplier", hex_f64(a.noise_multiplier)),
+            ("sample_rate", hex_f64(a.sample_rate)),
+            ("steps", json::num(a.steps as f64)),
+            ("truncated", Json::Bool(a.truncated)),
+        ])
+        .to_string();
+        self.lock().write_line(&line);
+    }
+
+    /// Flush; errors out if any line was dropped by a write failure.
+    pub fn finish(&self) -> Result<()> {
+        let mut inner = self.lock();
+        ensure!(
+            !inner.failed,
+            "audit output was truncated by an earlier write failure"
+        );
+        inner.out.flush().context("flushing audit file")?;
+        Ok(())
+    }
+}
+
+/// An [`EventSink`] that forwards each
+/// [`EpochAudited`](TrainEvent::EpochAudited) event to a shared
+/// [`AuditWriter`]. Enabled by `dpquant train --audit-out PATH` and by
+/// the serving daemon under `--state-dir`.
+pub struct AuditSink<'w> {
+    writer: &'w AuditWriter,
+}
+
+impl<'w> AuditSink<'w> {
+    /// Forward epoch-audit events to `writer`.
+    pub fn new(writer: &'w AuditWriter) -> Self {
+        Self { writer }
+    }
+}
+
+impl EventSink for AuditSink<'_> {
+    fn on_event(&mut self, event: &TrainEvent<'_>) {
+        if let TrainEvent::EpochAudited { audit } = event {
+            self.writer.epoch(audit);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serialization helpers (the checkpoint hex-float idiom)
+// ---------------------------------------------------------------------
+
+fn hex_u64(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn hex_f64(x: f64) -> Json {
+    hex_u64(x.to_bits())
+}
+
+fn step_record_json(r: &StepRecord) -> Json {
+    json::obj(vec![
+        (
+            "mechanism",
+            json::s(match r.mechanism {
+                Mechanism::Training => "training",
+                Mechanism::Analysis => "analysis",
+            }),
+        ),
+        ("noise_multiplier", hex_f64(r.noise_multiplier)),
+        ("sample_rate", hex_f64(r.sample_rate)),
+        ("steps", hex_u64(r.steps)),
+    ])
+}
+
+fn field_of<'a>(j: &'a Json, line_no: usize, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| err!("audit line {line_no}: missing field '{key}'"))
+}
+
+fn hex_u64_of(j: &Json, line_no: usize, what: &str) -> Result<u64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| err!("audit line {line_no}: '{what}' must be a 16-digit hex string"))?;
+    ensure!(
+        s.len() == 16,
+        "audit line {line_no}: '{what}' must be 16 hex digits, got {} ('{s}')",
+        s.len()
+    );
+    u64::from_str_radix(s, 16)
+        .map_err(|e| err!("audit line {line_no}: '{what}': bad hex '{s}': {e}"))
+}
+
+fn hex_f64_of(j: &Json, line_no: usize, what: &str) -> Result<f64> {
+    Ok(f64::from_bits(hex_u64_of(j, line_no, what)?))
+}
+
+fn usize_of(j: &Json, line_no: usize, what: &str) -> Result<usize> {
+    j.as_usize()
+        .ok_or_else(|| err!("audit line {line_no}: '{what}' must be a non-negative integer"))
+}
+
+fn step_record_of(j: &Json, line_no: usize) -> Result<StepRecord> {
+    let mechanism = match field_of(j, line_no, "mechanism")?.as_str() {
+        Some("training") => Mechanism::Training,
+        Some("analysis") => Mechanism::Analysis,
+        other => bail!("audit line {line_no}: unknown accounting mechanism {other:?}"),
+    };
+    let sample_rate = hex_f64_of(field_of(j, line_no, "sample_rate")?, line_no, "sample_rate")?;
+    let noise_multiplier = hex_f64_of(
+        field_of(j, line_no, "noise_multiplier")?,
+        line_no,
+        "noise_multiplier",
+    )?;
+    let steps = hex_u64_of(field_of(j, line_no, "steps")?, line_no, "steps")?;
+    ensure!(
+        sample_rate.is_finite() && (0.0..=1.0).contains(&sample_rate),
+        "audit line {line_no}: sample_rate {sample_rate} is not a probability"
+    );
+    ensure!(
+        noise_multiplier.is_finite() && noise_multiplier >= 0.0,
+        "audit line {line_no}: noise_multiplier {noise_multiplier} must be finite and >= 0"
+    );
+    ensure!(steps >= 1, "audit line {line_no}: accounting steps must be >= 1");
+    Ok(StepRecord {
+        mechanism,
+        sample_rate,
+        noise_multiplier,
+        steps,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Reading back: `dpquant audit check` / `audit replay`
+// ---------------------------------------------------------------------
+
+/// The parsed run record (line 2).
+pub struct AuditRun {
+    /// The (ε, δ) conversion target every recorded ε used.
+    pub delta: f64,
+    /// Configured epoch target.
+    pub epochs: usize,
+    /// Scheduler name (`dpquant`, `static_random`, ...).
+    pub scheduler: String,
+    /// Adaptive-DP policy name.
+    pub policy: String,
+    /// Accountant history composed before the first audited epoch.
+    pub prior: Vec<StepRecord>,
+}
+
+struct EpochLine {
+    line_no: usize,
+    epoch: usize,
+    accounting: Vec<StepRecord>,
+    epsilon: f64,
+    alpha: f64,
+    truncated: bool,
+}
+
+fn read_audit(path: &str) -> Result<(AuditRun, Vec<EpochLine>)> {
+    let file = File::open(path).with_context(|| format!("opening audit file {path}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let header = match lines.next() {
+        Some(l) => l.with_context(|| format!("reading {path}"))?,
+        None => bail!("{path}: empty file (missing {AUDIT_FORMAT} header)"),
+    };
+    let h = json::parse(&header).map_err(|e| err!("audit line 1: invalid header JSON: {e}"))?;
+    ensure!(
+        h.get("format").and_then(Json::as_str) == Some(AUDIT_FORMAT),
+        "audit line 1: header format is not {AUDIT_FORMAT:?}"
+    );
+    ensure!(
+        h.get("version").and_then(Json::as_f64) == Some(AUDIT_VERSION as f64),
+        "audit line 1: unsupported audit version (want {AUDIT_VERSION})"
+    );
+
+    let run_line = match lines.next() {
+        Some(l) => l.with_context(|| format!("reading {path}"))?,
+        None => bail!("audit line 2: missing run record"),
+    };
+    let r = json::parse(&run_line).map_err(|e| err!("audit line 2: invalid JSON: {e}"))?;
+    ensure!(
+        r.get("kind").and_then(Json::as_str) == Some("run"),
+        "audit line 2: expected the run record (kind \"run\")"
+    );
+    let delta = hex_f64_of(field_of(&r, 2, "delta")?, 2, "delta")?;
+    ensure!(
+        delta > 0.0 && delta < 1.0,
+        "audit line 2: delta {delta} must lie strictly inside (0, 1)"
+    );
+    let prior = field_of(&r, 2, "prior")?
+        .as_arr()
+        .ok_or_else(|| err!("audit line 2: 'prior' must be an array"))?
+        .iter()
+        .map(|j| step_record_of(j, 2))
+        .collect::<Result<Vec<_>>>()?;
+    let run = AuditRun {
+        delta,
+        epochs: usize_of(field_of(&r, 2, "epochs")?, 2, "epochs")?,
+        scheduler: field_of(&r, 2, "scheduler")?
+            .as_str()
+            .ok_or_else(|| err!("audit line 2: 'scheduler' must be a string"))?
+            .to_string(),
+        policy: field_of(&r, 2, "policy")?
+            .as_str()
+            .ok_or_else(|| err!("audit line 2: 'policy' must be a string"))?
+            .to_string(),
+        prior,
+    };
+
+    let mut epochs: Vec<EpochLine> = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let line_no = i + 3;
+        let line = line.with_context(|| format!("reading {path}"))?;
+        let j = json::parse(&line).map_err(|e| err!("audit line {line_no}: invalid JSON: {e}"))?;
+        ensure!(
+            j.get("kind").and_then(Json::as_str) == Some("epoch"),
+            "audit line {line_no}: expected an epoch record (kind \"epoch\")"
+        );
+        let epoch = usize_of(field_of(&j, line_no, "epoch")?, line_no, "epoch")?;
+        if let Some(prev) = epochs.last() {
+            ensure!(
+                !prev.truncated,
+                "audit line {line_no}: records continue after the truncated epoch {}",
+                prev.epoch
+            );
+            ensure!(
+                epoch == prev.epoch + 1,
+                "audit line {line_no}: epoch {epoch} does not follow epoch {}",
+                prev.epoch
+            );
+        }
+        let accounting = field_of(&j, line_no, "accounting")?
+            .as_arr()
+            .ok_or_else(|| err!("audit line {line_no}: 'accounting' must be an array"))?
+            .iter()
+            .map(|rec| step_record_of(rec, line_no))
+            .collect::<Result<Vec<_>>>()?;
+        let steps = usize_of(field_of(&j, line_no, "steps")?, line_no, "steps")? as u64;
+        let accounted: u64 = accounting
+            .iter()
+            .filter(|rec| rec.mechanism == Mechanism::Training)
+            .map(|rec| rec.steps)
+            .sum();
+        ensure!(
+            steps == accounted,
+            "audit line {line_no}: 'steps' says {steps} training steps but the accounting \
+             delta sums to {accounted}"
+        );
+        // Knob fields must be well-formed hex floats even though the
+        // replay composes only from `accounting`.
+        for key in ["noise_multiplier", "sample_rate", "clip_norm", "clip_scale"] {
+            let v = hex_f64_of(field_of(&j, line_no, key)?, line_no, key)?;
+            ensure!(
+                v.is_finite(),
+                "audit line {line_no}: '{key}' must be finite, got {v}"
+            );
+        }
+        let mask = field_of(&j, line_no, "mask")?
+            .as_arr()
+            .ok_or_else(|| err!("audit line {line_no}: 'mask' must be an array"))?
+            .iter()
+            .map(|l| usize_of(l, line_no, "mask"))
+            .collect::<Result<Vec<_>>>()?;
+        let draw_probs = field_of(&j, line_no, "draw_probs")?
+            .as_arr()
+            .ok_or_else(|| err!("audit line {line_no}: 'draw_probs' must be an array"))?
+            .iter()
+            .map(|p| hex_f64_of(p, line_no, "draw_probs"))
+            .collect::<Result<Vec<_>>>()?;
+        for &p in &draw_probs {
+            ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "audit line {line_no}: draw probability {p} is not in [0, 1]"
+            );
+        }
+        if !draw_probs.is_empty() {
+            for &l in &mask {
+                ensure!(
+                    l < draw_probs.len(),
+                    "audit line {line_no}: mask layer {l} is outside the {}-layer \
+                     draw-probability vector",
+                    draw_probs.len()
+                );
+            }
+        }
+        match field_of(&j, line_no, "lr_scales")? {
+            Json::Null => {}
+            Json::Arr(scales) => {
+                for s in scales {
+                    let v = hex_f64_of(s, line_no, "lr_scales")?;
+                    ensure!(
+                        v.is_finite() && v > 0.0,
+                        "audit line {line_no}: lr scale {v} must be finite and > 0"
+                    );
+                }
+            }
+            _ => bail!("audit line {line_no}: 'lr_scales' must be null or an array"),
+        }
+        let analysis_seconds = field_of(&j, line_no, "analysis_seconds")?
+            .as_f64()
+            .ok_or_else(|| err!("audit line {line_no}: 'analysis_seconds' must be a number"))?;
+        ensure!(
+            analysis_seconds >= 0.0,
+            "audit line {line_no}: 'analysis_seconds' must be >= 0"
+        );
+        epochs.push(EpochLine {
+            line_no,
+            epoch,
+            accounting,
+            epsilon: hex_f64_of(field_of(&j, line_no, "epsilon")?, line_no, "epsilon")?,
+            alpha: hex_f64_of(field_of(&j, line_no, "alpha")?, line_no, "alpha")?,
+            truncated: field_of(&j, line_no, "truncated")?
+                .as_bool()
+                .ok_or_else(|| err!("audit line {line_no}: 'truncated' must be a bool"))?,
+        });
+    }
+    Ok((run, epochs))
+}
+
+/// What [`check`] counted in a valid audit file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AuditStats {
+    /// Epoch records.
+    pub epochs: u64,
+    /// Accounting (SGM-block) records across all epochs.
+    pub records: u64,
+    /// Analysis-mechanism steps across all epochs (the probe events).
+    pub analysis_steps: u64,
+    /// Did the run end by privacy-budget truncation?
+    pub truncated: bool,
+}
+
+/// Validate every line of `path` against the `dpquant-audit` v1 schema:
+/// header first, then the run record, then sequential epoch records
+/// with well-typed hex floats, probability-shaped draw vectors, masks
+/// inside the layer range, and accounting deltas whose training steps
+/// sum to the declared per-epoch step count. Errors carry the 1-based
+/// line number.
+pub fn check(path: &str) -> Result<AuditStats> {
+    let (_run, epochs) = read_audit(path)?;
+    let mut stats = AuditStats::default();
+    for e in &epochs {
+        stats.epochs += 1;
+        stats.records += e.accounting.len() as u64;
+        stats.analysis_steps += e
+            .accounting
+            .iter()
+            .filter(|r| r.mechanism == Mechanism::Analysis)
+            .map(|r| r.steps)
+            .sum::<u64>();
+        stats.truncated = e.truncated;
+    }
+    Ok(stats)
+}
+
+/// The result of a successful [`replay`].
+#[derive(Clone, Copy, Debug)]
+pub struct AuditReplay {
+    /// Epoch records re-composed.
+    pub epochs: u64,
+    /// Composed ε after the last epoch (bitwise equal to the record).
+    pub final_epsilon: f64,
+    /// The α* minimizing the conversion at the last epoch.
+    pub final_alpha: f64,
+}
+
+/// Re-drive every recorded (q, σ, steps) block through a fresh
+/// [`RdpAccountant`] — seeded with the run record's `prior` history —
+/// and fail unless the replayed (ε, α*) after **every** epoch is
+/// bitwise equal to the recorded timeline. This turns the DP guarantee
+/// into a checkable artifact: the accountant that admitted the run can
+/// be re-instantiated from the file alone.
+pub fn replay(path: &str) -> Result<AuditReplay> {
+    let (run, epochs) = read_audit(path)?;
+    ensure!(!epochs.is_empty(), "{path}: no epoch records to replay");
+    let mut acc = RdpAccountant::from_records(&run.prior);
+    let (mut eps, mut alpha) = (0.0, 0.0);
+    for e in &epochs {
+        for rec in &e.accounting {
+            acc.record(rec.mechanism, rec.sample_rate, rec.noise_multiplier, rec.steps);
+        }
+        let (got_eps, got_alpha) = acc.epsilon(run.delta);
+        ensure!(
+            got_eps.to_bits() == e.epsilon.to_bits(),
+            "audit line {}: epoch {}: replayed epsilon {} (bits {:016x}) != recorded {} \
+             (bits {:016x})",
+            e.line_no,
+            e.epoch,
+            got_eps,
+            got_eps.to_bits(),
+            e.epsilon,
+            e.epsilon.to_bits()
+        );
+        ensure!(
+            got_alpha.to_bits() == e.alpha.to_bits(),
+            "audit line {}: epoch {}: replayed alpha {got_alpha} != recorded {}",
+            e.line_no,
+            e.epoch,
+            e.alpha
+        );
+        eps = got_eps;
+        alpha = got_alpha;
+    }
+    Ok(AuditReplay {
+        epochs: epochs.len() as u64,
+        final_epsilon: eps,
+        final_alpha: alpha,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("dpquant_audit_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            epochs: 2,
+            batch_size: 16,
+            dataset_size: 256,
+            noise_multiplier: 0.6,
+            ..TrainConfig::default()
+        }
+    }
+
+    /// An epoch record whose (ε, α) really is the composition of its
+    /// accounting delta on top of `acc` — the shape the session emits.
+    fn live_epoch(acc: &mut RdpAccountant, epoch: usize, q: f64, sigma: f64, steps: u64)
+        -> AuditEpoch {
+        let delta = vec![StepRecord {
+            mechanism: Mechanism::Training,
+            sample_rate: q,
+            noise_multiplier: sigma,
+            steps,
+        }];
+        for r in &delta {
+            acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+        }
+        let (epsilon, alpha) = acc.epsilon(1e-5);
+        AuditEpoch {
+            epoch,
+            noise_multiplier: sigma,
+            sample_rate: q,
+            clip_norm: 1.0,
+            clip_scale: 1.0,
+            lr_scales: None,
+            mask: vec![0, 2],
+            draw_probs: vec![0.25, 0.25, 0.5],
+            accounting: delta,
+            steps,
+            epsilon,
+            alpha,
+            analysis_seconds: 1.5,
+            truncated: false,
+        }
+    }
+
+    fn write_sample(path: &str, timing: bool) {
+        let w = AuditWriter::create(path, timing).unwrap();
+        let mut c = cfg();
+        c.delta = 1e-5;
+        w.begin_run(&c, 256, &[]);
+        let mut acc = RdpAccountant::new();
+        w.epoch(&live_epoch(&mut acc, 0, 0.0625, 0.6, 16));
+        w.epoch(&live_epoch(&mut acc, 1, 0.0625, 0.8, 16));
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn check_counts_and_replay_agrees_bitwise() {
+        let path = tmp("roundtrip");
+        write_sample(&path, true);
+        let stats = check(&path).unwrap();
+        assert_eq!(stats.epochs, 2);
+        assert_eq!(stats.records, 2);
+        assert_eq!(stats.analysis_steps, 0);
+        assert!(!stats.truncated);
+        let r = replay(&path).unwrap();
+        assert_eq!(r.epochs, 2);
+        let mut acc = RdpAccountant::new();
+        acc.step_training(0.0625, 0.6, 16);
+        acc.step_training(0.0625, 0.8, 16);
+        assert_eq!(r.final_epsilon.to_bits(), acc.epsilon(1e-5).0.to_bits());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn no_timing_files_are_byte_deterministic() {
+        let (a, b) = (tmp("det_a"), tmp("det_b"));
+        write_sample(&a, false);
+        write_sample(&b, false);
+        let (ta, tb) = (
+            std::fs::read_to_string(&a).unwrap(),
+            std::fs::read_to_string(&b).unwrap(),
+        );
+        assert_eq!(ta, tb);
+        assert!(ta.contains("\"analysis_seconds\":0,"), "{ta}");
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn replay_rejects_a_doctored_epsilon_with_its_line_number() {
+        let path = tmp("doctored");
+        write_sample(&path, false);
+        // Flip the last epoch's recorded epsilon by one bit.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(String::from).collect();
+        let last = lines.last().unwrap().clone();
+        let j = json::parse(&last).unwrap();
+        let eps_hex = j.get("epsilon").unwrap().as_str().unwrap().to_string();
+        let bits = u64::from_str_radix(&eps_hex, 16).unwrap() ^ 1;
+        *lines.last_mut().unwrap() = last.replace(&eps_hex, &format!("{bits:016x}"));
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+
+        let err = replay(&path).unwrap_err().to_string();
+        assert!(err.contains("audit line 4"), "{err}");
+        assert!(err.contains("replayed epsilon"), "{err}");
+        // check() is structural only — the doctored file still passes it.
+        assert!(check(&path).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_line_numbers() {
+        let path = tmp("malformed");
+        std::fs::write(&path, "{\"format\":\"other\"}\n").unwrap();
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+
+        let header = format!("{{\"format\":\"{AUDIT_FORMAT}\",\"version\":{AUDIT_VERSION}}}");
+        std::fs::write(&path, format!("{header}\n{{\"kind\":\"epoch\"}}\n")).unwrap();
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("run"), "{err}");
+
+        write_sample(&path, false);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not json\n");
+        std::fs::write(&path, &text).unwrap();
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("audit line 5"), "{err}");
+
+        // An inconsistent steps-vs-accounting claim is caught, with line.
+        write_sample(&path, false);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doctored = text.replace("\"steps\":16,", "\"steps\":15,");
+        assert_ne!(doctored, text);
+        std::fs::write(&path, &doctored).unwrap();
+        let err = check(&path).unwrap_err().to_string();
+        assert!(err.contains("audit line 3"), "{err}");
+        assert!(err.contains("sums to"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_drops_the_torn_tail_and_appends_identically() {
+        let (full, resumed) = (tmp("resume_full"), tmp("resume_part"));
+        write_sample(&full, false);
+
+        // Simulate a crash after epoch 0's record plus a torn epoch-1
+        // line: resume(epochs_completed = 1) must drop the tail, then
+        // re-appending epoch 1 reproduces the uninterrupted bytes.
+        let text = std::fs::read_to_string(&full).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        std::fs::write(&resumed, format!("{}\n{}\n{}\n{}\n", lines[0], lines[1], lines[2], lines[3]))
+            .unwrap();
+        let w = AuditWriter::resume(&resumed, 1, false).unwrap();
+        let mut acc = RdpAccountant::new();
+        let _ = live_epoch(&mut acc, 0, 0.0625, 0.6, 16);
+        w.epoch(&live_epoch(&mut acc, 1, 0.0625, 0.8, 16));
+        w.finish().unwrap();
+        assert_eq!(std::fs::read_to_string(&resumed).unwrap(), text);
+        assert!(replay(&resumed).is_ok());
+        std::fs::remove_file(&full).ok();
+        std::fs::remove_file(&resumed).ok();
+    }
+
+    #[test]
+    fn replay_seeds_from_the_prior_history() {
+        let path = tmp("prior");
+        let prior = vec![StepRecord {
+            mechanism: Mechanism::Training,
+            sample_rate: 0.0625,
+            noise_multiplier: 0.6,
+            steps: 32,
+        }];
+        let w = AuditWriter::create(&path, false).unwrap();
+        let mut c = cfg();
+        c.delta = 1e-5;
+        w.begin_run(&c, 256, &prior);
+        let mut acc = RdpAccountant::from_records(&prior);
+        w.epoch(&live_epoch(&mut acc, 2, 0.0625, 0.6, 16));
+        w.finish().unwrap();
+        let r = replay(&path).unwrap();
+        // ε must reflect prior + delta, not the delta alone.
+        let mut direct = RdpAccountant::new();
+        direct.step_training(0.0625, 0.6, 48);
+        assert_eq!(r.final_epsilon.to_bits(), direct.epsilon(1e-5).0.to_bits());
+        std::fs::remove_file(&path).ok();
+    }
+}

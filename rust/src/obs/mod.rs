@@ -23,10 +23,12 @@
 //! are zeroed in `--no-timing` mode. Tier-1 `tests/obs.rs` and CI
 //! `trace-smoke` pin both properties.
 
+pub mod audit;
 pub mod registry;
 pub mod sink;
 pub mod trace;
 
+pub use audit::{AuditReplay, AuditSink, AuditStats, AuditWriter};
 pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, Timer};
 pub use sink::JsonlSink;
 pub use trace::{Span, TraceStats, TraceSummaryRow, TraceWriter};
@@ -45,6 +47,11 @@ pub const TRACE_VERSION: u64 = 1;
 pub const METRICS_FORMAT: &str = "dpquant-metrics";
 /// Metrics schema version.
 pub const METRICS_VERSION: u64 = 1;
+/// DP audit trail format tag (`--audit-out` files, daemon job audit
+/// logs, `GET /v1/jobs/{id}/audit`).
+pub const AUDIT_FORMAT: &str = "dpquant-audit";
+/// Audit schema version.
+pub const AUDIT_VERSION: u64 = 1;
 
 static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
 

@@ -88,6 +88,10 @@ impl EventSink for JsonlSink<'_> {
                 ("val_accuracy", json::num(record.val_accuracy)),
                 ("val_loss", json::num(record.val_loss)),
             ]),
+            // Audit records have their own stream (`dpquant-audit`, via
+            // AuditSink); serializing them here would duplicate the data
+            // and change the pinned `dpquant-trace` v1 event shapes.
+            TrainEvent::EpochAudited { .. } => return,
         };
         self.writer.event(event.kind(), "session", fields);
     }

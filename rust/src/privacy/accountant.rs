@@ -66,6 +66,24 @@ impl RdpAccountant {
         }
     }
 
+    /// An accountant pre-loaded with `records`, replayed through
+    /// [`RdpAccountant::record`] in order — so skip-zero and coalescing
+    /// semantics (and therefore the float-sum order of every later
+    /// `epsilon()` call) match a live accountant that recorded the same
+    /// blocks. This is the one way to re-instantiate an accountant from
+    /// persisted history: checkpoint resume, ledger spend replay, and
+    /// `dpquant audit replay` all ride on it.
+    pub fn from_records<'a, I>(records: I) -> Self
+    where
+        I: IntoIterator<Item = &'a StepRecord>,
+    {
+        let mut acc = Self::new();
+        for r in records {
+            acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
+        }
+        acc
+    }
+
     /// Record `steps` SGM steps for `mechanism`.
     pub fn record(
         &mut self,
@@ -325,6 +343,22 @@ mod tests {
         // subadditive-ish) and ≥ each part.
         assert!(etot >= et.max(ea));
         assert!(etot <= et + ea + 1e-9);
+    }
+
+    #[test]
+    fn from_records_matches_a_live_accountant_bitwise() {
+        let mut live = RdpAccountant::new();
+        live.step_training(0.02, 0.8, 100);
+        live.step_analysis(0.004, 0.5);
+        live.step_training(0.02, 0.8, 50);
+        let rebuilt = RdpAccountant::from_records(live.history());
+        assert_eq!(rebuilt.history().len(), live.history().len());
+        let mut live = live;
+        let mut rebuilt = rebuilt;
+        let (el, al) = live.epsilon(1e-5);
+        let (er, ar) = rebuilt.epsilon(1e-5);
+        assert_eq!(el.to_bits(), er.to_bits());
+        assert_eq!(al.to_bits(), ar.to_bits());
     }
 
     #[test]

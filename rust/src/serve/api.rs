@@ -7,12 +7,18 @@
 //! | GET    | `/v1/jobs`              | —                   | 200 `{"jobs": [...]}` |
 //! | GET    | `/v1/jobs/{id}`         | —                   | 200 full status |
 //! | GET    | `/v1/jobs/{id}/events`  | —                   | 200 epoch-event ring |
+//! | GET    | `/v1/jobs/{id}/audit`   | —                   | 200 `dpquant-audit` JSONL (text) |
 //! | POST   | `/v1/jobs/{id}/cancel`  | —                   | 200 `{"id", "status"}` |
 //! | POST   | `/v1/tenants`           | `{"id", "budget_epsilon", "delta"?}` | 201 tenant status |
 //! | GET    | `/v1/tenants`           | —                   | 200 `{"tenants": [...]}` |
 //! | GET    | `/v1/tenants/{id}`      | —                   | 200 tenant status |
 //! | GET    | `/v1/healthz`           | —                   | 200 counts + formats |
 //! | GET    | `/v1/metrics`           | —                   | 200 live metrics snapshot |
+//!
+//! `GET /v1/metrics?format=prometheus` returns the registry's text
+//! exposition (`text/plain; version=0.0.4`) instead of JSON; the audit
+//! endpoint returns the job's raw `dpquant-audit` v1 stream
+//! (`application/jsonl`) exactly as persisted under `--state-dir`.
 //!
 //! Every response body is JSON; every error is `{"error": "..."}` with
 //! a 4xx status (404 unknown path/job/tenant, 405 wrong method, 400 bad
@@ -83,7 +89,7 @@ impl Api {
                 _ => method_not_allowed(method, "GET /v1/healthz"),
             },
             ["v1", "metrics"] => match method {
-                "GET" => self.metrics(),
+                "GET" => self.metrics(req),
                 _ => method_not_allowed(method, "GET /v1/metrics"),
             },
             ["v1", "jobs"] => match method {
@@ -101,6 +107,25 @@ impl Api {
                         None => no_such_job(id),
                     },
                     _ => method_not_allowed(method, "GET /v1/jobs/{id}"),
+                }
+            }
+            ["v1", "jobs", id, "audit"] => {
+                let Some(id) = parse_id(id) else {
+                    return bad_id(id);
+                };
+                match method {
+                    "GET" => match self.manager.audit_text(id) {
+                        None => no_such_job(id),
+                        Some(None) => Response::error(
+                            404,
+                            format!(
+                                "job {id} has no audit log (daemon running without \
+                                 --state-dir, or the job predates audit logging)"
+                            ),
+                        ),
+                        Some(Some(text)) => Response::text("application/jsonl", text),
+                    },
+                    _ => method_not_allowed(method, "GET /v1/jobs/{id}/audit"),
                 }
             }
             ["v1", "jobs", id, "events"] => {
@@ -193,13 +218,13 @@ impl Api {
             }
         };
         match self.manager.submit(cfg, tenant) {
-            Ok(id) => Response {
-                status: 201,
-                body: json::obj(vec![
+            Ok(id) => Response::json(
+                201,
+                json::obj(vec![
                     ("id", json::num(id as f64)),
                     ("status", json::s("queued")),
                 ]),
-            },
+            ),
             Err(SubmitError::Invalid(e)) => Response::error(400, format!("rejected: {e:#}")),
             Err(SubmitError::UnknownTenant(t)) => {
                 Response::error(404, format!("no such tenant '{t}'"))
@@ -211,15 +236,15 @@ impl Api {
                 tenant,
                 remaining_epsilon,
                 estimated_epsilon,
-            }) => Response {
-                status: 403,
-                body: json::obj(vec![
+            }) => Response::json(
+                403,
+                json::obj(vec![
                     ("error", json::s("budget_exhausted")),
                     ("tenant", json::s(&tenant)),
                     ("remaining_epsilon", json::num(remaining_epsilon)),
                     ("estimated_epsilon", json::num(estimated_epsilon)),
                 ]),
-            },
+            ),
         }
     }
 
@@ -247,10 +272,7 @@ impl Api {
             },
         };
         match self.manager.ledger().create_tenant(id, budget, delta) {
-            Ok(doc) => Response {
-                status: 201,
-                body: doc.to_json(),
-            },
+            Ok(doc) => Response::json(201, doc.to_json()),
             Err(e @ CreateError::Invalid(_)) => Response::error(400, e.to_string()),
             Err(e @ CreateError::Exists(_)) => Response::error(409, e.to_string()),
         }
@@ -284,6 +306,7 @@ impl Api {
                     format_entry(BENCH_FORMAT, u64::from(BENCH_VERSION)),
                     format_entry(obs::TRACE_FORMAT, obs::TRACE_VERSION),
                     format_entry(obs::METRICS_FORMAT, obs::METRICS_VERSION),
+                    format_entry(obs::AUDIT_FORMAT, obs::AUDIT_VERSION),
                     format_entry(LEDGER_FORMAT, LEDGER_VERSION),
                 ]),
             ),
@@ -294,8 +317,25 @@ impl Api {
     /// with daemon-level job fields — per-status counts, throughput
     /// since start, live queue depth, and per-job ε spend — on top of
     /// the global registry snapshot (pool utilization, HTTP latency,
-    /// kernel timings).
-    fn metrics(&self) -> Response {
+    /// kernel timings). `?format=prometheus` swaps the JSON document
+    /// for the registry's Prometheus text exposition (scrape target);
+    /// the daemon-level job fields live only in the JSON form.
+    fn metrics(&self, req: &Request) -> Response {
+        match query_param(req, "format") {
+            None | Some("json") => {}
+            Some("prometheus") => {
+                return Response::text(
+                    "text/plain; version=0.0.4",
+                    obs::global().to_prometheus(),
+                )
+            }
+            Some(other) => {
+                return Response::error(
+                    400,
+                    format!("unknown metrics format '{other}' (want json or prometheus)"),
+                )
+            }
+        }
         let c = self.manager.counts();
         let uptime = self.start.elapsed().as_secs_f64();
         let jobs_per_sec = if uptime > 0.0 { c.done as f64 / uptime } else { 0.0 };
@@ -338,6 +378,15 @@ fn format_entry(name: &str, version: u64) -> Json {
 
 fn parse_id(s: &str) -> Option<u64> {
     s.parse().ok()
+}
+
+/// First value of `name` in the raw query string (`a=b&c=d`). No
+/// percent-decoding — the API's parameter values are plain tokens.
+fn query_param<'a>(req: &'a Request, name: &str) -> Option<&'a str> {
+    req.query.as_deref()?.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        (k == name).then_some(v)
+    })
 }
 
 fn bad_id<M: Display>(id: M) -> Response {
@@ -426,6 +475,7 @@ mod tests {
         assert!(names.contains(&"dpquant-bench"), "{names:?}");
         assert!(names.contains(&"dpquant-trace"), "{names:?}");
         assert!(names.contains(&"dpquant-metrics"), "{names:?}");
+        assert!(names.contains(&"dpquant-audit"), "{names:?}");
         assert!(names.contains(&"dpquant-serve-ledger"), "{names:?}");
         let uptime = resp.body.get("uptime_seconds").unwrap().as_f64().unwrap();
         assert!(uptime >= 0.0, "{uptime}");
@@ -452,6 +502,37 @@ mod tests {
         assert!(m.get("gauges").is_some());
         assert!(m.get("histograms").is_some());
         assert_eq!(api.handle(&req("POST", "/v1/metrics", "")).status, 405);
+    }
+
+    #[test]
+    fn metrics_format_prometheus_serves_the_text_exposition() {
+        let api = api();
+        let mut r = req("GET", "/v1/metrics", "");
+        r.query = Some("format=prometheus".into());
+        let resp = api.handle(&r);
+        assert_eq!(resp.status, 200);
+        let (ct, body) = resp.as_text().expect("prometheus reply must be text");
+        assert_eq!(ct, "text/plain; version=0.0.4");
+        assert!(body.contains("# TYPE"), "{body}");
+        // Explicit json and the default agree on shape.
+        let mut r = req("GET", "/v1/metrics", "");
+        r.query = Some("format=json".into());
+        let resp = api.handle(&r);
+        assert_eq!(resp.status, 200);
+        assert!(resp.as_text().is_none());
+        assert!(resp.body.get("metrics").is_some());
+        // Unknown formats are a 400, not a guess.
+        let mut r = req("GET", "/v1/metrics", "");
+        r.query = Some("format=xml".into());
+        assert_eq!(api.handle(&r).status, 400);
+    }
+
+    #[test]
+    fn audit_route_covers_the_error_space() {
+        let api = api();
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/42/audit", "")).status, 404);
+        assert_eq!(api.handle(&req("GET", "/v1/jobs/nan/audit", "")).status, 400);
+        assert_eq!(api.handle(&req("POST", "/v1/jobs/42/audit", "")).status, 405);
     }
 
     #[test]
@@ -487,6 +568,13 @@ mod tests {
         // Cancelling a finished job is a 409, not a crash.
         let c = api.handle(&req("POST", "/v1/jobs/1/cancel", ""));
         assert_eq!(c.status, 409);
+
+        // No --state-dir means a finished job has no audit log: a 404
+        // that says so, distinct from the unknown-job 404.
+        let a = api.handle(&req("GET", "/v1/jobs/1/audit", ""));
+        assert_eq!(a.status, 404);
+        let msg = a.body.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("no audit log"), "{msg}");
     }
 
     #[test]

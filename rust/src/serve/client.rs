@@ -1,7 +1,8 @@
 //! Client half of the serving story: a typed [`Client`] over
 //! [`http::http_call`](super::http::http_call) plus the `dpquant job`
-//! CLI verbs (`submit | list | status | events | cancel | wait`) and
-//! the `dpquant tenant` verbs (`create | list | status`), so CI and
+//! CLI verbs (`submit | list | status | events | audit | cancel |
+//! wait`) and the `dpquant tenant` verbs (`create | list | status`),
+//! so CI and
 //! operators drive the daemon with the same binary — no curl.
 //!
 //! `job status`/`job wait` rebuild the daemon's summary into the exact
@@ -12,7 +13,7 @@
 
 use std::time::{Duration, Instant};
 
-use super::http::http_call;
+use super::http::{http_call, http_call_raw};
 use super::jobs::config_to_json;
 use crate::cli::{self, Args};
 use crate::config::{ServeConfig, TrainConfig, CONFIG_ARG_KEYS};
@@ -103,6 +104,24 @@ impl Client {
         self.post(&format!("/v1/jobs/{id}/cancel"), None)
     }
 
+    /// `GET /v1/jobs/{id}/audit` — the job's raw `dpquant-audit` v1
+    /// JSONL stream, byte-for-byte as persisted under `--state-dir`
+    /// (pipe into `dpquant audit check/replay`).
+    pub fn audit(&self, id: u64) -> Result<String> {
+        let (status, body) =
+            http_call_raw(&self.addr, "GET", &format!("/v1/jobs/{id}/audit"), None)?;
+        let text = String::from_utf8(body)
+            .map_err(|_| err!("daemon sent a non-UTF-8 audit body"))?;
+        if (200..300).contains(&status) {
+            return Ok(text);
+        }
+        let msg = json::parse(&text)
+            .ok()
+            .and_then(|j| j.get("error").and_then(Json::as_str).map(str::to_string))
+            .unwrap_or(text);
+        Err(err!("daemon returned {status}: {msg}"))
+    }
+
     /// `GET /v1/healthz` — daemon liveness + format versions + job counts.
     pub fn healthz(&self) -> Result<Json> {
         self.get("/v1/healthz")
@@ -169,10 +188,10 @@ pub fn final_line_from_status(status: &Json) -> Option<String> {
 // CLI verbs
 // ---------------------------------------------------------------------
 
-const JOB_SUBCOMMANDS: &[&str] = &["submit", "list", "status", "events", "cancel", "wait"];
+const JOB_SUBCOMMANDS: &[&str] = &["submit", "list", "status", "events", "audit", "cancel", "wait"];
 
 const USAGE: &str = "\
-usage: dpquant job <submit|list|status|events|cancel|wait> [--addr HOST:PORT]
+usage: dpquant job <submit|list|status|events|audit|cancel|wait> [--addr HOST:PORT]
   submit [train flags / --config file] [--tenant ID]
                                          validate + enqueue a job, print its id
                                          (--tenant: charge the job to that
@@ -181,6 +200,8 @@ usage: dpquant job <submit|list|status|events|cancel|wait> [--addr HOST:PORT]
   list                                   all jobs, one row each
   status <id>                            full status (+ final metrics when done)
   events <id>                            the job's epoch-progress ring buffer
+  audit <id>                             the job's dpquant-audit JSONL stream
+                                         (verbatim; pipe into `dpquant audit`)
   cancel <id>                            cancel a queued/running job
   wait <id>... [--timeout-sec N] [--poll-ms N]   block until done, print final metrics";
 
@@ -247,6 +268,15 @@ pub fn run(args: &Args) -> Result<()> {
             let id = positional_id(args, "job events")?;
             let events = client.events(id)?;
             print_events(id, &events);
+            Ok(())
+        }
+        "audit" => {
+            args.require_known("job audit", &["addr"], &[])?;
+            let id = positional_id(args, "job audit")?;
+            // Verbatim bytes, no trailing println: the stream already
+            // ends in a newline and `dpquant job audit N > f.jsonl`
+            // must byte-match the daemon's on-disk file.
+            print!("{}", client.audit(id)?);
             Ok(())
         }
         "cancel" => {
@@ -394,6 +424,25 @@ fn print_tenant(doc: &Json) {
         fmt_num(doc, "open_reservations")
     );
     println!("  remaining ε = {}", f("remaining_epsilon"));
+    let timeline = doc.get("timeline").and_then(Json::as_arr).unwrap_or(&[]);
+    if !timeline.is_empty() {
+        println!("  timeline ({} events):", timeline.len());
+        for e in timeline {
+            let g = |key: &str| {
+                e.get(key)
+                    .and_then(Json::as_f64)
+                    .map(|v| v.to_string())
+                    .unwrap_or_else(|| "?".into())
+            };
+            println!(
+                "    {:<7} job {:<4} ε = {}  remaining ε = {}",
+                e.get("kind").and_then(Json::as_str).unwrap_or("?"),
+                fmt_num(e, "job"),
+                g("epsilon"),
+                g("remaining"),
+            );
+        }
+    }
 }
 
 /// Short fixed-precision ε for table cells (full precision lives in

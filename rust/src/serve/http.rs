@@ -19,7 +19,10 @@
 //!
 //! Bodies are JSON in both directions (`util/json`), which the parser
 //! hardening in that module makes safe against hostile payloads
-//! (bounded nesting, no overflow-to-inf, positioned errors).
+//! (bounded nesting, no overflow-to-inf, positioned errors) — except
+//! for the two explicit text responses ([`Response::text`]): the
+//! Prometheus metrics exposition and the raw `dpquant-audit` stream,
+//! which ship verbatim under their own content types.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -91,28 +94,57 @@ impl Request {
     }
 }
 
-/// An outgoing response: a status code plus a JSON body.
+/// An outgoing response: a status code plus a body — JSON by default,
+/// or raw text (with an explicit content type) for the two text
+/// endpoints (`/v1/metrics?format=prometheus` and the audit stream).
 #[derive(Debug)]
 pub struct Response {
     /// HTTP status code.
     pub status: u16,
-    /// JSON body (the API speaks nothing else).
+    /// JSON body (ignored when `text` is set).
     pub body: Json,
+    /// `(content_type, body)` for a raw text response. Built only by
+    /// [`Response::text`]; `None` means `body` is serialized as JSON.
+    text: Option<(String, String)>,
 }
 
 impl Response {
     /// A 200 response with the given body.
     pub fn ok(body: Json) -> Self {
-        Self { status: 200, body }
+        Self::json(200, body)
+    }
+
+    /// A response with an explicit status and a JSON body.
+    pub fn json(status: u16, body: Json) -> Self {
+        Self {
+            status,
+            body,
+            text: None,
+        }
+    }
+
+    /// A 200 response with a raw text body served under `content_type`
+    /// (bytes pass through verbatim — no JSON escaping).
+    pub fn text<C: fmt::Display>(content_type: C, text: String) -> Self {
+        Self {
+            status: 200,
+            body: Json::Null,
+            text: Some((content_type.to_string(), text)),
+        }
+    }
+
+    /// The `(content_type, body)` of a text response, `None` for JSON.
+    pub fn as_text(&self) -> Option<(&str, &str)> {
+        self.text.as_ref().map(|(c, t)| (c.as_str(), t.as_str()))
     }
 
     /// An error response with the daemon's uniform `{"error": ...}`
     /// body.
     pub fn error<M: fmt::Display>(status: u16, message: M) -> Self {
-        Self {
+        Self::json(
             status,
-            body: json::obj(vec![("error", json::s(&message.to_string()))]),
-        }
+            json::obj(vec![("error", json::s(&message.to_string()))]),
+        )
     }
 }
 
@@ -289,13 +321,21 @@ pub fn read_request<R: BufRead>(r: &mut R) -> std::result::Result<Option<Request
     }))
 }
 
-/// Serialize a response (status line, JSON headers, body) onto `w`.
+/// Serialize a response (status line, headers, body) onto `w`.
 pub fn write_response<W: Write>(w: &mut W, resp: &Response, close: bool) -> std::io::Result<()> {
-    let body = resp.body.to_string();
+    let json_body;
+    let (content_type, body): (&str, &str) = match &resp.text {
+        Some((ct, text)) => (ct, text),
+        None => {
+            json_body = resp.body.to_string();
+            ("application/json", &json_body)
+        }
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         resp.status,
         reason(resp.status),
+        content_type,
         body.len(),
         if close { "close" } else { "keep-alive" }
     );
@@ -461,6 +501,25 @@ fn handle_connection(stream: TcpStream, handler: &Handler) {
 /// `Connection: close` — one TCP connection per call keeps the client
 /// trivially correct, and the CLI's call rate is human-scale.
 pub fn http_call(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let (status, body) = http_call_raw(addr, method, path, body)?;
+    let text = std::str::from_utf8(&body).map_err(|_| err!("daemon body is not UTF-8"))?;
+    let parsed = if text.trim().is_empty() {
+        Json::Null
+    } else {
+        json::parse(text).map_err(|e| err!("daemon sent malformed JSON: {e}"))?
+    };
+    Ok((status, parsed))
+}
+
+/// [`http_call`] without the JSON parse: returns the raw body bytes.
+/// The `dpquant job audit` verb and the Prometheus scrape path use
+/// this — their bodies are text streams, not JSON documents.
+pub fn http_call_raw(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> Result<(u16, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr).with_context(|| {
         format!("connecting to the dpquant daemon at {addr} (is `dpquant serve` running?)")
     })?;
@@ -534,13 +593,7 @@ pub fn http_call(addr: &str, method: &str, path: &str, body: Option<&Json>) -> R
                 .context("reading response body")?;
         }
     }
-    let text = std::str::from_utf8(&body).map_err(|_| err!("daemon body is not UTF-8"))?;
-    let parsed = if text.trim().is_empty() {
-        Json::Null
-    } else {
-        json::parse(text).map_err(|e| err!("daemon sent malformed JSON: {e}"))?
-    };
-    Ok((status, parsed))
+    Ok((status, body))
 }
 
 fn ensure_http(version: &str, line: &str) -> Result<()> {
@@ -666,6 +719,23 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
         assert!(text.contains("Connection: close\r\n"), "{text}");
         assert!(text.ends_with("{\"error\":\"no such job\"}"), "{text}");
+    }
+
+    #[test]
+    fn text_responses_ship_verbatim_with_their_content_type() {
+        let body = "line one\nline two {\"not\": \"escaped\"}\n".to_string();
+        let resp = Response::text("application/jsonl", body.clone());
+        assert_eq!(resp.status, 200);
+        let mut out = Vec::new();
+        write_response(&mut out, &resp, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/jsonl\r\n"), "{text}");
+        assert!(
+            text.contains(&format!("Content-Length: {}\r\n", body.len())),
+            "{text}"
+        );
+        assert!(text.ends_with(&format!("\r\n\r\n{body}")), "{text}");
     }
 
     #[test]

@@ -38,7 +38,12 @@
 //! per-job ring buffer of epoch progress ([`EVENT_RING_CAP`] entries;
 //! older entries drop off, the `dropped` counter says how many). The
 //! ring is in-memory only — progress history does not survive a
-//! restart, results do.
+//! restart, results do. With a `--state-dir` each job additionally
+//! writes a durable `dpquant-audit` v1 trail (`job-<id>.audit.jsonl`,
+//! one flushed line per epoch, timing-off) recording the resolved DP
+//! knobs, sampled mask, and composed (ε, α*) — served by
+//! `GET /v1/jobs/{id}/audit` and replayable bit-exactly by
+//! `dpquant audit replay`, including across `kill -9` recovery.
 //!
 //! **Durability.** With a `--state-dir`, every state transition writes
 //! the job's *manifest* (`job-<id>.json`, atomic temp+rename) and every
@@ -65,7 +70,9 @@ use crate::backend;
 use crate::cli;
 use crate::config::{OptimizerKind, TrainConfig, KNOWN_TRAIN_KEYS};
 use crate::coordinator::session::validate_config;
-use crate::coordinator::{Checkpoint, EpochOutcome, EventSink, TrainEvent, TrainSession};
+use crate::coordinator::{
+    Checkpoint, EpochOutcome, EventSink, MultiSink, TrainEvent, TrainSession,
+};
 use crate::data;
 use crate::metrics::RunRecord;
 use crate::obs;
@@ -551,6 +558,15 @@ impl Shared {
         self.state_dir.as_ref().map(|d| format!("{d}/job-{id}.ck.json"))
     }
 
+    /// The job's `dpquant-audit` v1 log, next to its checkpoint.
+    /// (`recover` skips any `job-*` stem containing a dot, so audit
+    /// logs are never mistaken for manifests.)
+    fn audit_path(&self, id: u64) -> Option<String> {
+        self.state_dir
+            .as_ref()
+            .map(|d| format!("{d}/job-{id}.audit.jsonl"))
+    }
+
     /// Write the job's manifest atomically (temp + rename). Persistence
     /// failures are reported on stderr, never panicked on — an
     /// unwritable state dir degrades durability, not service.
@@ -829,6 +845,21 @@ impl JobManager {
             .map(|j| j.events.to_json())
     }
 
+    /// A job's on-disk `dpquant-audit` log for `GET /v1/jobs/{id}/audit`.
+    /// Outer `None`: no such job (404). Inner `None`: the job exists but
+    /// has no audit log — the daemon runs without `--state-dir`, or the
+    /// job hasn't started its first epoch yet.
+    pub fn audit_text(&self, id: u64) -> Option<Option<String>> {
+        if !self.shared.jobs.lock().unwrap().contains_key(&id) {
+            return None;
+        }
+        let text = self
+            .shared
+            .audit_path(id)
+            .and_then(|p| std::fs::read_to_string(p).ok());
+        Some(text)
+    }
+
     /// Per-status job counts (the healthz payload).
     pub fn counts(&self) -> JobCounts {
         let jobs = self.shared.jobs.lock().unwrap();
@@ -990,10 +1021,47 @@ fn train_job(
         }
     }
 
-    let mut sink = RingSink {
+    // DP audit trail, next to the checkpoint. Always timing-off: the
+    // log must be byte-identical across kill -9 recovery, so it never
+    // carries wall-clock payloads. Ordering is the durability story:
+    // each epoch's audit line is written+flushed inside `step_epoch`
+    // (before the checkpoint lands), so on recovery the checkpoint's
+    // epoch count is ≤ the audit line count and `resume` truncates the
+    // at-most-one in-flight line — the deterministically re-run epoch
+    // appends it back verbatim. Audit failures degrade observability,
+    // never the job.
+    let audit = match shared.audit_path(id) {
+        Some(p) => {
+            let resumed = session.epochs_completed() > 0 && std::path::Path::new(&p).exists();
+            let opened = if resumed {
+                obs::AuditWriter::resume(&p, session.epochs_completed(), false)
+            } else {
+                obs::AuditWriter::create(&p, false).map(|w| {
+                    w.begin_run(session.config(), train_ds.len(), session.accountant_history());
+                    w
+                })
+            };
+            match opened {
+                Ok(w) => Some(w),
+                Err(e) => {
+                    eprintln!("serve: job {id}: audit log {p} unavailable: {e:#}");
+                    None
+                }
+            }
+        }
+        None => None,
+    };
+
+    let mut ring = RingSink {
         shared: shared.as_ref(),
         id,
     };
+    let mut audit_sink = audit.as_ref().map(obs::AuditSink::new);
+    let mut sinks: Vec<&mut dyn EventSink> = vec![&mut ring];
+    if let Some(s) = audit_sink.as_mut() {
+        sinks.push(s);
+    }
+    let mut sink = MultiSink::new(sinks);
     loop {
         match session.step_epoch(exec.as_ref(), &train_ds, &val_ds, &mut sink)? {
             EpochOutcome::Finished => break,
@@ -1008,6 +1076,11 @@ fn train_job(
                     return Ok(JobEnd::Cancelled);
                 }
             }
+        }
+    }
+    if let Some(w) = &audit {
+        if let Err(e) = w.finish() {
+            eprintln!("serve: job {id}: audit log incomplete: {e:#}");
         }
     }
     let truncated = session.is_truncated();
@@ -1458,6 +1531,58 @@ mod tests {
         let j = m.job_json(id).unwrap();
         assert_eq!(j.get("tenant").unwrap().as_str(), Some("acme"));
         m.shutdown();
+    }
+
+    #[test]
+    fn served_job_audit_replays_bitwise_and_matches_the_ledger_debit() {
+        let dir = std::env::temp_dir().join(format!("dpquant-jobs-audit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let m = JobManager::new(1, Some(&dir_s)).unwrap();
+        let cfg = tiny_mock_cfg(4, 3);
+        m.ledger().create_tenant("acme", 50.0, cfg.delta).unwrap();
+        let id = m.submit(cfg, Some("acme")).unwrap();
+        assert_eq!(wait_terminal(&m, id), "done");
+
+        // The audit log is served, checks, and replays bitwise.
+        let text = m.audit_text(id).unwrap().expect("audit log written");
+        let path = format!("{dir_s}/job-{id}.audit.jsonl");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        let stats = obs::audit::check(&path).unwrap();
+        assert_eq!(stats.epochs, 3);
+        let replay = obs::audit::replay(&path).unwrap();
+
+        // Replayed final ε == the job summary's ε == (single job, tenant
+        // δ = job δ) the ledger's debited spend — ONE composition path.
+        let j = m.job_json(id).unwrap();
+        let final_epsilon = j
+            .get("summary")
+            .unwrap()
+            .get("final_epsilon")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(replay.final_epsilon.to_bits(), final_epsilon.to_bits());
+        let tenant = m.ledger().status("acme").unwrap();
+        assert_eq!(tenant.spent_epsilon.to_bits(), replay.final_epsilon.to_bits());
+        // And the debit timeline event carries the same ε.
+        let debit = tenant
+            .timeline
+            .iter()
+            .find(|e| e.kind == super::super::ledger::TimelineKind::Debit)
+            .expect("debit event recorded");
+        assert_eq!(debit.epsilon.to_bits(), replay.final_epsilon.to_bits());
+
+        // Unknown jobs are a 404; known jobs without a log are an inner
+        // None (no state dir).
+        assert!(m.audit_text(999).is_none());
+        m.shutdown();
+        let m2 = JobManager::new(1, None).unwrap();
+        let id2 = m2.submit(tiny_mock_cfg(0, 1), None).unwrap();
+        assert_eq!(wait_terminal(&m2, id2), "done");
+        assert_eq!(m2.audit_text(id2), Some(None));
+        m2.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -35,13 +35,22 @@
 //! (`tests/privacy_golden.rs` pins this).
 //!
 //! **Durability.** With a state dir, tenants + spent histories +
-//! debited-job ids persist to `ledger.json` (`dpquant-serve-ledger` v1,
-//! atomic temp+rename, floats as IEEE-754 hex — the checkpoint idiom).
-//! Reservations are deliberately **not** persisted: they are
-//! reconstructed during restart recovery for every re-enqueued
+//! debited-job ids + spend timelines persist to `ledger.json`
+//! (`dpquant-serve-ledger` v1, atomic temp+rename, floats as IEEE-754
+//! hex — the checkpoint idiom), rewritten on every mutation (reserve,
+//! debit, refund). Reservations are deliberately **not** persisted:
+//! they are reconstructed during restart recovery for every re-enqueued
 //! tenant-owned job (a pure function of the job's config, so the
 //! remaining ε is identical before and after a `kill -9`), and a
 //! reservation whose job died terminally can therefore never leak.
+//!
+//! **The timeline.** Each tenant additionally carries an append-only
+//! [`TimelineEvent`] log — every reserve/debit/refund with the
+//! post-event remaining ε — served by `GET /v1/tenants/{id}`. Because
+//! events are appended exactly where they become durable (and recovery
+//! appends nothing), the timeline a client reads after a `kill -9` is
+//! byte-identical to the uninterrupted one; CI's `audit-smoke` job
+//! diffs exactly that.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
@@ -178,6 +187,63 @@ struct TenantState {
     /// Open reservations, job id → estimated schedule. In-memory only;
     /// rebuilt during recovery.
     reservations: BTreeMap<u64, Vec<StepRecord>>,
+    /// The spend timeline: every reserve/debit/refund this tenant ever
+    /// saw, in event order, each with the post-event remaining ε.
+    /// Persisted with the ledger (hex floats), so it rebuilds
+    /// bit-identically across a `kill -9`. Recovery's
+    /// [`BudgetLedger::restore_reservation`] appends **nothing** — the
+    /// original reserve event is already durable, so a crash never
+    /// duplicates timeline entries.
+    timeline: Vec<TimelineEvent>,
+}
+
+/// One ledger mutation of a tenant's budget, as served in the
+/// `GET /v1/tenants/{id}` spend timeline.
+#[derive(Clone, Debug)]
+pub struct TimelineEvent {
+    /// What happened.
+    pub kind: TimelineKind,
+    /// The job the event belongs to.
+    pub job: u64,
+    /// The ε the event moved: the reservation's estimated composed ε at
+    /// the tenant's δ (reserve/refund), or the tenant's total spent ε
+    /// after the debit landed (debit — the number `audit replay`
+    /// cross-checks against a served job's recorded ε timeline).
+    pub epsilon: f64,
+    /// `remaining_epsilon` immediately after the event — the same
+    /// function that feeds admission control and the status document.
+    pub remaining: f64,
+}
+
+/// Timeline event kinds, mirroring the ledger's three-state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimelineKind {
+    /// Admission placed a reservation.
+    Reserve,
+    /// A completed job's actual spend landed durably.
+    Debit,
+    /// A reservation was released without spending.
+    Refund,
+}
+
+impl TimelineKind {
+    /// Wire name (`reserve` / `debit` / `refund`).
+    pub fn name(self) -> &'static str {
+        match self {
+            TimelineKind::Reserve => "reserve",
+            TimelineKind::Debit => "debit",
+            TimelineKind::Refund => "refund",
+        }
+    }
+}
+
+fn parse_timeline_kind(s: &str) -> Result<TimelineKind> {
+    match s {
+        "reserve" => Ok(TimelineKind::Reserve),
+        "debit" => Ok(TimelineKind::Debit),
+        "refund" => Ok(TimelineKind::Refund),
+        other => Err(err!("unknown timeline event kind '{other}'")),
+    }
 }
 
 /// ε of a record sequence by replay through a fresh accountant — the
@@ -218,6 +284,18 @@ impl TenantState {
         (self.budget_epsilon - self.committed_epsilon()).max(0.0)
     }
 
+    /// Append a timeline event for `job`, stamping the *post-event*
+    /// remaining ε. Call after the mutation it records.
+    fn push_event(&mut self, kind: TimelineKind, job: u64, epsilon: f64) {
+        let remaining = self.remaining_epsilon();
+        self.timeline.push(TimelineEvent {
+            kind,
+            job,
+            epsilon,
+            remaining,
+        });
+    }
+
     fn doc(&self, id: &str) -> TenantDoc {
         let spent = self.spent_epsilon();
         let committed = self.committed_epsilon();
@@ -230,6 +308,7 @@ impl TenantState {
             remaining_epsilon: self.remaining_epsilon(),
             debited_jobs: self.debited_jobs.len(),
             open_reservations: self.reservations.len(),
+            timeline: self.timeline.clone(),
         }
     }
 
@@ -265,6 +344,8 @@ pub struct TenantDoc {
     pub debited_jobs: usize,
     /// Open (undecided) reservations.
     pub open_reservations: usize,
+    /// The full spend timeline, event order (see [`TimelineEvent`]).
+    pub timeline: Vec<TimelineEvent>,
 }
 
 impl TenantDoc {
@@ -280,6 +361,22 @@ impl TenantDoc {
             ("remaining_epsilon", json::num(self.remaining_epsilon)),
             ("debited_jobs", json::num(self.debited_jobs as f64)),
             ("open_reservations", json::num(self.open_reservations as f64)),
+            (
+                "timeline",
+                Json::Arr(
+                    self.timeline
+                        .iter()
+                        .map(|e| {
+                            json::obj(vec![
+                                ("epsilon", json::num(e.epsilon)),
+                                ("job", json::num(e.job as f64)),
+                                ("kind", json::s(e.kind.name())),
+                                ("remaining", json::num(e.remaining)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -417,6 +514,7 @@ impl BudgetLedger {
             spent: Vec::new(),
             debited_jobs: BTreeSet::new(),
             reservations: BTreeMap::new(),
+            timeline: Vec::new(),
         };
         state.update_gauges(id);
         let doc = state.doc(id);
@@ -460,8 +558,8 @@ impl BudgetLedger {
                 .chain(records.iter()),
             t.delta,
         );
+        let (estimated_epsilon, _) = RdpAccountant::predict_schedule(&records, t.delta);
         if would_be > t.budget_epsilon {
-            let (estimated_epsilon, _) = RdpAccountant::predict_schedule(&records, t.delta);
             return Err(AdmitError::Exhausted {
                 tenant: tenant.to_string(),
                 remaining_epsilon: t.remaining_epsilon(),
@@ -469,7 +567,12 @@ impl BudgetLedger {
             });
         }
         t.reservations.insert(job_id, records);
+        t.push_event(TimelineKind::Reserve, job_id, estimated_epsilon);
         t.update_gauges(tenant);
+        // Persist so the reserve event is durable: recovery rebuilds the
+        // reservation itself from the job's config, but must NOT append
+        // a second timeline entry — the one written here is the record.
+        self.persist(&tenants);
         Ok(cost.epsilon)
     }
 
@@ -514,6 +617,12 @@ impl BudgetLedger {
                 acc.record(r.mechanism, r.sample_rate, r.noise_multiplier, r.steps);
             }
             t.spent = acc.history().to_vec();
+            // The debit event records the tenant's total spent ε after
+            // this job landed — the number a served job's audit replay
+            // cross-checks. Idempotence extends to the timeline: a
+            // crash-recovered second debit appends nothing.
+            let spent_epsilon = t.spent_epsilon();
+            t.push_event(TimelineKind::Debit, job_id, spent_epsilon);
             self.persist(&tenants);
             // Re-borrow after persist (persist only reads).
             let t = tenants.get(tenant).expect("tenant just updated");
@@ -524,12 +633,20 @@ impl BudgetLedger {
     }
 
     /// Release a reservation without spending (cancel / failure /
-    /// panic). Idempotent; unknown tenants or jobs no-op.
+    /// panic). Idempotent; unknown tenants or jobs no-op — and only an
+    /// actually-open reservation produces a timeline event, so repeated
+    /// refunds can never pad the history.
     pub fn refund(&self, tenant: &str, job_id: u64) {
         let mut tenants = self.tenants.lock().unwrap();
         if let Some(t) = tenants.get_mut(tenant) {
-            t.reservations.remove(&job_id);
-            t.update_gauges(tenant);
+            if let Some(records) = t.reservations.remove(&job_id) {
+                let (estimated_epsilon, _) = RdpAccountant::predict_schedule(&records, t.delta);
+                t.push_event(TimelineKind::Refund, job_id, estimated_epsilon);
+                t.update_gauges(tenant);
+                self.persist(&tenants);
+            } else {
+                t.update_gauges(tenant);
+            }
         }
     }
 
@@ -640,6 +757,22 @@ fn manifest_json(tenants: &BTreeMap<String, TenantState>) -> Json {
                                 .collect(),
                         ),
                     ),
+                    (
+                        "timeline",
+                        Json::Arr(
+                            t.timeline
+                                .iter()
+                                .map(|e| {
+                                    json::obj(vec![
+                                        ("epsilon", hex_f64(e.epsilon)),
+                                        ("job", json::num(e.job as f64)),
+                                        ("kind", json::s(e.kind.name())),
+                                        ("remaining", hex_f64(e.remaining)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             )
         })
@@ -720,6 +853,39 @@ fn parse_manifest(text: &str) -> Result<BTreeMap<String, TenantState>> {
                 })
             })
             .collect::<Result<_>>()?;
+        // Absent in pre-timeline manifests: an empty timeline, same
+        // LEDGER_VERSION (the field is additive).
+        let timeline: Vec<TimelineEvent> = match tj.get("timeline").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(events) => events
+                .iter()
+                .map(|ej| {
+                    Ok(TimelineEvent {
+                        kind: parse_timeline_kind(
+                            ej.get("kind")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| err!("tenant '{id}': timeline entry missing kind"))?,
+                        )?,
+                        job: ej
+                            .get("job")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| err!("tenant '{id}': timeline entry missing job"))?
+                            as u64,
+                        epsilon: parse_hex_f64(
+                            ej.get("epsilon")
+                                .ok_or_else(|| err!("tenant '{id}': timeline entry missing epsilon"))?,
+                            "timeline epsilon",
+                        )?,
+                        remaining: parse_hex_f64(
+                            ej.get("remaining").ok_or_else(|| {
+                                err!("tenant '{id}': timeline entry missing remaining")
+                            })?,
+                            "timeline remaining",
+                        )?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
         tenants.insert(
             id.clone(),
             TenantState {
@@ -728,6 +894,7 @@ fn parse_manifest(text: &str) -> Result<BTreeMap<String, TenantState>> {
                 spent,
                 debited_jobs,
                 reservations: BTreeMap::new(),
+                timeline,
             },
         );
     }
@@ -973,6 +1140,52 @@ mod tests {
         // Malformed manifests fail loudly.
         std::fs::write(dir.join("ledger.json"), "{}").unwrap();
         assert!(BudgetLedger::open(Some(&dir_s)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn timeline_records_the_lifecycle_and_reopens_bit_identically() {
+        let dir = std::env::temp_dir().join(format!("dpquant-ledger-tl-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_s = dir.to_str().unwrap().to_string();
+        let cfg = tiny_cfg();
+        {
+            let ledger = BudgetLedger::open(Some(&dir_s)).unwrap();
+            ledger.create_tenant("t", 8.0, 1e-5).unwrap();
+            ledger.reserve("t", 1, &cfg).unwrap();
+            ledger.debit("t", 1, schedule_cost(&cfg).records());
+            ledger.reserve("t", 2, &cfg).unwrap();
+            ledger.refund("t", 2);
+            // Idempotent paths append nothing.
+            ledger.debit("t", 1, schedule_cost(&cfg).records());
+            ledger.refund("t", 2);
+            ledger.restore_reservation("t", 3, &cfg);
+            let doc = ledger.status("t").unwrap();
+            let kinds: Vec<&str> = doc.timeline.iter().map(|e| e.kind.name()).collect();
+            assert_eq!(kinds, ["reserve", "debit", "reserve", "refund"]);
+            // Post-event remaining: the refund restored the debit-time
+            // headroom minus the restored (unrecorded) reservation.
+            assert_eq!(doc.timeline[1].epsilon.to_bits(), doc.spent_epsilon.to_bits());
+            assert!(doc.timeline[0].remaining > doc.timeline[2].remaining);
+            assert!(doc.timeline[3].remaining > doc.timeline[2].remaining);
+        }
+        // Reopen: the timeline (and every ε in it) round-trips bit-exactly.
+        let reopened = BudgetLedger::open(Some(&dir_s)).unwrap();
+        let doc = reopened.status("t").unwrap();
+        assert_eq!(doc.timeline.len(), 4);
+        {
+            let fresh = BudgetLedger::open(Some(&dir_s)).unwrap();
+            let a = doc.to_json().to_string();
+            // restore_reservation never touches the timeline, so a
+            // recovered daemon serves the same bytes.
+            fresh.restore_reservation("t", 3, &cfg);
+            let mut b = fresh.status("t").unwrap();
+            b.open_reservations = doc.open_reservations; // recovery state differs by design
+            b.reserved_epsilon = doc.reserved_epsilon;
+            b.remaining_epsilon = doc.remaining_epsilon;
+            assert_eq!(a, b.to_json().to_string());
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -34,8 +34,9 @@ use std::sync::{Arc, Mutex};
 use crate::backend;
 use crate::cli::Args;
 use crate::config::{ConfigFile, TrainConfig};
-use crate::coordinator::{train_with_sink, EventSink, TrainEvent};
+use crate::coordinator::{train_with_sink, EventSink, MultiSink, TrainEvent};
 use crate::data::{self, Dataset};
+use crate::obs::{JsonlSink, TraceWriter};
 use crate::util::error::{ensure, err, Context, Result};
 use self::grid::{GridPoint, GridSpec};
 use self::report::{PointResult, SweepReport};
@@ -73,16 +74,55 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
 
-    let sweep_report = run_sweep(&points, jobs, !quiet)?;
+    let timing = !args.has_flag("no-timing");
+    let obs = SweepObs {
+        trace_out: args.get("trace-out"),
+        timing,
+    };
+    let sweep_report = run_sweep_obs(&points, jobs, !quiet, &obs)?;
     if !quiet {
         println!("\nPareto view (best accuracy vs final ε; * = frontier):");
         print!("{}", sweep_report.render_pareto());
     }
-    let timing = !args.has_flag("no-timing");
+    if let (Some(prefix), Some(first)) = (&obs.trace_out, points.first()) {
+        println!(
+            "traces written: {} per-point files ({}, ...)",
+            points.len(),
+            point_trace_path(prefix, first)
+        );
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(&path, format!("{}\n", crate::obs::metrics_doc()))?;
+        println!("[sweep metrics -> {path}]");
+    }
     let out = args.str_or("out", "BENCH_sweep.json");
     let path = sweep_report.write(&out, timing)?;
     println!("saved {path}");
     Ok(())
+}
+
+/// Observability options threaded from the CLI into the sweep workers.
+pub struct SweepObs {
+    /// `--trace-out PREFIX`: write one `dpquant-trace` v1 file per grid
+    /// point, named by index and sanitized point label.
+    pub trace_out: Option<String>,
+    /// Keep wall-clock payloads (`--no-timing` absent). With timing off
+    /// the per-point trace files are byte-deterministic, like every
+    /// other `--no-timing` artifact.
+    pub timing: bool,
+}
+
+/// Per-point trace path: `PREFIX.NNN.key_value_key_value.jsonl`. The
+/// grid-point label is sanitized to filename-safe characters; the index
+/// keeps names unique even for colliding labels.
+fn point_trace_path(prefix: &str, p: &GridPoint) -> String {
+    let label: String = p
+        .label()
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect();
+    let stem = prefix.strip_suffix(".jsonl").unwrap_or(prefix);
+    format!("{stem}.{:03}.{label}.jsonl", p.index)
 }
 
 /// (dataset name, dataset_size, val_size, seed) — the tuple that fully
@@ -98,6 +138,30 @@ fn data_key(cfg: &TrainConfig) -> DataKey {
 /// the results ordered by grid index. Fails loudly — naming the grid
 /// point — on the first worker error or panic.
 pub fn run_sweep(points: &[GridPoint], jobs: usize, verbose: bool) -> Result<SweepReport> {
+    run_sweep_obs(
+        points,
+        jobs,
+        verbose,
+        &SweepObs {
+            trace_out: None,
+            timing: true,
+        },
+    )
+}
+
+/// [`run_sweep`] with observability wired in: when `obs.trace_out` is
+/// set, each worker writes its point's full [`TrainEvent`] stream to a
+/// per-point trace file. Tracing happens inside the worker that owns
+/// the run, so the files are as parallel-safe as the runs themselves,
+/// and the determinism contract extends to them: with `obs.timing`
+/// off, the per-point files are byte-identical across reruns and
+/// across `--jobs` settings.
+pub fn run_sweep_obs(
+    points: &[GridPoint],
+    jobs: usize,
+    verbose: bool,
+    obs: &SweepObs,
+) -> Result<SweepReport> {
     // Generate each distinct dataset once, up front, and share it
     // immutably across workers.
     let mut datasets: BTreeMap<DataKey, Arc<(Dataset, Dataset)>> = BTreeMap::new();
@@ -127,8 +191,31 @@ pub fn run_sweep(points: &[GridPoint], jobs: usize, verbose: bool) -> Result<Swe
             steps: 0,
             truncated: false,
         };
-        let (record, _weights, _accountant) =
-            train_with_sink(exec.as_ref(), &p.cfg, train_ds, val_ds, &mut sink)?;
+        // Per-point trace file, created and owned by this worker.
+        let trace = match &obs.trace_out {
+            Some(prefix) => {
+                let path = point_trace_path(prefix, p);
+                if let Some(dir) = std::path::Path::new(&path).parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)
+                            .with_context(|| format!("creating trace dir for {path}"))?;
+                    }
+                }
+                Some(TraceWriter::create(&path, obs.timing)?)
+            }
+            None => None,
+        };
+        let (record, _weights, _accountant) = match &trace {
+            Some(w) => {
+                let mut jsonl = JsonlSink::new(w);
+                let mut multi = MultiSink::new(vec![&mut jsonl, &mut sink]);
+                train_with_sink(exec.as_ref(), &p.cfg, train_ds, val_ds, &mut multi)?
+            }
+            None => train_with_sink(exec.as_ref(), &p.cfg, train_ds, val_ds, &mut sink)?,
+        };
+        if let Some(w) = trace {
+            w.finish()?;
+        }
         let wall = t0.elapsed().as_secs_f64();
         let result = PointResult {
             index: p.index,
@@ -278,5 +365,45 @@ mod tests {
         let a = run_sweep(&points, 1, false).unwrap().to_json(false).to_string();
         let b = run_sweep(&points, 3, false).unwrap().to_json(false).to_string();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn per_point_traces_are_valid_and_deterministic() {
+        let base = TrainConfig {
+            backend: "mock".into(),
+            dataset_size: 96,
+            val_size: 32,
+            batch_size: 16,
+            epochs: 2,
+            physical_batch: 32,
+            ..TrainConfig::default()
+        };
+        let spec = GridSpec::parse("seed=0..1").unwrap();
+        let points = spec.points(&base).unwrap();
+        assert_eq!(points.len(), 2);
+        let prefix = std::env::temp_dir()
+            .join(format!("dpquant_sweep_trace_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let obs = SweepObs {
+            trace_out: Some(prefix.clone()),
+            timing: false,
+        };
+        run_sweep_obs(&points, 2, false, &obs).unwrap();
+        let first: Vec<String> = points
+            .iter()
+            .map(|p| {
+                let path = point_trace_path(&prefix, p);
+                crate::obs::trace::check(&path).unwrap();
+                std::fs::read_to_string(&path).unwrap()
+            })
+            .collect();
+        // Rerun with different parallelism: same bytes per point.
+        run_sweep_obs(&points, 1, false, &obs).unwrap();
+        for (i, p) in points.iter().enumerate() {
+            let path = point_trace_path(&prefix, p);
+            assert_eq!(first[i], std::fs::read_to_string(&path).unwrap(), "{path}");
+            std::fs::remove_file(&path).ok();
+        }
     }
 }

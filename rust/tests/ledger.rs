@@ -15,6 +15,9 @@
 //! (d) **No oversubscription**: three tenants hammered by concurrent
 //!     submits each admit exactly the jobs their budget fits — never
 //!     one more, no matter the interleaving.
+//! (e) **Spend timeline**: `GET /v1/tenants/{id}` carries the ordered
+//!     reserve/refund/debit event log with exact post-event bits, and
+//!     the log is byte-identical across a daemon restart.
 //!
 //! Everything runs on `127.0.0.1:0`, in-process, no artifacts —
 //! tier-1 like `tests/serve.rs`.
@@ -274,6 +277,83 @@ fn restart_rebuilds_reservations_and_debits_exactly_once() {
         remaining_bits(&again),
         remaining_before_restart,
         "remaining ε must be bit-identical across a restart: {again}"
+    );
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// (e) the spend timeline: ordered events, exact bits, restart-stable
+// ---------------------------------------------------------------------
+
+#[test]
+fn tenant_timeline_records_every_event_and_survives_restart_byte_exact() {
+    let dir = temp_state_dir("timeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let daemon = Daemon::start("127.0.0.1:0", 1, Some(&dir)).unwrap();
+    let addr = daemon.addr();
+    let client = Client::new(&addr);
+
+    // Pin the worker so both tenant jobs queue with open reservations.
+    let long = client.submit(&mock_cfg(0, 100_000)).unwrap();
+    let cfg = mock_cfg(1, 1);
+    client.create_tenant("acme", budget_for_jobs(&cfg, 2), cfg.delta).unwrap();
+
+    let (s, resp_a) = submit_raw(&addr, &cfg, "acme");
+    assert_eq!(s, 201, "{resp_a}");
+    let job_a = resp_a.get("id").unwrap().as_usize().unwrap() as u64;
+    let (s, resp_b) = submit_raw(&addr, &mock_cfg(2, 1), "acme");
+    assert_eq!(s, 201, "{resp_b}");
+    let job_b = resp_b.get("id").unwrap().as_usize().unwrap() as u64;
+
+    // Refund B while it is still queued, then let A run to its debit.
+    client.cancel(job_b).unwrap();
+    client.wait(job_b, WAIT, POLL).unwrap();
+    client.cancel(long).unwrap();
+    client.wait(long, WAIT, POLL).unwrap();
+    let status = client.wait(job_a, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+
+    let doc = client.tenant_status("acme").unwrap();
+    let timeline = doc.get("timeline").unwrap().as_arr().unwrap().to_vec();
+    let kinds: Vec<&str> = timeline
+        .iter()
+        .map(|e| e.get("kind").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(kinds, ["reserve", "reserve", "refund", "debit"], "{doc}");
+    let jobs: Vec<u64> = timeline
+        .iter()
+        .map(|e| e.get("job").unwrap().as_usize().unwrap() as u64)
+        .collect();
+    assert_eq!(jobs, [job_a, job_b, job_b, job_a], "{doc}");
+
+    let remaining_after = |i: usize| -> u64 {
+        timeline[i].get("remaining").unwrap().as_f64().unwrap().to_bits()
+    };
+    // The refund lands the tenant back on the exact bits it held after
+    // the first reservation alone...
+    assert_eq!(remaining_after(2), remaining_after(0), "{doc}");
+    // ...and the last event's post-state IS the status document's.
+    assert_eq!(remaining_after(3), remaining_bits(&doc), "{doc}");
+    // The debit event's ε is the tenant's whole recorded spend (one
+    // debited job), bit for bit.
+    assert_eq!(
+        timeline[3].get("epsilon").unwrap().as_f64().unwrap().to_bits(),
+        doc.get("spent_epsilon").unwrap().as_f64().unwrap().to_bits(),
+        "{doc}"
+    );
+    let wire_before = doc.get("timeline").unwrap().to_string();
+    daemon.stop();
+
+    // kill -9 equivalence: a fresh daemon over the same state dir must
+    // serve the identical timeline, byte for byte.
+    let daemon = Daemon::start("127.0.0.1:0", 1, Some(&dir)).unwrap();
+    let client = Client::new(&daemon.addr());
+    let doc = client.tenant_status("acme").unwrap();
+    assert_eq!(
+        doc.get("timeline").unwrap().to_string(),
+        wire_before,
+        "the spend timeline must be byte-identical across a restart: {doc}"
     );
     daemon.stop();
     std::fs::remove_dir_all(&dir).ok();

@@ -398,6 +398,86 @@ fn metrics_endpoint_round_trips_live_counters() {
 }
 
 // ---------------------------------------------------------------------
+// Prometheus exposition + audit trail over the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn prometheus_metrics_are_served_as_text_over_the_wire() {
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let client = Client::new(&daemon.addr());
+    let id = client.submit(&mock_cfg(2, 1)).unwrap();
+    client.wait(id, WAIT, POLL).unwrap();
+
+    // Raw bytes, not JSON: the exposition must parse as plain
+    // Prometheus text with at least the HTTP counter this very scrape
+    // increments.
+    let (status, body) =
+        dpquant::serve::http::http_call_raw(&daemon.addr(), "GET", "/v1/metrics?format=prometheus", None)
+            .unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("# TYPE"), "{text}");
+    assert!(text.contains("http_requests"), "{text}");
+    assert!(json::parse(&text).is_err(), "exposition must not be JSON");
+
+    // An unknown format is a clean 400.
+    let (status, _) =
+        dpquant::serve::http::http_call_raw(&daemon.addr(), "GET", "/v1/metrics?format=xml", None)
+            .unwrap();
+    assert_eq!(status, 400);
+    daemon.stop();
+}
+
+#[test]
+fn audit_endpoint_serves_the_on_disk_trail_byte_exact() {
+    use dpquant::obs::audit;
+
+    let dir = temp_state_dir("audit");
+    std::fs::create_dir_all(&dir).unwrap();
+    let daemon = Daemon::start("127.0.0.1:0", 1, Some(&dir)).unwrap();
+    let client = Client::new(&daemon.addr());
+
+    let id = client.submit(&native_cfg(13, 2)).unwrap();
+    let status = client.wait(id, WAIT, POLL).unwrap();
+    assert_eq!(status.get("status").unwrap().as_str(), Some("done"), "{status}");
+
+    // The wire body is the on-disk audit file, byte for byte.
+    let wire = client.audit(id).unwrap();
+    let disk = std::fs::read_to_string(format!("{dir}/job-{id}.audit.jsonl")).unwrap();
+    assert!(!wire.is_empty());
+    assert_eq!(wire, disk, "GET /v1/jobs/{id}/audit must serve the file verbatim");
+
+    // And the served trail replays to the job's own reported ε, bitwise.
+    let replay = audit::replay(&format!("{dir}/job-{id}.audit.jsonl")).unwrap();
+    let summary_eps = status
+        .get("summary")
+        .unwrap()
+        .get("final_epsilon")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert_eq!(
+        replay.final_epsilon.to_bits(),
+        summary_eps.to_bits(),
+        "replayed ε {} != job summary ε {summary_eps}",
+        replay.final_epsilon
+    );
+    daemon.stop();
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Without a --state-dir there is no trail: a distinct 404 that
+    // names the cause.
+    let daemon = Daemon::start("127.0.0.1:0", 1, None).unwrap();
+    let client = Client::new(&daemon.addr());
+    let id = client.submit(&mock_cfg(4, 1)).unwrap();
+    client.wait(id, WAIT, POLL).unwrap();
+    let err = client.audit(id).unwrap_err().to_string();
+    assert!(err.contains("404"), "{err}");
+    assert!(err.contains("no audit log"), "{err}");
+    daemon.stop();
+}
+
+// ---------------------------------------------------------------------
 // Cancel + events over the full stack
 // ---------------------------------------------------------------------
 
